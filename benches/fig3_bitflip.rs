@@ -1,0 +1,46 @@
+//! Regenerates paper Fig. 3: test accuracy vs bit-flip probability p at
+//! matched memory budgets across all four datasets, comparing SparseHD,
+//! LogHD (k ∈ {2,3}) and the Hybrid.
+//!
+//! Output: results/fig3.csv + an ASCII quick-look per (dataset, budget).
+//! CI scale by default; LOGHD_FULL=1 for the paper-scale grid.
+
+use loghd::bench::{ascii_chart, CsvWriter};
+use loghd::eval::figures::{fig3, series_by, Row, Scope};
+
+fn main() -> anyhow::Result<()> {
+    let scope = Scope::from_env();
+    eprintln!("[fig3] scope: D={} ps={:?} seeds={:?}", scope.d, scope.ps, scope.seeds);
+    let t0 = std::time::Instant::now();
+    let rows = fig3(&scope, 8)?;
+    let mut csv = CsvWriter::create("results/fig3.csv", Row::csv_header())?;
+    for r in &rows {
+        csv.row(&r.csv())?;
+    }
+    for dataset in ["isolet", "ucihar", "pamap2", "page"] {
+        for budget in [0.2, 0.4, 0.6] {
+            let series = series_by(&rows, |r| {
+                (r.dataset == dataset && (r.budget - budget).abs() < 1e-9)
+                    .then(|| (r.method.clone(), r.p))
+            });
+            if series.is_empty() {
+                continue;
+            }
+            let xs: Vec<f64> = series[0].1.iter().map(|(x, _)| *x).collect();
+            let lines: Vec<(String, Vec<f64>)> = series
+                .into_iter()
+                .map(|(k, pts)| (k, pts.into_iter().map(|(_, y)| y).collect()))
+                .collect();
+            println!(
+                "{}",
+                ascii_chart(
+                    &format!("Fig3 {dataset} budget<={budget} (acc vs flip p)"),
+                    &xs,
+                    &lines
+                )
+            );
+        }
+    }
+    eprintln!("[fig3] {} rows in {:?} -> results/fig3.csv", rows.len(), t0.elapsed());
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Regenerates paper Fig. 4: UCIHAR accuracy vs flip probability across
+//! hypervector dimensionalities D and numeric precisions (1/2/4/8-bit) at
+//! a matched memory budget.
+//!
+//! Output: results/fig4.csv + quick-look charts.
+
+use loghd::bench::{ascii_chart, CsvWriter};
+use loghd::eval::figures::{fig4, series_by, Row, Scope};
+
+fn main() -> anyhow::Result<()> {
+    let scope = Scope::from_env();
+    eprintln!("[fig4] scope: base D={} (sweeps dims)", scope.d);
+    let t0 = std::time::Instant::now();
+    let rows = fig4(&scope)?;
+    let mut csv = CsvWriter::create("results/fig4.csv", Row::csv_header())?;
+    for r in &rows {
+        csv.row(&r.csv())?;
+    }
+    let mut dims: Vec<usize> = rows.iter().map(|r| r.d).collect();
+    dims.sort_unstable();
+    dims.dedup();
+    for d in dims {
+        for bits in [1u32, 8] {
+            let series = series_by(&rows, |r| {
+                (r.d == d && r.bits == bits).then(|| (r.method.clone(), r.p))
+            });
+            if series.is_empty() {
+                continue;
+            }
+            let xs: Vec<f64> = series[0].1.iter().map(|(x, _)| *x).collect();
+            let lines: Vec<(String, Vec<f64>)> = series
+                .into_iter()
+                .map(|(k, pts)| (k, pts.into_iter().map(|(_, y)| y).collect()))
+                .collect();
+            println!(
+                "{}",
+                ascii_chart(&format!("Fig4 ucihar D={d} {bits}-bit (acc vs p)"), &xs, &lines)
+            );
+        }
+    }
+    eprintln!("[fig4] {} rows in {:?} -> results/fig4.csv", rows.len(), t0.elapsed());
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Regenerates paper Fig. 5: effect of alphabet size k — accuracy vs n/C
+//! on PAGE and UCIHAR for k ∈ {2,3,4,8}, clean (p=0) and faulted (p=0.8).
+//!
+//! Output: results/fig5.csv + quick-look charts.
+
+use loghd::bench::{ascii_chart, CsvWriter};
+use loghd::eval::figures::{fig5, series_by, Row, Scope};
+
+fn main() -> anyhow::Result<()> {
+    let scope = Scope::from_env();
+    let t0 = std::time::Instant::now();
+    let rows = fig5(&scope, 8)?;
+    let mut csv = CsvWriter::create("results/fig5.csv", Row::csv_header())?;
+    for r in &rows {
+        csv.row(&r.csv())?;
+    }
+    for dataset in ["page", "ucihar"] {
+        for p in [0.0, 0.8] {
+            let series = series_by(&rows, |r| {
+                (r.dataset == dataset && (r.p - p).abs() < 1e-9)
+                    .then(|| (r.method.clone(), r.budget))
+            });
+            if series.is_empty() {
+                continue;
+            }
+            // union of x grids per k differs; chart each series on its own
+            for (name, pts) in series {
+                let xs: Vec<f64> = pts.iter().map(|(x, _)| *x).collect();
+                let ys: Vec<f64> = pts.iter().map(|(_, y)| *y).collect();
+                println!(
+                    "{}",
+                    ascii_chart(
+                        &format!("Fig5 {dataset} p={p} {name} (acc vs n/C)"),
+                        &xs,
+                        &[(name.clone(), ys)]
+                    )
+                );
+            }
+        }
+    }
+    eprintln!("[fig5] {} rows in {:?} -> results/fig5.csv", rows.len(), t0.elapsed());
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Regenerates paper Fig. 6: hybrid class- + feature-axis compression on
+//! ISOLET — accuracy heatmaps over (number of bundles n) x (retained
+//! fraction 1−S), per precision and flip probability.
+//!
+//! Output: results/fig6.csv + ASCII heatmaps.
+
+use loghd::bench::CsvWriter;
+use loghd::eval::figures::{fig6, Row, Scope};
+
+fn main() -> anyhow::Result<()> {
+    let scope = Scope::from_env();
+    let t0 = std::time::Instant::now();
+    let rows = fig6(&scope)?;
+    let mut csv = CsvWriter::create("results/fig6.csv", Row::csv_header())?;
+    for r in &rows {
+        csv.row(&r.csv())?;
+    }
+
+    // ASCII heatmap per (bits, p): rows = n, cols = retained fraction.
+    let mut bits_list: Vec<u32> = rows.iter().map(|r| r.bits).collect();
+    bits_list.sort_unstable();
+    bits_list.dedup();
+    for &bits in &bits_list {
+        for p in [0.0, 0.4] {
+            let cells: Vec<&Row> = rows
+                .iter()
+                .filter(|r| r.bits == bits && (r.p - p).abs() < 1e-9)
+                .collect();
+            if cells.is_empty() {
+                continue;
+            }
+            println!("## Fig6 isolet {bits}-bit p={p} (mean acc; rows=n, cols=retained)");
+            let mut keys: Vec<String> = cells.iter().map(|r| r.method.clone()).collect();
+            keys.sort();
+            keys.dedup();
+            let mut by_n: std::collections::BTreeMap<String, Vec<(f64, f64, usize)>> =
+                Default::default();
+            for r in &cells {
+                let (npart, rpart) = r.method.split_once(',').unwrap();
+                let rv: f64 = rpart.trim_start_matches("r=").parse().unwrap();
+                by_n.entry(npart.to_string()).or_default().push((rv, r.accuracy, 1));
+            }
+            for (n, mut pts) in by_n {
+                pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                // mean over seeds at the same retained value
+                let mut merged: Vec<(f64, f64)> = Vec::new();
+                for (rv, acc, _) in pts {
+                    if let Some(last) = merged.last_mut() {
+                        if (last.0 - rv).abs() < 1e-9 {
+                            last.1 = (last.1 + acc) / 2.0;
+                            continue;
+                        }
+                    }
+                    merged.push((rv, acc));
+                }
+                let line: Vec<String> =
+                    merged.iter().map(|(rv, a)| format!("{rv:.2}:{a:.3}")).collect();
+                println!("  {n:<6} {}", line.join("  "));
+            }
+            println!();
+        }
+    }
+    eprintln!("[fig6] {} rows in {:?} -> results/fig6.csv", rows.len(), t0.elapsed());
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Serving-path benchmarks: PJRT vs native engine throughput, and the
+//! dynamic batcher's amortization sweep (batch size / max-delay policy).
+//! Requires `make artifacts` for the PJRT half (skips gracefully if the
+//! bundle is missing).
+//!
+//! Output: results/serving.csv.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use loghd::bench::{bench, CsvWriter};
+use loghd::coordinator::{BatcherConfig, Coordinator, NativeEngine};
+use loghd::data;
+use loghd::loghd::model::{TrainOptions, TrainedStack};
+use loghd::runtime::PjrtRuntime;
+use loghd::tensor::Matrix;
+
+fn main() -> anyhow::Result<()> {
+    let mut csv = CsvWriter::create("results/serving.csv", "path,metric,value")?;
+    let bundle = PathBuf::from("artifacts/page_smoke");
+
+    // --- Native engine micro-bench (always available) ---
+    let ds = data::generate_scaled(data::spec("page").unwrap(), 1500, 256);
+    let opts = TrainOptions { epochs: 3, conv_epochs: 1, extra_bundles: 1, ..Default::default() };
+    let stack = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 2000, 0xE5C0DE, &opts)?;
+    let xb = ds.x_test.rows_slice(0, 64);
+    let mut native = NativeEngine::new(stack.encoder.clone(), stack.loghd.clone(), "page");
+    let native_stats = bench(3, 30, || {
+        let _ = loghd::coordinator::Engine::infer(&mut native, &xb).unwrap();
+    });
+    println!("{}", native_stats.format_line("native infer batch=64 D=2000"));
+    csv.row(&["native".into(), "batch64_median_s".into(), format!("{:.6}", native_stats.median)])?;
+
+    // --- PJRT engine (needs artifacts) ---
+    if bundle.join("manifest.json").exists() {
+        let runtime = PjrtRuntime::load(&bundle)?;
+        let m = &runtime.manifest;
+        let mut xb = Matrix::zeros(m.batch, m.features);
+        let x_test = m.tensor("x_test")?.to_matrix()?;
+        for i in 0..m.batch {
+            xb.row_mut(i).copy_from_slice(x_test.row(i % x_test.rows()));
+        }
+        let pjrt_stats = bench(3, 30, || {
+            let _ = runtime.execute("infer_loghd", Some(&xb)).unwrap();
+        });
+        println!("{}", pjrt_stats.format_line("pjrt infer_loghd batch=64 (page_smoke)"));
+        csv.row(&["pjrt".into(), "batch64_median_s".into(), format!("{:.6}", pjrt_stats.median)])?;
+
+        let single = bench(3, 30, || {
+            let _ = runtime.execute("infer_loghd", Some(&xb)).unwrap();
+        });
+        println!(
+            "  pjrt per-query at batch64: {:.1}µs",
+            single.median / 64.0 * 1e6
+        );
+    } else {
+        eprintln!("[serving] artifacts/page_smoke missing -> PJRT half skipped (run `make artifacts`)");
+    }
+
+    // --- Batcher policy sweep (native engine, offered load) ---
+    println!("\nbatcher policy sweep (native page model, 512 requests):");
+    for (max_batch, delay_ms) in [(1usize, 0u64), (16, 1), (64, 2), (64, 8)] {
+        let cfg = BatcherConfig {
+            max_batch,
+            max_delay: std::time::Duration::from_millis(delay_ms),
+            max_pending: 4096,
+        };
+        let enc = stack.encoder.clone();
+        let model = stack.loghd.clone();
+        let coord = Arc::new(Coordinator::start(
+            10,
+            cfg,
+            NativeEngine::factory(enc, model, "bench".into()),
+        ));
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..512)
+            .map(|i| coord.submit(ds.x_test.row(i % ds.x_test.rows()).to_vec()).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let elapsed = t0.elapsed();
+        let snap = coord.stats();
+        println!(
+            "  max_batch={max_batch:<3} delay={delay_ms}ms: {:>8.0} req/s  mean_batch={:<5.1} p99={:.0}µs",
+            512.0 / elapsed.as_secs_f64(),
+            snap.mean_batch_size,
+            snap.latency_p99_us
+        );
+        csv.row(&[
+            format!("batcher_b{max_batch}_d{delay_ms}"),
+            "req_per_s".into(),
+            format!("{:.1}", 512.0 / elapsed.as_secs_f64()),
+        ])?;
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Quickstart: train a LogHD classifier on the PAGE-like dataset, compare
+//! it against the conventional O(C·D) model, and show the memory math.
+//!
+//!   cargo run --release --example quickstart
+
+use loghd::baselines::ConventionalModel;
+use loghd::data;
+use loghd::eval::accuracy;
+use loghd::loghd::model::{TrainOptions, TrainedStack};
+
+fn main() -> anyhow::Result<()> {
+    let spec = data::spec("page").unwrap();
+    let ds = data::generate(spec);
+    println!(
+        "dataset: {} — {} features, {} classes, {} train / {} test",
+        spec.name, spec.features, spec.classes, spec.n_train, spec.n_test
+    );
+
+    let d = 2000;
+    let opts = TrainOptions { extra_bundles: 1, epochs: 10, ..Default::default() };
+    println!("training at D={d} (k={}, epsilon={} extra bundles)...", opts.k, opts.extra_bundles);
+    let stack = TrainedStack::train(&ds.x_train, &ds.y_train, spec.classes, d, 0xE5C0DE, &opts)?;
+
+    let enc_test = stack.encoder.encode(&ds.x_test);
+    let conv = ConventionalModel::new(stack.prototypes.clone());
+    let conv_acc = accuracy(&conv.predict(&enc_test), &ds.y_test);
+    let log_acc = accuracy(&stack.loghd.predict(&enc_test), &ds.y_test);
+
+    println!();
+    println!("conventional HDC : acc {:.4}, {} stored floats (C*D)", conv_acc, conv.memory_floats());
+    println!(
+        "LogHD (n={})     : acc {:.4}, {} stored floats (n*D + C*n) = {:.1}% of conventional",
+        stack.loghd.n_bundles(),
+        log_acc,
+        stack.loghd.memory_floats(),
+        100.0 * stack.loghd.budget_fraction()
+    );
+    println!(
+        "class-axis compression: {} prototypes -> {} bundles ({}x fewer stored vectors)",
+        spec.classes,
+        stack.loghd.n_bundles(),
+        spec.classes as f64 / stack.loghd.n_bundles() as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! END-TO-END serving driver — proves all three layers compose.
+//!
+//! Loads the Python-AOT artifact bundle (L2 graphs calling L1 Pallas
+//! kernels, lowered to HLO text by `make artifacts`), compiles it on the
+//! PJRT CPU client, spins up the L3 coordinator (dynamic batcher + worker
+//! + TCP server), drives the bundle's real held-out test set through it as
+//! batched requests, and reports accuracy + latency/throughput. Also
+//! cross-checks the native-Rust engine on the same tensors (parity).
+//!
+//!   make artifacts && cargo run --release --example serve_e2e
+//!   (defaults to artifacts/page_smoke; pass a bundle dir to override)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use loghd::coordinator::{BatcherConfig, Coordinator, PjrtEngine, Server};
+use loghd::eval::accuracy;
+use loghd::loghd::persist;
+use loghd::runtime::artifact::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    let bundle = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts/page_smoke".into()),
+    );
+    if !bundle.join("manifest.json").exists() {
+        anyhow::bail!("bundle {} missing — run `make artifacts` first", bundle.display());
+    }
+    let manifest = Manifest::load(&bundle)?;
+    println!(
+        "bundle {}: dataset={} D={} k={} n={} batch={} (trained clean acc: conv {:.3} / loghd {:.3})",
+        manifest.name, manifest.dataset, manifest.d, manifest.k, manifest.n,
+        manifest.batch, manifest.clean_acc_conventional, manifest.clean_acc_loghd
+    );
+
+    // L3 coordinator over the PJRT engine (L1+L2 compiled HLO).
+    let cfg = BatcherConfig {
+        max_batch: manifest.batch,
+        max_delay: std::time::Duration::from_millis(4),
+        max_pending: 4096,
+    };
+    let coord = Arc::new(Coordinator::start(
+        manifest.features,
+        cfg,
+        PjrtEngine::factory(bundle.clone(), "infer_loghd".into()),
+    ));
+    let mut server = Server::start("127.0.0.1:0", Arc::clone(&coord))?;
+    println!("coordinator + TCP server up on {}", server.addr);
+
+    // Drive the bundle's real held-out test set through the coordinator.
+    let (x_test, y_test) = persist::load_test_data(&bundle)?;
+    let n_queries = x_test.rows();
+    // warm-up: engine construction (PJRT compile) happens on the worker
+    // thread; one blocking request keeps the cold start out of the stats.
+    coord.submit_blocking(x_test.row(0).to_vec()).expect("warmup");
+    println!("serving {n_queries} batched requests (the full held-out test set)...");
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_queries)
+        .map(|i| coord.submit(x_test.row(i).to_vec()).expect("submit"))
+        .collect();
+    let mut preds = Vec::with_capacity(n_queries);
+    for rx in rxs {
+        preds.push(rx.recv()?.label);
+    }
+    let elapsed = t0.elapsed();
+    let served_acc = accuracy(&preds, &y_test);
+
+    // A few requests over the real TCP wire, too.
+    let mut stream = TcpStream::connect(server.addr)?;
+    let feat_json: Vec<String> = x_test.row(0).iter().map(|v| format!("{v}")).collect();
+    writeln!(stream, "{{\"features\": [{}]}}", feat_json.join(","))?;
+    writeln!(stream, "{{\"cmd\": \"stats\"}}")?;
+    stream.shutdown(std::net::Shutdown::Write)?;
+    let tcp_lines: Vec<String> = BufReader::new(stream).lines().collect::<Result<_, _>>()?;
+
+    // Native-engine parity on the same tensors (Python-trained bundle).
+    let (encoder, model) = persist::load_from_aot_bundle(&bundle)?;
+    let native_preds = model.predict(&encoder.encode(&x_test));
+    let agree = preds.iter().zip(&native_preds).filter(|(a, b)| a == b).count();
+
+    let snap = coord.stats();
+    println!();
+    println!("=== END-TO-END REPORT ({}) ===", manifest.name);
+    println!("served accuracy      : {served_acc:.4} (expected ~{:.4})", manifest.clean_acc_loghd);
+    println!("throughput           : {:.0} req/s ({n_queries} requests in {elapsed:.2?})",
+        n_queries as f64 / elapsed.as_secs_f64());
+    println!("latency              : p50 {:.0}µs  p95 {:.0}µs  p99 {:.0}µs  mean {:.0}µs",
+        snap.latency_p50_us, snap.latency_p95_us, snap.latency_p99_us, snap.latency_mean_us);
+    println!("batching             : {} batches, mean size {:.1}", snap.batches, snap.mean_batch_size);
+    println!("XLA vs native parity : {agree}/{n_queries} labels agree ({:.2}%)",
+        100.0 * agree as f64 / n_queries as f64);
+    println!("TCP round-trip       : {}", tcp_lines.first().map(String::as_str).unwrap_or("-"));
+
+    server.shutdown();
+    anyhow::ensure!(served_acc > manifest.clean_acc_loghd - 0.02, "served accuracy regressed");
+    anyhow::ensure!(agree as f64 >= 0.99 * n_queries as f64, "XLA/native parity broke");
+    println!("OK");
+    Ok(())
+}

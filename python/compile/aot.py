@@ -1,0 +1,200 @@
+"""AOT driver: train the serving models and emit the Rust-loadable artifacts.
+
+Runs once under ``make artifacts`` (a no-op if artifacts are newer than the
+Python sources). For every serving config this writes, under
+``artifacts/<config>/``:
+
+- ``manifest.json``      — entry points, tensor files, shapes, clean accs
+- ``<entry>.hlo.txt``    — HLO *text* per inference graph (the interchange
+  format: jax >= 0.5 emits protos with 64-bit instruction ids that
+  xla_extension 0.5.1 rejects; the text parser reassigns ids — see
+  /opt/xla-example/README.md)
+- ``*.lht``              — model tensors + held-out test data + expected
+  outputs of the first batch (Rust parity tests compare against these)
+
+Python never runs again after this: the Rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import data as dt
+from . import lht
+from . import model
+from . import trainer
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    name: str
+    dataset: str
+    d: int
+    k: int
+    extra_bundles: int
+    epochs: int
+    batch: int = 64
+
+
+# page_smoke is small/fast and drives the Rust integration tests;
+# isolet_k2 is the paper's headline serving configuration (D=10k, k=2).
+CONFIGS: dict[str, ServingConfig] = {
+    c.name: c
+    for c in [
+        ServingConfig("page_smoke", "page", d=2000, k=2, extra_bundles=1, epochs=5),
+        # n = ceil(log2 26) + 5 = 10 bundles: the paper's mid memory budget
+        # (<= 0.4 of C*D) for ISOLET in Fig. 3.
+        ServingConfig("isolet_k2", "isolet", d=10_000, k=2, extra_bundles=5, epochs=30),
+    ]
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_entries(cfg: ServingConfig, f: int, c: int, n: int) -> dict[str, dict]:
+    """Lower each serving graph at the config's fixed shapes."""
+    b, d = cfg.batch, cfg.d
+    entries = {}
+
+    lowered = jax.jit(model.infer_loghd_graph).lower(
+        _spec((b, f)), _spec((f, d)), _spec((d,)), _spec((d,)), _spec((n, d)),
+        _spec((c, n)))
+    entries["infer_loghd"] = {
+        "hlo": to_hlo_text(lowered),
+        "inputs": [["x", [b, f], "f32"], ["w", [f, d], "f32"], ["b", [d], "f32"],
+                   ["mu", [d], "f32"], ["bundles", [n, d], "f32"],
+                   ["profiles", [c, n], "f32"]],
+        "outputs": [["dists", [b, c], "f32"], ["labels", [b], "i32"]],
+    }
+
+    lowered = jax.jit(model.infer_conventional_graph).lower(
+        _spec((b, f)), _spec((f, d)), _spec((d,)), _spec((d,)), _spec((c, d)))
+    entries["infer_conventional"] = {
+        "hlo": to_hlo_text(lowered),
+        "inputs": [["x", [b, f], "f32"], ["w", [f, d], "f32"], ["b", [d], "f32"],
+                   ["mu", [d], "f32"], ["prototypes", [c, d], "f32"]],
+        "outputs": [["scores", [b, c], "f32"], ["labels", [b], "i32"]],
+    }
+
+    lowered = jax.jit(model.encode_graph).lower(
+        _spec((b, f)), _spec((f, d)), _spec((d,)), _spec((d,)))
+    entries["encode"] = {
+        "hlo": to_hlo_text(lowered),
+        "inputs": [["x", [b, f], "f32"], ["w", [f, d], "f32"], ["b", [d], "f32"],
+                   ["mu", [d], "f32"]],
+        "outputs": [["enc", [b, d], "f32"]],
+    }
+    return entries
+
+
+def build_config(cfg: ServingConfig, out_root: Path) -> dict:
+    t0 = time.time()
+    ds = dt.by_name(cfg.dataset)
+    spec = ds.spec
+    tc = trainer.TrainConfig(d=cfg.d, k=cfg.k, extra_bundles=cfg.extra_bundles,
+                             epochs=cfg.epochs, batch=cfg.batch)
+    print(f"[aot] {cfg.name}: training on {spec.name} "
+          f"(F={spec.features} C={spec.classes} D={cfg.d} k={cfg.k})", flush=True)
+    tm = trainer.train_all(ds.x_train, ds.y_train, ds.x_test, ds.y_test,
+                           spec.classes, tc)
+    print(f"[aot] {cfg.name}: clean acc conventional={tm.clean_acc_conventional:.4f} "
+          f"loghd={tm.clean_acc_loghd:.4f} n={tm.n_bundles} "
+          f"({time.time()-t0:.1f}s)", flush=True)
+
+    out = out_root / cfg.name
+    out.mkdir(parents=True, exist_ok=True)
+
+    entries = lower_entries(cfg, spec.features, spec.classes, tm.n_bundles)
+    manifest_entries = []
+    for name, e in entries.items():
+        (out / f"{name}.hlo.txt").write_text(e["hlo"])
+        manifest_entries.append({
+            "name": name, "hlo": f"{name}.hlo.txt",
+            "inputs": e["inputs"], "outputs": e["outputs"],
+        })
+
+    tensors = {
+        "w": tm.w, "b": tm.b, "mu": tm.mu, "prototypes": tm.prototypes,
+        "bundles": tm.bundles, "profiles": tm.profiles,
+        "codebook": tm.codebook.astype(np.int32),
+        "x_test": ds.x_test, "y_test": ds.y_test.astype(np.int32),
+    }
+    for name, arr in tensors.items():
+        lht.write(out / f"{name}.lht", arr)
+
+    # Expected outputs for the first test batch: the Rust runtime parity
+    # test executes the compiled HLO on the same inputs and compares.
+    xb = ds.x_test[:cfg.batch]
+    dists, labels = model.infer_loghd_graph(
+        jnp.asarray(xb), tm.w, tm.b, tm.mu, tm.bundles, tm.profiles)
+    lht.write(out / "expected_dists.lht", np.asarray(dists))
+    lht.write(out / "expected_labels.lht", np.asarray(labels).astype(np.int32))
+    scores, clabels = model.infer_conventional_graph(
+        jnp.asarray(xb), tm.w, tm.b, tm.mu, tm.prototypes)
+    lht.write(out / "expected_conv_scores.lht", np.asarray(scores))
+    lht.write(out / "expected_conv_labels.lht", np.asarray(clabels).astype(np.int32))
+
+    manifest = {
+        "format": 1,
+        "config": {
+            "name": cfg.name, "dataset": spec.name, "D": cfg.d, "k": cfg.k,
+            "n": tm.n_bundles, "C": spec.classes, "F": spec.features,
+            "batch": cfg.batch, "extra_bundles": cfg.extra_bundles,
+        },
+        "clean_accuracy": {
+            "conventional": tm.clean_acc_conventional,
+            "loghd": tm.clean_acc_loghd,
+        },
+        "entries": manifest_entries,
+        "tensors": {name: f"{name}.lht" for name in tensors},
+        "expected": {
+            "batch": cfg.batch,
+            "dists": "expected_dists.lht", "labels": "expected_labels.lht",
+            "conv_scores": "expected_conv_scores.lht",
+            "conv_labels": "expected_conv_labels.lht",
+        },
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"[aot] {cfg.name}: wrote {out} ({time.time()-t0:.1f}s total)", flush=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact root dir")
+    ap.add_argument("--configs", default=",".join(CONFIGS),
+                    help="comma-separated serving config names")
+    args = ap.parse_args()
+    out_root = Path(args.out)
+    out_root.mkdir(parents=True, exist_ok=True)
+    names = [n for n in args.configs.split(",") if n]
+    index = {}
+    for name in names:
+        manifest = build_config(CONFIGS[name], out_root)
+        index[name] = {"dir": name, "dataset": manifest["config"]["dataset"]}
+    (out_root / "index.json").write_text(json.dumps(index, indent=1))
+    print(f"[aot] done: {', '.join(names)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Capacity-aware k-ary codebook construction (paper §III-C, Eq. 2/3).
+
+Greedy minimax-load selection: classes are assigned unique length-n k-ary
+codes one at a time; each round picks the candidate code that minimizes the
+worst-case updated per-bundle load  max_j (L_j + U(g(s_j))) + eps*xi,
+where g(s) = s/(k-1) maps symbols to contribution strengths, U(w) = w^alpha
+is the capacity surrogate, and xi ~ U[0,1) breaks ties / adds diversity.
+
+Mirrored exactly (same SplitMix64 stream discipline — one xi per candidate
+per round, candidates in lexicographic order) in
+``rust/src/loghd/codebook.rs``; ``python/tests/test_codebook.py`` exports
+vectors the Rust property tests compare against.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .prng import SplitMix64
+
+EPS_TIEBREAK = 1e-6
+MAX_ENUM = 8192  # full enumeration bound on k**n
+POOL_SIZE = 4096  # sampled candidate pool beyond it
+
+
+def min_bundles(c: int, k: int) -> int:
+    """Feasibility limit n >= ceil(log_k C)."""
+    n = 1
+    while k**n < c:
+        n += 1
+    return n
+
+
+def g(s: np.ndarray, k: int) -> np.ndarray:
+    """Symbol weight g(s) = s/(k-1)."""
+    return s.astype(np.float64) / float(k - 1)
+
+
+def capacity(w: np.ndarray, alpha: float) -> np.ndarray:
+    """Capacity surrogate U(w) = w^alpha."""
+    return np.power(w, alpha)
+
+
+def _enumerate_codes(k: int, n: int) -> np.ndarray:
+    """All k**n codes in lexicographic order, shape (k**n, n)."""
+    idx = np.arange(k**n)
+    cols = []
+    for j in range(n - 1, -1, -1):
+        cols.append((idx // (k**j)) % k)
+    return np.stack(cols, axis=1).astype(np.int32)
+
+
+def build_codebook(c: int, k: int, n: int, *, alpha: float = 1.0, seed: int = 0xC0DE) -> np.ndarray:
+    """Greedy minimax-load codebook B in {0..k-1}^(C x n).
+
+    Deterministic in ``seed``. Raises if k**n < C (infeasible).
+    """
+    if k**n < c:
+        raise ValueError(f"k^n = {k}^{n} < C = {c}: infeasible codebook")
+    rng = SplitMix64(seed)
+    full = k**n <= MAX_ENUM
+    if full:
+        candidates = _enumerate_codes(k, n)
+    else:
+        # Sampled pool: POOL_SIZE codes, n symbols each, drawn as u64 % k in
+        # row-major order (duplicates possible; uniqueness enforced below).
+        raw = rng.u64(POOL_SIZE * n) % np.uint64(k)
+        candidates = raw.reshape(POOL_SIZE, n).astype(np.int32)
+    cand_cap = capacity(g(candidates, k), alpha)  # (Q, n)
+
+    used = np.zeros(len(candidates), dtype=bool)
+    loads = np.zeros(n, dtype=np.float64)
+    rows = np.empty((c, n), dtype=np.int32)
+    for i in range(c):
+        xi = rng.uniform(len(candidates))
+        worst = np.max(loads[None, :] + cand_cap, axis=1) + EPS_TIEBREAK * xi
+        worst[used] = np.inf
+        best = int(np.argmin(worst))
+        rows[i] = candidates[best]
+        loads += cand_cap[best]
+        used[best] = True
+        if not full:
+            # kill duplicates of the chosen code in the sampled pool
+            used |= np.all(candidates == candidates[best], axis=1)
+    return rows
+
+
+def bundle_loads(b: np.ndarray, k: int, alpha: float = 1.0) -> np.ndarray:
+    """Per-bundle cumulative load L_j = sum_c U(g(B_{c,j}))."""
+    return capacity(g(b, k), alpha).sum(axis=0)
+
+
+def targets(b: np.ndarray, k: int) -> np.ndarray:
+    """Refinement targets t(s) = 2 s/(k-1) - 1 (Eq. 8), shape (C, n)."""
+    return (2.0 * b.astype(np.float64) / (k - 1) - 1.0).astype(np.float32)

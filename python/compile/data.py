@@ -1,0 +1,113 @@
+"""Synthetic dataset generators with the shapes of the paper's Table I.
+
+No network access exists in this environment, so the four UCI datasets are
+substituted by seeded, class-structured anisotropic Gaussian mixtures with
+the *exact* feature/class/sample-count shapes of Table I (PAMAP2's 611k
+train set is scaled to 24k, documented in DESIGN.md). Separation constants
+are calibrated so a conventional D=10k HDC classifier lands in the
+85–95% clean-accuracy band the HDC literature reports for these datasets —
+LogHD's claims concern model geometry and fault response, which these
+generators exercise on the identical code paths.
+
+Class geometry is *hierarchical*, matching how HDC-friendly real datasets
+behave: G group centers (distinct letters/activities), C class means
+scattered tightly around them (confusable variants), anisotropic per-class
+noise. This yields high within-class encoding similarity with a realistic
+band of confusable pairs — the regime in which both conventional decoding
+and LogHD's activation-profile decoding operate in the paper.
+
+The generator is mirrored **sample-for-sample** in ``rust/src/data/synth.rs``
+via the shared SplitMix64 stream (see :mod:`compile.prng`); draw order is
+part of the format contract:
+
+    group centers (G*F normals) -> class offsets (C*F normals) ->
+    scales (C*F uniforms) -> train labels (round-robin, Fisher–Yates
+    shuffle) -> train noise (n_train*F normals, row-major) ->
+    test labels -> test noise.
+
+Group assignment is deterministic: class c belongs to group c mod G.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .prng import SplitMix64
+
+SCALE_LO = 0.6
+SCALE_HI = 1.4
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    """Shape + difficulty of one synthetic dataset (paper Table I row)."""
+
+    name: str
+    features: int
+    classes: int
+    n_train: int
+    n_test: int
+    groups: int  # G group centers; class c -> group c mod G
+    sep_class: float  # class-offset std around its group center
+    sigma: float  # within-class noise scale
+    seed: int
+    description: str = ""
+
+
+# (sep_class, sigma) calibrated at D=2000 (conventional HDC / LogHD n=min+5
+# clean accuracy; see EXPERIMENTS.md §Datasets):
+# isolet 0.993/0.79, ucihar 0.969/0.81, pamap2 0.929/0.86, page 0.870/0.84.
+SPECS: dict[str, DatasetSpec] = {
+    s.name: s
+    for s in [
+        DatasetSpec("isolet", 617, 26, 6238, 1559, groups=9,
+                    sep_class=0.14, sigma=0.65, seed=0x150_1E7,
+                    description="Voice recognition (ISOLET-like)"),
+        DatasetSpec("ucihar", 261, 12, 6213, 1554, groups=4,
+                    sep_class=0.16, sigma=0.70, seed=0x0C1_4A8,
+                    description="Mobile activity recognition (UCIHAR-like)"),
+        DatasetSpec("pamap2", 75, 5, 24000, 4000, groups=2,
+                    sep_class=0.26, sigma=0.90, seed=0x9A3_A92,
+                    description="IMU activity recognition (PAMAP2-like, 611k train scaled to 24k)"),
+        DatasetSpec("page", 10, 5, 4925, 548, groups=2,
+                    sep_class=1.00, sigma=1.40, seed=0x9A6_E00,
+                    description="Page layout blocks (PAGE-like)"),
+    ]
+}
+
+
+@dataclasses.dataclass
+class Dataset:
+    spec: DatasetSpec
+    x_train: np.ndarray  # (n_train, F) f32
+    y_train: np.ndarray  # (n_train,) i32
+    x_test: np.ndarray  # (n_test, F) f32
+    y_test: np.ndarray  # (n_test,) i32
+
+
+def _split(rng: SplitMix64, means: np.ndarray, scales: np.ndarray, n: int, c: int, f: int):
+    y = np.array([i % c for i in range(n)], dtype=np.int32)
+    rng.shuffle(y)
+    z = rng.normal(n * f).reshape(n, f)
+    x = means[y] + scales[y] * z
+    return x.astype(np.float32), y
+
+
+def generate(spec: DatasetSpec) -> Dataset:
+    """Materialize a dataset; deterministic in ``spec.seed``."""
+    rng = SplitMix64(spec.seed)
+    c, f, g = spec.classes, spec.features, spec.groups
+    centers = rng.normal(g * f).reshape(g, f)
+    offsets = rng.normal(c * f).reshape(c, f)
+    means = centers[np.arange(c) % g] + spec.sep_class * offsets
+    scales = spec.sigma * (SCALE_LO + (SCALE_HI - SCALE_LO)
+                           * rng.uniform(c * f).reshape(c, f))
+    x_train, y_train = _split(rng, means, scales, spec.n_train, c, f)
+    x_test, y_test = _split(rng, means, scales, spec.n_test, c, f)
+    return Dataset(spec, x_train, y_train, x_test, y_test)
+
+
+def by_name(name: str) -> Dataset:
+    return generate(SPECS[name])

@@ -1,0 +1,20 @@
+"""L1: Pallas kernels for LogHD's compute hot-spots.
+
+Four kernels cover the paper's entire inference + refinement datapath:
+
+- :mod:`encode`     — phi(x) = cos(xW + b), the (B,F)x(F,D) MXU matmul.
+- :mod:`activation` — fused cosine activations A_j (Eq. 5) / HDC scores.
+- :mod:`decode`     — nearest-profile squared distances (Eq. 7).
+- :mod:`refine`     — batched perceptron bundle delta (Eq. 9).
+
+All are lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); see DESIGN.md §Hardware-Adaptation for the TPU tiling
+rationale and :mod:`ref` for the pure-jnp oracles used by pytest.
+"""
+
+from .activation import activations
+from .decode import decode_dists
+from .encode import encode
+from .refine import refine_delta
+
+__all__ = ["encode", "activations", "decode_dists", "refine_delta"]

@@ -1,0 +1,32 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+All kernels tile the hypervector axis D into VMEM-sized blocks. On a real
+TPU the block would be a multiple of the 128-lane register width and sized
+so that every operand tile fits in the ~16 MB VMEM scratchpad (see
+DESIGN.md §Hardware-Adaptation for the budget arithmetic). Under
+``interpret=True`` (the only mode the CPU PJRT plugin can execute) tile
+shape only affects structure, not speed, so we simply pick the largest
+divisor of D below the target width to keep index maps exact (no masking).
+"""
+
+from __future__ import annotations
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see DESIGN.md.
+
+# Target tile width along D. 512 f32 lanes x (B=64 + F<=640 + n<=32) rows
+# stays well under the 16 MB VMEM budget for every graph we lower.
+TARGET_BLOCK_D = 512
+
+
+def pick_block(d: int, target: int = TARGET_BLOCK_D) -> int:
+    """Largest divisor of ``d`` that is <= ``target`` (>=1).
+
+    Keeps the grid exact (d % block == 0) so BlockSpec index maps need no
+    out-of-bounds masking in interpret mode.
+    """
+    if d <= target:
+        return d
+    for block in range(target, 0, -1):
+        if d % block == 0:
+            return block
+    return 1

@@ -1,0 +1,57 @@
+"""Pallas kernel: random-projection cosine encoder  phi(x) = cos(xW + b).
+
+This is the single most FLOP-heavy stage of the whole pipeline
+(B x F x D MACs per batch; D = 10,000 in the paper's configuration), and is
+the classic MXU shape: a (B, F) x (F, D) matmul. The kernel tiles the D
+axis: each grid step holds the full (B, F) input tile, one (F, BLOCK_D)
+weight tile and one (1, BLOCK_D) bias tile in VMEM, accumulates the matmul
+in f32 on the MXU, applies the cosine nonlinearity in-register, and writes
+the (B, BLOCK_D) output tile back to HBM exactly once — the schedule a CUDA
+implementation would express with threadblocks is expressed here with the
+grid + BlockSpec index maps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+
+def _encode_kernel(x_ref, w_ref, b_ref, o_ref):
+    # x_ref: (B, F) — full input tile, identical for every grid step.
+    # w_ref: (F, BLOCK_D), b_ref: (1, BLOCK_D), o_ref: (B, BLOCK_D).
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.cos(acc + b_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def encode(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *, block_d: int | None = None) -> jnp.ndarray:
+    """phi(x) = cos(x @ W + b) via the tiled Pallas kernel.
+
+    x: (B, F) f32; w: (F, D) f32; b: (D,) f32. Returns (B, D) f32.
+    """
+    bsz, f = x.shape
+    f2, d = w.shape
+    assert f == f2, f"feature mismatch {f} vs {f2}"
+    assert b.shape == (d,), f"bias shape {b.shape} != ({d},)"
+    bd = block_d or pick_block(d)
+    assert d % bd == 0, f"block {bd} must divide D={d}"
+    b2 = b.reshape(1, d)
+    grid = (d // bd,)
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bsz, f), lambda j: (0, 0)),
+            pl.BlockSpec((f, bd), lambda j: (0, j)),
+            pl.BlockSpec((1, bd), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bsz, bd), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, d), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w, b2)

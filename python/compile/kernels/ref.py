@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written in
+plain ``jax.numpy``. The pytest suite (``python/tests/``) sweeps shapes,
+seeds, and dtypes with hypothesis and asserts ``allclose`` between each
+kernel and its oracle — this is the L1 correctness signal for the whole
+stack (the Rust runtime executes HLO lowered from graphs that call the
+kernels, so kernel==ref implies the served numerics match the math in the
+paper's Algorithm 1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "encode_ref",
+    "activation_ref",
+    "cosine_scores_ref",
+    "decode_ref",
+    "refine_delta_ref",
+]
+
+
+def encode_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Random-projection cosine encoder phi(x) = cos(x @ W + b).
+
+    x: (B, F) float32, w: (F, D) float32, b: (D,) or (1, D) float32.
+    Returns (B, D) float32.
+    """
+    return jnp.cos(jnp.dot(x, w, preferred_element_type=jnp.float32) + b.reshape(1, -1))
+
+
+def activation_ref(enc: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """Cosine activations A(x) (paper Eq. 5) against *pre-normalized* rows m.
+
+    enc: (B, D) raw encodings; m: (n, D) with unit-L2 rows.
+    Returns (B, n): <enc/|enc|, m_j>.
+    """
+    dots = jnp.dot(enc, m.T, preferred_element_type=jnp.float32)
+    qn = jnp.sqrt(jnp.sum(enc * enc, axis=1, keepdims=True))
+    return dots / jnp.maximum(qn, 1e-12)
+
+
+def cosine_scores_ref(enc: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Conventional-HDC scores: cosine similarity to every class prototype.
+
+    Identical math to activation_ref (prototypes pre-normalized); kept as a
+    separate named oracle because L2 uses it on the (C, D) prototype matrix.
+    """
+    return activation_ref(enc, h)
+
+
+def decode_ref(a: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """Squared-Euclidean profile decoding (paper Eq. 7).
+
+    a: (B, n) activations, p: (C, n) class profiles.
+    Returns (B, C) squared distances  ||A - P_c||^2.
+    """
+    an = jnp.sum(a * a, axis=1, keepdims=True)  # (B, 1)
+    pn = jnp.sum(p * p, axis=1)  # (C,)
+    cross = jnp.dot(a, p.T, preferred_element_type=jnp.float32)  # (B, C)
+    return an - 2.0 * cross + pn.reshape(1, -1)
+
+
+def refine_delta_ref(coef: jnp.ndarray, enc: jnp.ndarray) -> jnp.ndarray:
+    """Batched perceptron-style bundle update (paper Eq. 9).
+
+    coef: (n, B) = eta * (tau_j^(y_i) - A_j(x_i)); enc: (B, D).
+    Returns (n, D): the additive bundle delta  coef @ enc.
+    """
+    return jnp.dot(coef, enc, preferred_element_type=jnp.float32)

@@ -1,0 +1,51 @@
+"""Pallas kernel: batched bundle refinement delta  Delta M = coef @ enc.
+
+Paper Eq. 9 updates each bundle with a perceptron-style correction
+  M_j += eta * (tau_j^(y) - A_j) * phi(x).
+For a minibatch, the per-sample coefficients eta*(tau - A) form an (n, B)
+matrix and the summed update over the batch is the rank-B product
+coef @ enc — once again an MXU matmul. The kernel tiles D: each grid step
+reads one (B, BLOCK_D) encoding tile and emits one (n, BLOCK_D) delta tile;
+the small coef matrix stays VMEM-resident across all steps. L2 computes the
+coefficients (via the activation kernel) and applies
+M <- normalize(M + Delta M).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+
+def _refine_kernel(coef_ref, enc_ref, o_ref):
+    # coef_ref: (n, B) — same block every step; enc_ref: (B, BLOCK_D).
+    o_ref[...] = jnp.dot(coef_ref[...], enc_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def refine_delta(coef: jnp.ndarray, enc: jnp.ndarray, *, block_d: int | None = None) -> jnp.ndarray:
+    """Additive bundle delta for one minibatch.
+
+    coef: (n, B) = eta * (tau - A)^T; enc: (B, D). Returns (n, D).
+    """
+    n, bsz = coef.shape
+    bsz2, d = enc.shape
+    assert bsz == bsz2, f"batch mismatch {bsz} vs {bsz2}"
+    bd = block_d or pick_block(d)
+    assert d % bd == 0
+    return pl.pallas_call(
+        _refine_kernel,
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((n, bsz), lambda j: (0, 0)),
+            pl.BlockSpec((bsz, bd), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n, bd), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=INTERPRET,
+    )(coef, enc)

@@ -1,0 +1,45 @@
+"""LHT — the tiny tensor interchange format between Python and Rust.
+
+Layout (little-endian):
+  magic  4 bytes  b"LHT1"
+  dtype  u8       0 = f32, 1 = i32, 2 = u8
+  ndim   u8
+  dims   ndim x u32
+  data   raw little-endian values, row-major
+
+Writer here; reader/writer twin in ``rust/src/runtime/artifact.rs``.
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"LHT1"
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
+
+
+def write(path: str | Path, arr: np.ndarray) -> None:
+    arr = np.ascontiguousarray(arr)
+    code = _CODES.get(arr.dtype)
+    if code is None:
+        raise TypeError(f"unsupported dtype {arr.dtype}")
+    with open(path, "wb") as fh:
+        fh.write(MAGIC)
+        fh.write(struct.pack("<BB", code, arr.ndim))
+        fh.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+        fh.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def read(path: str | Path) -> np.ndarray:
+    with open(path, "rb") as fh:
+        if fh.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        code, ndim = struct.unpack("<BB", fh.read(2))
+        dims = struct.unpack(f"<{ndim}I", fh.read(4 * ndim))
+        dtype = np.dtype(_DTYPES[code]).newbyteorder("<")
+        data = np.frombuffer(fh.read(), dtype=dtype)
+    return data.reshape(dims).astype(_DTYPES[code])

@@ -1,0 +1,76 @@
+"""L2: the LogHD inference/training compute graphs, composed from L1 kernels.
+
+Each public function here is a pure JAX function over concrete arrays; the
+AOT driver (:mod:`compile.aot`) lowers the ``*_graph`` entries to HLO text
+for the Rust runtime. Model tensors (encoder weights, bundles, profiles,
+prototypes) are *graph inputs*, not baked constants — the Rust coordinator
+owns them as data, which is what lets it inject bit-flip faults into the
+stored model between evaluations exactly as the paper's protocol requires
+(§IV-A) without recompiling.
+
+Shapes (serving convention):
+  x: (B, F)   queries                w: (F, D)  encoder projection
+  b: (D,)     encoder phase          m: (n, D)  bundles (unit rows)
+  p: (C, n)   activation profiles    h: (C, D)  prototypes (unit rows)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import kernels
+
+
+def encode_graph(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 mu: jnp.ndarray) -> jnp.ndarray:
+    """Centered encoding phi(x) - mu: (B, F) -> (B, D).
+
+    ``mu`` is the training-set mean encoding. Centering removes the large
+    common (DC) component the cosine random-projection encoder introduces;
+    without it bundle activations are dominated by shared energy and the
+    activation space collapses (see DESIGN.md §Centering).
+    """
+    return kernels.encode(x, w, b) - mu.reshape(1, -1)
+
+
+def loghd_activations(x, w, b, mu, m) -> jnp.ndarray:
+    """Encode + cosine activations against the n bundles (Eq. 5): (B, n)."""
+    return kernels.activations(encode_graph(x, w, b, mu), m)
+
+
+def infer_loghd_graph(x, w, b, mu, m, p):
+    """Full LogHD inference (Algorithm 1 step 6).
+
+    Returns (dists, labels): (B, C) squared activation-space distances and
+    (B,) argmin class ids (i32).
+    """
+    a = loghd_activations(x, w, b, mu, m)
+    dists = kernels.decode_dists(a, p)
+    return dists, jnp.argmin(dists, axis=1).astype(jnp.int32)
+
+
+def infer_conventional_graph(x, w, b, mu, h):
+    """Conventional HDC inference: cosine argmax over C prototypes.
+
+    Also serves SparseHD: a dimension-masked prototype matrix (zeros on
+    pruned coordinates, rows re-normalized over retained ones) changes only
+    the weights, not the graph — the query norm is shared across classes so
+    the argmax is unaffected by restricting it to retained dimensions.
+
+    Returns (scores, labels): (B, C) cosine scores, (B,) argmax ids (i32).
+    """
+    scores = kernels.activations(encode_graph(x, w, b, mu), h)
+    return scores, jnp.argmax(scores, axis=1).astype(jnp.int32)
+
+
+def refine_step(m: jnp.ndarray, enc: jnp.ndarray, tau: jnp.ndarray, eta: float) -> jnp.ndarray:
+    """One batched refinement step (Eq. 9) over a minibatch.
+
+    m: (n, D) unit bundles; enc: (B, D) encoded batch; tau: (B, n) targets
+    t(B_{y,j}) for each sample's class. Returns the re-normalized bundles.
+    """
+    a = kernels.activations(enc, m)  # (B, n)
+    coef = (eta * (tau - a)).T  # (n, B)
+    m2 = m + kernels.refine_delta(coef, enc)
+    norms = jnp.sqrt(jnp.sum(m2 * m2, axis=1, keepdims=True))
+    return m2 / jnp.maximum(norms, 1e-12)

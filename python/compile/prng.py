@@ -1,0 +1,68 @@
+"""SplitMix64-based deterministic PRNG, mirrored bit-for-bit in Rust.
+
+The synthetic dataset generator must produce *identical* samples in the
+Python (artifact build / JAX training) and Rust (figure harness, serving)
+worlds so that parity tests compare like with like. Both sides therefore
+implement the same primitive stream:
+
+- SplitMix64 (Steele et al.) for raw u64s,
+- uniform f64 in [0,1) as ``(z >> 11) * 2**-53``,
+- standard normals via Box–Muller, each normal consuming exactly TWO
+  uniforms (the sine twin is discarded to keep the stream position
+  independent of call batching),
+- Fisher–Yates shuffling with ``next_u64() % (i+1)`` indices.
+
+The Rust twin lives in ``rust/src/util/rng.rs``; ``rust/tests/prng_parity``
+checks the first values of every stream against vectors exported by
+``python/tests/test_prng.py``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+_TWO53_INV = float(2.0**-53)
+
+
+class SplitMix64:
+    """Scalar-stateful, vectorized-output SplitMix64."""
+
+    def __init__(self, seed: int):
+        self._state = np.uint64(seed & 0xFFFFFFFFFFFFFFFF)
+
+    def next_u64(self) -> int:
+        """One u64 step (used by Fisher–Yates)."""
+        return int(self.u64(1)[0])
+
+    def u64(self, count: int) -> np.ndarray:
+        """``count`` raw u64s as a vector, advancing the state by count."""
+        base = np.uint64(self._state)
+        idx = np.arange(1, count + 1, dtype=np.uint64)
+        with np.errstate(over="ignore"):
+            z = base + idx * _GAMMA
+            self._state = np.uint64(base + np.uint64(count) * _GAMMA)
+            z = (z ^ (z >> np.uint64(30))) * _M1
+            z = (z ^ (z >> np.uint64(27))) * _M2
+            z = z ^ (z >> np.uint64(31))
+        return z
+
+    def uniform(self, count: int) -> np.ndarray:
+        """f64 uniforms in [0, 1)."""
+        return (self.u64(count) >> np.uint64(11)).astype(np.float64) * _TWO53_INV
+
+    def normal(self, count: int) -> np.ndarray:
+        """Standard normals; consumes exactly 2*count uniforms (Box–Muller)."""
+        u = self.uniform(2 * count)
+        u1 = np.maximum(u[0::2], _TWO53_INV)  # avoid log(0)
+        u2 = u[1::2]
+        return np.sqrt(-2.0 * np.log(u1)) * np.cos(2.0 * np.pi * u2)
+
+    def shuffle(self, arr: np.ndarray) -> None:
+        """In-place Fisher–Yates, high-to-low, ``next_u64 % (i+1)`` indices."""
+        n = len(arr)
+        for i in range(n - 1, 0, -1):
+            j = self.next_u64() % (i + 1)
+            arr[i], arr[j] = arr[j], arr[i]

@@ -1,0 +1,222 @@
+"""Build-time training of the serving models (paper Algorithm 1), in JAX.
+
+Runs once inside ``make artifacts``; never on the request path. Produces
+the tensors the Rust coordinator serves: encoder (W, b), conventional
+prototypes H, LogHD bundles M + profiles P + codebook B, and the SparseHD
+dimension mask.
+
+Faithfulness notes (also in DESIGN.md):
+- Refinement (Eq. 9) is applied per *minibatch* rather than per sample —
+  the summed rank-B update with small eta; standard and mirrored exactly by
+  the Rust native trainer so the two worlds stay parity-testable.
+- Activation profiles are recomputed after refinement so decoding matches
+  the refined bundles (Algorithm 1 lists profiling before refinement; the
+  refined bundles shift activations, so serving uses refreshed profiles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import codebook as cb
+from . import kernels
+from . import model
+from .prng import SplitMix64
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    d: int = 10_000
+    k: int = 2
+    extra_bundles: int = 2  # epsilon redundancy (paper §III-G)
+    alpha: float = 1.0  # capacity surrogate exponent
+    eta: float = 3e-4  # refinement step size (paper §IV-A)
+    epochs: int = 10  # refinement passes (paper uses 100; see DESIGN.md)
+    conv_epochs: int = 3  # OnlineHD-style passes for the conventional baseline
+    batch: int = 64
+    encoder_seed: int = 0xE5C0DE
+    codebook_seed: int = 0xC0DE
+    shuffle_seed: int = 0x5EED
+
+
+@dataclasses.dataclass
+class TrainedModels:
+    config: TrainConfig
+    n_bundles: int
+    w: np.ndarray  # (F, D)
+    b: np.ndarray  # (D,)
+    mu: np.ndarray  # (D,) training-set mean encoding (centering vector)
+    prototypes: np.ndarray  # (C, D) unit rows
+    bundles: np.ndarray  # (n, D) unit rows
+    profiles: np.ndarray  # (C, n)
+    codebook: np.ndarray  # (C, n) i32
+    clean_acc_conventional: float = 0.0
+    clean_acc_loghd: float = 0.0
+
+
+def make_encoder(f: int, d: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """W ~ N(0, 1/sqrt(F))^(F x D) row-major, then b ~ U[0, 2pi)^D."""
+    rng = SplitMix64(seed)
+    w = (rng.normal(f * d).reshape(f, d) / np.sqrt(f)).astype(np.float32)
+    b = (2.0 * np.pi * rng.uniform(d)).astype(np.float32)
+    return w, b
+
+
+def encode_all(x: np.ndarray, w: np.ndarray, b: np.ndarray, batch: int = 256) -> np.ndarray:
+    """Encode a full dataset through the L1 kernel, batched."""
+    out = np.empty((x.shape[0], w.shape[1]), dtype=np.float32)
+    for lo in range(0, x.shape[0], batch):
+        hi = min(lo + batch, x.shape[0])
+        out[lo:hi] = np.asarray(kernels.encode(jnp.asarray(x[lo:hi]), w, b))
+    return out
+
+
+def _normalize_rows(m: np.ndarray) -> np.ndarray:
+    return m / np.maximum(np.linalg.norm(m, axis=1, keepdims=True), 1e-12)
+
+
+def train_prototypes(enc: np.ndarray, y: np.ndarray, c: int) -> np.ndarray:
+    """Algorithm 1 step 1: superpose + L2-normalize per class."""
+    h = np.zeros((c, enc.shape[1]), dtype=np.float64)
+    np.add.at(h, y, enc.astype(np.float64))
+    return _normalize_rows(h).astype(np.float32)
+
+
+def refine_conventional(h: np.ndarray, enc: np.ndarray, y: np.ndarray,
+                        epochs: int, eta: float, seed: int, batch: int = 64) -> np.ndarray:
+    """OnlineHD-style perceptron passes for the conventional baseline.
+
+    For each misclassified sample: H_y += eta*(1-s_y)*phi, H_yhat -=
+    eta*(1-s_yhat)*phi, applied batched. Keeps the conventional baseline
+    competitive so LogHD's compaction is measured against a strong model.
+    """
+    rng = SplitMix64(seed)
+    h = h.astype(np.float64)
+    # Unit-norm encodings so the update scale is comparable to the unit
+    # prototype rows regardless of D (raw phi has norm ~sqrt(D/2)).
+    encn = enc / np.maximum(np.linalg.norm(enc, axis=1, keepdims=True), 1e-12)
+    idx = np.arange(len(y), dtype=np.int64)
+    for _ in range(epochs):
+        rng.shuffle(idx)
+        for lo in range(0, len(idx), batch):
+            sel = idx[lo:lo + batch]
+            hn = _normalize_rows(h).astype(np.float32)
+            scores = np.asarray(kernels.activations(jnp.asarray(enc[sel]), jnp.asarray(hn)))
+            pred = scores.argmax(axis=1)
+            wrong = pred != y[sel]
+            if not wrong.any():
+                continue
+            for i in np.nonzero(wrong)[0]:
+                yy, py = int(y[sel][i]), int(pred[i])
+                e = encn[sel[i]]
+                h[yy] += eta * (1.0 - scores[i, yy]) * e
+                h[py] -= eta * (1.0 - scores[i, py]) * e
+    return _normalize_rows(h).astype(np.float32)
+
+
+def build_bundles(h: np.ndarray, book: np.ndarray, k: int) -> np.ndarray:
+    """Algorithm 1 step 3 (Eq. 4): weighted superposition + normalize."""
+    gmat = cb.g(book, k)  # (C, n)
+    m = gmat.T @ h.astype(np.float64)  # (n, D)
+    # An all-zero bundle (possible when a column of g is all zeros) stays
+    # zero after normalization guard rather than dividing by ~0.
+    return _normalize_rows(m).astype(np.float32)
+
+
+def compute_profiles(enc: np.ndarray, y: np.ndarray, m: np.ndarray, c: int,
+                     batch: int = 256) -> np.ndarray:
+    """Algorithm 1 step 4 (Eq. 6): per-class mean activation vectors."""
+    n = m.shape[0]
+    acc = np.zeros((c, n), dtype=np.float64)
+    cnt = np.zeros(c, dtype=np.int64)
+    mj = jnp.asarray(m)
+    for lo in range(0, enc.shape[0], batch):
+        hi = min(lo + batch, enc.shape[0])
+        a = np.asarray(kernels.activations(jnp.asarray(enc[lo:hi]), mj))
+        np.add.at(acc, y[lo:hi], a.astype(np.float64))
+        np.add.at(cnt, y[lo:hi], 1)
+    return (acc / np.maximum(cnt, 1)[:, None]).astype(np.float32)
+
+
+def refine_bundles(m: np.ndarray, enc: np.ndarray, y: np.ndarray, book: np.ndarray,
+                   k: int, epochs: int, eta: float, seed: int, batch: int = 64) -> np.ndarray:
+    """Algorithm 1 step 5 (Eq. 8/9), batched minibatch variant."""
+    tgt = cb.targets(book, k)  # (C, n)
+    rng = SplitMix64(seed)
+    idx = np.arange(len(y), dtype=np.int64)
+    mj = jnp.asarray(m)
+    for _ in range(epochs):
+        rng.shuffle(idx)
+        for lo in range(0, len(idx), batch):
+            sel = idx[lo:lo + batch]
+            tau = jnp.asarray(tgt[y[sel]])  # (B, n)
+            mj = model.refine_step(mj, jnp.asarray(enc[sel]), tau, eta)
+    return np.asarray(mj)
+
+
+def sparsehd_mask(h: np.ndarray, sparsity: float) -> np.ndarray:
+    """SparseHD dimension-wise mask: keep the top (1-S)*D dimensions by
+    cross-class discriminability (variance of the prototype matrix along
+    each dimension). Returns a (D,) f32 0/1 mask."""
+    d = h.shape[1]
+    keep = max(1, int(round((1.0 - sparsity) * d)))
+    saliency = h.astype(np.float64).var(axis=0)
+    order = np.argsort(-saliency, kind="stable")
+    mask = np.zeros(d, dtype=np.float32)
+    mask[order[:keep]] = 1.0
+    return mask
+
+
+def accuracy_conventional(enc: np.ndarray, y: np.ndarray, h: np.ndarray, batch: int = 256) -> float:
+    hits = 0
+    hj = jnp.asarray(h)
+    for lo in range(0, enc.shape[0], batch):
+        hi = min(lo + batch, enc.shape[0])
+        s = np.asarray(kernels.activations(jnp.asarray(enc[lo:hi]), hj))
+        hits += int((s.argmax(axis=1) == y[lo:hi]).sum())
+    return hits / len(y)
+
+
+def accuracy_loghd(enc: np.ndarray, y: np.ndarray, m: np.ndarray, p: np.ndarray,
+                   batch: int = 256) -> float:
+    hits = 0
+    mj, pj = jnp.asarray(m), jnp.asarray(p)
+    for lo in range(0, enc.shape[0], batch):
+        hi = min(lo + batch, enc.shape[0])
+        a = kernels.activations(jnp.asarray(enc[lo:hi]), mj)
+        d = np.asarray(kernels.decode_dists(a, pj))
+        hits += int((d.argmin(axis=1) == y[lo:hi]).sum())
+    return hits / len(y)
+
+
+def train_all(x_train: np.ndarray, y_train: np.ndarray, x_test: np.ndarray,
+              y_test: np.ndarray, c: int, cfg: TrainConfig) -> TrainedModels:
+    """Full Algorithm 1 pipeline + conventional baseline, returning every
+    tensor the serving artifacts need."""
+    f = x_train.shape[1]
+    w, b = make_encoder(f, cfg.d, cfg.encoder_seed)
+    enc_train = encode_all(x_train, w, b)
+    enc_test = encode_all(x_test, w, b)
+    # Centering: remove the DC component of the cosine RP encoder (in f64,
+    # mirrored by Rust); see DESIGN.md §Centering.
+    mu = enc_train.astype(np.float64).mean(axis=0).astype(np.float32)
+    enc_train = enc_train - mu
+    enc_test = enc_test - mu
+
+    h0 = train_prototypes(enc_train, y_train, c)
+    h = refine_conventional(h0, enc_train, y_train, cfg.conv_epochs, 0.05,
+                            cfg.shuffle_seed ^ 0xA5A5)
+
+    n = cb.min_bundles(c, cfg.k) + cfg.extra_bundles
+    book = cb.build_codebook(c, cfg.k, n, alpha=cfg.alpha, seed=cfg.codebook_seed)
+    m = build_bundles(h, book, cfg.k)
+    m = refine_bundles(m, enc_train, y_train, book, cfg.k, cfg.epochs, cfg.eta,
+                       cfg.shuffle_seed)
+    p = compute_profiles(enc_train, y_train, m, c)
+
+    acc_conv = accuracy_conventional(enc_test, y_test, h)
+    acc_log = accuracy_loghd(enc_test, y_test, m, p)
+    return TrainedModels(cfg, n, w, b, mu, h, m, p, book, acc_conv, acc_log)

@@ -1,0 +1,76 @@
+"""AOT lowering + LHT format contracts (without full retraining)."""
+
+import json
+import numpy as np
+import pytest
+
+from compile import aot, lht, model
+
+
+def test_lht_roundtrip(tmp_path):
+    for arr in [
+        np.arange(12, dtype=np.float32).reshape(3, 4),
+        np.array([1, -2, 3], dtype=np.int32),
+        np.arange(8, dtype=np.uint8).reshape(2, 2, 2),
+    ]:
+        p = tmp_path / "t.lht"
+        lht.write(p, arr)
+        back = lht.read(p)
+        assert back.dtype == arr.dtype
+        assert back.shape == arr.shape
+        assert (back == arr).all()
+
+
+def test_lht_rejects_bad_magic(tmp_path):
+    p = tmp_path / "bad.lht"
+    p.write_bytes(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        lht.read(p)
+
+
+def test_lht_rejects_unsupported_dtype(tmp_path):
+    with pytest.raises(TypeError):
+        lht.write(tmp_path / "x.lht", np.zeros(3, dtype=np.float64))
+
+
+def test_lower_entries_produce_parseable_hlo():
+    """Lower a miniature config and sanity-check the HLO text: must be real
+    HLO (ENTRY + parameters matching the manifest arity)."""
+    cfg = aot.ServingConfig("mini", "page", d=64, k=2, extra_bundles=0,
+                            epochs=0, batch=4)
+    entries = aot.lower_entries(cfg, f=10, c=5, n=3)
+    assert set(entries) == {"infer_loghd", "infer_conventional", "encode"}
+    for name, e in entries.items():
+        hlo = e["hlo"]
+        assert "ENTRY" in hlo and "HloModule" in hlo, name
+        for pname, shape, dtype in e["inputs"]:
+            assert isinstance(pname, str) and isinstance(shape, list)
+        # entry arity matches the declared inputs:
+        # entry_computation_layout={(t0, t1, ...)->...}
+        sig = hlo.split("entry_computation_layout={(", 1)[1].split(")->", 1)[0]
+        arity = sig.count("f32[") + sig.count("s32[")
+        assert arity == len(e["inputs"]), name
+
+
+def test_configs_table():
+    assert "page_smoke" in aot.CONFIGS and "isolet_k2" in aot.CONFIGS
+    iso = aot.CONFIGS["isolet_k2"]
+    assert iso.d == 10_000 and iso.k == 2  # the paper's Table II config
+
+
+def test_graph_outputs_match_manifest_decl():
+    cfg = aot.ServingConfig("mini", "page", d=64, k=2, extra_bundles=0,
+                            epochs=0, batch=4)
+    entries = aot.lower_entries(cfg, f=10, c=5, n=3)
+    r = np.random.default_rng(0)
+    x = r.normal(size=(4, 10)).astype(np.float32)
+    w = r.normal(size=(10, 64)).astype(np.float32)
+    b = r.normal(size=(64,)).astype(np.float32)
+    mu = r.normal(size=(64,)).astype(np.float32) * 0.1
+    m = r.normal(size=(3, 64)).astype(np.float32)
+    m /= np.linalg.norm(m, axis=1, keepdims=True)
+    p = r.normal(size=(5, 3)).astype(np.float32)
+    dists, labels = model.infer_loghd_graph(x, w, b, mu, m, p)
+    decl = entries["infer_loghd"]["outputs"]
+    assert list(dists.shape) == decl[0][1]
+    assert list(labels.shape) == decl[1][1]

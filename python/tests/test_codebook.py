@@ -1,0 +1,75 @@
+"""Codebook construction invariants (paper §III-C)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import codebook as cb
+
+
+def test_min_bundles():
+    assert cb.min_bundles(26, 2) == 5   # paper: ceil(log2 26) = 5
+    assert cb.min_bundles(26, 3) == 3   # paper: k=3, C=26 -> n=3
+    assert cb.min_bundles(5, 2) == 3
+    assert cb.min_bundles(2, 2) == 1
+    assert cb.min_bundles(1, 2) == 1
+
+
+def test_g_and_targets():
+    b = np.array([[0, 1, 2]], dtype=np.int32)
+    np.testing.assert_allclose(cb.g(b, 3), [[0.0, 0.5, 1.0]])
+    np.testing.assert_allclose(cb.targets(b, 3), [[-1.0, 0.0, 1.0]])
+
+
+def test_infeasible_raises():
+    with pytest.raises(ValueError):
+        cb.build_codebook(10, 2, 3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(2, 4), st.integers(0, 3),
+       st.integers(0, 2**31 - 1))
+def test_codebook_rows_unique_and_in_range(c, k, extra, seed):
+    n = cb.min_bundles(c, k) + extra
+    b = cb.build_codebook(c, k, n, seed=seed)
+    assert b.shape == (c, n)
+    assert b.min() >= 0 and b.max() < k
+    assert len({tuple(row) for row in b}) == c  # uniqueness (paper req.)
+
+
+def test_deterministic_in_seed():
+    a = cb.build_codebook(26, 2, 5, seed=99)
+    b = cb.build_codebook(26, 2, 5, seed=99)
+    assert (a == b).all()
+    c = cb.build_codebook(26, 2, 5, seed=100)
+    assert not (a == c).all()
+
+
+def test_greedy_beats_adversarial_load():
+    """Minimax-load greedy must spread load more evenly than the
+    lexicographic-prefix codebook (the pathological case Eq. 2 guards
+    against: early lexicographic codes pile weight onto low positions)."""
+    c, k, n = 20, 3, 5
+    b_greedy = cb.build_codebook(c, k, n, seed=1)
+    lex = cb._enumerate_codes(k, n)[:c]
+    worst_greedy = cb.bundle_loads(b_greedy, k).max()
+    worst_lex = cb.bundle_loads(lex, k).max()
+    assert worst_greedy <= worst_lex + 1e-9
+
+
+def test_sampled_pool_path():
+    """k^n > MAX_ENUM exercises the sampled-candidate branch."""
+    b = cb.build_codebook(50, 4, 8, seed=3)  # 4^8 = 65536 > 8192
+    assert b.shape == (50, 8)
+    assert len({tuple(row) for row in b}) == 50
+
+
+def test_alpha_flattens_heavy_symbols():
+    """Larger alpha penalizes heavy symbols harder: the max per-bundle
+    *heavy-symbol count* should not grow when alpha increases."""
+    c, k, n = 30, 3, 5
+    b1 = cb.build_codebook(c, k, n, alpha=1.0, seed=7)
+    b2 = cb.build_codebook(c, k, n, alpha=2.0, seed=7)
+    heavy1 = (b1 == k - 1).sum(axis=0).max()
+    heavy2 = (b2 == k - 1).sum(axis=0).max()
+    assert heavy2 <= heavy1 + 1

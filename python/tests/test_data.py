@@ -1,0 +1,58 @@
+"""Synthetic dataset generator contract (Table I shapes + difficulty)."""
+
+import numpy as np
+import pytest
+
+from compile import data as dt
+
+TABLE_I = {  # name -> (features, classes, n_train, n_test)
+    "isolet": (617, 26, 6238, 1559),
+    "ucihar": (261, 12, 6213, 1554),
+    "pamap2": (75, 5, 24000, 4000),  # 611k train scaled (DESIGN.md)
+    "page": (10, 5, 4925, 548),
+}
+
+
+@pytest.mark.parametrize("name", list(TABLE_I))
+def test_shapes_match_table1(name):
+    f, c, ntr, nte = TABLE_I[name]
+    spec = dt.SPECS[name]
+    assert (spec.features, spec.classes, spec.n_train, spec.n_test) == (f, c, ntr, nte)
+
+
+def test_page_generation_shapes_and_dtypes():
+    ds = dt.by_name("page")
+    assert ds.x_train.shape == (4925, 10) and ds.x_train.dtype == np.float32
+    assert ds.y_train.shape == (4925,) and ds.y_train.dtype == np.int32
+    assert ds.x_test.shape == (548, 10)
+    assert ds.y_test.shape == (548,)
+
+
+def test_deterministic():
+    a = dt.by_name("page")
+    b = dt.by_name("page")
+    assert (a.x_train == b.x_train).all()
+    assert (a.y_test == b.y_test).all()
+
+
+def test_labels_balanced():
+    ds = dt.by_name("page")
+    counts = np.bincount(ds.y_train, minlength=5)
+    assert counts.max() - counts.min() <= 1  # round-robin before shuffle
+
+
+def test_classes_separable_but_not_trivial():
+    """Nearest-class-mean accuracy on PAGE should sit in a realistic band:
+    far above chance (structure exists) but below 100% (noise overlaps)."""
+    ds = dt.by_name("page")
+    c = ds.spec.classes
+    means = np.stack([ds.x_train[ds.y_train == i].mean(axis=0) for i in range(c)])
+    d2 = ((ds.x_test[:, None, :] - means[None]) ** 2).sum(axis=2)
+    acc = (d2.argmin(axis=1) == ds.y_test).mean()
+    assert 0.5 < acc < 0.999, acc
+
+
+def test_train_test_disjoint_draws():
+    """Test samples must not duplicate train samples (independent noise)."""
+    ds = dt.by_name("page")
+    assert not np.isin(ds.x_test[:, 0], ds.x_train[:, 0]).all()

@@ -1,0 +1,131 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-divisible D forcing single-block
+and multi-block tilings) and seeds; allclose tolerances are tight because
+both sides compute in f32 with f32 accumulation.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+from compile.kernels.common import pick_block
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+shapes = st.tuples(
+    st.integers(1, 32),    # B
+    st.integers(1, 40),    # F
+    st.integers(1, 300),   # D
+    st.integers(1, 9),     # n
+    st.integers(2, 30),    # C
+    st.integers(0, 2**31 - 1),
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes)
+def test_encode_matches_ref(sh):
+    b, f, d, _, _, seed = sh
+    r = _rng(seed)
+    x = r.normal(size=(b, f)).astype(np.float32)
+    w = r.normal(size=(f, d)).astype(np.float32)
+    bias = r.normal(size=(d,)).astype(np.float32)
+    got = np.asarray(kernels.encode(x, w, bias))
+    want = np.asarray(ref.encode_ref(x, w, bias))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes)
+def test_activation_matches_ref(sh):
+    b, _, d, n, _, seed = sh
+    r = _rng(seed)
+    enc = r.normal(size=(b, d)).astype(np.float32)
+    m = r.normal(size=(n, d)).astype(np.float32)
+    m /= np.maximum(np.linalg.norm(m, axis=1, keepdims=True), 1e-12)
+    got = np.asarray(kernels.activations(enc, m))
+    want = np.asarray(ref.activation_ref(enc, m))
+    np.testing.assert_allclose(got, want, **TOL)
+    assert np.abs(got).max() <= 1.0 + 1e-4  # cosine bound
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes)
+def test_decode_matches_ref(sh):
+    b, _, _, n, c, seed = sh
+    r = _rng(seed)
+    a = r.normal(size=(b, n)).astype(np.float32)
+    p = r.normal(size=(c, n)).astype(np.float32)
+    got = np.asarray(kernels.decode_dists(a, p))
+    want = np.asarray(ref.decode_ref(a, p))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes)
+def test_refine_delta_matches_ref(sh):
+    b, _, d, n, _, seed = sh
+    r = _rng(seed)
+    coef = r.normal(size=(n, b)).astype(np.float32)
+    enc = r.normal(size=(b, d)).astype(np.float32)
+    got = np.asarray(kernels.refine_delta(coef, enc))
+    want = np.asarray(ref.refine_delta_ref(coef, enc))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_multi_block_accumulation():
+    """Force a >1 grid (block_d < D) and check accumulation across steps."""
+    r = _rng(0)
+    enc = r.normal(size=(4, 96)).astype(np.float32)
+    m = r.normal(size=(3, 96)).astype(np.float32)
+    m /= np.linalg.norm(m, axis=1, keepdims=True)
+    got = np.asarray(kernels.activations(enc, m, block_d=16))
+    want = np.asarray(ref.activation_ref(enc, m))
+    np.testing.assert_allclose(got, want, **TOL)
+
+    x = r.normal(size=(4, 7)).astype(np.float32)
+    w = r.normal(size=(7, 96)).astype(np.float32)
+    bias = r.normal(size=(96,)).astype(np.float32)
+    got = np.asarray(kernels.encode(x, w, bias, block_d=24))
+    want = np.asarray(ref.encode_ref(x, w, bias))
+    np.testing.assert_allclose(got, want, **TOL)
+
+    coef = r.normal(size=(3, 4)).astype(np.float32)
+    got = np.asarray(kernels.refine_delta(coef, enc, block_d=32))
+    want = np.asarray(ref.refine_delta_ref(coef, enc))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("d,target", [(10_000, 512), (2000, 512), (617, 512), (128, 512), (1, 512)])
+def test_pick_block_divides(d, target):
+    b = pick_block(d, target)
+    assert 1 <= b <= max(d, 1)
+    assert d % b == 0
+    assert b <= target or d <= target
+
+
+def test_encode_values_bounded():
+    """cos output must live in [-1, 1]."""
+    r = _rng(3)
+    x = (10 * r.normal(size=(8, 5))).astype(np.float32)
+    w = r.normal(size=(5, 64)).astype(np.float32)
+    bias = r.normal(size=(64,)).astype(np.float32)
+    e = np.asarray(kernels.encode(x, w, bias))
+    assert np.abs(e).max() <= 1.0 + 1e-6
+
+
+def test_activation_zero_query_guarded():
+    """A zero encoding must not produce NaNs (guarded norm)."""
+    enc = np.zeros((2, 32), dtype=np.float32)
+    m = np.eye(3, 32, dtype=np.float32)
+    a = np.asarray(kernels.activations(enc, m))
+    assert np.isfinite(a).all()

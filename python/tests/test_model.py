@@ -1,0 +1,65 @@
+"""L2 graph contracts: shapes, dtype, composition vs numpy references."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _setup(seed=0, b=8, f=11, d=128, n=4, c=6):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(b, f)).astype(np.float32)
+    w = r.normal(size=(f, d)).astype(np.float32)
+    bias = r.normal(size=(d,)).astype(np.float32)
+    mu = r.normal(size=(d,)).astype(np.float32) * 0.1
+    m = r.normal(size=(n, d)).astype(np.float32)
+    m /= np.linalg.norm(m, axis=1, keepdims=True)
+    p = r.normal(size=(c, n)).astype(np.float32)
+    h = r.normal(size=(c, d)).astype(np.float32)
+    h /= np.linalg.norm(h, axis=1, keepdims=True)
+    return x, w, bias, mu, m, p, h
+
+
+def test_infer_loghd_graph():
+    x, w, bias, mu, m, p, _ = _setup()
+    dists, labels = model.infer_loghd_graph(x, w, bias, mu, m, p)
+    assert dists.shape == (8, 6) and labels.shape == (8,)
+    assert labels.dtype == jnp.int32
+
+    enc = ref.encode_ref(x, w, bias) - mu.reshape(1, -1)
+    a = ref.activation_ref(enc, m)
+    want = ref.decode_ref(a, p)
+    np.testing.assert_allclose(np.asarray(dists), np.asarray(want), rtol=1e-4, atol=1e-4)
+    assert (np.asarray(labels) == np.asarray(want).argmin(axis=1)).all()
+
+
+def test_infer_conventional_graph():
+    x, w, bias, mu, _, _, h = _setup()
+    scores, labels = model.infer_conventional_graph(x, w, bias, mu, h)
+    assert scores.shape == (8, 6) and labels.shape == (8,)
+
+    enc = ref.encode_ref(x, w, bias) - mu.reshape(1, -1)
+    want = ref.cosine_scores_ref(enc, h)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(want), rtol=2e-5, atol=2e-5)
+    assert (np.asarray(labels) == np.asarray(want).argmax(axis=1)).all()
+
+
+def test_refine_step_moves_activation_toward_target():
+    x, w, bias, _, m, _, _ = _setup()
+    enc = jnp.asarray(np.asarray(ref.encode_ref(x, w, bias)))
+    a0 = np.asarray(ref.activation_ref(np.asarray(enc), np.asarray(m)))
+    tau = np.ones_like(a0, dtype=np.float32)  # push all activations up
+    m1 = model.refine_step(jnp.asarray(m), enc, jnp.asarray(tau), eta=0.05)
+    m1 = np.asarray(m1)
+    np.testing.assert_allclose(np.linalg.norm(m1, axis=1), 1.0, atol=1e-5)
+    a1 = np.asarray(ref.activation_ref(np.asarray(enc), m1))
+    assert a1.mean() > a0.mean()  # moved toward +1 targets
+
+
+def test_refine_step_zero_eta_is_identity_up_to_norm():
+    x, w, bias, _, m, _, _ = _setup()
+    enc = jnp.asarray(np.asarray(ref.encode_ref(x, w, bias)))
+    tau = jnp.zeros((8, 4), dtype=jnp.float32)
+    m1 = model.refine_step(jnp.asarray(m), enc, tau, eta=0.0)
+    np.testing.assert_allclose(np.asarray(m1), m, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,85 @@
+"""Trainer pipeline: Algorithm 1 end-to-end on a tiny dataset."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from compile import data as dt
+from compile import trainer
+from compile import codebook as cb
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """PAGE-like data, small D: the full pipeline in seconds."""
+    ds = dt.by_name("page")
+    cfg = trainer.TrainConfig(d=512, k=2, extra_bundles=1, epochs=3,
+                              conv_epochs=1)
+    tm = trainer.train_all(ds.x_train[:1500], ds.y_train[:1500],
+                           ds.x_test, ds.y_test, ds.spec.classes, cfg)
+    return ds, tm
+
+
+def test_shapes(tiny):
+    ds, tm = tiny
+    c, f, d = ds.spec.classes, ds.spec.features, tm.config.d
+    n = tm.n_bundles
+    assert n == cb.min_bundles(c, 2) + 1
+    assert tm.w.shape == (f, d)
+    assert tm.b.shape == (d,)
+    assert tm.prototypes.shape == (c, d)
+    assert tm.bundles.shape == (n, d)
+    assert tm.profiles.shape == (c, n)
+    assert tm.codebook.shape == (c, n)
+
+
+def test_unit_rows(tiny):
+    _, tm = tiny
+    np.testing.assert_allclose(np.linalg.norm(tm.prototypes, axis=1), 1.0, atol=1e-4)
+    np.testing.assert_allclose(np.linalg.norm(tm.bundles, axis=1), 1.0, atol=1e-4)
+
+
+def test_accuracies_beat_chance_by_far(tiny):
+    ds, tm = tiny
+    chance = 1.0 / ds.spec.classes
+    assert tm.clean_acc_conventional > 0.75 > 3 * chance
+    assert tm.clean_acc_loghd > 0.70
+    # LogHD trails conventional only modestly (paper: "competitive")
+    assert tm.clean_acc_loghd > tm.clean_acc_conventional - 0.12
+
+
+def test_profiles_within_cosine_bounds(tiny):
+    _, tm = tiny
+    assert np.abs(tm.profiles).max() <= 1.0 + 1e-5
+
+
+def test_memory_reduction(tiny):
+    """The headline claim: n*D + C*n floats vs C*D floats."""
+    ds, tm = tiny
+    c, d, n = ds.spec.classes, tm.config.d, tm.n_bundles
+    loghd_floats = n * d + c * n
+    conv_floats = c * d
+    assert loghd_floats < conv_floats
+    assert n <= np.ceil(np.log2(c)) + 1
+
+
+def test_sparsehd_mask():
+    r = np.random.default_rng(0)
+    h = r.normal(size=(5, 100)).astype(np.float32)
+    mask = trainer.sparsehd_mask(h, sparsity=0.7)
+    assert mask.shape == (100,)
+    assert mask.sum() == 30  # keeps (1-S)*D
+    assert set(np.unique(mask)) <= {0.0, 1.0}
+    # keeps the highest-variance dims
+    sal = h.var(axis=0)
+    kept = sal[mask == 1.0].min()
+    dropped = sal[mask == 0.0].max()
+    assert kept >= dropped - 1e-6
+
+
+def test_encoder_deterministic():
+    w1, b1 = trainer.make_encoder(7, 32, seed=5)
+    w2, b2 = trainer.make_encoder(7, 32, seed=5)
+    assert (w1 == w2).all() and (b1 == b2).all()
+    assert (0 <= b1).all() and (b1 < 2 * np.pi).all()

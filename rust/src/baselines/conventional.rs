@@ -1,0 +1,56 @@
+//! Conventional HDC classifier (paper §III-A): one prototype per class,
+//! cosine argmax. The O(C·D) baseline every compression method is
+//! measured against.
+
+use crate::hd::similarity::activations;
+use crate::tensor::{self, Matrix};
+
+/// Conventional model: (C, D) unit-row prototype matrix.
+#[derive(Debug, Clone)]
+pub struct ConventionalModel {
+    pub prototypes: Matrix,
+}
+
+impl ConventionalModel {
+    pub fn new(prototypes: Matrix) -> Self {
+        Self { prototypes }
+    }
+
+    pub fn classes(&self) -> usize {
+        self.prototypes.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.prototypes.cols()
+    }
+
+    /// Cosine scores (B, C).
+    pub fn scores(&self, enc: &Matrix) -> Matrix {
+        activations(enc, &self.prototypes)
+    }
+
+    /// Argmax labels.
+    pub fn predict(&self, enc: &Matrix) -> Vec<i32> {
+        let s = self.scores(enc);
+        (0..s.rows()).map(|i| tensor::argmax(s.row(i)) as i32).collect()
+    }
+
+    /// Stored floats: C*D.
+    pub fn memory_floats(&self) -> usize {
+        self.classes() * self.d()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predicts_nearest_prototype() {
+        let h = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let model = ConventionalModel::new(h);
+        let q = Matrix::from_vec(2, 2, vec![0.9, 0.1, -0.2, 2.0]);
+        assert_eq!(model.predict(&q), vec![0, 1]);
+        assert_eq!(model.memory_floats(), 4);
+    }
+}

@@ -1,0 +1,125 @@
+//! Hybrid class- + feature-axis compression (paper §IV-D, Fig. 6):
+//! LogHD bundles sparsified with a SparseHD-style dimension mask.
+//!
+//! The mask is derived from the *bundle* matrix (the stored state), the
+//! masked bundles are re-normalized, and the activation profiles are
+//! recomputed on the training set so decoding matches the masked
+//! geometry. Memory: n·(1−S)·D + C·n, i.e. budget ≈ n(1−S)/C.
+
+use anyhow::Result;
+
+use crate::baselines::sparsehd::build_mask;
+use crate::loghd::model::LogHdModel;
+use crate::loghd::profiles::compute_profiles;
+use crate::tensor::{self, Matrix};
+
+/// Hybrid model: a LogHD model whose bundles carry a dimension mask.
+#[derive(Debug, Clone)]
+pub struct HybridModel {
+    pub inner: LogHdModel,
+    pub mask: Vec<bool>,
+    pub sparsity: f64,
+}
+
+impl HybridModel {
+    /// Sparsify a trained LogHD model at sparsity S, refreshing profiles
+    /// on the (encoded, centered) training set.
+    pub fn from_loghd(
+        loghd: &LogHdModel,
+        enc_train: &Matrix,
+        y_train: &[i32],
+        sparsity: f64,
+    ) -> Result<Self> {
+        let mask = build_mask(&loghd.bundles, sparsity);
+        let mut bundles = loghd.bundles.clone();
+        for r in 0..bundles.rows() {
+            for (v, keep) in bundles.row_mut(r).iter_mut().zip(&mask) {
+                if !keep {
+                    *v = 0.0;
+                }
+            }
+        }
+        tensor::normalize_rows(&mut bundles);
+        let profiles = compute_profiles(enc_train, y_train, &bundles, loghd.classes);
+        let inner = LogHdModel {
+            classes: loghd.classes,
+            d: loghd.d,
+            book: loghd.book.clone(),
+            bundles,
+            profiles,
+        };
+        Ok(Self { inner, mask, sparsity })
+    }
+
+    pub fn predict(&self, enc: &Matrix) -> Vec<i32> {
+        self.inner.predict(enc)
+    }
+
+    pub fn retained(&self) -> usize {
+        self.mask.iter().filter(|m| **m).count()
+    }
+
+    /// Stored values: n * retained + C * n.
+    pub fn memory_floats(&self) -> usize {
+        self.inner.n_bundles() * self.retained()
+            + self.inner.classes * self.inner.n_bundles()
+    }
+
+    /// Fraction of the conventional C*D footprint.
+    pub fn budget_fraction(&self) -> f64 {
+        self.memory_floats() as f64 / (self.inner.classes * self.inner.d) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::loghd::model::{TrainOptions, TrainedStack};
+
+    fn stack() -> (data::Dataset, TrainedStack) {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 600, 200);
+        let opts = TrainOptions { epochs: 3, conv_epochs: 1, extra_bundles: 1, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 256, 0xE5C0DE, &opts).unwrap();
+        (ds, st)
+    }
+
+    #[test]
+    fn hybrid_reduces_memory_below_loghd() {
+        let (ds, st) = stack();
+        let mut enc = st.encoder.encode(&ds.x_train);
+        let _ = &mut enc;
+        let hybrid = HybridModel::from_loghd(&st.loghd, &enc, &ds.y_train, 0.5).unwrap();
+        assert!(hybrid.memory_floats() < st.loghd.memory_floats());
+        assert!(hybrid.budget_fraction() < st.loghd.budget_fraction());
+    }
+
+    #[test]
+    fn moderate_sparsity_keeps_accuracy_reasonable() {
+        let (ds, st) = stack();
+        let enc_train = st.encoder.encode(&ds.x_train);
+        let enc_test = st.encoder.encode(&ds.x_test);
+        let base_preds = st.loghd.predict(&enc_test);
+        let base_acc = base_preds.iter().zip(&ds.y_test).filter(|(p, y)| p == y).count() as f64
+            / ds.y_test.len() as f64;
+        let hybrid = HybridModel::from_loghd(&st.loghd, &enc_train, &ds.y_train, 0.3).unwrap();
+        let preds = hybrid.predict(&enc_test);
+        let acc = preds.iter().zip(&ds.y_test).filter(|(p, y)| p == y).count() as f64
+            / ds.y_test.len() as f64;
+        assert!(acc > base_acc - 0.15, "hybrid acc {acc} vs base {base_acc}");
+    }
+
+    #[test]
+    fn masked_bundles_are_zero_on_pruned_dims() {
+        let (ds, st) = stack();
+        let enc_train = st.encoder.encode(&ds.x_train);
+        let hybrid = HybridModel::from_loghd(&st.loghd, &enc_train, &ds.y_train, 0.7).unwrap();
+        for r in 0..hybrid.inner.bundles.rows() {
+            for (v, keep) in hybrid.inner.bundles.row(r).iter().zip(&hybrid.mask) {
+                if !keep {
+                    assert_eq!(*v, 0.0);
+                }
+            }
+        }
+    }
+}

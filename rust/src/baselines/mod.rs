@@ -1,0 +1,11 @@
+//! Baselines the paper evaluates against, plus the hybrid composition:
+//! conventional HDC (O(CD)), SparseHD (feature axis), and
+//! LogHD+SparseHD (hybrid, §IV-D).
+
+pub mod conventional;
+pub mod hybrid;
+pub mod sparsehd;
+
+pub use conventional::ConventionalModel;
+pub use hybrid::HybridModel;
+pub use sparsehd::SparseHdModel;

@@ -1,0 +1,164 @@
+//! SparseHD (Imani et al., FCCM'19) — the feature-axis baseline.
+//!
+//! Dimension-wise sparsification: rank hypervector dimensions by
+//! cross-class discriminability (variance of the prototype matrix along
+//! each dimension), keep the top (1−S)·D, zero the rest, and re-normalize
+//! prototype rows over the retained coordinates. Memory is (1−S)·C·D
+//! values (plus an index bitmap the paper, like us, excludes from the
+//! budget accounting).
+
+use crate::hd::similarity::activations;
+use crate::tensor::{self, Matrix};
+
+/// SparseHD model: masked prototypes + the retained-dimension mask.
+#[derive(Debug, Clone)]
+pub struct SparseHdModel {
+    pub prototypes: Matrix, // (C, D), zeros on pruned dims, unit rows
+    pub mask: Vec<bool>,    // true = retained
+    pub sparsity: f64,      // S: fraction pruned
+}
+
+/// Saliency: variance of prototype values along each dimension (f64).
+pub fn dimension_saliency(h: &Matrix) -> Vec<f64> {
+    let (c, d) = (h.rows(), h.cols());
+    let mut mean = vec![0.0f64; d];
+    for r in 0..c {
+        for (m, v) in mean.iter_mut().zip(h.row(r)) {
+            *m += *v as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= c as f64;
+    }
+    let mut var = vec![0.0f64; d];
+    for r in 0..c {
+        for ((vv, v), m) in var.iter_mut().zip(h.row(r)).zip(&mean) {
+            let dlt = *v as f64 - *m;
+            *vv += dlt * dlt;
+        }
+    }
+    for vv in var.iter_mut() {
+        *vv /= c as f64;
+    }
+    var
+}
+
+/// Build the retained-dimension mask for sparsity S (stable top-k).
+pub fn build_mask(h: &Matrix, sparsity: f64) -> Vec<bool> {
+    assert!((0.0..1.0).contains(&sparsity), "sparsity {sparsity} out of [0,1)");
+    let d = h.cols();
+    let keep = ((1.0 - sparsity) * d as f64).round().max(1.0) as usize;
+    let sal = dimension_saliency(h);
+    let mut order: Vec<usize> = (0..d).collect();
+    // stable sort descending by saliency (ties keep original order,
+    // matching numpy's stable argsort in the Python twin)
+    order.sort_by(|&a, &b| sal[b].partial_cmp(&sal[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut mask = vec![false; d];
+    for &i in order.iter().take(keep) {
+        mask[i] = true;
+    }
+    mask
+}
+
+impl SparseHdModel {
+    /// Sparsify trained prototypes at sparsity S.
+    pub fn from_prototypes(h: &Matrix, sparsity: f64) -> Self {
+        let mask = build_mask(h, sparsity);
+        let mut pruned = h.clone();
+        for r in 0..pruned.rows() {
+            for (v, keep) in pruned.row_mut(r).iter_mut().zip(&mask) {
+                if !keep {
+                    *v = 0.0;
+                }
+            }
+        }
+        tensor::normalize_rows(&mut pruned);
+        Self { prototypes: pruned, mask, sparsity }
+    }
+
+    pub fn classes(&self) -> usize {
+        self.prototypes.rows()
+    }
+
+    /// Retained dimensions (1−S)·D.
+    pub fn retained(&self) -> usize {
+        self.mask.iter().filter(|m| **m).count()
+    }
+
+    /// Cosine scores. The query is used in full: pruned model coordinates
+    /// are zero so they contribute nothing, and the shared query norm does
+    /// not move the argmax (see L2 docstring).
+    pub fn scores(&self, enc: &Matrix) -> Matrix {
+        activations(enc, &self.prototypes)
+    }
+
+    pub fn predict(&self, enc: &Matrix) -> Vec<i32> {
+        let s = self.scores(enc);
+        (0..s.rows()).map(|i| tensor::argmax(s.row(i)) as i32).collect()
+    }
+
+    /// Stored values: retained * C (the paper's budget accounting).
+    pub fn memory_floats(&self) -> usize {
+        self.retained() * self.classes()
+    }
+
+    /// Budget fraction of the conventional C*D footprint = 1 - S.
+    pub fn budget_fraction(&self) -> f64 {
+        self.retained() as f64 / self.mask.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn mask_keeps_highest_variance_dims() {
+        // dim1 varies across classes, dim0/2 constant
+        let h = Matrix::from_vec(3, 3, vec![0.5, 1.0, 0.1, 0.5, -1.0, 0.1, 0.5, 0.0, 0.1]);
+        let mask = build_mask(&h, 0.66);
+        assert_eq!(mask, vec![false, true, false]);
+    }
+
+    #[test]
+    fn retained_count_matches_sparsity() {
+        let mut rng = SplitMix64::new(1);
+        let h = Matrix::from_vec(5, 100, rng.normals_f32(500));
+        for s in [0.0, 0.3, 0.7, 0.9] {
+            let m = SparseHdModel::from_prototypes(&h, s);
+            assert_eq!(m.retained(), ((1.0 - s) * 100.0).round() as usize);
+            assert!((m.budget_fraction() - (1.0 - s)).abs() < 0.011);
+        }
+    }
+
+    #[test]
+    fn pruned_rows_are_unit_over_retained() {
+        let mut rng = SplitMix64::new(2);
+        let h = Matrix::from_vec(4, 64, rng.normals_f32(256));
+        let m = SparseHdModel::from_prototypes(&h, 0.5);
+        for r in 0..4 {
+            assert!((tensor::norm(m.prototypes.row(r)) - 1.0).abs() < 1e-5);
+            // zeros exactly on pruned dims
+            for (v, keep) in m.prototypes.row(r).iter().zip(&m.mask) {
+                if !keep {
+                    assert_eq!(*v, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_sparsity_equals_conventional() {
+        let mut rng = SplitMix64::new(3);
+        let mut h = Matrix::from_vec(3, 32, rng.normals_f32(96));
+        tensor::normalize_rows(&mut h);
+        let m = SparseHdModel::from_prototypes(&h, 0.0);
+        let q = Matrix::from_vec(2, 32, rng.normals_f32(64));
+        let a = m.scores(&q);
+        let b = activations(&q, &h);
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+}

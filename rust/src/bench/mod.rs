@@ -1,0 +1,121 @@
+//! Micro-benchmark harness (criterion is not vendored offline).
+//!
+//! Used by the `benches/` targets (`harness = false`): warmup, timed
+//! iterations, robust statistics, and a small CSV writer for the figure
+//! harnesses' outputs under `results/`.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+/// Timing statistics over the measured iterations (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p99: f64,
+    pub min: f64,
+}
+
+/// Run `f` for `warmup` + `iters` iterations and report stats.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let q = |p: f64| samples[(((samples.len() - 1) as f64) * p).round() as usize];
+    Stats { iters, mean, median: q(0.5), p99: q(0.99), min: samples[0] }
+}
+
+impl Stats {
+    pub fn format_line(&self, label: &str) -> String {
+        format!(
+            "{label:<48} mean {:>10.3?}  median {:>10.3?}  p99 {:>10.3?}  ({} iters)",
+            std::time::Duration::from_secs_f64(self.mean),
+            std::time::Duration::from_secs_f64(self.median),
+            std::time::Duration::from_secs_f64(self.p99),
+            self.iters
+        )
+    }
+}
+
+/// Simple CSV writer for the figure harnesses: creates parent dirs.
+pub struct CsvWriter {
+    file: std::fs::File,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &str) -> std::io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{header}")?;
+        Ok(Self { file })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        writeln!(self.file, "{}", fields.join(","))
+    }
+}
+
+/// Render an ASCII curve chart (one line per series) — the quick-look
+/// output the bench targets print next to the CSVs.
+pub fn ascii_chart(title: &str, xs: &[f64], series: &[(String, Vec<f64>)]) -> String {
+    let mut out = format!("## {title}\n");
+    out.push_str(&format!(
+        "{:<28} {}\n",
+        "series \\ x",
+        xs.iter().map(|x| format!("{x:>7.2}")).collect::<Vec<_>>().join(" ")
+    ));
+    for (name, ys) in series {
+        out.push_str(&format!(
+            "{:<28} {}\n",
+            name,
+            ys.iter().map(|y| format!("{y:>7.3}")).collect::<Vec<_>>().join(" ")
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0;
+        let stats = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(stats.iters, 5);
+        assert!(stats.min <= stats.median && stats.median <= stats.p99);
+    }
+
+    #[test]
+    fn csv_writer_writes(
+    ) {
+        let dir = std::env::temp_dir().join("loghd_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, "a,b").unwrap();
+        w.row(&["1".into(), "2".into()]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn ascii_chart_contains_series() {
+        let c = ascii_chart("t", &[0.0, 1.0], &[("s".into(), vec![0.5, 0.25])]);
+        assert!(c.contains("## t"));
+        assert!(c.contains("0.500"));
+    }
+}

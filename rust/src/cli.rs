@@ -1,0 +1,310 @@
+//! Command-line interface (hand-rolled parser — clap is not vendored).
+//!
+//! ```text
+//! loghd info                              # datasets + artifact bundles
+//! loghd train  --dataset page --d 2000 --out models/page [--k 2 ...]
+//! loghd eval   --model models/page [--p 0.2 --bits 8]
+//! loghd serve  --artifacts artifacts/page_smoke [--entry infer_loghd]
+//!              [--addr 127.0.0.1:7878] | --model models/page --native
+//! loghd table2 [--n 7]                    # hardware-efficiency ratios
+//! ```
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::{BatcherConfig, Coordinator, NativeEngine, PjrtEngine, Server};
+use crate::data;
+use crate::eval::{accuracy, corrupt, Workbench};
+use crate::eval::sweep::Method;
+use crate::hwmodel;
+use crate::loghd::model::TrainedStack;
+use crate::loghd::persist;
+use crate::quant::Precision;
+
+/// Parsed command line: subcommand + `--key value` flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+}
+
+/// Parse argv-style input (exposed for tests).
+pub fn parse_args<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+    let mut it = argv.into_iter();
+    let command = it.next().unwrap_or_default();
+    let mut flags = HashMap::new();
+    let mut pending: Option<String> = None;
+    for tok in it {
+        if let Some(key) = pending.take() {
+            flags.insert(key, tok);
+        } else if let Some(stripped) = tok.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else {
+                pending = Some(stripped.to_string());
+            }
+        } else {
+            bail!("unexpected positional argument '{tok}'");
+        }
+    }
+    if let Some(key) = pending {
+        flags.insert(key, "true".to_string()); // boolean flag
+    }
+    Ok(Args { command, flags })
+}
+
+fn flag<'a>(args: &'a Args, key: &str) -> Option<&'a str> {
+    args.flags.get(key).map(String::as_str)
+}
+
+/// Binary entrypoint.
+pub fn main_entry() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Dispatch. Separated from `main_entry` for testing.
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let args = parse_args(argv)?;
+    match args.command.as_str() {
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        "info" => cmd_info(),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "table2" => cmd_table2(&args),
+        other => bail!("unknown command '{other}' (try 'loghd help')"),
+    }
+}
+
+const HELP: &str = "\
+loghd — LogHD: class-axis compression of HDC classifiers (paper reproduction)
+
+USAGE:
+  loghd info
+  loghd train  --dataset <name> --d <dim> --out <dir> [--k K --extra_bundles E --epochs T]
+  loghd eval   --model <dir> [--p <flip prob>] [--bits 1|2|4|8|32] [--seed S]
+  loghd serve  (--artifacts <bundle dir> [--entry infer_loghd] | --model <dir> --native)
+               [--addr 127.0.0.1:7878] [--max_batch 64] [--max_delay_ms 2]
+  loghd table2 [--n <bundles>]
+";
+
+fn cmd_info() -> Result<()> {
+    println!("datasets (synthetic, Table I shapes):");
+    for s in data::SPECS {
+        println!(
+            "  {:<8} F={:<4} C={:<3} train={:<6} test={:<6} {}",
+            s.name, s.features, s.classes, s.n_train, s.n_test, s.description
+        );
+    }
+    let root = PathBuf::from("artifacts");
+    if root.join("index.json").exists() {
+        println!("artifact bundles under {}:", root.display());
+        for entry in std::fs::read_dir(&root)? {
+            let dir = entry?.path();
+            if dir.join("manifest.json").exists() {
+                let m = crate::runtime::artifact::Manifest::load(&dir)?;
+                println!(
+                    "  {:<12} dataset={} D={} k={} n={} batch={} acc(conv/loghd)={:.3}/{:.3}",
+                    m.name,
+                    m.dataset,
+                    m.d,
+                    m.k,
+                    m.n,
+                    m.batch,
+                    m.clean_acc_conventional,
+                    m.clean_acc_loghd
+                );
+            }
+        }
+    } else {
+        println!("no artifacts/ found — run `make artifacts`");
+    }
+    Ok(())
+}
+
+fn config_from(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match flag(args, "config") {
+        Some(path) => RunConfig::from_file(&PathBuf::from(path))?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_overrides(&args.flags)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let out = PathBuf::from(flag(args, "out").context("--out <dir> required")?);
+    let spec = data::spec(&cfg.dataset).with_context(|| format!("unknown dataset {}", cfg.dataset))?;
+    crate::log_info!("training on {} at D={} (k={}, +{} bundles, {} epochs)",
+        cfg.dataset, cfg.d, cfg.train.k, cfg.train.extra_bundles, cfg.train.epochs);
+    let ds = data::generate(spec);
+    let stack = TrainedStack::train(&ds.x_train, &ds.y_train, spec.classes, cfg.d,
+        cfg.encoder_seed, &cfg.train)?;
+    let enc_test = stack.encoder.encode(&ds.x_test);
+    let acc = accuracy(&stack.loghd.predict(&enc_test), &ds.y_test);
+    persist::save(&out, &stack.encoder, &stack.loghd)?;
+    println!(
+        "trained loghd(k={}, n={}) on {}: clean acc {:.4}, budget {:.3} of C*D, saved to {}",
+        stack.loghd.book.k,
+        stack.loghd.n_bundles(),
+        cfg.dataset,
+        acc,
+        stack.loghd.budget_fraction(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model_dir = PathBuf::from(flag(args, "model").context("--model <dir> required")?);
+    let (encoder, model) = persist::load(&model_dir)?;
+    let p: f64 = flag(args, "p").unwrap_or("0").parse().context("--p must be a number")?;
+    let bits: u32 = flag(args, "bits").unwrap_or("32").parse().context("--bits")?;
+    let seed: u64 = flag(args, "seed").unwrap_or("1").parse().context("--seed")?;
+    let precision = Precision::from_bits(bits).context("--bits must be 1|2|4|8|32")?;
+
+    // dataset inferred from feature width
+    let spec = data::SPECS
+        .iter()
+        .find(|s| s.features == encoder.features())
+        .context("no dataset matches model feature width")?;
+    let ds = data::generate(spec);
+    let enc_test = encoder.encode(&ds.x_test);
+
+    let mut rng = crate::util::rng::SplitMix64::new(seed ^ 0xFA17);
+    let bundles = corrupt(&model.bundles, precision, p, &mut rng);
+    let profiles = corrupt(&model.profiles, precision, p, &mut rng);
+    let corrupted = crate::loghd::model::LogHdModel { bundles, profiles, ..model };
+    let acc = accuracy(&corrupted.predict(&enc_test), &ds.y_test);
+    println!(
+        "dataset={} D={} n={} bits={} p={:.2} -> accuracy {:.4}",
+        spec.name, corrupted.d, corrupted.n_bundles(), bits, p, acc
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = flag(args, "addr").unwrap_or("127.0.0.1:7878").to_string();
+    let max_batch: usize = flag(args, "max_batch").unwrap_or("64").parse()?;
+    let max_delay_ms: u64 = flag(args, "max_delay_ms").unwrap_or("2").parse()?;
+    let cfg = BatcherConfig {
+        max_batch,
+        max_delay: std::time::Duration::from_millis(max_delay_ms),
+        ..Default::default()
+    };
+
+    let (features, factory): (usize, crate::coordinator::EngineFactory) =
+        if let Some(bundle) = flag(args, "artifacts") {
+            let dir = PathBuf::from(bundle);
+            let manifest = crate::runtime::artifact::Manifest::load(&dir)?;
+            let entry = flag(args, "entry").unwrap_or("infer_loghd").to_string();
+            (manifest.features, PjrtEngine::factory(dir, entry))
+        } else if let Some(model_dir) = flag(args, "model") {
+            let (encoder, model) = persist::load(&PathBuf::from(model_dir))?;
+            let features = encoder.features();
+            (features, NativeEngine::factory(encoder, model, model_dir.to_string()))
+        } else {
+            bail!("serve needs --artifacts <bundle> or --model <dir>");
+        };
+
+    let coordinator = Arc::new(Coordinator::start(features, cfg, factory));
+    let mut server = Server::start(&addr, Arc::clone(&coordinator))?;
+    println!("serving on {} (features={features}); Ctrl-C to stop", server.addr);
+    // Block forever (Ctrl-C kills the process; graceful path is tested via
+    // the library API).
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+        let _ = &mut server;
+    }
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let n: usize = flag(args, "n").unwrap_or("7").parse()?;
+    println!("Table II — hardware efficiency ratios (LogHD ASIC / baseline), ISOLET C=26 k=2 n={n}");
+    println!("{:<44} {:>12} {:>12}", "baseline / platform", "energy x", "speedup x");
+    for (name, e, s) in hwmodel::table2(617, 10_000, 26, n) {
+        println!("{name:<44} {e:>12.2} {s:>12.2}");
+    }
+    println!("paper reports: 4.06/2.19 (SparseHD ASIC), 498.1/62.6 (CPU), 24.3/6.58 (GPU)");
+    Ok(())
+}
+
+/// Quick robustness probe used by tests: evaluate a method grid cell on a
+/// small workbench (kept here so the binary exposes the full pipeline).
+pub fn quick_cell(dataset: &str, d: usize, method: Method, bits: u32, p: f64) -> Result<f64> {
+    let spec = data::spec(dataset).context("dataset")?;
+    let ds = data::generate_scaled(spec, 600.min(spec.n_train), 200.min(spec.n_test));
+    let opts = crate::loghd::model::TrainOptions {
+        epochs: 3,
+        conv_epochs: 1,
+        ..Default::default()
+    };
+    let mut wb = Workbench::new(&ds, d, 0xE5C0DE, opts);
+    wb.evaluate(method, Precision::from_bits(bits).context("bits")?, p, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flags() {
+        let a = parse_args(vec!["train".into(), "--dataset".into(), "page".into(),
+            "--d=512".into(), "--native".into()]).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.flags["dataset"], "page");
+        assert_eq!(a.flags["d"], "512");
+        assert_eq!(a.flags["native"], "true");
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(parse_args(vec!["eval".into(), "stray".into()]).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(vec!["frobnicate".into()]).is_err());
+    }
+
+    #[test]
+    fn help_and_info_run() {
+        run(vec![]).unwrap();
+        run(vec!["info".into()]).unwrap();
+        run(vec!["table2".into()]).unwrap();
+    }
+
+    #[test]
+    fn train_eval_roundtrip_via_cli() {
+        let dir = std::env::temp_dir().join("loghd_cli_train");
+        let _ = std::fs::remove_dir_all(&dir);
+        run(vec![
+            "train".into(),
+            "--dataset".into(), "page".into(),
+            "--d".into(), "256".into(),
+            "--epochs".into(), "1".into(),
+            "--conv_epochs".into(), "0".into(),
+            "--out".into(), dir.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        run(vec![
+            "eval".into(),
+            "--model".into(), dir.to_str().unwrap().into(),
+            "--bits".into(), "8".into(),
+            "--p".into(), "0.1".into(),
+        ])
+        .unwrap();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

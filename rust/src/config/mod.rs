@@ -1,0 +1,137 @@
+//! Typed run configuration: JSON config files + `--key value` CLI
+//! overrides (no serde/clap offline; see `util::json` and `cli`).
+//!
+//! A config file looks like:
+//! ```json
+//! {"dataset": "isolet", "d": 10000, "k": 2, "extra_bundles": 5,
+//!  "epochs": 30, "conv_epochs": 3, "eta": 0.0003, "batch": 64}
+//! ```
+//! Every field is optional; defaults follow the paper's §IV-A setup.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::loghd::model::TrainOptions;
+use crate::util::json::{self, Value};
+
+/// Full run configuration for train/eval/serve commands.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub dataset: String,
+    pub d: usize,
+    pub train: TrainOptions,
+    pub encoder_seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "page".into(),
+            d: 2000,
+            train: TrainOptions::default(),
+            encoder_seed: 0xE5C0DE,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let mut cfg = Self::default();
+        cfg.apply_json(&v)?;
+        Ok(cfg)
+    }
+
+    fn apply_json(&mut self, v: &Value) -> Result<()> {
+        let fields = match v {
+            Value::Object(fields) => fields,
+            _ => bail!("config root must be an object"),
+        };
+        for (key, val) in fields {
+            self.apply_one(key, val)?;
+        }
+        Ok(())
+    }
+
+    fn apply_one(&mut self, key: &str, val: &Value) -> Result<()> {
+        let as_usize =
+            || val.as_usize().with_context(|| format!("'{key}' must be a number"));
+        let as_f64 = || val.as_f64().with_context(|| format!("'{key}' must be a number"));
+        match key {
+            "dataset" => {
+                self.dataset = val.as_str().context("'dataset' must be a string")?.into()
+            }
+            "d" | "D" => self.d = as_usize()?,
+            "k" => self.train.k = as_usize()? as u32,
+            "extra_bundles" | "eps" => self.train.extra_bundles = as_usize()?,
+            "alpha" => self.train.alpha = as_f64()?,
+            "eta" => self.train.eta = as_f64()? as f32,
+            "epochs" => self.train.epochs = as_usize()?,
+            "conv_epochs" => self.train.conv_epochs = as_usize()?,
+            "batch" => self.train.batch = as_usize()?,
+            "encoder_seed" => self.encoder_seed = as_f64()? as u64,
+            "codebook_seed" => self.train.codebook_seed = as_f64()? as u64,
+            "shuffle_seed" => self.train.shuffle_seed = as_f64()? as u64,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Apply `--key value` overrides (numbers parsed as needed).
+    pub fn apply_overrides(&mut self, flags: &HashMap<String, String>) -> Result<()> {
+        for (key, raw) in flags {
+            let val = match raw.parse::<f64>() {
+                Ok(n) => Value::Number(n),
+                Err(_) => Value::String(raw.clone()),
+            };
+            // ignore keys that are not config fields — callers own those
+            if matches!(
+                key.as_str(),
+                "dataset" | "d" | "D" | "k" | "extra_bundles" | "eps" | "alpha" | "eta"
+                    | "epochs" | "conv_epochs" | "batch" | "encoder_seed"
+                    | "codebook_seed" | "shuffle_seed"
+            ) {
+                self.apply_one(key, &val)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_follow_paper() {
+        let c = RunConfig::default();
+        assert_eq!(c.train.k, 2);
+        assert!((c.train.eta - 3e-4).abs() < 1e-9);
+        assert_eq!(c.train.alpha, 1.0);
+    }
+
+    #[test]
+    fn parses_json_and_overrides() {
+        let mut c = RunConfig::default();
+        c.apply_json(&json::parse(r#"{"dataset":"isolet","d":500,"k":3}"#).unwrap()).unwrap();
+        assert_eq!(c.dataset, "isolet");
+        assert_eq!(c.d, 500);
+        assert_eq!(c.train.k, 3);
+        let mut flags = HashMap::new();
+        flags.insert("epochs".to_string(), "7".to_string());
+        flags.insert("addr".to_string(), "127.0.0.1:1".to_string()); // non-config: ignored
+        c.apply_overrides(&flags).unwrap();
+        assert_eq!(c.train.epochs, 7);
+    }
+
+    #[test]
+    fn rejects_unknown_json_key() {
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&json::parse(r#"{"nope": 1}"#).unwrap()).is_err());
+    }
+}

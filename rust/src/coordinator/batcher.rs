@@ -1,0 +1,368 @@
+//! Dynamic batcher + request lifecycle.
+//!
+//! Policy (vLLM-router-like, scaled to this problem): a bounded pending
+//! queue (backpressure: `submit` rejects when full); the worker drains up
+//! to `max_batch` requests, waiting at most `max_delay` past the oldest
+//! request's arrival to fill the batch — the knob that trades p99 latency
+//! against PJRT dispatch amortization (the batcher bench sweeps it).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::tensor::Matrix;
+
+use super::stats::{StatsCollector, StatsSnapshot};
+use super::worker::EngineFactory;
+
+/// Batching configuration.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    pub max_pending: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 64, max_delay: Duration::from_millis(2), max_pending: 1024 }
+    }
+}
+
+/// An inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub features: Vec<f32>,
+}
+
+/// The coordinator's answer.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub label: i32,
+    /// End-to-end latency (enqueue -> response send).
+    pub latency: Duration,
+}
+
+/// Why a submit was refused.
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum SubmitError {
+    #[error("queue full ({0} pending): backpressure")]
+    QueueFull(usize),
+    #[error("coordinator is shut down")]
+    ShutDown,
+    #[error("feature width {got} != expected {want}")]
+    BadWidth { got: usize, want: usize },
+}
+
+struct Job {
+    request: Request,
+    enqueued: Instant,
+    tx: mpsc::Sender<Response>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    not_empty: Condvar,
+    cfg: BatcherConfig,
+    features: usize,
+    shutdown: AtomicBool,
+    next_id: AtomicU64,
+    stats: Mutex<StatsCollector>,
+}
+
+/// The running coordinator: router + batcher + one engine worker thread.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the coordinator. The engine is constructed ON the worker
+    /// thread from `factory` (PJRT handles are not Sync/Send).
+    pub fn start(features: usize, cfg: BatcherConfig, factory: EngineFactory) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            not_empty: Condvar::new(),
+            cfg,
+            features,
+            shutdown: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+            stats: Mutex::new(StatsCollector {
+                started: Some(Instant::now()),
+                ..Default::default()
+            }),
+        });
+        let w = Arc::clone(&shared);
+        let worker = std::thread::Builder::new()
+            .name("loghd-worker".into())
+            .spawn(move || worker_loop(w, factory))
+            .expect("spawning worker");
+        Self { shared, worker: Some(worker) }
+    }
+
+    /// Enqueue a request; returns the receiver for its response.
+    pub fn submit(&self, features: Vec<f32>) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(SubmitError::ShutDown);
+        }
+        if features.len() != self.shared.features {
+            return Err(SubmitError::BadWidth {
+                got: features.len(),
+                want: self.shared.features,
+            });
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.len() >= self.shared.cfg.max_pending {
+                self.shared.stats.lock().unwrap().rejected += 1;
+                return Err(SubmitError::QueueFull(q.len()));
+            }
+            let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+            q.push_back(Job { request: Request { id, features }, enqueued: Instant::now(), tx });
+            self.shared.stats.lock().unwrap().requests += 1;
+        }
+        self.shared.not_empty.notify_one();
+        Ok(rx)
+    }
+
+    /// Submit and wait for the answer.
+    pub fn submit_blocking(&self, features: Vec<f32>) -> Result<Response, SubmitError> {
+        let rx = self.submit(features)?;
+        rx.recv().map_err(|_| SubmitError::ShutDown)
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        self.shared.stats.lock().unwrap().snapshot()
+    }
+
+    /// Graceful shutdown: drain the queue, stop the worker.
+    pub fn shutdown(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.not_empty.notify_all();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, factory: EngineFactory) {
+    let mut engine = match factory() {
+        Ok(e) => e,
+        Err(err) => {
+            crate::log_error!("engine construction failed: {err:#}");
+            // Drain everything with a poison response path: drop senders.
+            shared.shutdown.store(true, Ordering::Release);
+            return;
+        }
+    };
+    crate::log_info!("worker up: engine={} features={}", engine.name(), shared.features);
+    loop {
+        let batch = collect_batch(&shared);
+        let Some(jobs) = batch else { break };
+        if jobs.is_empty() {
+            continue;
+        }
+        let mut x = Matrix::zeros(jobs.len(), shared.features);
+        for (i, job) in jobs.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(&job.request.features);
+        }
+        let labels = match engine.infer(&x) {
+            Ok(l) => l,
+            Err(err) => {
+                crate::log_error!("inference failed for batch of {}: {err:#}", jobs.len());
+                continue; // senders drop -> callers see disconnect
+            }
+        };
+        let now = Instant::now();
+        let mut stats = shared.stats.lock().unwrap();
+        stats.batches += 1;
+        stats.batched_items += jobs.len() as u64;
+        for (job, label) in jobs.into_iter().zip(labels) {
+            let latency = now.duration_since(job.enqueued);
+            stats.latency.record(latency);
+            stats.responses += 1;
+            let _ = job.tx.send(Response { id: job.request.id, label, latency });
+        }
+    }
+    crate::log_info!("worker drained; shutting down");
+}
+
+/// Wait for work, then apply the max-batch/max-delay policy.
+/// Returns None when shut down AND the queue is empty (drain semantics).
+fn collect_batch(shared: &Shared) -> Option<Vec<Job>> {
+    let cfg = &shared.cfg;
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if !q.is_empty() {
+            break;
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            return None;
+        }
+        let (guard, _) =
+            shared.not_empty.wait_timeout(q, Duration::from_millis(50)).unwrap();
+        q = guard;
+    }
+    let oldest = q.front().unwrap().enqueued;
+    // Fill window: wait for more work until max_delay past the oldest.
+    while q.len() < cfg.max_batch && !shared.shutdown.load(Ordering::Acquire) {
+        let age = oldest.elapsed();
+        if age >= cfg.max_delay {
+            break;
+        }
+        let (guard, _) = shared
+            .not_empty
+            .wait_timeout(q, cfg.max_delay - age)
+            .unwrap();
+        q = guard;
+    }
+    let take = q.len().min(cfg.max_batch);
+    let mut jobs = Vec::with_capacity(take);
+    for _ in 0..take {
+        let job = q.pop_front().unwrap();
+        shared
+            .stats
+            .lock()
+            .unwrap()
+            .queue_wait
+            .record(job.enqueued.elapsed());
+        jobs.push(job);
+    }
+    Some(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Engine;
+    use anyhow::Result as AResult;
+
+    /// Engine that labels each row by rounding its first feature.
+    struct RoundFirst {
+        batch_sizes: Arc<Mutex<Vec<usize>>>,
+    }
+
+    impl Engine for RoundFirst {
+        fn name(&self) -> String {
+            "round-first".into()
+        }
+        fn features(&self) -> usize {
+            3
+        }
+        fn infer(&mut self, x: &Matrix) -> AResult<Vec<i32>> {
+            self.batch_sizes.lock().unwrap().push(x.rows());
+            Ok((0..x.rows()).map(|i| x.at(i, 0).round() as i32).collect())
+        }
+    }
+
+    fn start(sizes: Arc<Mutex<Vec<usize>>>, cfg: BatcherConfig) -> Coordinator {
+        Coordinator::start(
+            3,
+            cfg,
+            Box::new(move || Ok(Box::new(RoundFirst { batch_sizes: sizes }))),
+        )
+    }
+
+    #[test]
+    fn responses_match_requests() {
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        let coord = start(sizes, BatcherConfig::default());
+        let mut rxs = Vec::new();
+        for i in 0..20 {
+            rxs.push((i, coord.submit(vec![i as f32, 0.0, 0.0]).unwrap()));
+        }
+        for (i, rx) in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.label, i);
+        }
+        let snap = coord.stats();
+        assert_eq!(snap.responses, 20);
+        assert_eq!(snap.requests, 20);
+    }
+
+    #[test]
+    fn rejects_bad_width() {
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        let coord = start(sizes, BatcherConfig::default());
+        assert_eq!(
+            coord.submit(vec![1.0]).unwrap_err(),
+            SubmitError::BadWidth { got: 1, want: 3 }
+        );
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        // tiny queue + long delay so jobs pile up
+        let cfg = BatcherConfig {
+            max_batch: 64,
+            max_delay: Duration::from_millis(200),
+            max_pending: 4,
+        };
+        let coord = start(sizes, cfg);
+        let mut ok = 0;
+        let mut full = 0;
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            match coord.submit(vec![1.0, 0.0, 0.0]) {
+                Ok(rx) => {
+                    ok += 1;
+                    rxs.push(rx);
+                }
+                Err(SubmitError::QueueFull(_)) => full += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(full > 0, "expected backpressure ({ok} accepted)");
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+    }
+
+    #[test]
+    fn batches_amortize_under_load() {
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        let cfg = BatcherConfig {
+            max_batch: 16,
+            max_delay: Duration::from_millis(30),
+            max_pending: 1024,
+        };
+        let coord = start(Arc::clone(&sizes), cfg);
+        let rxs: Vec<_> =
+            (0..48).map(|_| coord.submit(vec![0.0, 0.0, 0.0]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let sizes = sizes.lock().unwrap();
+        assert!(
+            sizes.iter().any(|s| *s > 1),
+            "expected at least one multi-request batch, got {sizes:?}"
+        );
+        assert!(sizes.iter().all(|s| *s <= 16));
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        let mut coord = start(sizes, BatcherConfig::default());
+        let rxs: Vec<_> =
+            (0..8).map(|i| coord.submit(vec![i as f32, 0.0, 0.0]).unwrap()).collect();
+        coord.shutdown();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().label, i as i32);
+        }
+        assert_eq!(coord.submit(vec![0.0; 3]).unwrap_err(), SubmitError::ShutDown);
+    }
+}

@@ -1,0 +1,37 @@
+//! The serving coordinator — L3's system contribution.
+//!
+//! Shape: request router → dynamic batcher (max-batch / max-delay, bounded
+//! queue with backpressure) → a worker thread that owns the inference
+//! engine (PJRT executables are not `Sync`; the engine is *constructed on*
+//! the worker thread from a `Send` factory) → per-request response
+//! channels → metrics.
+//!
+//! Two engines implement [`Engine`]:
+//! - [`worker::PjrtEngine`] — the AOT path: compiled HLO via the PJRT C
+//!   API (Python never runs here).
+//! - [`worker::NativeEngine`] — the pure-Rust path used by the figure
+//!   harnesses and as a serving fallback; also the parity reference.
+
+pub mod batcher;
+pub mod server;
+pub mod stats;
+pub mod worker;
+
+pub use batcher::{BatcherConfig, Coordinator, Request, Response, SubmitError};
+pub use server::Server;
+pub use stats::StatsSnapshot;
+pub use worker::{EngineFactory, NativeEngine, PjrtEngine};
+
+use anyhow::Result;
+
+use crate::tensor::Matrix;
+
+/// An inference engine: a batch of feature rows in, one label per row out.
+pub trait Engine {
+    /// Human-readable engine id (for metrics / logs).
+    fn name(&self) -> String;
+    /// Feature width expected in requests.
+    fn features(&self) -> usize;
+    /// Classify a batch.
+    fn infer(&mut self, x: &Matrix) -> Result<Vec<i32>>;
+}

@@ -1,0 +1,189 @@
+//! TCP JSON-lines front-end over the coordinator.
+//!
+//! Wire protocol (one JSON document per line):
+//!   -> {"features": [f, f, ...]}
+//!   <- {"id": N, "label": L, "latency_us": T}
+//!   <- {"error": "..."}            (bad request / backpressure)
+//! A line `{"cmd": "stats"}` returns the metrics snapshot. Connections are
+//! handled on per-client threads; the coordinator itself serializes work
+//! through the dynamic batcher.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+
+use super::batcher::Coordinator;
+
+/// A running TCP server.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `coordinator`.
+    pub fn start(addr: &str, coordinator: Arc<Coordinator>) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("loghd-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let coord = Arc::clone(&coordinator);
+                            std::thread::spawn(move || {
+                                let _ = handle_client(stream, coord);
+                            });
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        crate::log_info!("serving on {local}");
+        Ok(Self { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn error_line(msg: &str) -> String {
+    json::to_string(&json::obj(vec![("error", json::s(msg))]))
+}
+
+fn handle_client(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match handle_line(&line, &coord) {
+            Ok(v) => v,
+            Err(msg) => error_line(&msg),
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    crate::log_debug!("client {peer:?} disconnected");
+    Ok(())
+}
+
+fn handle_line(line: &str, coord: &Coordinator) -> Result<String, String> {
+    let v = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    if v.get("cmd").and_then(Value::as_str) == Some("stats") {
+        let s = coord.stats();
+        return Ok(json::to_string(&json::obj(vec![
+            ("requests", json::num(s.requests as f64)),
+            ("responses", json::num(s.responses as f64)),
+            ("rejected", json::num(s.rejected as f64)),
+            ("mean_batch", json::num(s.mean_batch_size)),
+            ("latency_p50_us", json::num(s.latency_p50_us)),
+            ("latency_p99_us", json::num(s.latency_p99_us)),
+            ("throughput_rps", json::num(s.throughput_rps)),
+        ])));
+    }
+    let feats = v
+        .get("features")
+        .and_then(Value::as_array)
+        .ok_or_else(|| "missing 'features' array".to_string())?;
+    let features: Vec<f32> = feats
+        .iter()
+        .map(|f| f.as_f64().map(|x| x as f32).ok_or_else(|| "non-numeric feature".to_string()))
+        .collect::<Result<_, _>>()?;
+    let resp = coord.submit_blocking(features).map_err(|e| e.to_string())?;
+    Ok(json::to_string(&json::obj(vec![
+        ("id", json::num(resp.id as f64)),
+        ("label", json::num(resp.label as f64)),
+        ("latency_us", json::num(resp.latency.as_secs_f64() * 1e6)),
+    ])))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::Engine;
+    use crate::tensor::Matrix;
+
+    struct Echo;
+    impl Engine for Echo {
+        fn name(&self) -> String {
+            "echo".into()
+        }
+        fn features(&self) -> usize {
+            2
+        }
+        fn infer(&mut self, x: &Matrix) -> anyhow::Result<Vec<i32>> {
+            Ok((0..x.rows()).map(|i| x.at(i, 0) as i32).collect())
+        }
+    }
+
+    #[test]
+    fn round_trip_over_tcp() {
+        let coord = Arc::new(Coordinator::start(
+            2,
+            BatcherConfig::default(),
+            Box::new(|| Ok(Box::new(Echo))),
+        ));
+        let mut server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        stream.write_all(b"{\"features\": [7, 0]}\n{\"cmd\": \"stats\"}\n").unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let reader = BufReader::new(stream);
+        let lines: Vec<String> = reader.lines().map(|l| l.unwrap()).collect();
+        assert_eq!(lines.len(), 2);
+        let first = json::parse(&lines[0]).unwrap();
+        assert_eq!(first.get("label").and_then(Value::as_f64), Some(7.0));
+        let stats = json::parse(&lines[1]).unwrap();
+        assert_eq!(stats.get("responses").and_then(Value::as_f64), Some(1.0));
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_get_errors() {
+        let coord = Arc::new(Coordinator::start(
+            2,
+            BatcherConfig::default(),
+            Box::new(|| Ok(Box::new(Echo))),
+        ));
+        let mut server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        stream
+            .write_all(b"not json\n{\"features\": [1]}\n{\"nope\": 1}\n")
+            .unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let reader = BufReader::new(stream);
+        let lines: Vec<String> = reader.lines().map(|l| l.unwrap()).collect();
+        assert_eq!(lines.len(), 3);
+        for line in lines {
+            assert!(json::parse(&line).unwrap().get("error").is_some(), "{line}");
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,178 @@
+//! Serving metrics: counters + a log-bucketed latency histogram with
+//! approximate quantiles (no external deps; bounded memory).
+
+use std::time::Duration;
+
+/// Log-bucketed histogram over [1µs, ~17min), 5% bucket growth.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+const BASE_US: f64 = 1.0;
+const GROWTH: f64 = 1.05;
+const NBUCKETS: usize = 420; // 1µs * 1.05^420 ≈ 8e8 µs
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { buckets: vec![0; NBUCKETS], count: 0, sum_us: 0.0, max_us: 0.0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        let idx = if us <= BASE_US {
+            0
+        } else {
+            ((us / BASE_US).ln() / GROWTH.ln()).floor() as usize
+        }
+        .min(NBUCKETS - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    /// Approximate quantile (upper edge of the containing bucket).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target.max(1) {
+                return BASE_US * GROWTH.powi(i as i32 + 1);
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Collected over the coordinator's lifetime.
+#[derive(Debug, Clone, Default)]
+pub struct StatsCollector {
+    pub latency: LatencyHistogram,
+    pub queue_wait: LatencyHistogram,
+    pub requests: u64,
+    pub responses: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub batched_items: u64,
+    pub started: Option<std::time::Instant>,
+}
+
+/// Point-in-time snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub latency_p50_us: f64,
+    pub latency_p95_us: f64,
+    pub latency_p99_us: f64,
+    pub latency_mean_us: f64,
+    pub queue_p99_us: f64,
+    pub throughput_rps: f64,
+}
+
+impl StatsCollector {
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let elapsed = self.started.map_or(0.0, |t| t.elapsed().as_secs_f64());
+        StatsSnapshot {
+            requests: self.requests,
+            responses: self.responses,
+            rejected: self.rejected,
+            batches: self.batches,
+            mean_batch_size: if self.batches == 0 {
+                0.0
+            } else {
+                self.batched_items as f64 / self.batches as f64
+            },
+            latency_p50_us: self.latency.quantile_us(0.50),
+            latency_p95_us: self.latency.quantile_us(0.95),
+            latency_p99_us: self.latency.quantile_us(0.99),
+            latency_mean_us: self.latency.mean_us(),
+            queue_p99_us: self.queue_wait.quantile_us(0.99),
+            throughput_rps: if elapsed > 0.0 { self.responses as f64 / elapsed } else { 0.0 },
+        }
+    }
+}
+
+impl StatsSnapshot {
+    pub fn format_report(&self) -> String {
+        format!(
+            "requests={} responses={} rejected={} batches={} mean_batch={:.1}\n\
+             latency: mean {:.1}µs p50 {:.1}µs p95 {:.1}µs p99 {:.1}µs | queue p99 {:.1}µs\n\
+             throughput: {:.1} req/s",
+            self.requests,
+            self.responses,
+            self.rejected,
+            self.batches,
+            self.mean_batch_size,
+            self.latency_mean_us,
+            self.latency_p50_us,
+            self.latency_p95_us,
+            self.latency_p99_us,
+            self.queue_p99_us,
+            self.throughput_rps
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_us(0.5);
+        let p95 = h.quantile_us(0.95);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // ~5% bucket resolution
+        assert!((p50 - 500.0).abs() / 500.0 < 0.15, "p50 {p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.15, "p99 {p99}");
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_us(0.5), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_math() {
+        let mut s = StatsCollector::default();
+        s.batches = 4;
+        s.batched_items = 10;
+        let snap = s.snapshot();
+        assert!((snap.mean_batch_size - 2.5).abs() < 1e-12);
+        assert!(snap.format_report().contains("mean_batch=2.5"));
+    }
+}

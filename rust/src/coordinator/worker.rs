@@ -1,0 +1,113 @@
+//! Inference engines the coordinator can run.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::encoder::Encoder;
+use crate::loghd::model::LogHdModel;
+use crate::runtime::PjrtRuntime;
+use crate::tensor::Matrix;
+
+use super::Engine;
+
+/// Engines are built on the worker thread (PJRT handles are not Send):
+/// the coordinator takes a factory, not an engine.
+pub type EngineFactory = Box<dyn FnOnce() -> Result<Box<dyn Engine>> + Send>;
+
+/// The AOT path: a compiled HLO entry served via PJRT.
+pub struct PjrtEngine {
+    runtime: PjrtRuntime,
+    entry: String,
+}
+
+impl PjrtEngine {
+    /// Load an artifact bundle and serve `entry` (e.g. "infer_loghd").
+    pub fn load(dir: &PathBuf, entry: &str) -> Result<Self> {
+        let runtime = PjrtRuntime::load(dir)?;
+        runtime
+            .manifest
+            .entry(entry)
+            .with_context(|| format!("bundle has no entry '{entry}'"))?;
+        Ok(Self { runtime, entry: entry.to_string() })
+    }
+
+    /// Factory for [`super::Coordinator::start`].
+    pub fn factory(dir: PathBuf, entry: String) -> EngineFactory {
+        Box::new(move || Ok(Box::new(PjrtEngine::load(&dir, &entry)?) as Box<dyn Engine>))
+    }
+
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.runtime
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut PjrtRuntime {
+        &mut self.runtime
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> String {
+        format!("pjrt:{}:{}", self.runtime.manifest.name, self.entry)
+    }
+
+    fn features(&self) -> usize {
+        self.runtime.manifest.features
+    }
+
+    fn infer(&mut self, x: &Matrix) -> Result<Vec<i32>> {
+        self.runtime.infer_labels(&self.entry, x)
+    }
+}
+
+/// The native path: encoder + LogHD decode in pure Rust.
+pub struct NativeEngine {
+    pub encoder: Encoder,
+    pub model: LogHdModel,
+    label: String,
+}
+
+impl NativeEngine {
+    pub fn new(encoder: Encoder, model: LogHdModel, label: impl Into<String>) -> Self {
+        Self { encoder, model, label: label.into() }
+    }
+
+    pub fn factory(encoder: Encoder, model: LogHdModel, label: String) -> EngineFactory {
+        Box::new(move || Ok(Box::new(NativeEngine::new(encoder, model, label)) as Box<dyn Engine>))
+    }
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> String {
+        format!("native:{}", self.label)
+    }
+
+    fn features(&self) -> usize {
+        self.encoder.features()
+    }
+
+    fn infer(&mut self, x: &Matrix) -> Result<Vec<i32>> {
+        let enc = self.encoder.encode(x);
+        Ok(self.model.predict(&enc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::loghd::model::{TrainOptions, TrainedStack};
+
+    #[test]
+    fn native_engine_serves() {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 400, 50);
+        let opts = TrainOptions { epochs: 2, conv_epochs: 0, extra_bundles: 1, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 128, 1, &opts).unwrap();
+        let mut engine = NativeEngine::new(st.encoder, st.loghd, "page");
+        assert_eq!(engine.features(), 10);
+        let labels = engine.infer(&ds.x_test.rows_slice(0, 10)).unwrap();
+        assert_eq!(labels.len(), 10);
+        assert!(labels.iter().all(|l| (0..5).contains(l)));
+        assert!(engine.name().starts_with("native:"));
+    }
+}

@@ -1,0 +1,109 @@
+//! CSV dataset loader.
+//!
+//! The synthetic generators are the default in this offline environment,
+//! but a downstream user with the real UCI files can drop them in as CSV
+//! (one row per sample, features then an integer label in the last
+//! column) and run every harness unchanged.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Matrix;
+
+/// Parsed CSV dataset: features (N×F) + labels (N).
+#[derive(Debug, Clone)]
+pub struct CsvData {
+    pub x: Matrix,
+    pub y: Vec<i32>,
+    pub classes: usize,
+}
+
+/// Load `path`. `has_header` skips the first line.
+pub fn load(path: &Path, has_header: bool) -> Result<CsvData> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse(&text, has_header)
+}
+
+/// Parse CSV text (exposed for tests).
+pub fn parse(text: &str, has_header: bool) -> Result<CsvData> {
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let mut labels: Vec<i32> = Vec::new();
+    let mut width: Option<usize> = None;
+    for (lineno, line) in text.lines().enumerate() {
+        if lineno == 0 && has_header {
+            continue;
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if fields.len() < 2 {
+            bail!("line {}: need at least one feature and a label", lineno + 1);
+        }
+        let f = fields.len() - 1;
+        match width {
+            None => width = Some(f),
+            Some(wid) if wid != f => {
+                bail!("line {}: {} features, expected {}", lineno + 1, f, wid)
+            }
+            _ => {}
+        }
+        let mut row = Vec::with_capacity(f);
+        for v in &fields[..f] {
+            row.push(
+                v.parse::<f32>()
+                    .with_context(|| format!("line {}: bad feature '{v}'", lineno + 1))?,
+            );
+        }
+        let label: i32 = fields[f]
+            .parse::<f32>()
+            .with_context(|| format!("line {}: bad label '{}'", lineno + 1, fields[f]))?
+            as i32;
+        if label < 0 {
+            bail!("line {}: negative label {label}", lineno + 1);
+        }
+        rows.push(row);
+        labels.push(label);
+    }
+    if rows.is_empty() {
+        bail!("no data rows");
+    }
+    let classes = labels.iter().map(|y| *y as usize + 1).max().unwrap_or(0);
+    Ok(CsvData { x: Matrix::from_rows(&rows), y: labels, classes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic() {
+        let d = parse("1.0,2.0,0\n3.0,4.0,1\n", false).unwrap();
+        assert_eq!(d.x.rows(), 2);
+        assert_eq!(d.x.cols(), 2);
+        assert_eq!(d.y, vec![0, 1]);
+        assert_eq!(d.classes, 2);
+    }
+
+    #[test]
+    fn skips_header_and_blank_lines() {
+        let d = parse("f1,f2,label\n1,2,0\n\n3,4,2\n", true).unwrap();
+        assert_eq!(d.x.rows(), 2);
+        assert_eq!(d.classes, 3);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        assert!(parse("1,2,0\n1,0\n", false).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(parse("a,2,0\n", false).is_err());
+        assert!(parse("1,2,-1\n", false).is_err());
+        assert!(parse("", false).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Datasets: Table I synthetic generators (Python-parity), the spec
+//! registry, and a CSV loader for real data drop-ins.
+
+pub mod csv;
+pub mod registry;
+pub mod synth;
+
+pub use registry::{spec, DatasetSpec, SPECS};
+pub use synth::{by_name, generate, generate_scaled, Dataset};

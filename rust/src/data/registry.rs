@@ -1,0 +1,100 @@
+//! Dataset registry — the Rust twin of `python/compile/data.py::SPECS`.
+//!
+//! Shapes follow the paper's Table I exactly (PAMAP2 train scaled
+//! 611k→24k; see DESIGN.md). Difficulty constants were calibrated so
+//! conventional HDC / LogHD clean accuracies land in the bands the HDC
+//! literature reports for these datasets (see EXPERIMENTS.md §Datasets).
+
+/// Shape + difficulty of one synthetic dataset.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub features: usize,
+    pub classes: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub groups: usize,
+    pub sep_class: f64,
+    pub sigma: f64,
+    pub seed: u64,
+    pub description: &'static str,
+}
+
+/// All Table I datasets. Constants MUST match the Python twin.
+pub const SPECS: &[DatasetSpec] = &[
+    DatasetSpec {
+        name: "isolet",
+        features: 617,
+        classes: 26,
+        n_train: 6238,
+        n_test: 1559,
+        groups: 9,
+        sep_class: 0.14,
+        sigma: 0.65,
+        seed: 0x150_1E7,
+        description: "Voice recognition (ISOLET-like)",
+    },
+    DatasetSpec {
+        name: "ucihar",
+        features: 261,
+        classes: 12,
+        n_train: 6213,
+        n_test: 1554,
+        groups: 4,
+        sep_class: 0.16,
+        sigma: 0.70,
+        seed: 0x0C1_4A8,
+        description: "Mobile activity recognition (UCIHAR-like)",
+    },
+    DatasetSpec {
+        name: "pamap2",
+        features: 75,
+        classes: 5,
+        n_train: 24000,
+        n_test: 4000,
+        groups: 2,
+        sep_class: 0.26,
+        sigma: 0.90,
+        seed: 0x9A3_A92,
+        description: "IMU activity recognition (PAMAP2-like, 611k train scaled to 24k)",
+    },
+    DatasetSpec {
+        name: "page",
+        features: 10,
+        classes: 5,
+        n_train: 4925,
+        n_test: 548,
+        groups: 2,
+        sep_class: 1.00,
+        sigma: 1.40,
+        seed: 0x9A6_E00,
+        description: "Page layout blocks (PAGE-like)",
+    },
+];
+
+/// Look a spec up by name.
+pub fn spec(name: &str) -> Option<&'static DatasetSpec> {
+    SPECS.iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shapes() {
+        let iso = spec("isolet").unwrap();
+        assert_eq!((iso.features, iso.classes, iso.n_train, iso.n_test), (617, 26, 6238, 1559));
+        let uci = spec("ucihar").unwrap();
+        assert_eq!((uci.features, uci.classes), (261, 12));
+        let pam = spec("pamap2").unwrap();
+        assert_eq!((pam.features, pam.classes), (75, 5));
+        let page = spec("page").unwrap();
+        assert_eq!((page.features, page.classes, page.n_train, page.n_test), (10, 5, 4925, 548));
+    }
+
+    #[test]
+    fn unknown_dataset() {
+        assert!(spec("nope").is_none());
+    }
+}

@@ -1,0 +1,157 @@
+//! Synthetic dataset generator — the sample-for-sample twin of
+//! `python/compile/data.py::generate` (see that module for the rationale
+//! and the draw-order contract; both sides consume the same SplitMix64
+//! stream so the materialized datasets are identical up to f32 rounding).
+
+use super::registry::DatasetSpec;
+use crate::tensor::Matrix;
+use crate::util::rng::SplitMix64;
+
+pub const SCALE_LO: f64 = 0.6;
+pub const SCALE_HI: f64 = 1.4;
+
+/// A materialized dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub spec: DatasetSpec,
+    pub x_train: Matrix,
+    pub y_train: Vec<i32>,
+    pub x_test: Matrix,
+    pub y_test: Vec<i32>,
+}
+
+fn split(
+    rng: &mut SplitMix64,
+    means: &Matrix,
+    scales: &Matrix,
+    n: usize,
+    c: usize,
+    f: usize,
+) -> (Matrix, Vec<i32>) {
+    let mut y: Vec<i32> = (0..n).map(|i| (i % c) as i32).collect();
+    rng.shuffle(&mut y);
+    let mut x = Matrix::zeros(n, f);
+    for i in 0..n {
+        let cls = y[i] as usize;
+        let mrow = means.row(cls);
+        let srow = scales.row(cls);
+        let row = x.row_mut(i);
+        for j in 0..f {
+            let z = rng.normal();
+            row[j] = (mrow[j] as f64 + srow[j] as f64 * z) as f32;
+        }
+    }
+    (x, y)
+}
+
+/// Materialize a dataset; deterministic in `spec.seed`.
+pub fn generate(spec: &DatasetSpec) -> Dataset {
+    let mut rng = SplitMix64::new(spec.seed);
+    let (c, f, g) = (spec.classes, spec.features, spec.groups);
+
+    let mut centers = Matrix::zeros(g, f);
+    for v in centers.data_mut() {
+        *v = rng.normal() as f32;
+    }
+    // Python computes means in f64 then casts samples; mirror that by
+    // keeping means in f64 precision paths below (values are small; the
+    // f32 roundtrip here matches numpy's float32 output cast).
+    let mut offsets = Matrix::zeros(c, f);
+    for v in offsets.data_mut() {
+        *v = rng.normal() as f32;
+    }
+    let mut means = Matrix::zeros(c, f);
+    for cls in 0..c {
+        let ctr = centers.row(cls % g).to_vec();
+        let off = offsets.row(cls);
+        let row = means.row_mut(cls);
+        for j in 0..f {
+            row[j] = (ctr[j] as f64 + spec.sep_class * off[j] as f64) as f32;
+        }
+    }
+    let mut scales = Matrix::zeros(c, f);
+    for v in scales.data_mut() {
+        *v = (spec.sigma * (SCALE_LO + (SCALE_HI - SCALE_LO) * rng.uniform())) as f32;
+    }
+
+    let (x_train, y_train) = split(&mut rng, &means, &scales, spec.n_train, c, f);
+    let (x_test, y_test) = split(&mut rng, &means, &scales, spec.n_test, c, f);
+    Dataset { spec: *spec, x_train, y_train, x_test, y_test }
+}
+
+/// Generate by registry name.
+pub fn by_name(name: &str) -> Option<Dataset> {
+    super::registry::spec(name).map(generate)
+}
+
+/// A scaled-down variant for tests/benches: same geometry (same means,
+/// scales — i.e. same leading PRNG draws), fewer samples.
+pub fn generate_scaled(spec: &DatasetSpec, n_train: usize, n_test: usize) -> Dataset {
+    let mut s = *spec;
+    s.n_train = n_train;
+    s.n_test = n_test;
+    generate(&s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+
+    #[test]
+    fn page_shapes_and_balance() {
+        let ds = by_name("page").unwrap();
+        assert_eq!(ds.x_train.rows(), 4925);
+        assert_eq!(ds.x_train.cols(), 10);
+        assert_eq!(ds.x_test.rows(), 548);
+        let mut counts = [0usize; 5];
+        for y in &ds.y_train {
+            counts[*y as usize] += 1;
+        }
+        let max = counts.iter().max().unwrap();
+        let min = counts.iter().min().unwrap();
+        assert!(max - min <= 1, "{counts:?}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = by_name("page").unwrap();
+        let b = by_name("page").unwrap();
+        assert_eq!(a.x_train.data(), b.x_train.data());
+        assert_eq!(a.y_test, b.y_test);
+    }
+
+    #[test]
+    fn labels_in_range() {
+        let ds = generate_scaled(registry::spec("ucihar").unwrap(), 120, 40);
+        assert!(ds.y_train.iter().all(|y| (0..12).contains(y)));
+        assert!(ds.y_test.iter().all(|y| (0..12).contains(y)));
+    }
+
+    #[test]
+    fn classes_have_distinct_means() {
+        let ds = generate_scaled(registry::spec("page").unwrap(), 1000, 10);
+        let c = ds.spec.classes;
+        let f = ds.spec.features;
+        let mut means = Matrix::zeros(c, f);
+        let mut counts = vec![0f32; c];
+        for i in 0..ds.x_train.rows() {
+            let cls = ds.y_train[i] as usize;
+            counts[cls] += 1.0;
+            for (a, v) in means.row_mut(cls).iter_mut().zip(ds.x_train.row(i)) {
+                *a += v;
+            }
+        }
+        for cls in 0..c {
+            for v in means.row_mut(cls) {
+                *v /= counts[cls];
+            }
+        }
+        for a in 0..c {
+            for b in (a + 1)..c {
+                let d = crate::tensor::sqdist(means.row(a), means.row(b));
+                assert!(d > 0.1, "classes {a},{b} too close: {d}");
+            }
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Random-projection cosine encoder φ(x) = cos(xW + b), plus centering.
+//!
+//! The Rust twin of `python/compile/trainer.py::make_encoder` (same
+//! SplitMix64 draw order: W normals row-major scaled 1/√F, then b
+//! uniforms×2π), so a Rust-trained model and a Python-trained model with
+//! the same seed share the same encoder. The encode hot path is a matmul
+//! (see `tensor::matmul`) followed by a fused cos+center pass.
+
+use crate::tensor::{self, Matrix};
+use crate::util::rng::SplitMix64;
+use crate::util::threadpool;
+
+/// Encoder parameters. `mu` (the training-set mean encoding) is filled in
+/// by the trainer; until then encodings are uncentered.
+#[derive(Debug, Clone)]
+pub struct Encoder {
+    pub w: Matrix,      // (F, D)
+    pub b: Vec<f32>,    // (D,)
+    pub mu: Vec<f32>,   // (D,) zeros until trained
+}
+
+impl Encoder {
+    /// Deterministic construction (Python parity).
+    pub fn new(features: usize, d: usize, seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let inv_sqrt_f = 1.0 / (features as f64).sqrt();
+        let mut w = Matrix::zeros(features, d);
+        for v in w.data_mut() {
+            *v = (rng.normal() * inv_sqrt_f) as f32;
+        }
+        let b: Vec<f32> =
+            (0..d).map(|_| (std::f64::consts::TAU * rng.uniform()) as f32).collect();
+        Self { w, b, mu: vec![0.0; d] }
+    }
+
+    /// Construct from pre-loaded tensors (artifact path).
+    pub fn from_parts(w: Matrix, b: Vec<f32>, mu: Vec<f32>) -> Self {
+        assert_eq!(w.cols(), b.len());
+        assert_eq!(w.cols(), mu.len());
+        Self { w, b, mu }
+    }
+
+    pub fn features(&self) -> usize {
+        self.w.rows()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// Encode a batch: (B, F) -> (B, D), centered by `mu`.
+    pub fn encode(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.features(), "feature width mismatch");
+        let mut out = tensor::matmul(x, &self.w);
+        let d = self.dim();
+        let threads = threadpool::available_threads();
+        threadpool::parallel_rows(out.data_mut(), d, threads, |_, row| {
+            for (v, (bb, mm)) in row.iter_mut().zip(self.b.iter().zip(self.mu.iter())) {
+                *v = (*v + *bb).cos() - *mm;
+            }
+        });
+        out
+    }
+
+    /// Fit the centering vector on (already encoded, uncentered) rows and
+    /// return the previously-applied mu so callers can re-center.
+    pub fn set_mu(&mut self, mu: Vec<f32>) {
+        assert_eq!(mu.len(), self.dim());
+        self.mu = mu;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_shaped() {
+        let e1 = Encoder::new(7, 32, 5);
+        let e2 = Encoder::new(7, 32, 5);
+        assert_eq!(e1.w.data(), e2.w.data());
+        assert_eq!(e1.b, e2.b);
+        assert!(e1.b.iter().all(|v| (0.0..std::f32::consts::TAU + 1e-5).contains(v)));
+    }
+
+    #[test]
+    fn encode_is_cos_of_affine() {
+        let enc = Encoder::new(3, 8, 1);
+        let x = Matrix::from_vec(2, 3, vec![0.1, -0.2, 0.3, 1.0, 0.5, -1.0]);
+        let out = enc.encode(&x);
+        assert_eq!(out.rows(), 2);
+        assert_eq!(out.cols(), 8);
+        // manual check of one element
+        let mut acc = 0.0f32;
+        for j in 0..3 {
+            acc += x.at(1, j) * enc.w.at(j, 5);
+        }
+        let want = (acc + enc.b[5]).cos();
+        assert!((out.at(1, 5) - want).abs() < 1e-5);
+        // output bounded by 1 (mu = 0 here)
+        assert!(out.data().iter().all(|v| v.abs() <= 1.0 + 1e-6));
+    }
+
+    #[test]
+    fn centering_applied() {
+        let mut enc = Encoder::new(3, 4, 2);
+        let x = Matrix::from_vec(1, 3, vec![0.5, 0.5, 0.5]);
+        let before = enc.encode(&x);
+        enc.set_mu(vec![0.25; 4]);
+        let after = enc.encode(&x);
+        for j in 0..4 {
+            assert!((after.at(0, j) - (before.at(0, j) - 0.25)).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Classification metrics.
+
+/// Fraction of correct predictions.
+pub fn accuracy(pred: &[i32], truth: &[i32]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(truth).filter(|(p, y)| p == y).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Confusion matrix (truth-major, classes x classes).
+pub fn confusion(pred: &[i32], truth: &[i32], classes: usize) -> Vec<Vec<usize>> {
+    let mut m = vec![vec![0usize; classes]; classes];
+    for (p, y) in pred.iter().zip(truth) {
+        m[*y as usize][*p as usize] += 1;
+    }
+    m
+}
+
+/// Mean and (population) standard deviation.
+pub fn mean_std(values: &[f64]) -> (f64, f64) {
+    if values.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = values.iter().sum::<f64>() / values.len() as f64;
+    let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / values.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Largest x in `xs` (assumed ascending) whose paired accuracy stays at or
+/// above `floor`; linear-interpolated crossing point when it drops.
+/// This is the "sustains target accuracy up to p" statistic the paper's
+/// robustness claims are phrased in (e.g. "2.5–3.0x higher bit-flip rates").
+pub fn sustained_until(xs: &[f64], accs: &[f64], floor: f64) -> f64 {
+    assert_eq!(xs.len(), accs.len());
+    let mut last_ok: Option<usize> = None;
+    for (i, a) in accs.iter().enumerate() {
+        if *a >= floor {
+            last_ok = Some(i);
+        } else {
+            break;
+        }
+    }
+    match last_ok {
+        None => 0.0,
+        Some(i) if i + 1 >= xs.len() => xs[i],
+        Some(i) => {
+            // interpolate between the last passing and first failing point
+            let (x0, x1) = (xs[i], xs[i + 1]);
+            let (a0, a1) = (accs[i], accs[i + 1]);
+            if (a0 - a1).abs() < 1e-12 {
+                x0
+            } else {
+                x0 + (x1 - x0) * (a0 - floor) / (a0 - a1)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let m = confusion(&[0, 1, 1], &[0, 0, 1], 2);
+        assert_eq!(m[0][0], 1);
+        assert_eq!(m[0][1], 1);
+        assert_eq!(m[1][1], 1);
+        assert_eq!(m[1][0], 0);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 3.0]);
+        assert_eq!(m, 2.0);
+        assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn sustained_until_interpolates() {
+        let xs = [0.0, 0.2, 0.4, 0.6];
+        let accs = [0.9, 0.9, 0.5, 0.2];
+        // floor 0.7 crossed between 0.2 and 0.4: 0.2 + 0.2*(0.9-0.7)/(0.9-0.5)
+        let p = sustained_until(&xs, &accs, 0.7);
+        assert!((p - 0.3).abs() < 1e-9);
+        assert_eq!(sustained_until(&xs, &accs, 0.95), 0.0);
+        assert_eq!(sustained_until(&xs, &[0.9; 4], 0.5), 0.6);
+    }
+}

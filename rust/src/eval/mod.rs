@@ -1,0 +1,9 @@
+//! Experiment engine: metrics + the (method × precision × fault-rate)
+//! sweep machinery that regenerates the paper's figures.
+
+pub mod figures;
+pub mod metrics;
+pub mod sweep;
+
+pub use metrics::{accuracy, confusion, mean_std, sustained_until};
+pub use sweep::{corrupt, corrupt_masked, Method, Workbench};

@@ -1,0 +1,347 @@
+//! The experiment engine behind every figure harness.
+//!
+//! A [`Workbench`] holds one dataset encoded at one dimensionality D
+//! (the expensive part, done once), trains the shared prototype model,
+//! and evaluates any (method, precision, bit-flip p, seed) cell of the
+//! paper's grids by corrupting a *copy* of the stored model state —
+//! quantize → inject flips into the packed words → dequantize → score —
+//! exactly the protocol of §IV-A (test inputs never corrupted; SparseHD
+//! flips hit only non-pruned coordinates; LogHD flips hit bundles AND
+//! stored profiles).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::baselines::{ConventionalModel, HybridModel, SparseHdModel};
+use crate::data::Dataset;
+use crate::encoder::Encoder;
+use crate::eval::metrics::accuracy;
+use crate::faults;
+use crate::hd::prototype::{refine_conventional, train_prototypes};
+use crate::hd::similarity::activations;
+use crate::loghd::model::{LogHdModel, TrainOptions};
+use crate::quant::{self, Precision};
+use crate::tensor::{self, Matrix};
+use crate::util::rng::SplitMix64;
+
+/// Which classifier variant a grid cell evaluates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    Conventional,
+    /// SparseHD at sparsity S (budget 1-S).
+    SparseHd { sparsity: f64 },
+    /// LogHD with alphabet k and n bundles.
+    LogHd { k: u32, n: usize },
+    /// LogHD(k, n) + dimension mask at sparsity S.
+    Hybrid { k: u32, n: usize, sparsity: f64 },
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Conventional => "conventional".into(),
+            Method::SparseHd { sparsity } => format!("sparsehd(S={sparsity:.2})"),
+            Method::LogHd { k, n } => format!("loghd(k={k},n={n})"),
+            Method::Hybrid { k, n, sparsity } => {
+                format!("hybrid(k={k},n={n},S={sparsity:.2})")
+            }
+        }
+    }
+}
+
+/// One dataset, encoded once at dimension D, with the shared prototype
+/// model trained; LogHD/Hybrid variants are trained lazily and cached.
+pub struct Workbench {
+    pub name: String,
+    pub classes: usize,
+    pub d: usize,
+    pub encoder: Encoder,
+    pub enc_train: Matrix,
+    pub y_train: Vec<i32>,
+    pub enc_test: Matrix,
+    pub y_test: Vec<i32>,
+    pub prototypes: Matrix,
+    pub opts: TrainOptions,
+    loghd_cache: HashMap<(u32, usize), LogHdModel>,
+}
+
+impl Workbench {
+    /// Encode + train the shared stack. `opts.k/extra_bundles` are unused
+    /// here (each LogHD variant passes its own (k, n)).
+    pub fn new(ds: &Dataset, d: usize, encoder_seed: u64, opts: TrainOptions) -> Self {
+        let classes = ds.spec.classes;
+        let mut encoder = Encoder::new(ds.spec.features, d, encoder_seed);
+        let mut enc_train = encoder.encode(&ds.x_train);
+        let mu = tensor::col_means(&enc_train);
+        tensor::sub_row_inplace(&mut enc_train, &mu);
+        encoder.set_mu(mu);
+        let enc_test = encoder.encode(&ds.x_test);
+
+        let h0 = train_prototypes(&enc_train, &ds.y_train, classes);
+        let prototypes = if opts.conv_epochs > 0 {
+            refine_conventional(
+                &h0,
+                &enc_train,
+                &ds.y_train,
+                opts.conv_epochs,
+                0.05,
+                opts.shuffle_seed ^ 0xA5A5,
+                opts.batch,
+            )
+        } else {
+            h0
+        };
+        Self {
+            name: ds.spec.name.to_string(),
+            classes,
+            d,
+            encoder,
+            enc_train,
+            y_train: ds.y_train.clone(),
+            enc_test,
+            y_test: ds.y_test.clone(),
+            prototypes,
+            opts,
+            loghd_cache: HashMap::new(),
+        }
+    }
+
+    /// Train (or fetch) the LogHD variant for (k, n).
+    pub fn loghd(&mut self, k: u32, n: usize) -> Result<&LogHdModel> {
+        if !self.loghd_cache.contains_key(&(k, n)) {
+            let mut opts = self.opts.clone();
+            opts.k = k;
+            let model = LogHdModel::from_prototypes_with_n(
+                &self.prototypes,
+                &self.enc_train,
+                &self.y_train,
+                n,
+                &opts,
+            )?;
+            self.loghd_cache.insert((k, n), model);
+        }
+        Ok(&self.loghd_cache[&(k, n)])
+    }
+
+    /// Evaluate one grid cell; returns test accuracy.
+    pub fn evaluate(
+        &mut self,
+        method: Method,
+        precision: Precision,
+        flip_p: f64,
+        seed: u64,
+    ) -> Result<f64> {
+        let mut rng = SplitMix64::new(seed ^ 0xFA17);
+        let pred = match method {
+            Method::Conventional => {
+                let h = corrupt(&self.prototypes, precision, flip_p, &mut rng);
+                ConventionalModel::new(h).predict(&self.enc_test)
+            }
+            Method::SparseHd { sparsity } => {
+                let model = SparseHdModel::from_prototypes(&self.prototypes, sparsity);
+                let h = corrupt_masked(&model.prototypes, &model.mask, precision, flip_p, &mut rng);
+                // scores on the corrupted stored state
+                let s = activations(&self.enc_test, &h);
+                (0..s.rows()).map(|i| tensor::argmax(s.row(i)) as i32).collect()
+            }
+            Method::LogHd { k, n } => {
+                let model = self.loghd(k, n)?.clone();
+                let bundles = corrupt(&model.bundles, precision, flip_p, &mut rng);
+                let profiles = corrupt_profiles(&model.profiles, precision, flip_p, &mut rng);
+                let corrupted = LogHdModel { bundles, profiles, ..model };
+                corrupted.predict(&self.enc_test)
+            }
+            Method::Hybrid { k, n, sparsity } => {
+                let base = self.loghd(k, n)?.clone();
+                let hybrid =
+                    HybridModel::from_loghd(&base, &self.enc_train, &self.y_train, sparsity)?;
+                let bundles = corrupt_masked(
+                    &hybrid.inner.bundles,
+                    &hybrid.mask,
+                    precision,
+                    flip_p,
+                    &mut rng,
+                );
+                let profiles =
+                    corrupt_profiles(&hybrid.inner.profiles, precision, flip_p, &mut rng);
+                let corrupted = LogHdModel { bundles, profiles, ..hybrid.inner };
+                corrupted.predict(&self.enc_test)
+            }
+        };
+        Ok(accuracy(&pred, &self.y_test))
+    }
+
+    /// Clean accuracy of the conventional model (reference line).
+    pub fn conventional_clean(&self) -> f64 {
+        let s = activations(&self.enc_test, &self.prototypes);
+        let pred: Vec<i32> =
+            (0..s.rows()).map(|i| tensor::argmax(s.row(i)) as i32).collect();
+        accuracy(&pred, &self.y_test)
+    }
+}
+
+/// Quantize to `precision`, inject faults (per-value single-random-bit
+/// upsets with probability `flip_p` — see `faults` module docs for why
+/// this is the paper's protocol), dequantize. F32 upsets the raw
+/// IEEE-754 words instead.
+pub fn corrupt(m: &Matrix, precision: Precision, flip_p: f64, rng: &mut SplitMix64) -> Matrix {
+    match precision {
+        Precision::F32 => {
+            let mut out = m.clone();
+            if flip_p > 0.0 {
+                faults::flip_values_f32(out.data_mut(), flip_p, rng);
+            }
+            out
+        }
+        p => {
+            let mut q = quant::quantize(m, p);
+            if flip_p > 0.0 {
+                faults::flip_values_packed(&mut q.packed, flip_p, rng);
+            }
+            quant::dequantize(&q)
+        }
+    }
+}
+
+/// Profile corruption in the *stored representation*: LogHD stores the
+/// (C, n) activation profiles as deviations from the cross-class mean
+/// activation vector plus that n-vector mean (both quantized, both fault
+/// targets). Centering matches the quantizer scale to the profiles'
+/// informative spread instead of their absolute magnitude, so a worst-case
+/// single-bit upset displaces a class profile by O(profile spread) rather
+/// than O(profile magnitude) — the representation an implementation that
+/// cares about robustness would store, and the LogHD analogue of the unit
+/// row-norm storage the prototype/bundle tensors already enjoy.
+pub fn corrupt_profiles(
+    p_mat: &Matrix,
+    precision: Precision,
+    flip_p: f64,
+    rng: &mut SplitMix64,
+) -> Matrix {
+    let (c, n) = (p_mat.rows(), p_mat.cols());
+    let mean = tensor::col_means(p_mat); // (n,)
+    let mut dev = p_mat.clone();
+    tensor::sub_row_inplace(&mut dev, &mean);
+    // per-coordinate (per-bundle) quantization: bundle loads differ, so
+    // deviation scales differ per column; sharing one scale would let the
+    // widest column dictate everyone's upset magnitude.
+    let mut out = Matrix::zeros(c, n);
+    for j in 0..n {
+        let col: Vec<f32> = (0..c).map(|r| dev.at(r, j)).collect();
+        let col_m = Matrix::from_vec(c, 1, col);
+        let col_c = corrupt(&col_m, precision, flip_p, rng);
+        for r in 0..c {
+            out.set(r, j, col_c.at(r, 0));
+        }
+    }
+    let mean_mat = Matrix::from_vec(1, n, mean);
+    let mean_c = corrupt(&mean_mat, precision, flip_p, rng);
+    for r in 0..c {
+        for j in 0..n {
+            let v = out.at(r, j) + mean_c.at(0, j);
+            out.set(r, j, v);
+        }
+    }
+    out
+}
+
+/// SparseHD-style corruption: only the retained (stored) coordinates are
+/// quantized and exposed to flips; pruned coordinates stay exactly zero.
+pub fn corrupt_masked(
+    m: &Matrix,
+    mask: &[bool],
+    precision: Precision,
+    flip_p: f64,
+    rng: &mut SplitMix64,
+) -> Matrix {
+    assert_eq!(m.cols(), mask.len());
+    let kept: Vec<usize> =
+        mask.iter().enumerate().filter(|(_, k)| **k).map(|(i, _)| i).collect();
+    let mut compact = Matrix::zeros(m.rows(), kept.len());
+    for r in 0..m.rows() {
+        let src = m.row(r);
+        for (cj, &j) in kept.iter().enumerate() {
+            compact.set(r, cj, src[j]);
+        }
+    }
+    let corrupted = corrupt(&compact, precision, flip_p, rng);
+    let mut out = Matrix::zeros(m.rows(), m.cols());
+    for r in 0..m.rows() {
+        let dst = out.row_mut(r);
+        for (cj, &j) in kept.iter().enumerate() {
+            dst[j] = corrupted.at(r, cj);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+
+    fn bench_small() -> Workbench {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 600, 200);
+        let opts = TrainOptions { epochs: 3, conv_epochs: 1, ..Default::default() };
+        Workbench::new(&ds, 256, 0xE5C0DE, opts)
+    }
+
+    #[test]
+    fn clean_cells_match_direct_models() {
+        let mut wb = bench_small();
+        let conv = wb.evaluate(Method::Conventional, Precision::F32, 0.0, 1).unwrap();
+        assert!((conv - wb.conventional_clean()).abs() < 1e-12);
+        assert!(conv > 0.6);
+        let log = wb
+            .evaluate(Method::LogHd { k: 2, n: 4 }, Precision::F32, 0.0, 1)
+            .unwrap();
+        assert!(log > 0.55, "loghd clean {log}");
+    }
+
+    #[test]
+    fn quantization_8bit_close_to_f32() {
+        let mut wb = bench_small();
+        let f32acc = wb.evaluate(Method::Conventional, Precision::F32, 0.0, 1).unwrap();
+        let q8 = wb.evaluate(Method::Conventional, Precision::B8, 0.0, 1).unwrap();
+        assert!((f32acc - q8).abs() < 0.05, "{f32acc} vs {q8}");
+    }
+
+    #[test]
+    fn heavy_flips_destroy_accuracy() {
+        let mut wb = bench_small();
+        let clean = wb.evaluate(Method::Conventional, Precision::B8, 0.0, 1).unwrap();
+        let wrecked = wb.evaluate(Method::Conventional, Precision::B8, 0.5, 1).unwrap();
+        assert!(wrecked < clean, "flips should hurt: {wrecked} vs {clean}");
+    }
+
+    #[test]
+    fn sparsehd_flips_do_not_touch_pruned_dims() {
+        let wb = bench_small();
+        let model = SparseHdModel::from_prototypes(&wb.prototypes, 0.6);
+        let mut rng = SplitMix64::new(3);
+        let h = corrupt_masked(&model.prototypes, &model.mask, Precision::B8, 0.4, &mut rng);
+        for r in 0..h.rows() {
+            for (v, keep) in h.row(r).iter().zip(&model.mask) {
+                if !keep {
+                    assert_eq!(*v, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn loghd_cache_reuses_models() {
+        let mut wb = bench_small();
+        let a = wb.loghd(2, 4).unwrap().bundles.clone();
+        let b = wb.loghd(2, 4).unwrap().bundles.clone();
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn method_labels() {
+        assert_eq!(Method::Conventional.label(), "conventional");
+        assert!(Method::SparseHd { sparsity: 0.5 }.label().contains("0.50"));
+        assert!(Method::LogHd { k: 3, n: 4 }.label().contains("k=3"));
+    }
+}

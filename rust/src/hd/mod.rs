@@ -1,0 +1,9 @@
+//! Core HDC substrate: cosine similarity and class-prototype training
+//! (paper §III-A / Algorithm 1 step 1, plus the OnlineHD-style baseline
+//! refinement used to keep the conventional model strong).
+
+pub mod prototype;
+pub mod similarity;
+
+pub use prototype::{refine_conventional, train_prototypes};
+pub use similarity::{activations, cosine_one};

@@ -1,0 +1,151 @@
+//! Class-prototype training (Algorithm 1 step 1) and the OnlineHD-style
+//! perceptron refinement used for the conventional baseline — the native
+//! twin of `python/compile/trainer.py::{train_prototypes,
+//! refine_conventional}` (same update rule and shuffle stream; floating
+//! point accumulation order differs, so parity is statistical, not
+//! bitwise).
+
+use crate::hd::similarity::activations;
+use crate::tensor::{self, Matrix};
+use crate::util::rng::SplitMix64;
+
+/// H_c = normalize(sum of encoded class samples), accumulated in f64.
+pub fn train_prototypes(enc: &Matrix, y: &[i32], classes: usize) -> Matrix {
+    assert_eq!(enc.rows(), y.len());
+    let d = enc.cols();
+    let mut acc = vec![0.0f64; classes * d];
+    for (i, &cls) in y.iter().enumerate() {
+        let row = enc.row(i);
+        let dst = &mut acc[cls as usize * d..(cls as usize + 1) * d];
+        for (a, v) in dst.iter_mut().zip(row) {
+            *a += *v as f64;
+        }
+    }
+    let mut h = Matrix::from_vec(classes, d, acc.into_iter().map(|v| v as f32).collect());
+    tensor::normalize_rows(&mut h);
+    h
+}
+
+/// OnlineHD-style passes: for each misclassified sample, pull its class
+/// prototype toward the (unit-norm) encoding and push the confused one
+/// away, weighted by (1 - score). Rows re-normalized at the end.
+pub fn refine_conventional(
+    h: &Matrix,
+    enc: &Matrix,
+    y: &[i32],
+    epochs: usize,
+    eta: f32,
+    seed: u64,
+    batch: usize,
+) -> Matrix {
+    let d = enc.cols();
+    let mut hwork = h.clone();
+    // unit-norm encodings once
+    let mut encn = enc.clone();
+    tensor::normalize_rows(&mut encn);
+    let mut rng = SplitMix64::new(seed);
+    let mut idx: Vec<usize> = (0..y.len()).collect();
+    for _ in 0..epochs {
+        rng.shuffle(&mut idx);
+        for chunk in idx.chunks(batch) {
+            let mut hn = hwork.clone();
+            tensor::normalize_rows(&mut hn);
+            let xb = gather_rows(enc, chunk);
+            let scores = activations(&xb, &hn);
+            for (bi, &si) in chunk.iter().enumerate() {
+                let srow = scores.row(bi);
+                let pred = tensor::argmax(srow);
+                let truth = y[si] as usize;
+                if pred == truth {
+                    continue;
+                }
+                let e = encn.row(si).to_vec();
+                let up = eta * (1.0 - srow[truth]);
+                tensor::axpy(up, &e, hwork.row_mut(truth));
+                let down = eta * (1.0 - srow[pred]);
+                tensor::axpy(-down, &e, hwork.row_mut(pred));
+            }
+        }
+    }
+    tensor::normalize_rows(&mut hwork);
+    let _ = d;
+    hwork
+}
+
+/// Gather a batch of rows by index.
+pub fn gather_rows(m: &Matrix, idx: &[usize]) -> Matrix {
+    let mut out = Matrix::zeros(idx.len(), m.cols());
+    for (i, &si) in idx.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(m.row(si));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn toy() -> (Matrix, Vec<i32>) {
+        // Three well-separated clusters in 8-d encoding space.
+        let mut rng = SplitMix64::new(1);
+        let mut enc = Matrix::zeros(30, 8);
+        let mut y = Vec::new();
+        for i in 0..30 {
+            let cls = i % 3;
+            y.push(cls as i32);
+            let row = enc.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                let base = if j == cls * 2 { 2.0 } else { 0.0 };
+                *v = base + 0.1 * rng.normal() as f32;
+            }
+        }
+        (enc, y)
+    }
+
+    #[test]
+    fn prototypes_unit_and_aligned() {
+        let (enc, y) = toy();
+        let h = train_prototypes(&enc, &y, 3);
+        for r in 0..3 {
+            assert!((tensor::norm(h.row(r)) - 1.0).abs() < 1e-5);
+        }
+        // each prototype points at its cluster's dominant axis
+        for cls in 0..3 {
+            assert_eq!(tensor::argmax(h.row(cls)), cls * 2);
+        }
+    }
+
+    #[test]
+    fn prototype_classification_works() {
+        let (enc, y) = toy();
+        let h = train_prototypes(&enc, &y, 3);
+        let scores = activations(&enc, &h);
+        let mut hits = 0;
+        for i in 0..enc.rows() {
+            if tensor::argmax(scores.row(i)) == y[i] as usize {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, 30);
+    }
+
+    #[test]
+    fn refinement_does_not_break_separable_case() {
+        let (enc, y) = toy();
+        let h = train_prototypes(&enc, &y, 3);
+        let h2 = refine_conventional(&h, &enc, &y, 2, 0.05, 42, 8);
+        let scores = activations(&enc, &h2);
+        for i in 0..enc.rows() {
+            assert_eq!(tensor::argmax(scores.row(i)), y[i] as usize);
+        }
+    }
+
+    #[test]
+    fn gather_rows_picks_rows() {
+        let m = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let g = gather_rows(&m, &[2, 0]);
+        assert_eq!(g.row(0), &[5., 6.]);
+        assert_eq!(g.row(1), &[1., 2.]);
+    }
+}

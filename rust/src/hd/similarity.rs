@@ -1,0 +1,70 @@
+//! Cosine similarity (paper Eq. 1) — the native twin of the L1
+//! `activation` Pallas kernel: queries vs a matrix of pre-normalized rows.
+
+use crate::tensor::{self, Matrix};
+
+/// Cosine activations of raw (unnormalized) query rows against
+/// pre-normalized rows `m`: returns (B, n) with entries
+/// `<enc_i/|enc_i|, m_j>` — identical semantics to the Pallas kernel and
+/// `ref.activation_ref`.
+pub fn activations(enc: &Matrix, m: &Matrix) -> Matrix {
+    assert_eq!(enc.cols(), m.cols(), "dimension mismatch");
+    let mut dots = tensor::matmul_nt(enc, m);
+    for i in 0..enc.rows() {
+        let qn = tensor::norm(enc.row(i)).max(1e-12);
+        let inv = 1.0 / qn;
+        for v in dots.row_mut(i) {
+            *v *= inv;
+        }
+    }
+    dots
+}
+
+/// Cosine similarity between two raw vectors.
+pub fn cosine_one(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let na = tensor::norm(a).max(1e-12);
+    let nb = tensor::norm(b).max(1e-12);
+    tensor::dot_unrolled(a, b, a.len()) / (na * nb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::normalize_rows;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn matches_manual_cosine() {
+        let mut rng = SplitMix64::new(3);
+        let enc = Matrix::from_vec(4, 16, rng.normals_f32(64));
+        let mut m = Matrix::from_vec(3, 16, rng.normals_f32(48));
+        normalize_rows(&mut m);
+        let a = activations(&enc, &m);
+        for i in 0..4 {
+            for j in 0..3 {
+                let want = cosine_one(enc.row(i), m.row(j));
+                assert!((a.at(i, j) - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_by_one() {
+        let mut rng = SplitMix64::new(9);
+        let enc = Matrix::from_vec(8, 32, rng.normals_f32(256));
+        let mut m = Matrix::from_vec(5, 32, rng.normals_f32(160));
+        normalize_rows(&mut m);
+        let a = activations(&enc, &m);
+        assert!(a.data().iter().all(|v| v.abs() <= 1.0 + 1e-5));
+    }
+
+    #[test]
+    fn zero_query_is_finite() {
+        let enc = Matrix::zeros(1, 8);
+        let mut m = Matrix::from_vec(2, 8, SplitMix64::new(1).normals_f32(16));
+        normalize_rows(&mut m);
+        let a = activations(&enc, &m);
+        assert!(a.data().iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,45 @@
+//! # LogHD — logarithmic class-axis compression of HDC classifiers
+//!
+//! Production-shaped reproduction of *"LogHD: Robust Compression of
+//! Hyperdimensional Classifiers via Logarithmic Class-Axis Reduction"*
+//! (Yun et al., 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L1/L2 (build-time Python)**: Pallas kernels + JAX graphs, AOT-lowered
+//!   to HLO text artifacts (`python/compile/`, `make artifacts`).
+//! - **L3 (this crate)**: the serving coordinator (router → dynamic batcher
+//!   → PJRT workers), a complete native implementation of LogHD and every
+//!   baseline, the fault-injection engine, and the figure/table harnesses.
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO
+//! artifacts via the PJRT C API (`xla` crate) and [`coordinator`] serves
+//! batched requests against them.
+//!
+//! Module map (see DESIGN.md for the paper-to-module index):
+//!
+//! | module | paper artifact |
+//! |---|---|
+//! | [`encoder`] | φ(x) = cos(xW+b) random-projection encoder |
+//! | [`hd`] | prototypes + cosine similarity (§III-A) |
+//! | [`loghd`] | codebook/bundles/profiles/refinement (§III-C..F) |
+//! | [`baselines`] | conventional, SparseHD, hybrid (§II-B, §IV-D) |
+//! | [`quant`], [`faults`] | PTQ + stored-state bit flips (§IV-A) |
+//! | [`eval`] | the (method × precision × p) sweep engine (Figs. 3–6) |
+//! | [`hwmodel`] | Table II analytical ASIC/CPU/GPU model |
+//! | [`runtime`], [`coordinator`] | the serving system |
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod encoder;
+pub mod eval;
+pub mod faults;
+pub mod hd;
+pub mod hwmodel;
+pub mod loghd;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

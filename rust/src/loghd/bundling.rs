@@ -1,0 +1,71 @@
+//! Bundle construction (paper Eq. 4): M_j = sum_c g(B_cj) H_c, normalized.
+
+use crate::loghd::codebook::{g, Codebook};
+use crate::tensor::{self, Matrix};
+
+/// Weighted superposition of class prototypes into n bundles, f64
+/// accumulation, unit-row output (zero guard as in the Python twin).
+pub fn build_bundles(h: &Matrix, book: &Codebook) -> Matrix {
+    let c = book.classes();
+    let n = book.n();
+    assert_eq!(h.rows(), c, "prototype count != codebook classes");
+    let d = h.cols();
+    let mut acc = vec![0.0f64; n * d];
+    for (cls, code) in book.rows.iter().enumerate() {
+        let hrow = h.row(cls);
+        for (j, &s) in code.iter().enumerate() {
+            let w = g(s, book.k);
+            if w == 0.0 {
+                continue;
+            }
+            let dst = &mut acc[j * d..(j + 1) * d];
+            for (a, v) in dst.iter_mut().zip(hrow) {
+                *a += w * *v as f64;
+            }
+        }
+    }
+    let mut m = Matrix::from_vec(n, d, acc.into_iter().map(|v| v as f32).collect());
+    tensor::normalize_rows(&mut m);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loghd::codebook::Codebook;
+
+    #[test]
+    fn weights_follow_symbols() {
+        // Two orthogonal prototypes, codebook k=2:
+        // class0 -> (1,0), class1 -> (1,1).
+        let h = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let book = Codebook { k: 2, rows: vec![vec![1, 0], vec![1, 1]] };
+        let m = build_bundles(&h, &book);
+        // bundle0 = normalize(H0 + H1) = (1,1)/sqrt(2)
+        assert!((m.at(0, 0) - std::f32::consts::FRAC_1_SQRT_2).abs() < 1e-6);
+        assert!((m.at(0, 1) - std::f32::consts::FRAC_1_SQRT_2).abs() < 1e-6);
+        // bundle1 = normalize(H1) = (0,1)
+        assert!(m.at(1, 0).abs() < 1e-6);
+        assert!((m.at(1, 1) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ternary_weights() {
+        let h = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let book = Codebook { k: 3, rows: vec![vec![1], vec![2]] };
+        let m = build_bundles(&h, &book);
+        // bundle0 = normalize(0.5*H0 + 1.0*H1): direction (0.5, 1)/|..|
+        let norm = (0.25f32 + 1.0).sqrt();
+        assert!((m.at(0, 0) - 0.5 / norm).abs() < 1e-6);
+        assert!((m.at(0, 1) - 1.0 / norm).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_zero_column_stays_finite() {
+        let h = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let book = Codebook { k: 2, rows: vec![vec![0, 1]] };
+        let m = build_bundles(&h, &book);
+        assert!(m.row(0).iter().all(|v| v.is_finite()));
+        assert!(tensor::norm(m.row(0)) < 1e-6); // empty bundle ~ zero
+    }
+}

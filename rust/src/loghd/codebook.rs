@@ -1,0 +1,265 @@
+//! Capacity-aware k-ary codebook (paper §III-C, Eq. 2/3) — the exact twin
+//! of `python/compile/codebook.py` (same SplitMix64 stream discipline: one
+//! tie-break xi per candidate per round, candidates in lexicographic
+//! order; sampled pool beyond `MAX_ENUM`).
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::SplitMix64;
+
+pub const EPS_TIEBREAK: f64 = 1e-6;
+pub const MAX_ENUM: u64 = 8192;
+pub const POOL_SIZE: usize = 4096;
+
+/// A codebook: C unique length-n k-ary codes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Codebook {
+    pub k: u32,
+    pub rows: Vec<Vec<u8>>, // (C, n)
+}
+
+/// Feasibility limit n >= ceil(log_k C).
+pub fn min_bundles(classes: usize, k: u32) -> usize {
+    let mut n = 1usize;
+    let mut cap = k as u128;
+    while cap < classes as u128 {
+        n += 1;
+        cap *= k as u128;
+    }
+    n
+}
+
+/// Symbol weight g(s) = s/(k-1).
+#[inline]
+pub fn g(s: u8, k: u32) -> f64 {
+    s as f64 / (k - 1) as f64
+}
+
+/// Capacity surrogate U(w) = w^alpha.
+#[inline]
+pub fn capacity(w: f64, alpha: f64) -> f64 {
+    w.powf(alpha)
+}
+
+/// Refinement target t(s) = 2 s/(k-1) - 1 (paper Eq. 8).
+#[inline]
+pub fn target(s: u8, k: u32) -> f32 {
+    (2.0 * g(s, k) - 1.0) as f32
+}
+
+/// All k^n codes in lexicographic order.
+fn enumerate_codes(k: u32, n: usize) -> Vec<Vec<u8>> {
+    let total = (k as u64).pow(n as u32) as usize;
+    let mut out = Vec::with_capacity(total);
+    for idx in 0..total {
+        let mut code = vec![0u8; n];
+        let mut rem = idx as u64;
+        for j in (0..n).rev() {
+            code[j] = (rem % k as u64) as u8;
+            rem /= k as u64;
+        }
+        out.push(code);
+    }
+    out
+}
+
+/// Greedy minimax-load codebook, deterministic in `seed`.
+pub fn build(classes: usize, k: u32, n: usize, alpha: f64, seed: u64) -> Result<Codebook> {
+    if k < 2 {
+        bail!("alphabet size k must be >= 2, got {k}");
+    }
+    let kn = (k as u128).checked_pow(n as u32).unwrap_or(u128::MAX);
+    if kn < classes as u128 {
+        bail!("k^n = {k}^{n} < C = {classes}: infeasible codebook");
+    }
+    let mut rng = SplitMix64::new(seed);
+    let full = kn <= MAX_ENUM as u128;
+    let candidates: Vec<Vec<u8>> = if full {
+        enumerate_codes(k, n)
+    } else {
+        // Sampled pool: POOL_SIZE codes, n symbols each, u64 % k row-major
+        // (duplicates possible; uniqueness enforced by the `used` sweep).
+        (0..POOL_SIZE)
+            .map(|_| (0..n).map(|_| (rng.next_u64() % k as u64) as u8).collect())
+            .collect()
+    };
+    let cand_cap: Vec<Vec<f64>> = candidates
+        .iter()
+        .map(|code| code.iter().map(|&s| capacity(g(s, k), alpha)).collect())
+        .collect();
+
+    let mut used = vec![false; candidates.len()];
+    let mut loads = vec![0.0f64; n];
+    let mut rows = Vec::with_capacity(classes);
+    for _ in 0..classes {
+        let mut best: Option<(f64, usize)> = None;
+        for (q, cap) in cand_cap.iter().enumerate() {
+            let xi = rng.uniform();
+            if used[q] {
+                continue;
+            }
+            let mut worst = f64::NEG_INFINITY;
+            for (j, c) in cap.iter().enumerate() {
+                let v = loads[j] + c;
+                if v > worst {
+                    worst = v;
+                }
+            }
+            let score = worst + EPS_TIEBREAK * xi;
+            if best.map_or(true, |(bs, _)| score < bs) {
+                best = Some((score, q));
+            }
+        }
+        let (_, q) = best.expect("candidate pool exhausted");
+        for (l, c) in loads.iter_mut().zip(&cand_cap[q]) {
+            *l += c;
+        }
+        let chosen = candidates[q].clone();
+        used[q] = true;
+        if !full {
+            for (u, cand) in used.iter_mut().zip(&candidates) {
+                if cand == &chosen {
+                    *u = true;
+                }
+            }
+        }
+        rows.push(chosen);
+    }
+    Ok(Codebook { k, rows })
+}
+
+impl Codebook {
+    pub fn classes(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.rows.first().map_or(0, Vec::len)
+    }
+
+    /// Per-bundle cumulative load L_j = sum_c U(g(B_cj)).
+    pub fn bundle_loads(&self, alpha: f64) -> Vec<f64> {
+        let n = self.n();
+        let mut loads = vec![0.0f64; n];
+        for row in &self.rows {
+            for (l, &s) in loads.iter_mut().zip(row) {
+                *l += capacity(g(s, self.k), alpha);
+            }
+        }
+        loads
+    }
+
+    /// Target activation matrix (C, n): tau_{c,j} = t(B_{c,j}).
+    pub fn targets(&self) -> Vec<Vec<f32>> {
+        self.rows.iter().map(|row| row.iter().map(|&s| target(s, self.k)).collect()).collect()
+    }
+
+    /// Flatten to i32 row-major (artifact interchange form).
+    pub fn to_i32(&self) -> Vec<i32> {
+        self.rows.iter().flatten().map(|&s| s as i32).collect()
+    }
+
+    /// Rebuild from i32 row-major.
+    pub fn from_i32(k: u32, n: usize, data: &[i32]) -> Result<Self> {
+        if n == 0 || data.len() % n != 0 {
+            bail!("codebook data length {} not divisible by n={n}", data.len());
+        }
+        let rows = data
+            .chunks(n)
+            .map(|chunk| {
+                chunk
+                    .iter()
+                    .map(|&v| {
+                        if v < 0 || v as u32 >= k {
+                            bail!("symbol {v} out of range for k={k}");
+                        }
+                        Ok(v as u8)
+                    })
+                    .collect::<Result<Vec<u8>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Codebook { k, rows })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn min_bundles_matches_paper() {
+        assert_eq!(min_bundles(26, 2), 5); // ceil(log2 26)
+        assert_eq!(min_bundles(26, 3), 3); // paper: k=3, C=26 -> 3
+        assert_eq!(min_bundles(5, 2), 3);
+        assert_eq!(min_bundles(2, 2), 1);
+        assert_eq!(min_bundles(1, 2), 1);
+    }
+
+    #[test]
+    fn g_and_targets() {
+        assert_eq!(g(0, 3), 0.0);
+        assert_eq!(g(1, 3), 0.5);
+        assert_eq!(g(2, 3), 1.0);
+        assert_eq!(target(0, 3), -1.0);
+        assert_eq!(target(1, 3), 0.0);
+        assert_eq!(target(2, 3), 1.0);
+    }
+
+    #[test]
+    fn infeasible_errors() {
+        assert!(build(10, 2, 3, 1.0, 0).is_err());
+        assert!(build(4, 1, 4, 1.0, 0).is_err());
+    }
+
+    #[test]
+    fn rows_unique_and_in_range() {
+        for (c, k, n, seed) in [(26, 2, 5, 0xC0DE), (26, 3, 4, 7), (40, 4, 4, 9), (5, 2, 4, 3)] {
+            let cb = build(c, k, n, 1.0, seed).unwrap();
+            assert_eq!(cb.classes(), c);
+            assert_eq!(cb.n(), n);
+            let set: HashSet<&Vec<u8>> = cb.rows.iter().collect();
+            assert_eq!(set.len(), c, "duplicate codes for C={c} k={k}");
+            assert!(cb.rows.iter().flatten().all(|&s| (s as u32) < k));
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = build(26, 2, 5, 1.0, 99).unwrap();
+        let b = build(26, 2, 5, 1.0, 99).unwrap();
+        assert_eq!(a, b);
+        let c = build(26, 2, 5, 1.0, 100).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn greedy_flattens_loads_vs_lexicographic() {
+        let cb = build(20, 3, 5, 1.0, 1).unwrap();
+        let lex: Vec<Vec<u8>> = enumerate_codes(3, 5).into_iter().take(20).collect();
+        let lex_cb = Codebook { k: 3, rows: lex };
+        let worst_greedy =
+            cb.bundle_loads(1.0).into_iter().fold(f64::NEG_INFINITY, f64::max);
+        let worst_lex =
+            lex_cb.bundle_loads(1.0).into_iter().fold(f64::NEG_INFINITY, f64::max);
+        assert!(worst_greedy <= worst_lex + 1e-9);
+    }
+
+    #[test]
+    fn sampled_pool_path() {
+        // 4^8 = 65536 > MAX_ENUM
+        let cb = build(50, 4, 8, 1.0, 3).unwrap();
+        assert_eq!(cb.classes(), 50);
+        let set: HashSet<&Vec<u8>> = cb.rows.iter().collect();
+        assert_eq!(set.len(), 50);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let cb = build(8, 3, 3, 1.0, 5).unwrap();
+        let flat = cb.to_i32();
+        let back = Codebook::from_i32(3, 3, &flat).unwrap();
+        assert_eq!(cb, back);
+        assert!(Codebook::from_i32(2, 3, &[0, 1, 2]).is_err()); // symbol 2 with k=2
+    }
+}

@@ -1,0 +1,18 @@
+//! LogHD — logarithmic class-axis compression (the paper's contribution).
+//!
+//! - [`codebook`]: capacity-aware k-ary code assignment (Eq. 2/3)
+//! - [`bundling`]: weighted prototype superposition (Eq. 4)
+//! - [`profiles`]: per-class expected activation profiles (Eq. 5/6)
+//! - [`refine`]: perceptron-style bundle refinement (Eq. 8/9)
+//! - [`model`]: the assembled classifier (train / predict / memory math)
+
+pub mod bundling;
+pub mod codebook;
+pub mod model;
+pub mod profiles;
+pub mod refine;
+
+pub mod persist;
+
+pub use codebook::{min_bundles, Codebook};
+pub use model::{LogHdModel, TrainOptions, TrainedStack};

@@ -1,0 +1,231 @@
+//! The LogHD classifier: train / predict / save / load.
+//!
+//! This is the paper's primary contribution assembled end-to-end
+//! (Algorithm 1): codebook -> bundles -> profiles -> (refinement) ->
+//! nearest-profile decoding in activation space.
+
+use anyhow::Result;
+
+use crate::encoder::Encoder;
+use crate::hd::prototype::{refine_conventional, train_prototypes};
+use crate::hd::similarity::activations;
+use crate::loghd::bundling::build_bundles;
+use crate::loghd::codebook::{self, Codebook};
+use crate::loghd::profiles::compute_profiles;
+use crate::loghd::refine::refine_bundles;
+use crate::tensor::{self, Matrix};
+
+/// Training hyper-parameters (defaults follow the paper §IV-A, with the
+/// epoch count reduced as documented in DESIGN.md).
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub k: u32,
+    pub extra_bundles: usize, // epsilon redundancy
+    pub alpha: f64,
+    pub eta: f32,
+    pub epochs: usize,
+    pub conv_epochs: usize, // OnlineHD passes on prototypes pre-bundling
+    pub batch: usize,
+    pub codebook_seed: u64,
+    pub shuffle_seed: u64,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        Self {
+            k: 2,
+            extra_bundles: 2,
+            alpha: 1.0,
+            eta: 3e-4,
+            epochs: 20,
+            conv_epochs: 3,
+            batch: 64,
+            codebook_seed: 0xC0DE,
+            shuffle_seed: 0x5EED,
+        }
+    }
+}
+
+/// A trained LogHD model (plus the prototypes it was distilled from, kept
+/// for baselines/hybrid composition; they are NOT needed at inference).
+#[derive(Debug, Clone)]
+pub struct LogHdModel {
+    pub classes: usize,
+    pub d: usize,
+    pub book: Codebook,
+    pub bundles: Matrix,  // (n, D) unit rows
+    pub profiles: Matrix, // (C, n)
+}
+
+impl LogHdModel {
+    /// Algorithm 1 steps 2–5 from pre-trained prototypes.
+    pub fn from_prototypes(
+        h: &Matrix,
+        enc_train: &Matrix,
+        y_train: &[i32],
+        opts: &TrainOptions,
+    ) -> Result<Self> {
+        let classes = h.rows();
+        let n = codebook::min_bundles(classes, opts.k) + opts.extra_bundles;
+        Self::from_prototypes_with_n(h, enc_train, y_train, n, opts)
+    }
+
+    /// Same, with an explicit bundle count (figure sweeps vary n directly).
+    pub fn from_prototypes_with_n(
+        h: &Matrix,
+        enc_train: &Matrix,
+        y_train: &[i32],
+        n: usize,
+        opts: &TrainOptions,
+    ) -> Result<Self> {
+        let classes = h.rows();
+        let book = codebook::build(classes, opts.k, n, opts.alpha, opts.codebook_seed)?;
+        let mut bundles = build_bundles(h, &book);
+        if opts.epochs > 0 {
+            bundles = refine_bundles(
+                &bundles,
+                enc_train,
+                y_train,
+                &book,
+                opts.epochs,
+                opts.eta,
+                opts.shuffle_seed,
+                opts.batch,
+            );
+        }
+        let profiles = compute_profiles(enc_train, y_train, &bundles, classes);
+        Ok(Self { classes, d: h.cols(), book, bundles, profiles })
+    }
+
+    /// Activation-space distances (B, C): ||A(x) - P_c||^2 (paper Eq. 7).
+    pub fn decode_dists(&self, enc: &Matrix) -> Matrix {
+        let a = activations(enc, &self.bundles); // (B, n)
+        let mut out = Matrix::zeros(a.rows(), self.classes);
+        for i in 0..a.rows() {
+            let arow = a.row(i);
+            for c in 0..self.classes {
+                out.set(i, c, tensor::sqdist(arow, self.profiles.row(c)));
+            }
+        }
+        out
+    }
+
+    /// Predicted labels for encoded queries.
+    pub fn predict(&self, enc: &Matrix) -> Vec<i32> {
+        let d = self.decode_dists(enc);
+        (0..d.rows()).map(|i| tensor::argmin(d.row(i)) as i32).collect()
+    }
+
+    /// Stored model floats: n*D bundles + C*n profiles (paper §III-G).
+    pub fn memory_floats(&self) -> usize {
+        self.bundles.rows() * self.bundles.cols() + self.profiles.rows() * self.profiles.cols()
+    }
+
+    /// Memory budget as a fraction of the conventional C*D footprint.
+    pub fn budget_fraction(&self) -> f64 {
+        self.memory_floats() as f64 / (self.classes * self.d) as f64
+    }
+
+    pub fn n_bundles(&self) -> usize {
+        self.bundles.rows()
+    }
+}
+
+/// Everything trained in one go (shared encoder + conventional + LogHD) —
+/// the native twin of `python/compile/trainer.py::train_all`.
+#[derive(Debug, Clone)]
+pub struct TrainedStack {
+    pub encoder: Encoder,
+    pub prototypes: Matrix, // refined conventional model (C, D)
+    pub loghd: LogHdModel,
+}
+
+impl TrainedStack {
+    pub fn train(
+        x_train: &Matrix,
+        y_train: &[i32],
+        classes: usize,
+        d: usize,
+        encoder_seed: u64,
+        opts: &TrainOptions,
+    ) -> Result<Self> {
+        let mut encoder = Encoder::new(x_train.cols(), d, encoder_seed);
+        let mut enc_train = encoder.encode(x_train);
+        // Centering (DESIGN.md §Centering): mu on the raw encodings, then
+        // re-center the already-encoded matrix in place.
+        let mu = tensor::col_means(&enc_train);
+        tensor::sub_row_inplace(&mut enc_train, &mu);
+        encoder.set_mu(mu);
+
+        let h0 = train_prototypes(&enc_train, y_train, classes);
+        let prototypes = if opts.conv_epochs > 0 {
+            refine_conventional(
+                &h0,
+                &enc_train,
+                y_train,
+                opts.conv_epochs,
+                0.05,
+                opts.shuffle_seed ^ 0xA5A5,
+                opts.batch,
+            )
+        } else {
+            h0
+        };
+        let loghd = LogHdModel::from_prototypes(&prototypes, &enc_train, y_train, opts)?;
+        Ok(Self { encoder, prototypes, loghd })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+
+    fn small_stack() -> (data::Dataset, TrainedStack) {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 600, 200);
+        let opts = TrainOptions { epochs: 5, conv_epochs: 1, extra_bundles: 1, ..Default::default() };
+        let stack = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 256, 0xE5C0DE, &opts).unwrap();
+        (ds, stack)
+    }
+
+    #[test]
+    fn trained_model_shapes() {
+        let (_, stack) = small_stack();
+        assert_eq!(stack.loghd.n_bundles(), codebook::min_bundles(5, 2) + 1);
+        assert_eq!(stack.loghd.bundles.cols(), 256);
+        assert_eq!(stack.loghd.profiles.rows(), 5);
+        assert!(stack.loghd.budget_fraction() < 1.0);
+    }
+
+    #[test]
+    fn accuracy_beats_chance_comfortably() {
+        let (ds, stack) = small_stack();
+        let enc_test = stack.encoder.encode(&ds.x_test);
+        let preds = stack.loghd.predict(&enc_test);
+        let hits = preds.iter().zip(&ds.y_test).filter(|(p, y)| p == y).count();
+        let acc = hits as f64 / ds.y_test.len() as f64;
+        assert!(acc > 0.55, "LogHD acc {acc} too low");
+
+        let scores = activations(&enc_test, &stack.prototypes);
+        let chits = (0..enc_test.rows())
+            .filter(|&i| tensor::argmax(scores.row(i)) == ds.y_test[i] as usize)
+            .count();
+        let cacc = chits as f64 / ds.y_test.len() as f64;
+        assert!(cacc > 0.6, "conventional acc {cacc} too low");
+    }
+
+    #[test]
+    fn memory_reduction_holds() {
+        let (_, stack) = small_stack();
+        let conv = 5 * 256;
+        assert!(stack.loghd.memory_floats() < conv);
+    }
+
+    #[test]
+    fn decode_dists_are_nonnegative() {
+        let (ds, stack) = small_stack();
+        let enc = stack.encoder.encode(&ds.x_test.rows_slice(0, 16));
+        let d = stack.loghd.decode_dists(&enc);
+        assert!(d.data().iter().all(|v| *v >= 0.0));
+    }
+}

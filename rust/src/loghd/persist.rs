@@ -1,0 +1,133 @@
+//! Native model persistence: a directory of LHT tensors + a JSON manifest,
+//! the same on-disk shapes the Python AOT path emits, so a Rust-trained
+//! stack and a Python-trained bundle are interchangeable for the native
+//! engine.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::encoder::Encoder;
+use crate::loghd::codebook::Codebook;
+use crate::loghd::model::LogHdModel;
+use crate::runtime::artifact::{read_lht, write_lht_f32};
+use crate::tensor::Matrix;
+use crate::util::json::{self, Value};
+
+/// Save encoder + LogHD model into `dir`.
+pub fn save(dir: &Path, encoder: &Encoder, model: &LogHdModel) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let w = &encoder.w;
+    write_lht_f32(&dir.join("w.lht"), &[w.rows(), w.cols()], w.data())?;
+    write_lht_f32(&dir.join("b.lht"), &[encoder.b.len()], &encoder.b)?;
+    write_lht_f32(&dir.join("mu.lht"), &[encoder.mu.len()], &encoder.mu)?;
+    write_lht_f32(
+        &dir.join("bundles.lht"),
+        &[model.bundles.rows(), model.bundles.cols()],
+        model.bundles.data(),
+    )?;
+    write_lht_f32(
+        &dir.join("profiles.lht"),
+        &[model.profiles.rows(), model.profiles.cols()],
+        model.profiles.data(),
+    )?;
+    let book_f32: Vec<f32> = model.book.to_i32().iter().map(|v| *v as f32).collect();
+    write_lht_f32(&dir.join("codebook.lht"), &[model.classes, model.book.n()], &book_f32)?;
+    let manifest = json::obj(vec![
+        ("format", json::num(1.0)),
+        ("kind", json::s("native-loghd")),
+        ("classes", json::num(model.classes as f64)),
+        ("d", json::num(model.d as f64)),
+        ("k", json::num(model.book.k as f64)),
+        ("n", json::num(model.n_bundles() as f64)),
+        ("features", json::num(encoder.features() as f64)),
+    ]);
+    std::fs::write(dir.join("model.json"), json::to_string_pretty(&manifest))?;
+    Ok(())
+}
+
+/// Load a model saved by [`save`].
+pub fn load(dir: &Path) -> Result<(Encoder, LogHdModel)> {
+    let text = std::fs::read_to_string(dir.join("model.json"))
+        .with_context(|| format!("reading {}/model.json", dir.display()))?;
+    let v = json::parse(&text).map_err(|e| anyhow::anyhow!("model.json: {e}"))?;
+    let get = |k: &str| -> Result<usize> {
+        v.get(k).and_then(Value::as_usize).with_context(|| format!("model.json missing {k}"))
+    };
+    let classes = get("classes")?;
+    let d = get("d")?;
+    let k = get("k")? as u32;
+    let n = get("n")?;
+
+    let w = read_lht(&dir.join("w.lht"))?.to_matrix()?;
+    let b = read_lht(&dir.join("b.lht"))?.as_f32()?.to_vec();
+    let mu = read_lht(&dir.join("mu.lht"))?.as_f32()?.to_vec();
+    let encoder = Encoder::from_parts(w, b, mu);
+
+    let bundles = read_lht(&dir.join("bundles.lht"))?.to_matrix()?;
+    let profiles = read_lht(&dir.join("profiles.lht"))?.to_matrix()?;
+    let book_vals: Vec<i32> =
+        read_lht(&dir.join("codebook.lht"))?.as_f32()?.iter().map(|v| *v as i32).collect();
+    let book = Codebook::from_i32(k, n, &book_vals)?;
+    anyhow::ensure!(bundles.rows() == n, "bundle count mismatch");
+    anyhow::ensure!(profiles.rows() == classes, "profile count mismatch");
+    anyhow::ensure!(bundles.cols() == d, "bundle width mismatch");
+    let model = LogHdModel { classes, d, book, bundles, profiles };
+    Ok((encoder, model))
+}
+
+/// Load a *Python-trained* artifact bundle (aot.py manifest layout) into a
+/// native engine pair — proves the two worlds interoperate.
+pub fn load_from_aot_bundle(dir: &Path) -> Result<(Encoder, LogHdModel)> {
+    let manifest = crate::runtime::artifact::Manifest::load(dir)?;
+    let w = manifest.tensor("w")?.to_matrix()?;
+    let b = manifest.tensor("b")?.as_f32()?.to_vec();
+    let mu = manifest.tensor("mu")?.as_f32()?.to_vec();
+    let encoder = Encoder::from_parts(w, b, mu);
+    let bundles = manifest.tensor("bundles")?.to_matrix()?;
+    let profiles = manifest.tensor("profiles")?.to_matrix()?;
+    let book_vals = manifest.tensor("codebook")?.as_i32()?.to_vec();
+    let book = Codebook::from_i32(manifest.k, manifest.n, &book_vals)?;
+    let model = LogHdModel {
+        classes: manifest.classes,
+        d: manifest.d,
+        book,
+        bundles,
+        profiles,
+    };
+    Ok((encoder, model))
+}
+
+/// Load (matrix-shaped) test data from an aot bundle.
+pub fn load_test_data(dir: &Path) -> Result<(Matrix, Vec<i32>)> {
+    let manifest = crate::runtime::artifact::Manifest::load(dir)?;
+    let x = manifest.tensor("x_test")?.to_matrix()?;
+    let y = manifest.tensor("y_test")?.as_i32()?.to_vec();
+    Ok((x, y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::loghd::model::{TrainOptions, TrainedStack};
+
+    #[test]
+    fn save_load_roundtrip() {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 300, 60);
+        let opts = TrainOptions { epochs: 1, conv_epochs: 0, extra_bundles: 1, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 128, 3, &opts).unwrap();
+        let dir = std::env::temp_dir().join("loghd_persist_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        save(&dir, &st.encoder, &st.loghd).unwrap();
+        let (enc2, model2) = load(&dir).unwrap();
+        assert_eq!(enc2.w.data(), st.encoder.w.data());
+        assert_eq!(enc2.mu, st.encoder.mu);
+        assert_eq!(model2.bundles.data(), st.loghd.bundles.data());
+        assert_eq!(model2.book, st.loghd.book);
+        // predictions identical
+        let e = st.encoder.encode(&ds.x_test);
+        assert_eq!(st.loghd.predict(&e), model2.predict(&enc2.encode(&ds.x_test)));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,73 @@
+//! Activation profiles (paper Eq. 5/6): per-class mean activation vectors.
+
+use crate::hd::similarity::activations;
+use crate::tensor::Matrix;
+
+/// P_c = mean over class-c samples of A(x); (C, n), f64 accumulation.
+pub fn compute_profiles(enc: &Matrix, y: &[i32], m: &Matrix, classes: usize) -> Matrix {
+    assert_eq!(enc.rows(), y.len());
+    let n = m.rows();
+    let a = activations(enc, m);
+    let mut acc = vec![0.0f64; classes * n];
+    let mut counts = vec![0usize; classes];
+    for (i, &cls) in y.iter().enumerate() {
+        counts[cls as usize] += 1;
+        let dst = &mut acc[cls as usize * n..(cls as usize + 1) * n];
+        for (av, v) in dst.iter_mut().zip(a.row(i)) {
+            *av += *v as f64;
+        }
+    }
+    let mut out = Matrix::zeros(classes, n);
+    for cls in 0..classes {
+        let cnt = counts[cls].max(1) as f64;
+        for (o, v) in out.row_mut(cls).iter_mut().zip(&acc[cls * n..(cls + 1) * n]) {
+            *o = (*v / cnt) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::normalize_rows;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn profiles_are_class_means() {
+        let mut rng = SplitMix64::new(2);
+        let enc = Matrix::from_vec(6, 8, rng.normals_f32(48));
+        let y = vec![0, 1, 0, 1, 0, 1];
+        let mut m = Matrix::from_vec(3, 8, rng.normals_f32(24));
+        normalize_rows(&mut m);
+        let p = compute_profiles(&enc, &y, &m, 2);
+        let a = activations(&enc, &m);
+        for j in 0..3 {
+            let want0 = (a.at(0, j) + a.at(2, j) + a.at(4, j)) / 3.0;
+            assert!((p.at(0, j) - want0).abs() < 1e-5);
+            let want1 = (a.at(1, j) + a.at(3, j) + a.at(5, j)) / 3.0;
+            assert!((p.at(1, j) - want1).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn empty_class_is_zero() {
+        let enc = Matrix::from_vec(2, 4, vec![1.0; 8]);
+        let y = vec![0, 0];
+        let mut m = Matrix::from_vec(2, 4, SplitMix64::new(1).normals_f32(8));
+        normalize_rows(&mut m);
+        let p = compute_profiles(&enc, &y, &m, 3);
+        assert!(p.row(2).iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn profile_values_bounded() {
+        let mut rng = SplitMix64::new(5);
+        let enc = Matrix::from_vec(20, 16, rng.normals_f32(320));
+        let y: Vec<i32> = (0..20).map(|i| i % 4).collect();
+        let mut m = Matrix::from_vec(5, 16, rng.normals_f32(80));
+        normalize_rows(&mut m);
+        let p = compute_profiles(&enc, &y, &m, 4);
+        assert!(p.data().iter().all(|v| v.abs() <= 1.0 + 1e-5));
+    }
+}

@@ -1,0 +1,116 @@
+//! Iterative bundle refinement (paper §III-F, Eq. 8/9) — batched minibatch
+//! variant, mirroring `python/compile/trainer.py::refine_bundles` and the
+//! L2 `refine_step` graph: per minibatch, A = activations(enc_b, M),
+//! coef = eta (tau - A), M <- normalize(M + coefᵀ·enc_b).
+
+use crate::hd::prototype::gather_rows;
+use crate::hd::similarity::activations;
+use crate::loghd::codebook::Codebook;
+use crate::tensor::{self, Matrix};
+use crate::util::rng::SplitMix64;
+
+/// One batched refinement step; returns re-normalized bundles.
+pub fn refine_step(m: &Matrix, enc_b: &Matrix, tau: &Matrix, eta: f32) -> Matrix {
+    let n = m.rows();
+    let d = m.cols();
+    let bsz = enc_b.rows();
+    assert_eq!(tau.rows(), bsz);
+    assert_eq!(tau.cols(), n);
+    let a = activations(enc_b, m); // (B, n)
+    // coef (n, B) = eta * (tau - A)^T; delta = coef @ enc_b  (n, D)
+    let mut coef = Matrix::zeros(n, bsz);
+    for i in 0..bsz {
+        for j in 0..n {
+            coef.set(j, i, eta * (tau.at(i, j) - a.at(i, j)));
+        }
+    }
+    let delta = tensor::matmul(&coef, enc_b);
+    let mut out = m.clone();
+    for j in 0..n {
+        tensor::axpy(1.0, delta.row(j), out.row_mut(j));
+    }
+    let _ = d;
+    tensor::normalize_rows(&mut out);
+    out
+}
+
+/// Full refinement: `epochs` shuffled passes of minibatch steps.
+pub fn refine_bundles(
+    m: &Matrix,
+    enc: &Matrix,
+    y: &[i32],
+    book: &Codebook,
+    epochs: usize,
+    eta: f32,
+    seed: u64,
+    batch: usize,
+) -> Matrix {
+    let targets = book.targets(); // (C, n)
+    let n = book.n();
+    let mut rng = SplitMix64::new(seed);
+    let mut idx: Vec<usize> = (0..y.len()).collect();
+    let mut mwork = m.clone();
+    for _ in 0..epochs {
+        rng.shuffle(&mut idx);
+        for chunk in idx.chunks(batch) {
+            let enc_b = gather_rows(enc, chunk);
+            let mut tau = Matrix::zeros(chunk.len(), n);
+            for (bi, &si) in chunk.iter().enumerate() {
+                tau.row_mut(bi).copy_from_slice(&targets[y[si] as usize]);
+            }
+            mwork = refine_step(&mwork, &enc_b, &tau, eta);
+        }
+    }
+    mwork
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::normalize_rows;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn step_moves_toward_targets() {
+        let mut rng = SplitMix64::new(3);
+        let enc = Matrix::from_vec(8, 32, rng.normals_f32(256));
+        let mut m = Matrix::from_vec(2, 32, rng.normals_f32(64));
+        normalize_rows(&mut m);
+        let a0 = activations(&enc, &m);
+        let tau = Matrix::from_vec(8, 2, vec![1.0; 16]); // push everything up
+        let m1 = refine_step(&m, &enc, &tau, 0.05);
+        let a1 = activations(&enc, &m1);
+        let mean0: f32 = a0.data().iter().sum::<f32>() / 16.0;
+        let mean1: f32 = a1.data().iter().sum::<f32>() / 16.0;
+        assert!(mean1 > mean0, "{mean1} <= {mean0}");
+        for j in 0..2 {
+            assert!((tensor::norm(m1.row(j)) - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn zero_eta_is_identity_after_norm() {
+        let mut rng = SplitMix64::new(4);
+        let enc = Matrix::from_vec(4, 16, rng.normals_f32(64));
+        let mut m = Matrix::from_vec(3, 16, rng.normals_f32(48));
+        normalize_rows(&mut m);
+        let tau = Matrix::zeros(4, 3);
+        let m1 = refine_step(&m, &enc, &tau, 0.0);
+        for (a, b) in m.data().iter().zip(m1.data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn refinement_deterministic_in_seed() {
+        let mut rng = SplitMix64::new(5);
+        let enc = Matrix::from_vec(20, 16, rng.normals_f32(320));
+        let y: Vec<i32> = (0..20).map(|i| i % 4).collect();
+        let book = crate::loghd::codebook::build(4, 2, 3, 1.0, 1).unwrap();
+        let mut m = Matrix::from_vec(3, 16, rng.normals_f32(48));
+        normalize_rows(&mut m);
+        let a = refine_bundles(&m, &enc, &y, &book, 3, 0.01, 42, 8);
+        let b = refine_bundles(&m, &enc, &y, &book, 3, 0.01, 42, 8);
+        assert_eq!(a.data(), b.data());
+    }
+}

@@ -1,0 +1,5 @@
+//! `loghd` binary: thin wrapper over [`loghd::cli`].
+
+fn main() {
+    loghd::cli::main_entry();
+}

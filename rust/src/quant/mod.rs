@@ -1,0 +1,191 @@
+//! Post-training quantization (QuantHD-style, paper §IV-A).
+//!
+//! Training runs in f32; for each target precision (1, 2, 4, 8 bits) the
+//! stored model tensors are quantized symmetrically per-tensor and packed
+//! into bit-plane words ([`packed::PackedTensor`]). Bit flips are injected
+//! into the *packed representation* — exactly the stored-state fault model
+//! of the paper — and evaluation dequantizes on the fly.
+
+pub mod packed;
+
+pub use packed::PackedTensor;
+
+use crate::tensor::Matrix;
+
+/// Quantization precision in bits (1, 2, 4, or 8). `F32` is the
+/// unquantized control.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    B1,
+    B2,
+    B4,
+    B8,
+    F32,
+}
+
+impl Precision {
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::B1 => 1,
+            Precision::B2 => 2,
+            Precision::B4 => 4,
+            Precision::B8 => 8,
+            Precision::F32 => 32,
+        }
+    }
+
+    pub fn from_bits(bits: u32) -> Option<Self> {
+        Some(match bits {
+            1 => Precision::B1,
+            2 => Precision::B2,
+            4 => Precision::B4,
+            8 => Precision::B8,
+            32 => Precision::F32,
+            _ => return None,
+        })
+    }
+
+    pub const ALL_QUANT: [Precision; 4] =
+        [Precision::B1, Precision::B2, Precision::B4, Precision::B8];
+}
+
+/// Symmetric uniform quantizer state for one tensor.
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    pub precision: Precision,
+    pub rows: usize,
+    pub cols: usize,
+    pub scale: f32,
+    pub packed: PackedTensor,
+}
+
+/// Quantize a matrix. 1-bit is the sign representation at the tensor's
+/// mean magnitude; >=2 bits are symmetric mid-rise integer levels in
+/// [-(2^(b-1)-1), +(2^(b-1)-1)] at scale max|x|/(2^(b-1)-1).
+pub fn quantize(m: &Matrix, precision: Precision) -> Quantized {
+    let bits = precision.bits();
+    assert!(bits < 32, "use the raw matrix for f32");
+    let data = m.data();
+    if bits == 1 {
+        let mean_abs =
+            (data.iter().map(|v| v.abs() as f64).sum::<f64>() / data.len().max(1) as f64) as f32;
+        let mut packed = PackedTensor::new(1, data.len());
+        for (i, v) in data.iter().enumerate() {
+            packed.set(i, u64::from(*v >= 0.0));
+        }
+        return Quantized {
+            precision,
+            rows: m.rows(),
+            cols: m.cols(),
+            scale: mean_abs.max(1e-12),
+            packed,
+        };
+    }
+    let qmax = (1i64 << (bits - 1)) - 1; // e.g. 127 for 8-bit
+    let max_abs = data.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+    let scale = (max_abs / qmax as f32).max(1e-12);
+    let mut packed = PackedTensor::new(bits, data.len());
+    for (i, v) in data.iter().enumerate() {
+        let q = (v / scale).round().clamp(-(qmax as f32), qmax as f32) as i64;
+        // offset-binary storage: [0, 2^bits - 2]; the all-ones code is
+        // reachable only through bit flips and decodes to qmax+1 (a fault).
+        packed.set(i, (q + qmax) as u64);
+    }
+    Quantized { precision, rows: m.rows(), cols: m.cols(), scale, packed }
+}
+
+/// Dequantize back to a dense matrix (after optional fault injection).
+pub fn dequantize(q: &Quantized) -> Matrix {
+    let bits = q.precision.bits();
+    let count = q.rows * q.cols;
+    let mut out = Vec::with_capacity(count);
+    if bits == 1 {
+        for i in 0..count {
+            out.push(if q.packed.get(i) == 1 { q.scale } else { -q.scale });
+        }
+    } else {
+        let qmax = (1i64 << (bits - 1)) - 1;
+        for i in 0..count {
+            let raw = q.packed.get(i) as i64 - qmax;
+            out.push(raw as f32 * q.scale);
+        }
+    }
+    Matrix::from_vec(q.rows, q.cols, out)
+}
+
+/// Round-trip helper: quantize to `precision` then back (f32 passes
+/// through untouched). This is the "post-training quantization then
+/// evaluate" protocol of §IV-A.
+pub fn quantize_roundtrip(m: &Matrix, precision: Precision) -> Matrix {
+    match precision {
+        Precision::F32 => m.clone(),
+        p => dequantize(&quantize(m, p)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let mut rng = SplitMix64::new(3);
+        let m = Matrix::from_vec(4, 32, rng.normals_f32(128));
+        for p in [Precision::B2, Precision::B4, Precision::B8] {
+            let q = quantize(&m, p);
+            let back = dequantize(&q);
+            let step = q.scale;
+            for (a, b) in m.data().iter().zip(back.data()) {
+                assert!(
+                    (a - b).abs() <= 0.5 * step + 1e-6,
+                    "{p:?}: |{a} - {b}| > step/2 = {}",
+                    0.5 * step
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn one_bit_is_sign() {
+        let m = Matrix::from_vec(1, 4, vec![0.5, -0.25, 1.0, -2.0]);
+        let q = quantize(&m, Precision::B1);
+        let back = dequantize(&q);
+        for (orig, b) in m.data().iter().zip(back.data()) {
+            assert_eq!(orig.signum(), b.signum());
+            assert!((b.abs() - q.scale).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn f32_passthrough() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, -2.0, 3.0, -4.0]);
+        assert_eq!(quantize_roundtrip(&m, Precision::F32).data(), m.data());
+    }
+
+    #[test]
+    fn higher_precision_lower_error() {
+        let mut rng = SplitMix64::new(7);
+        let m = Matrix::from_vec(8, 64, rng.normals_f32(512));
+        let mut last = f64::INFINITY;
+        for p in [Precision::B2, Precision::B4, Precision::B8] {
+            let back = quantize_roundtrip(&m, p);
+            let err: f64 = m
+                .data()
+                .iter()
+                .zip(back.data())
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            assert!(err < last, "{p:?} err {err} not < {last}");
+            last = err;
+        }
+    }
+
+    #[test]
+    fn precision_bits_table() {
+        assert_eq!(Precision::B1.bits(), 1);
+        assert_eq!(Precision::B8.bits(), 8);
+        assert_eq!(Precision::from_bits(4), Some(Precision::B4));
+        assert_eq!(Precision::from_bits(3), None);
+    }
+}

@@ -1,0 +1,140 @@
+//! Bit-packed tensor storage: `bits`-wide little-endian fields packed into
+//! u64 words. This is the "stored model state" that the fault injector
+//! flips bits in — flipping a packed bit corrupts exactly one value's
+//! field, including its sign/magnitude structure, as on real hardware.
+
+/// Packed fixed-width integer array.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedTensor {
+    bits: u32,
+    count: usize,
+    words: Vec<u64>,
+}
+
+impl PackedTensor {
+    pub fn new(bits: u32, count: usize) -> Self {
+        assert!(bits >= 1 && bits <= 32, "field width {bits} unsupported");
+        let total_bits = bits as usize * count;
+        Self { bits, count, words: vec![0; total_bits.div_ceil(64)] }
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Total payload bits (the fault-injection surface).
+    pub fn total_bits(&self) -> usize {
+        self.bits as usize * self.count
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Get field `i` (little-endian bit order within the stream).
+    #[inline]
+    pub fn get(&self, i: usize) -> u64 {
+        debug_assert!(i < self.count);
+        let bits = self.bits as usize;
+        let start = i * bits;
+        let word = start / 64;
+        let off = start % 64;
+        let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        if off + bits <= 64 {
+            (self.words[word] >> off) & mask
+        } else {
+            let lo = self.words[word] >> off;
+            let hi = self.words[word + 1] << (64 - off);
+            (lo | hi) & mask
+        }
+    }
+
+    /// Set field `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, value: u64) {
+        debug_assert!(i < self.count);
+        let bits = self.bits as usize;
+        let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        let value = value & mask;
+        let start = i * bits;
+        let word = start / 64;
+        let off = start % 64;
+        if off + bits <= 64 {
+            self.words[word] = (self.words[word] & !(mask << off)) | (value << off);
+        } else {
+            let lo_bits = 64 - off;
+            self.words[word] =
+                (self.words[word] & !(mask << off)) | ((value << off) & u64::MAX);
+            let hi_mask = mask >> lo_bits;
+            self.words[word + 1] =
+                (self.words[word + 1] & !hi_mask) | (value >> lo_bits);
+        }
+    }
+
+    /// Flip payload bit `bit_index` (0..total_bits).
+    #[inline]
+    pub fn flip_bit(&mut self, bit_index: usize) {
+        debug_assert!(bit_index < self.total_bits());
+        self.words[bit_index / 64] ^= 1u64 << (bit_index % 64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn set_get_roundtrip_all_widths() {
+        let mut rng = SplitMix64::new(2);
+        for bits in [1u32, 2, 3, 4, 7, 8, 13, 16, 31, 32] {
+            let count = 100;
+            let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+            let values: Vec<u64> = (0..count).map(|_| rng.next_u64() & mask).collect();
+            let mut p = PackedTensor::new(bits, count);
+            for (i, v) in values.iter().enumerate() {
+                p.set(i, *v);
+            }
+            for (i, v) in values.iter().enumerate() {
+                assert_eq!(p.get(i), *v, "bits={bits} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn overwrite_does_not_leak_into_neighbors() {
+        let mut p = PackedTensor::new(3, 10);
+        for i in 0..10 {
+            p.set(i, 0b101);
+        }
+        p.set(4, 0b010);
+        for i in 0..10 {
+            assert_eq!(p.get(i), if i == 4 { 0b010 } else { 0b101 });
+        }
+    }
+
+    #[test]
+    fn flip_bit_changes_exactly_one_field() {
+        let mut p = PackedTensor::new(4, 8);
+        for i in 0..8 {
+            p.set(i, 0b1010);
+        }
+        p.flip_bit(4 * 3 + 1); // field 3, bit 1
+        for i in 0..8 {
+            assert_eq!(p.get(i), if i == 3 { 0b1000 } else { 0b1010 });
+        }
+        p.flip_bit(4 * 3 + 1); // flip back
+        assert_eq!(p.get(3), 0b1010);
+    }
+
+    #[test]
+    fn total_bits_accounting() {
+        let p = PackedTensor::new(5, 13);
+        assert_eq!(p.total_bits(), 65);
+        assert_eq!(p.words().len(), 2);
+    }
+}

@@ -1,0 +1,283 @@
+//! Artifact loading: the LHT tensor format (twin of
+//! `python/compile/lht.py`) and the `manifest.json` emitted by
+//! `python -m compile.aot`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Matrix;
+use crate::util::json;
+
+const MAGIC: &[u8; 4] = b"LHT1";
+
+/// A loaded LHT tensor.
+#[derive(Debug, Clone)]
+pub enum LhtTensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    U8 { dims: Vec<usize>, data: Vec<u8> },
+}
+
+impl LhtTensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            LhtTensor::F32 { dims, .. } | LhtTensor::I32 { dims, .. } | LhtTensor::U8 { dims, .. } => dims,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            LhtTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            LhtTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// View a rank-2 f32 tensor as a Matrix (copies).
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        let dims = self.dims();
+        let (rows, cols) = match dims.len() {
+            1 => (1usize, dims[0]),
+            2 => (dims[0], dims[1]),
+            _ => bail!("expected rank<=2 tensor, got {dims:?}"),
+        };
+        Ok(Matrix::from_vec(rows, cols, self.as_f32()?.to_vec()))
+    }
+}
+
+/// Read an LHT file.
+pub fn read_lht(path: &Path) -> Result<LhtTensor> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() < 6 || &bytes[..4] != MAGIC {
+        bail!("{}: bad LHT magic", path.display());
+    }
+    let dtype = bytes[4];
+    let ndim = bytes[5] as usize;
+    let header = 6 + 4 * ndim;
+    if bytes.len() < header {
+        bail!("{}: truncated header", path.display());
+    }
+    let mut dims = Vec::with_capacity(ndim);
+    for i in 0..ndim {
+        let off = 6 + 4 * i;
+        dims.push(u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize);
+    }
+    let count: usize = dims.iter().product();
+    let payload = &bytes[header..];
+    let need = |elt: usize| -> Result<()> {
+        if payload.len() != count * elt {
+            bail!("{}: payload {} != {}x{}", path.display(), payload.len(), count, elt);
+        }
+        Ok(())
+    };
+    Ok(match dtype {
+        0 => {
+            need(4)?;
+            let data = payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            LhtTensor::F32 { dims, data }
+        }
+        1 => {
+            need(4)?;
+            let data = payload
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            LhtTensor::I32 { dims, data }
+        }
+        2 => {
+            need(1)?;
+            LhtTensor::U8 { dims, data: payload.to_vec() }
+        }
+        other => bail!("{}: unknown dtype {other}", path.display()),
+    })
+}
+
+/// Write an LHT file (f32 matrix form — the shapes Rust exports).
+pub fn write_lht_f32(path: &Path, dims: &[usize], data: &[f32]) -> Result<()> {
+    let count: usize = dims.iter().product();
+    if count != data.len() {
+        bail!("dims {dims:?} do not match {} values", data.len());
+    }
+    let mut out = Vec::with_capacity(6 + 4 * dims.len() + 4 * data.len());
+    out.extend_from_slice(MAGIC);
+    out.push(0u8);
+    out.push(dims.len() as u8);
+    for d in dims {
+        out.extend_from_slice(&(*d as u32).to_le_bytes());
+    }
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+/// One lowered entry point (HLO file + declared I/O shapes).
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<(String, Vec<usize>, String)>,
+    pub outputs: Vec<(String, Vec<usize>, String)>,
+}
+
+/// A parsed artifact bundle directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub name: String,
+    pub dataset: String,
+    pub d: usize,
+    pub k: u32,
+    pub n: usize,
+    pub classes: usize,
+    pub features: usize,
+    pub batch: usize,
+    pub clean_acc_conventional: f64,
+    pub clean_acc_loghd: f64,
+    pub entries: Vec<EntrySpec>,
+    pub tensors: Vec<(String, PathBuf)>,
+}
+
+fn io_list(v: &json::Value) -> Result<Vec<(String, Vec<usize>, String)>> {
+    let mut out = Vec::new();
+    for item in v.as_array().context("expected io array")? {
+        let parts = item.as_array().context("expected [name, shape, dtype]")?;
+        let name = parts[0].as_str().context("io name")?.to_string();
+        let shape = parts[1]
+            .as_array()
+            .context("io shape")?
+            .iter()
+            .map(|d| d.as_usize().context("dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = parts[2].as_str().context("io dtype")?.to_string();
+        out.push((name, shape, dtype));
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let cfg = v.get("config").context("manifest.config")?;
+        let get_usize = |key: &str| -> Result<usize> {
+            cfg.get(key).and_then(json::Value::as_usize).with_context(|| format!("config.{key}"))
+        };
+        let mut entries = Vec::new();
+        for e in v.get("entries").and_then(json::Value::as_array).context("entries")? {
+            entries.push(EntrySpec {
+                name: e.get("name").and_then(json::Value::as_str).context("entry.name")?.into(),
+                hlo_path: dir.join(e.get("hlo").and_then(json::Value::as_str).context("entry.hlo")?),
+                inputs: io_list(e.get("inputs").context("entry.inputs")?)?,
+                outputs: io_list(e.get("outputs").context("entry.outputs")?)?,
+            });
+        }
+        let mut tensors = Vec::new();
+        if let Some(json::Value::Object(fields)) = v.get("tensors").cloned() {
+            for (name, file) in fields {
+                tensors.push((name, dir.join(file.as_str().context("tensor path")?)));
+            }
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            name: cfg.get("name").and_then(json::Value::as_str).context("config.name")?.into(),
+            dataset: cfg.get("dataset").and_then(json::Value::as_str).context("config.dataset")?.into(),
+            d: get_usize("D")?,
+            k: get_usize("k")? as u32,
+            n: get_usize("n")?,
+            classes: get_usize("C")?,
+            features: get_usize("F")?,
+            batch: get_usize("batch")?,
+            clean_acc_conventional: v
+                .get_path(&["clean_accuracy", "conventional"])
+                .and_then(json::Value::as_f64)
+                .unwrap_or(0.0),
+            clean_acc_loghd: v
+                .get_path(&["clean_accuracy", "loghd"])
+                .and_then(json::Value::as_f64)
+                .unwrap_or(0.0),
+            entries,
+            tensors,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&EntrySpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Load a named tensor from the bundle.
+    pub fn tensor(&self, name: &str) -> Result<LhtTensor> {
+        let (_, path) = self
+            .tensors
+            .iter()
+            .find(|(n, _)| n == name)
+            .with_context(|| format!("tensor '{name}' not in manifest"))?;
+        read_lht(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lht_roundtrip() {
+        let dir = std::env::temp_dir().join("loghd_lht_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.lht");
+        write_lht_f32(&path, &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let t = read_lht(&path).unwrap();
+        assert_eq!(t.dims(), &[2, 3]);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = t.to_matrix().unwrap();
+        assert_eq!(m.rows(), 2);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn lht_rejects_garbage() {
+        let dir = std::env::temp_dir().join("loghd_lht_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.lht");
+        std::fs::write(&path, b"NOPE\x00\x01\x00\x00\x00\x00").unwrap();
+        assert!(read_lht(&path).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn manifest_parses_minimal() {
+        let dir = std::env::temp_dir().join("loghd_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+ "format": 1,
+ "config": {"name": "t", "dataset": "page", "D": 64, "k": 2, "n": 3,
+            "C": 5, "F": 10, "batch": 4, "extra_bundles": 0},
+ "clean_accuracy": {"conventional": 0.9, "loghd": 0.8},
+ "entries": [{"name": "encode", "hlo": "encode.hlo.txt",
+   "inputs": [["x", [4, 10], "f32"]], "outputs": [["enc", [4, 64], "f32"]]}],
+ "tensors": {"w": "w.lht"}
+}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.d, 64);
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.entry("encode").unwrap().inputs[0].1, vec![4, 10]);
+        assert!(m.entry("nope").is_none());
+        assert!((m.clean_acc_loghd - 0.8).abs() < 1e-12);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,181 @@
+//! PJRT runtime: load the AOT artifacts and execute them from Rust.
+//!
+//! This is the request-path bridge of the three-layer architecture:
+//! `python -m compile.aot` lowered the L2 graphs (which call the L1 Pallas
+//! kernels) to HLO *text*; here we parse that text
+//! (`HloModuleProto::from_text_file` — the text parser reassigns the
+//! 64-bit instruction ids jax ≥ 0.5 emits that xla_extension 0.5.1
+//! rejects), compile it on the PJRT CPU client, and execute with model
+//! tensors as runtime inputs. Because the tensors are inputs rather than
+//! baked constants, the coordinator can inject stored-state bit flips and
+//! re-serve without recompiling.
+
+pub mod artifact;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Matrix;
+use artifact::{EntrySpec, Manifest};
+
+/// A compiled entry point.
+pub struct LoadedEntry {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The runtime: one PJRT CPU client + all compiled entries of one bundle
+/// + the bundle's model tensors.
+pub struct PjrtRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    entries: HashMap<String, LoadedEntry>,
+    tensors: HashMap<String, Matrix>,
+}
+
+/// Outputs of one entry execution.
+#[derive(Debug, Clone)]
+pub struct Outputs {
+    pub f32s: Vec<(String, Vec<usize>, Vec<f32>)>,
+    pub i32s: Vec<(String, Vec<usize>, Vec<i32>)>,
+}
+
+impl Outputs {
+    pub fn f32_named(&self, name: &str) -> Option<&(String, Vec<usize>, Vec<f32>)> {
+        self.f32s.iter().find(|(n, _, _)| n == name)
+    }
+
+    pub fn i32_named(&self, name: &str) -> Option<&(String, Vec<usize>, Vec<i32>)> {
+        self.i32s.iter().find(|(n, _, _)| n == name)
+    }
+}
+
+impl PjrtRuntime {
+    /// Load an artifact bundle directory and compile every entry.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut entries = HashMap::new();
+        for spec in &manifest.entries {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.hlo_path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", spec.hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling entry '{}'", spec.name))?;
+            entries.insert(spec.name.clone(), LoadedEntry { spec: spec.clone(), exe });
+        }
+        let mut tensors = HashMap::new();
+        for (name, path) in &manifest.tensors {
+            let t = artifact::read_lht(path)?;
+            if let Ok(m) = t.to_matrix() {
+                tensors.insert(name.clone(), m);
+            }
+        }
+        Ok(Self { manifest, client, entries, tensors })
+    }
+
+    pub fn entry_names(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+
+    /// Model tensor by manifest name (f32 rank<=2 only).
+    pub fn tensor(&self, name: &str) -> Option<&Matrix> {
+        self.tensors.get(name)
+    }
+
+    /// Replace a model tensor (fault injection / model swap). Shape must
+    /// match the original.
+    pub fn set_tensor(&mut self, name: &str, m: Matrix) -> Result<()> {
+        match self.tensors.get(name) {
+            Some(old) if old.rows() == m.rows() && old.cols() == m.cols() => {
+                self.tensors.insert(name.to_string(), m);
+                Ok(())
+            }
+            Some(old) => bail!(
+                "shape mismatch for '{name}': {}x{} vs {}x{}",
+                m.rows(),
+                m.cols(),
+                old.rows(),
+                old.cols()
+            ),
+            None => bail!("unknown tensor '{name}'"),
+        }
+    }
+
+    fn literal_for(&self, name: &str, shape: &[usize], batch_x: Option<&Matrix>) -> Result<xla::Literal> {
+        let m: &Matrix = if name == "x" {
+            batch_x.context("entry expects input 'x' but no batch was provided")?
+        } else {
+            self.tensors
+                .get(name)
+                .with_context(|| format!("input tensor '{name}' not loaded"))?
+        };
+        let want: usize = shape.iter().product();
+        if m.rows() * m.cols() != want {
+            bail!("tensor '{name}' has {} values, entry wants {want}", m.rows() * m.cols());
+        }
+        let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+        Ok(xla::Literal::vec1(m.data()).reshape(&dims)?)
+    }
+
+    /// Execute an entry. `batch_x` supplies the `x` input (padded to the
+    /// entry's fixed batch); model tensors come from the bundle.
+    pub fn execute(&self, entry: &str, batch_x: Option<&Matrix>) -> Result<Outputs> {
+        let loaded = self.entries.get(entry).with_context(|| format!("no entry '{entry}'"))?;
+        let mut inputs = Vec::with_capacity(loaded.spec.inputs.len());
+        for (name, shape, _dtype) in &loaded.spec.inputs {
+            inputs.push(self.literal_for(name, shape, batch_x)?);
+        }
+        let result = loaded.exe.execute::<xla::Literal>(&inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = lit.to_tuple()?;
+        if parts.len() != loaded.spec.outputs.len() {
+            bail!(
+                "entry '{entry}': {} outputs, manifest declares {}",
+                parts.len(),
+                loaded.spec.outputs.len()
+            );
+        }
+        let mut out = Outputs { f32s: Vec::new(), i32s: Vec::new() };
+        for (part, (name, shape, dtype)) in parts.into_iter().zip(&loaded.spec.outputs) {
+            match dtype.as_str() {
+                "f32" => out.f32s.push((name.clone(), shape.clone(), part.to_vec::<f32>()?)),
+                "i32" => out.i32s.push((name.clone(), shape.clone(), part.to_vec::<i32>()?)),
+                other => bail!("unsupported output dtype {other}"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Batched inference helper: run `entry` over all rows of `x`
+    /// (padding the final partial batch), returning per-row labels from
+    /// the output named `labels`.
+    pub fn infer_labels(&self, entry: &str, x: &Matrix) -> Result<Vec<i32>> {
+        let batch = self.manifest.batch;
+        let mut labels = Vec::with_capacity(x.rows());
+        let mut lo = 0;
+        while lo < x.rows() {
+            let hi = (lo + batch).min(x.rows());
+            let mut xb = Matrix::zeros(batch, x.cols());
+            for (bi, r) in (lo..hi).enumerate() {
+                xb.row_mut(bi).copy_from_slice(x.row(r));
+            }
+            let out = self.execute(entry, Some(&xb))?;
+            let (_, _, batch_labels) =
+                out.i32_named("labels").context("entry has no 'labels' output")?;
+            labels.extend_from_slice(&batch_labels[..hi - lo]);
+            lo = hi;
+        }
+        Ok(labels)
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+}

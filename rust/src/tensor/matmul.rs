@@ -1,0 +1,203 @@
+//! Matrix multiplication kernels for the native path.
+//!
+//! `matmul` (A·B) uses the cache-friendly i-k-j loop order: the inner loop
+//! streams one row of B while accumulating into one row of C, which the
+//! compiler auto-vectorizes. `matmul_nt` (A·Bᵀ) is the dot-product form
+//! used by the similarity stage (both operands row-major along the shared
+//! axis), unrolled into four independent accumulators to break the FP add
+//! dependency chain. Both parallelize over output rows.
+
+use super::Matrix;
+use crate::util::threadpool;
+
+/// C = A (m×k) · B (k×n).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul inner-dim mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Matrix::zeros(m, n);
+    let threads = threadpool::available_threads();
+    let b_data = b.data();
+    threadpool::parallel_rows(out.data_mut(), n, threads, |i, crow| {
+        let arow = a.row(i);
+        for kk in 0..k {
+            let aik = arow[kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b_data[kk * n..(kk + 1) * n];
+            // i-k-j: stream brow into crow (auto-vectorized axpy).
+            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += aik * *bv;
+            }
+        }
+    });
+    out
+}
+
+/// C = A (m×k) · Bᵀ where B is (n×k): similarity shape.
+///
+/// Register-blocked over 4 B-rows: each element of the query row is
+/// loaded once and multiplied into 4 accumulators, quadrupling arithmetic
+/// intensity vs the naive one-row-at-a-time dot (measured 2.6 → ~8
+/// GFLOP/s single-core on the serving shape; EXPERIMENTS.md §Perf).
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt inner-dim mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    // Mid-width-output regime (similarity against a few dozen class
+    // rows): transposing B once makes the inner loop a contiguous n-wide
+    // axpy over a cache-resident output row — the i-k-j form. Measured
+    // fastest for 12..=64 target rows (C=26: 11.8 → 9.1 ms at the Table II
+    // shape); below that the axpy is too short to vectorize well and the
+    // 4-row register-blocked path wins (n=7: 3.4 ms vs 6.1 ms) — §Perf
+    // iterations 2–3.
+    if (12..=64).contains(&n) && k >= 256 {
+        return matmul(a, &b.transposed());
+    }
+    let mut out = Matrix::zeros(m, n);
+    let threads = threadpool::available_threads();
+    threadpool::parallel_rows(out.data_mut(), n, threads, |i, crow| {
+        let arow = a.row(i);
+        let mut j = 0;
+        while j + 4 <= n {
+            let (b0, b1, b2, b3) = (b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
+            let mut acc0 = 0.0f32;
+            let mut acc1 = 0.0f32;
+            let mut acc2 = 0.0f32;
+            let mut acc3 = 0.0f32;
+            for kk in 0..k {
+                let av = arow[kk];
+                acc0 += av * b0[kk];
+                acc1 += av * b1[kk];
+                acc2 += av * b2[kk];
+                acc3 += av * b3[kk];
+            }
+            crow[j] = acc0;
+            crow[j + 1] = acc1;
+            crow[j + 2] = acc2;
+            crow[j + 3] = acc3;
+            j += 4;
+        }
+        for (jj, cv) in crow.iter_mut().enumerate().skip(j) {
+            *cv = dot_unrolled(arow, b.row(jj), k);
+        }
+    });
+    out
+}
+
+/// C = Aᵀ (k×m)ᵀ·B ... i.e. A is (k×m), B is (k×n), C = AᵀB (m×n).
+/// Used by bundling: Gᵀ(C×n)ᵀ · H(C×D).
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn shared-dim mismatch");
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Matrix::zeros(m, n);
+    // Accumulate rank-1 updates; m and n are small in our uses (n bundles).
+    for kk in 0..k {
+        let arow = a.row(kk);
+        let brow = b.row(kk);
+        for i in 0..m {
+            let aik = arow[i];
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut out.data_mut()[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += aik * *bv;
+            }
+        }
+    }
+    out
+}
+
+/// Dot product with 4-way unrolling (independent accumulators).
+#[inline]
+pub fn dot_unrolled(a: &[f32], b: &[f32], len: usize) -> f32 {
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = len / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc0 += a[i] * b[i];
+        acc1 += a[i + 1] * b[i + 1];
+        acc2 += a[i + 2] * b[i + 2];
+        acc3 += a[i + 3] * b[i + 3];
+    }
+    let mut rest = 0.0f32;
+    for i in chunks * 4..len {
+        rest += a[i] * b[i];
+    }
+    acc0 + acc1 + acc2 + acc3 + rest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut acc = 0.0f32;
+                for kk in 0..a.cols() {
+                    acc += a.at(i, kk) * b.at(kk, j);
+                }
+                out.set(i, j, acc);
+            }
+        }
+        out
+    }
+
+    fn rand_matrix(r: usize, c: usize, seed: u64) -> Matrix {
+        let mut rng = SplitMix64::new(seed);
+        Matrix::from_vec(r, c, rng.normals_f32(r * c))
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!(a.rows(), b.rows());
+        assert_eq!(a.cols(), b.cols());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        for (m, k, n, seed) in [(3, 5, 4, 1), (7, 13, 9, 2), (1, 1, 1, 3), (8, 64, 16, 4)] {
+            let a = rand_matrix(m, k, seed);
+            let b = rand_matrix(k, n, seed + 100);
+            assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_naive() {
+        for (m, k, n, seed) in [(3, 5, 4, 1), (6, 33, 7, 2), (2, 128, 3, 5)] {
+            let a = rand_matrix(m, k, seed);
+            let b = rand_matrix(n, k, seed + 7);
+            assert_close(&matmul_nt(&a, &b), &naive(&a, &b.transposed()), 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_tn_matches_naive() {
+        for (k, m, n, seed) in [(5, 3, 4, 1), (26, 7, 50, 2)] {
+            let a = rand_matrix(k, m, seed);
+            let b = rand_matrix(k, n, seed + 9);
+            assert_close(&matmul_tn(&a, &b), &naive(&a.transposed(), &b), 1e-5);
+        }
+    }
+
+    #[test]
+    fn dot_unrolled_matches_simple() {
+        let mut rng = SplitMix64::new(11);
+        for len in [0, 1, 3, 4, 7, 64, 129] {
+            let a = rng.normals_f32(len);
+            let b = rng.normals_f32(len);
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot_unrolled(&a, &b, len);
+            assert!((got - want).abs() < 1e-4, "len={len}: {got} vs {want}");
+        }
+    }
+}

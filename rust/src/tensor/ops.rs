@@ -1,0 +1,144 @@
+//! Element/row-wise tensor operations shared across the pipeline.
+
+use super::Matrix;
+
+/// L2 norm of a slice.
+#[inline]
+pub fn norm(v: &[f32]) -> f32 {
+    v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// In-place row L2-normalization with a zero guard (matches the Python
+/// `_normalize_rows`: rows with norm < 1e-12 are left ~zero, not NaN).
+pub fn normalize_rows(m: &mut Matrix) {
+    let cols = m.cols();
+    for r in 0..m.rows() {
+        let row = m.row_mut(r);
+        let n = norm(row).max(1e-12);
+        let inv = 1.0 / n;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+        let _ = cols;
+    }
+}
+
+/// y += alpha * x.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, xv) in y.iter_mut().zip(x.iter()) {
+        *yv += alpha * *xv;
+    }
+}
+
+/// Subtract a row vector from every row (centering).
+pub fn sub_row_inplace(m: &mut Matrix, v: &[f32]) {
+    assert_eq!(m.cols(), v.len());
+    for r in 0..m.rows() {
+        for (mv, vv) in m.row_mut(r).iter_mut().zip(v.iter()) {
+            *mv -= *vv;
+        }
+    }
+}
+
+/// Column means computed in f64 (mirrors numpy's mean for our parity).
+pub fn col_means(m: &Matrix) -> Vec<f32> {
+    let mut acc = vec![0.0f64; m.cols()];
+    for r in 0..m.rows() {
+        for (a, v) in acc.iter_mut().zip(m.row(r)) {
+            *a += *v as f64;
+        }
+    }
+    let n = m.rows().max(1) as f64;
+    acc.into_iter().map(|a| (a / n) as f32).collect()
+}
+
+/// Index of the maximum element (first on ties).
+#[inline]
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, x) in v.iter().enumerate() {
+        if *x > bv {
+            bv = *x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Index of the minimum element (first on ties).
+#[inline]
+pub fn argmin(v: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::INFINITY;
+    for (i, x) in v.iter().enumerate() {
+        if *x < bv {
+            bv = *x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Per-row L2 norms.
+pub fn row_norms(m: &Matrix) -> Vec<f32> {
+    (0..m.rows()).map(|r| norm(m.row(r))).collect()
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_and_normalize() {
+        let mut m = Matrix::from_vec(2, 2, vec![3.0, 4.0, 0.0, 0.0]);
+        normalize_rows(&mut m);
+        assert!((m.at(0, 0) - 0.6).abs() < 1e-6);
+        assert!((m.at(0, 1) - 0.8).abs() < 1e-6);
+        // zero row stays finite
+        assert!(m.row(1).iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn axpy_works() {
+        let x = [1.0, 2.0];
+        let mut y = [10.0, 20.0];
+        axpy(0.5, &x, &mut y);
+        assert_eq!(y, [10.5, 21.0]);
+    }
+
+    #[test]
+    fn centering() {
+        let mut m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mu = col_means(&m);
+        assert_eq!(mu, vec![2.0, 3.0]);
+        sub_row_inplace(&mut m, &mu);
+        assert_eq!(m.data(), &[-1.0, -1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn argmax_argmin_ties_first() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmin(&[1.0, 1.0, 0.5]), 2);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn sqdist_works() {
+        assert_eq!(sqdist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+}

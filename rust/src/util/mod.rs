@@ -1,0 +1,8 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! deterministic PRNG (Python-parity), minimal JSON, leveled logging, and
+//! scoped thread-pool helpers.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod threadpool;

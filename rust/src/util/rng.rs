@@ -1,0 +1,190 @@
+//! SplitMix64-based deterministic PRNG — the bit-exact twin of
+//! `python/compile/prng.py`.
+//!
+//! Both worlds must draw *identical* streams so that the synthetic datasets
+//! and codebooks built at artifact time (Python) match the ones the figure
+//! harnesses and property tests build natively (Rust). The contract:
+//!
+//! - SplitMix64 for raw `u64`s,
+//! - uniform `f64` in `[0,1)` as `(z >> 11) * 2^-53`,
+//! - standard normals via Box–Muller, each consuming exactly TWO uniforms
+//!   (the sine twin is discarded so stream position is batching-independent),
+//! - Fisher–Yates shuffles indexed with `next_u64() % (i+1)`.
+//!
+//! Canonical vectors live in the tests below and in
+//! `python/tests/test_prng.py`; change one and you must change both.
+
+const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+const M1: u64 = 0xBF58_476D_1CE4_E5B9;
+const M2: u64 = 0x94D0_49BB_1331_11EB;
+const TWO53_INV: f64 = 1.0 / 9007199254740992.0; // 2^-53
+
+/// Deterministic SplitMix64 stream.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next raw u64.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GAMMA);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(M1);
+        z = (z ^ (z >> 27)).wrapping_mul(M2);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * TWO53_INV
+    }
+
+    /// Standard normal (Box–Muller, cosine branch; consumes 2 uniforms).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(TWO53_INV);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// `count` uniforms.
+    pub fn uniforms(&mut self, count: usize) -> Vec<f64> {
+        (0..count).map(|_| self.uniform()).collect()
+    }
+
+    /// `count` normals.
+    pub fn normals(&mut self, count: usize) -> Vec<f64> {
+        (0..count).map(|_| self.normal()).collect()
+    }
+
+    /// `count` normals directly as f32 (the common tensor case).
+    pub fn normals_f32(&mut self, count: usize) -> Vec<f32> {
+        (0..count).map(|_| self.normal() as f32).collect()
+    }
+
+    /// In-place Fisher–Yates, high-to-low, `next_u64 % (i+1)` indices —
+    /// identical to the Python twin (modulo bias and all).
+    pub fn shuffle<T>(&mut self, arr: &mut [T]) {
+        for i in (1..arr.len()).rev() {
+            let j = (self.next_u64() % (i as u64 + 1)) as usize;
+            arr.swap(i, j);
+        }
+    }
+
+    /// Uniform integer in [0, bound) via modulo (parity over perfection).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        self.next_u64() % bound
+    }
+
+    /// Derive an independent stream for a labelled sub-task. Mixing the
+    /// label through one SplitMix64 step keeps derivation deterministic.
+    pub fn fork(&mut self, label: u64) -> SplitMix64 {
+        SplitMix64::new(self.next_u64() ^ label.wrapping_mul(GAMMA))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Canonical vectors, identical to python/tests/test_prng.py.
+    #[test]
+    fn u64_vectors_seed42() {
+        let mut r = SplitMix64::new(42);
+        let got: Vec<u64> = (0..4).map(|_| r.next_u64()).collect();
+        assert_eq!(
+            got,
+            vec![
+                0xBDD7_3226_2FEB_6E95,
+                0x28EF_E333_B266_F103,
+                0x4752_6757_130F_9F52,
+                0x581C_E1FF_0E4A_E394
+            ]
+        );
+    }
+
+    #[test]
+    fn uniform_vectors_seed42() {
+        let mut r = SplitMix64::new(42);
+        let want = [0.74156488, 0.15991039, 0.27860113, 0.34419072];
+        for w in want {
+            assert!((r.uniform() - w).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn normal_vectors_seed42() {
+        let mut r = SplitMix64::new(42);
+        let want = [0.41471975, -0.89188621, 1.72959309, 0.54562044];
+        for w in want {
+            assert!((r.normal() - w).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn shuffle_vector_seed123() {
+        let mut r = SplitMix64::new(123);
+        let mut a: Vec<i64> = (0..10).collect();
+        r.shuffle(&mut a);
+        assert_eq!(a, vec![7, 3, 4, 9, 8, 2, 1, 0, 6, 5]);
+    }
+
+    #[test]
+    fn normal_consumes_two_uniforms() {
+        let mut r1 = SplitMix64::new(9);
+        for _ in 0..3 {
+            r1.normal();
+        }
+        let mut r2 = SplitMix64::new(9);
+        for _ in 0..6 {
+            r2.uniform();
+        }
+        assert_eq!(r1.next_u64(), r2.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(1234);
+        let n = 200_000;
+        let zs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = zs.iter().sum::<f64>() / n as f64;
+        let var = zs.iter().map(|z| (z - mean) * (z - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var.sqrt() - 1.0).abs() < 0.01, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(5);
+        let mut a: Vec<u32> = (0..1000).collect();
+        r.shuffle(&mut a);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut r = SplitMix64::new(1);
+        let mut a = r.fork(1);
+        let mut b = r.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,106 @@
+//! Scoped data-parallel helpers over `std::thread` (no rayon offline).
+//!
+//! The figure harnesses and the native inference hot path split batches of
+//! queries into contiguous chunks and process them on `available_threads()`
+//! OS threads via `std::thread::scope`. On this CI box that is 1 core (the
+//! pool degrades to an in-place loop); on a real machine it scales.
+
+/// Number of worker threads to use (>= 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_start, chunk_end)` over `[0, len)` split into roughly equal
+/// contiguous chunks, one per thread. `f` runs on borrowed state — the
+/// classic fork-join shape.
+pub fn parallel_ranges<F>(len: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = threads.clamp(1, len.max(1));
+    if threads <= 1 || len == 0 {
+        f(0, len);
+        return;
+    }
+    let chunk = len.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(len);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(lo, hi));
+        }
+    });
+}
+
+/// Parallel map over disjoint mutable row chunks of `out` (each of width
+/// `row_width`), where `f(row_index, row_slice)` fills one row.
+pub fn parallel_rows<F>(out: &mut [f32], row_width: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_width > 0, "row_width must be positive");
+    assert_eq!(out.len() % row_width, 0, "out not a whole number of rows");
+    let rows = out.len() / row_width;
+    let threads = threads.clamp(1, rows.max(1));
+    if threads <= 1 {
+        for (i, row) in out.chunks_mut(row_width).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let chunk_rows = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, slab) in out.chunks_mut(chunk_rows * row_width).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (i, row) in slab.chunks_mut(row_width).enumerate() {
+                    f(t * chunk_rows + i, row);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn ranges_cover_everything_once() {
+        let hits = (0..100).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>();
+        parallel_ranges(100, 4, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn ranges_zero_len() {
+        parallel_ranges(0, 4, |lo, hi| assert_eq!(lo, hi));
+    }
+
+    #[test]
+    fn rows_fill_each_row() {
+        let mut out = vec![0.0f32; 12];
+        parallel_rows(&mut out, 3, 4, |i, row| {
+            for v in row.iter_mut() {
+                *v = i as f32;
+            }
+        });
+        assert_eq!(out, vec![0., 0., 0., 1., 1., 1., 2., 2., 2., 3., 3., 3.]);
+    }
+
+    #[test]
+    fn rows_single_thread_path() {
+        let mut out = vec![0.0f32; 6];
+        parallel_rows(&mut out, 2, 1, |i, row| row.fill(i as f32));
+        assert_eq!(out, vec![0., 0., 1., 1., 2., 2.]);
+    }
+}

@@ -1,0 +1,142 @@
+//! Integration over the Python-AOT artifacts: PJRT load/compile/execute,
+//! numerical parity against the JAX-recorded expected outputs, native-
+//! vs-XLA engine parity, and end-to-end coordinator serving.
+//!
+//! These tests need `make artifacts` (the page_smoke bundle). They are
+//! skipped — loudly — when the bundle is absent so `cargo test` still
+//! passes on a fresh checkout.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use loghd::coordinator::{BatcherConfig, Coordinator, PjrtEngine};
+use loghd::eval::accuracy;
+use loghd::loghd::persist;
+use loghd::runtime::artifact::read_lht;
+use loghd::runtime::PjrtRuntime;
+use loghd::tensor::Matrix;
+
+fn bundle() -> Option<PathBuf> {
+    // tests run from the workspace root
+    let dir = PathBuf::from("artifacts/page_smoke");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/page_smoke missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn first_batch(runtime: &PjrtRuntime) -> Matrix {
+    let m = &runtime.manifest;
+    let x_test = m.tensor("x_test").unwrap().to_matrix().unwrap();
+    x_test.rows_slice(0, m.batch)
+}
+
+#[test]
+fn pjrt_matches_jax_expected_outputs() {
+    let Some(dir) = bundle() else { return };
+    let runtime = PjrtRuntime::load(&dir).unwrap();
+    let xb = first_batch(&runtime);
+    let out = runtime.execute("infer_loghd", Some(&xb)).unwrap();
+
+    let expected_dists = read_lht(&dir.join("expected_dists.lht")).unwrap();
+    let expected_labels = read_lht(&dir.join("expected_labels.lht")).unwrap();
+    let (_, _, dists) = out.f32_named("dists").unwrap();
+    let (_, _, labels) = out.i32_named("labels").unwrap();
+
+    let want = expected_dists.as_f32().unwrap();
+    assert_eq!(dists.len(), want.len());
+    for (a, b) in dists.iter().zip(want) {
+        assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+    assert_eq!(labels, expected_labels.as_i32().unwrap());
+}
+
+#[test]
+fn pjrt_conventional_entry_matches() {
+    let Some(dir) = bundle() else { return };
+    let runtime = PjrtRuntime::load(&dir).unwrap();
+    let xb = first_batch(&runtime);
+    let out = runtime.execute("infer_conventional", Some(&xb)).unwrap();
+    let expected = read_lht(&dir.join("expected_conv_labels.lht")).unwrap();
+    let (_, _, labels) = out.i32_named("labels").unwrap();
+    assert_eq!(labels, expected.as_i32().unwrap());
+}
+
+#[test]
+fn native_engine_parity_with_xla_path() {
+    let Some(dir) = bundle() else { return };
+    let runtime = PjrtRuntime::load(&dir).unwrap();
+    let (encoder, model) = persist::load_from_aot_bundle(&dir).unwrap();
+    let (x_test, y_test) = persist::load_test_data(&dir).unwrap();
+
+    let xla_labels = runtime.infer_labels("infer_loghd", &x_test).unwrap();
+    let native_labels = model.predict(&encoder.encode(&x_test));
+    let agree = xla_labels.iter().zip(&native_labels).filter(|(a, b)| a == b).count();
+    assert!(
+        agree as f64 >= 0.99 * x_test.rows() as f64,
+        "only {agree}/{} labels agree between XLA and native",
+        x_test.rows()
+    );
+
+    // and both hit the manifest's recorded clean accuracy
+    let acc = accuracy(&xla_labels, &y_test);
+    assert!(
+        (acc - runtime.manifest.clean_acc_loghd).abs() < 0.02,
+        "served acc {acc} vs manifest {}",
+        runtime.manifest.clean_acc_loghd
+    );
+}
+
+#[test]
+fn full_test_set_accuracy_through_runtime() {
+    let Some(dir) = bundle() else { return };
+    let runtime = PjrtRuntime::load(&dir).unwrap();
+    let (x_test, y_test) = persist::load_test_data(&dir).unwrap();
+    let labels = runtime.infer_labels("infer_loghd", &x_test).unwrap();
+    assert_eq!(labels.len(), y_test.len()); // padding trimmed correctly
+    let acc = accuracy(&labels, &y_test);
+    assert!(acc > 0.6, "artifact accuracy {acc}");
+}
+
+#[test]
+fn coordinator_serves_pjrt_engine_end_to_end() {
+    let Some(dir) = bundle() else { return };
+    let manifest = loghd::runtime::artifact::Manifest::load(&dir).unwrap();
+    let (x_test, y_test) = persist::load_test_data(&dir).unwrap();
+    let coord = Arc::new(Coordinator::start(
+        manifest.features,
+        BatcherConfig {
+            max_batch: manifest.batch,
+            max_delay: std::time::Duration::from_millis(5),
+            max_pending: 4096,
+        },
+        PjrtEngine::factory(dir.clone(), "infer_loghd".into()),
+    ));
+    let n = 200.min(x_test.rows());
+    let rxs: Vec<_> = (0..n).map(|i| coord.submit(x_test.row(i).to_vec()).unwrap()).collect();
+    let preds: Vec<i32> = rxs.into_iter().map(|rx| rx.recv().unwrap().label).collect();
+    let acc = accuracy(&preds, &y_test[..n]);
+    assert!(acc > 0.6, "served accuracy {acc}");
+    let snap = coord.stats();
+    assert_eq!(snap.responses, n as u64);
+    assert!(snap.mean_batch_size > 1.0, "batching never amortized: {}", snap.mean_batch_size);
+}
+
+#[test]
+fn fault_injection_on_served_model_degrades_accuracy() {
+    // The serving-side fault story: flip bits in the runtime's stored
+    // bundle tensor and watch served accuracy drop — no recompilation.
+    let Some(dir) = bundle() else { return };
+    let mut runtime = PjrtRuntime::load(&dir).unwrap();
+    let (x_test, y_test) = persist::load_test_data(&dir).unwrap();
+    let clean = accuracy(&runtime.infer_labels("infer_loghd", &x_test).unwrap(), &y_test);
+
+    let mut rng = loghd::util::rng::SplitMix64::new(13);
+    let bundles = runtime.tensor("bundles").unwrap().clone();
+    let corrupted = loghd::eval::corrupt(&bundles, loghd::quant::Precision::B8, 0.7, &mut rng);
+    runtime.set_tensor("bundles", corrupted).unwrap();
+    let faulted = accuracy(&runtime.infer_labels("infer_loghd", &x_test).unwrap(), &y_test);
+    assert!(faulted < clean, "p=0.7 flips should hurt: {faulted} vs {clean}");
+}

@@ -1,0 +1,149 @@
+//! Native end-to-end integration: train → evaluate → fault-inject, and
+//! check the paper's qualitative claims hold at small scale.
+
+use loghd::data;
+use loghd::eval::figures::methods_at_budget;
+use loghd::eval::sweep::{Method, Workbench};
+use loghd::eval::sustained_until;
+use loghd::loghd::model::TrainOptions;
+use loghd::quant::Precision;
+
+fn bench(name: &str, d: usize) -> Workbench {
+    let spec = data::spec(name).unwrap();
+    let ds = data::generate_scaled(spec, spec.n_train.min(2000), spec.n_test.min(600));
+    let opts = TrainOptions { epochs: 4, conv_epochs: 2, ..Default::default() };
+    Workbench::new(&ds, d, 0xE5C0DE, opts)
+}
+
+#[test]
+fn clean_accuracy_floors_per_dataset() {
+    // (dataset, conventional floor, loghd floor at n=min+2)
+    for (name, conv_floor, log_floor) in
+        [("page", 0.75, 0.70), ("ucihar", 0.85, 0.62), ("pamap2", 0.80, 0.70)]
+    {
+        let mut wb = bench(name, 1000);
+        let conv = wb.evaluate(Method::Conventional, Precision::F32, 0.0, 1).unwrap();
+        assert!(conv > conv_floor, "{name}: conventional {conv} <= {conv_floor}");
+        let n = loghd::loghd::codebook::min_bundles(wb.classes, 2) + 2;
+        let log = wb.evaluate(Method::LogHd { k: 2, n }, Precision::F32, 0.0, 1).unwrap();
+        assert!(log > log_floor, "{name}: loghd {log} <= {log_floor}");
+    }
+}
+
+#[test]
+fn bundle_memory_robust_to_stored_state_upsets() {
+    // The paper's §II-C mechanism claim at CI scale: because LogHD keeps
+    // full dimensionality D, corruption of the *hypervector memory* (the
+    // bundles) is averaged away by concentration of measure — accuracy
+    // under heavy bundle upsets stays close to clean.
+    let mut wb = bench("ucihar", 2000);
+    let n = 6;
+    let model = wb.loghd(2, n).unwrap().clone();
+    let clean = {
+        let pred = model.predict(&wb.enc_test);
+        loghd::eval::accuracy(&pred, &wb.y_test)
+    };
+    let mut rng = loghd::util::rng::SplitMix64::new(11);
+    let bundles =
+        loghd::eval::corrupt(&model.bundles, Precision::B8, 0.4, &mut rng);
+    let corrupted = loghd::loghd::model::LogHdModel { bundles, ..model };
+    let faulted = {
+        let pred = corrupted.predict(&wb.enc_test);
+        loghd::eval::accuracy(&pred, &wb.y_test)
+    };
+    assert!(
+        faulted > 0.70 * clean,
+        "bundle memory should degrade gracefully: {faulted} vs clean {clean}"
+    );
+}
+
+#[test]
+fn full_protocol_degrades_monotonically_and_gracefully() {
+    // Full protocol (bundles + profiles upset) at CI scale: degradation is
+    // monotone in p and never collapses to chance at moderate p. The
+    // LogHD-vs-SparseHD *crossover* is a D=10k-scale effect (run the fig3
+    // bench with LOGHD_FULL=1); EXPERIMENTS.md §Fig3 records both scales.
+    let mut wb = bench("ucihar", 2000);
+    let n = 6;
+    let ps = [0.0, 0.3, 0.6];
+    let curve: Vec<f64> = ps
+        .iter()
+        .map(|&p| {
+            let a1 = wb.evaluate(Method::LogHd { k: 2, n }, Precision::B8, p, 1).unwrap();
+            let a2 = wb.evaluate(Method::LogHd { k: 2, n }, Precision::B8, p, 2).unwrap();
+            (a1 + a2) / 2.0
+        })
+        .collect();
+    assert!(curve[0] > curve[2] - 0.02, "no degradation signal: {curve:?}");
+    let chance = 1.0 / wb.classes as f64;
+    assert!(curve[1] > 2.0 * chance, "collapsed to chance at p=0.3: {curve:?}");
+    // sustained_until sanity on the measured curve
+    let floor = curve[0] * 0.5;
+    let sustained = sustained_until(&ps, &curve, floor);
+    assert!(sustained >= 0.0 && sustained <= 0.6);
+}
+
+#[test]
+fn sparsehd_robustness_shrinks_with_effective_dimensionality() {
+    // Fig. 1(a)/Fig. 4 mechanism: more aggressive feature-axis pruning
+    // (smaller effective D) means steeper fault degradation for SparseHD.
+    let mut wb = bench("ucihar", 2000);
+    let p = 0.5;
+    let mild = {
+        let a1 = wb.evaluate(Method::SparseHd { sparsity: 0.2 }, Precision::B8, p, 1).unwrap();
+        let a2 = wb.evaluate(Method::SparseHd { sparsity: 0.2 }, Precision::B8, p, 2).unwrap();
+        (a1 + a2) / 2.0
+    };
+    let aggressive = {
+        let a1 = wb.evaluate(Method::SparseHd { sparsity: 0.9 }, Precision::B8, p, 1).unwrap();
+        let a2 = wb.evaluate(Method::SparseHd { sparsity: 0.9 }, Precision::B8, p, 2).unwrap();
+        (a1 + a2) / 2.0
+    };
+    assert!(
+        mild > aggressive + 0.02,
+        "keeping more dimensions should be more robust: S=0.2 -> {mild}, S=0.9 -> {aggressive}"
+    );
+}
+
+#[test]
+fn budget_accounting_matches_method_construction() {
+    let wb = bench("page", 512);
+    for budget in [0.4, 0.6, 0.8] {
+        for m in methods_at_budget(wb.classes, budget) {
+            match m {
+                Method::SparseHd { sparsity } => {
+                    assert!((1.0 - sparsity) <= budget + 1e-9)
+                }
+                Method::LogHd { n, .. } => {
+                    assert!(n as f64 / wb.classes as f64 <= budget + 1e-9)
+                }
+                Method::Hybrid { n, sparsity, .. } => {
+                    let frac = n as f64 * (1.0 - sparsity) / wb.classes as f64;
+                    assert!(frac <= budget + 0.05, "hybrid over budget: {frac} vs {budget}");
+                }
+                Method::Conventional => {}
+            }
+        }
+    }
+}
+
+#[test]
+fn quantization_degrades_gracefully() {
+    let mut wb = bench("page", 1000);
+    let n = loghd::loghd::codebook::min_bundles(wb.classes, 2) + 1;
+    let f32acc = wb.evaluate(Method::LogHd { k: 2, n }, Precision::F32, 0.0, 1).unwrap();
+    let q8 = wb.evaluate(Method::LogHd { k: 2, n }, Precision::B8, 0.0, 1).unwrap();
+    let q1 = wb.evaluate(Method::LogHd { k: 2, n }, Precision::B1, 0.0, 1).unwrap();
+    assert!((f32acc - q8).abs() < 0.06, "8-bit far from f32: {f32acc} vs {q8}");
+    assert!(q1 > 0.3, "1-bit collapsed: {q1}");
+}
+
+#[test]
+fn alphabet_k3_feasible_with_fewer_bundles() {
+    // paper: k=3, C=26 -> n=3 bundles (8.7x fewer stored prototypes)
+    assert_eq!(loghd::loghd::codebook::min_bundles(26, 3), 3);
+    let mut wb = bench("page", 1000);
+    let n3 = loghd::loghd::codebook::min_bundles(wb.classes, 3); // C=5 -> 2
+    let acc = wb.evaluate(Method::LogHd { k: 3, n: n3 + 1 }, Precision::F32, 0.0, 1).unwrap();
+    assert!(acc > 0.5, "k=3 loghd collapsed: {acc}");
+}

@@ -1,0 +1,229 @@
+//! Property tests via a mini seeded-case harness (proptest is not
+//! vendored offline). Each property runs many randomized cases from a
+//! deterministic SplitMix64 stream; failures print the case seed so they
+//! reproduce exactly.
+
+use loghd::loghd::codebook;
+use loghd::quant::{self, Precision};
+use loghd::tensor::{self, Matrix};
+use loghd::util::json;
+use loghd::util::rng::SplitMix64;
+
+/// Run `cases` seeded property checks.
+fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut SplitMix64)) {
+    for case in 0..cases {
+        let seed = 0xBEEF_0000 + case as u64;
+        let mut rng = SplitMix64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at case seed {seed:#x}: {e:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_codebook_unique_feasible_balanced() {
+    forall("codebook", 40, |rng| {
+        let c = 2 + (rng.below(40) as usize);
+        let k = 2 + (rng.below(3) as u32);
+        let n = codebook::min_bundles(c, k) + rng.below(3) as usize;
+        let cb = codebook::build(c, k, n, 1.0, rng.next_u64()).unwrap();
+        // unique rows
+        let mut rows = cb.rows.clone();
+        rows.sort();
+        rows.dedup();
+        assert_eq!(rows.len(), c);
+        // greedy bound: worst load <= total/n + max single contribution
+        let loads = cb.bundle_loads(1.0);
+        let total: f64 = loads.iter().sum();
+        let worst = loads.iter().cloned().fold(0.0, f64::max);
+        assert!(worst <= total / n as f64 + 1.0 + 1e-9, "worst {worst}, total {total}, n {n}");
+    });
+}
+
+#[test]
+fn prop_quant_roundtrip_bounded() {
+    forall("quant", 40, |rng| {
+        let rows = 1 + rng.below(6) as usize;
+        let cols = 1 + rng.below(200) as usize;
+        let m = Matrix::from_vec(rows, cols, rng.normals_f32(rows * cols));
+        for p in Precision::ALL_QUANT {
+            let q = quant::quantize(&m, p);
+            let back = quant::dequantize(&q);
+            if p == Precision::B1 {
+                // sign preserved for nonzero values
+                for (a, b) in m.data().iter().zip(back.data()) {
+                    if a.abs() > 1e-6 {
+                        assert_eq!(a.signum(), b.signum());
+                    }
+                }
+            } else {
+                let step = q.scale;
+                for (a, b) in m.data().iter().zip(back.data()) {
+                    assert!((a - b).abs() <= 0.5 * step + 1e-6);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_packed_set_get_identity() {
+    forall("packed", 60, |rng| {
+        let bits = 1 + rng.below(16) as u32;
+        let count = 1 + rng.below(300) as usize;
+        let mask = (1u64 << bits) - 1;
+        let mut p = quant::PackedTensor::new(bits, count);
+        let values: Vec<u64> = (0..count).map(|_| rng.next_u64() & mask).collect();
+        for (i, v) in values.iter().enumerate() {
+            p.set(i, *v);
+        }
+        for (i, v) in values.iter().enumerate() {
+            assert_eq!(p.get(i), *v, "bits={bits} idx={i}");
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_value(rng: &mut SplitMix64, depth: usize) -> json::Value {
+        match if depth >= 3 { rng.below(4) } else { rng.below(6) } {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(rng.below(2) == 1),
+            2 => json::Value::Number((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => json::Value::String(format!("s{}-\"quoted\" \n tab\t", rng.below(1000))),
+            4 => json::Value::Array(
+                (0..rng.below(4)).map(|_| random_value(rng, depth + 1)).collect(),
+            ),
+            _ => json::Value::Object(
+                (0..rng.below(4))
+                    .map(|i| (format!("key{i}"), random_value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("json", 60, |rng| {
+        let v = random_value(rng, 0);
+        let text = json::to_string(&v);
+        let back = json::parse(&text).unwrap();
+        assert_eq!(v, back, "compact roundtrip: {text}");
+        let pretty = json::to_string_pretty(&v);
+        assert_eq!(v, json::parse(&pretty).unwrap(), "pretty roundtrip");
+    });
+}
+
+#[test]
+fn prop_similarity_bounds_and_scale_invariance() {
+    forall("similarity", 40, |rng| {
+        let b = 1 + rng.below(8) as usize;
+        let d = 2 + rng.below(128) as usize;
+        let n = 1 + rng.below(6) as usize;
+        let enc = Matrix::from_vec(b, d, rng.normals_f32(b * d));
+        let mut m = Matrix::from_vec(n, d, rng.normals_f32(n * d));
+        tensor::normalize_rows(&mut m);
+        let a = loghd::hd::similarity::activations(&enc, &m);
+        assert!(a.data().iter().all(|v| v.abs() <= 1.0 + 1e-4));
+        // scaling the query must not change cosine activations
+        let mut enc2 = enc.clone();
+        for v in enc2.data_mut() {
+            *v *= 3.5;
+        }
+        let a2 = loghd::hd::similarity::activations(&enc2, &m);
+        for (x, y) in a.data().iter().zip(a2.data()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_flip_rate_concentrates() {
+    forall("fliprate", 15, |rng| {
+        let p = 0.02 + 0.6 * rng.uniform();
+        let total = 50_000;
+        let flips =
+            loghd::faults::flip_positions(total, p, rng).len() as f64 / total as f64;
+        let sigma = (p * (1.0 - p) / total as f64).sqrt();
+        assert!((flips - p).abs() < 8.0 * sigma + 1e-3, "p={p} rate={flips}");
+    });
+}
+
+#[test]
+fn prop_profile_decode_permutation_invariance() {
+    // Permuting class order of profiles permutes predictions consistently.
+    forall("decode-perm", 20, |rng| {
+        let b = 1 + rng.below(6) as usize;
+        let d = 16 + rng.below(64) as usize;
+        let n = 2 + rng.below(4) as usize;
+        let c = 3 + rng.below(5) as usize;
+        let enc = Matrix::from_vec(b, d, rng.normals_f32(b * d));
+        let mut bundles = Matrix::from_vec(n, d, rng.normals_f32(n * d));
+        tensor::normalize_rows(&mut bundles);
+        let profiles = Matrix::from_vec(c, n, rng.normals_f32(c * n));
+        let book = codebook::build(c, 2, codebook::min_bundles(c, 2).max(n), 1.0, 7).unwrap();
+        let model = loghd::loghd::model::LogHdModel {
+            classes: c,
+            d,
+            book: book.clone(),
+            bundles: bundles.clone(),
+            profiles: profiles.clone(),
+        };
+        let preds = model.predict(&enc);
+        // rotate classes by 1
+        let mut rotated = Matrix::zeros(c, n);
+        for i in 0..c {
+            rotated.row_mut((i + 1) % c).copy_from_slice(profiles.row(i));
+        }
+        let model2 = loghd::loghd::model::LogHdModel {
+            classes: c,
+            d,
+            book,
+            bundles,
+            profiles: rotated,
+        };
+        let preds2 = model2.predict(&enc);
+        for (a, b2) in preds.iter().zip(&preds2) {
+            assert_eq!((*a + 1) % c as i32, *b2);
+        }
+    });
+}
+
+#[test]
+fn prop_dataset_generator_statistics() {
+    // per-class sample means approach the class means as samples grow
+    forall("datagen", 4, |rng| {
+        let mut spec = *loghd::data::spec("page").unwrap();
+        spec.seed = rng.next_u64();
+        spec.n_train = 2500;
+        spec.n_test = 10;
+        let ds = loghd::data::generate(&spec);
+        // class means should differ pairwise (groups + offsets)
+        let c = spec.classes;
+        let f = spec.features;
+        let mut means = vec![vec![0.0f64; f]; c];
+        let mut counts = vec![0usize; c];
+        for i in 0..ds.x_train.rows() {
+            let cls = ds.y_train[i] as usize;
+            counts[cls] += 1;
+            for (m, v) in means[cls].iter_mut().zip(ds.x_train.row(i)) {
+                *m += *v as f64;
+            }
+        }
+        for (m, cnt) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= *cnt as f64;
+            }
+        }
+        for a in 0..c {
+            for b in (a + 1)..c {
+                let dist: f64 = means[a]
+                    .iter()
+                    .zip(&means[b])
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                assert!(dist > 0.05, "classes {a},{b} indistinct (d={dist})");
+            }
+        }
+    });
+}
