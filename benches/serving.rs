@@ -1,9 +1,13 @@
-//! Serving-path benchmarks: PJRT vs native engine throughput, and the
-//! dynamic batcher's amortization sweep (batch size / max-delay policy).
-//! Requires `make artifacts` for the PJRT half (skips gracefully if the
-//! bundle is missing).
+//! Serving-path benchmarks: the per-precision model-inference kernels
+//! (f32 vs int8 vs 1-bit packed), PJRT vs native engine throughput, and
+//! the dynamic batcher's amortization sweep (batch size / max-delay
+//! policy). Requires `make artifacts` for the PJRT half (skips gracefully
+//! if the bundle is missing).
 //!
-//! Output: results/serving.csv.
+//! Output: results/serving.csv plus machine-readable
+//! results/BENCH_serving.json (per-precision median seconds + speedups
+//! over f32) so the perf trajectory is trackable across PRs
+//! (EXPERIMENTS.md §Perf).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -12,24 +16,84 @@ use loghd::bench::{bench, CsvWriter};
 use loghd::coordinator::{BatcherConfig, Coordinator, NativeEngine};
 use loghd::data;
 use loghd::loghd::model::{TrainOptions, TrainedStack};
+use loghd::loghd::qmodel::QuantizedLogHdModel;
+use loghd::quant::Precision;
 use loghd::runtime::PjrtRuntime;
 use loghd::tensor::Matrix;
+use loghd::util::json;
 
 fn main() -> anyhow::Result<()> {
     let mut csv = CsvWriter::create("results/serving.csv", "path,metric,value")?;
     let bundle = PathBuf::from("artifacts/page_smoke");
 
-    // --- Native engine micro-bench (always available) ---
+    // --- Model-inference kernels per precision (the acceptance shape:
+    // batch=64, D=2000, n=7 bundles) ---
     let ds = data::generate_scaled(data::spec("page").unwrap(), 1500, 256);
-    let opts = TrainOptions { epochs: 3, conv_epochs: 1, extra_bundles: 1, ..Default::default() };
+    let opts = TrainOptions { epochs: 3, conv_epochs: 1, extra_bundles: 4, ..Default::default() };
     let stack = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 2000, 0xE5C0DE, &opts)?;
     let xb = ds.x_test.rows_slice(0, 64);
-    let mut native = NativeEngine::new(stack.encoder.clone(), stack.loghd.clone(), "page");
-    let native_stats = bench(3, 30, || {
-        let _ = loghd::coordinator::Engine::infer(&mut native, &xb).unwrap();
+    let enc = stack.encoder.encode(&xb);
+
+    let f32_stats = bench(5, 40, || {
+        let _ = stack.loghd.predict(&enc);
     });
-    println!("{}", native_stats.format_line("native infer batch=64 D=2000"));
-    csv.row(&["native".into(), "batch64_median_s".into(), format!("{:.6}", native_stats.median)])?;
+    println!("{}", f32_stats.format_line("model f32 predict batch=64 D=2000"));
+
+    let qm8 = QuantizedLogHdModel::from_model(&stack.loghd, Precision::B8);
+    let int8_stats = bench(5, 40, || {
+        let _ = qm8.predict(&enc);
+    });
+    println!("{}", int8_stats.format_line("model int8 packed predict batch=64 D=2000"));
+
+    let qm1 = QuantizedLogHdModel::from_model(&stack.loghd, Precision::B1);
+    let bit1_stats = bench(5, 40, || {
+        let _ = qm1.predict(&enc);
+    });
+    println!("{}", bit1_stats.format_line("model 1-bit packed predict batch=64 D=2000"));
+
+    let speedup_int8 = f32_stats.median / int8_stats.median;
+    let speedup_bit1 = f32_stats.median / bit1_stats.median;
+    println!(
+        "speedup over f32: int8 {speedup_int8:.2}x (target >= 1.5x), 1-bit {speedup_bit1:.2}x (target >= 3x)"
+    );
+    for (path, stats) in
+        [("model_f32", f32_stats), ("model_int8", int8_stats), ("model_bit1", bit1_stats)]
+    {
+        csv.row(&[path.into(), "batch64_median_s".into(), format!("{:.9}", stats.median)])?;
+    }
+
+    let report = json::obj(vec![
+        ("batch", json::num(64.0)),
+        ("d", json::num(2000.0)),
+        ("n_bundles", json::num(stack.loghd.n_bundles() as f64)),
+        ("f32_median_s", json::num(f32_stats.median)),
+        ("int8_median_s", json::num(int8_stats.median)),
+        ("bit1_median_s", json::num(bit1_stats.median)),
+        ("int8_speedup_vs_f32", json::num(speedup_int8)),
+        ("bit1_speedup_vs_f32", json::num(speedup_bit1)),
+    ]);
+    std::fs::write("results/BENCH_serving.json", json::to_string_pretty(&report))?;
+    println!("wrote results/BENCH_serving.json");
+
+    // --- End-to-end native engines (encode + model) ---
+    for precision in [Precision::F32, Precision::B8, Precision::B1] {
+        let mut engine = NativeEngine::with_precision(
+            stack.encoder.clone(),
+            stack.loghd.clone(),
+            "page",
+            precision,
+        );
+        let stats = bench(3, 30, || {
+            let _ = loghd::coordinator::Engine::infer(&mut engine, &xb).unwrap();
+        });
+        let label = format!("native infer {} batch=64 D=2000", precision.label());
+        println!("{}", stats.format_line(&label));
+        csv.row(&[
+            format!("native_{}", precision.label()),
+            "batch64_median_s".into(),
+            format!("{:.6}", stats.median),
+        ])?;
+    }
 
     // --- PJRT engine (needs artifacts) ---
     if bundle.join("manifest.json").exists() {
@@ -45,14 +109,7 @@ fn main() -> anyhow::Result<()> {
         });
         println!("{}", pjrt_stats.format_line("pjrt infer_loghd batch=64 (page_smoke)"));
         csv.row(&["pjrt".into(), "batch64_median_s".into(), format!("{:.6}", pjrt_stats.median)])?;
-
-        let single = bench(3, 30, || {
-            let _ = runtime.execute("infer_loghd", Some(&xb)).unwrap();
-        });
-        println!(
-            "  pjrt per-query at batch64: {:.1}µs",
-            single.median / 64.0 * 1e6
-        );
+        println!("  pjrt per-query at batch64: {:.1}µs", pjrt_stats.median / 64.0 * 1e6);
     } else {
         eprintln!("[serving] artifacts/page_smoke missing -> PJRT half skipped (run `make artifacts`)");
     }

@@ -95,7 +95,7 @@ USAGE:
   loghd train  --dataset <name> --d <dim> --out <dir> [--k K --extra_bundles E --epochs T]
   loghd eval   --model <dir> [--p <flip prob>] [--bits 1|2|4|8|32] [--seed S]
   loghd serve  (--artifacts <bundle dir> [--entry infer_loghd] | --model <dir> --native)
-               [--addr 127.0.0.1:7878] [--max_batch 64] [--max_delay_ms 2]
+               [--bits 1|2|4|8|32] [--addr 127.0.0.1:7878] [--max_batch 64] [--max_delay_ms 2]
   loghd table2 [--n <bundles>]
 ";
 
@@ -213,7 +213,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else if let Some(model_dir) = flag(args, "model") {
             let (encoder, model) = persist::load(&PathBuf::from(model_dir))?;
             let features = encoder.features();
-            (features, NativeEngine::factory(encoder, model, model_dir.to_string()))
+            let bits: u32 = flag(args, "bits").unwrap_or("32").parse().context("--bits")?;
+            let precision = Precision::from_bits(bits).context("--bits must be 1|2|4|8|32")?;
+            (
+                features,
+                NativeEngine::factory_with_precision(
+                    encoder,
+                    model,
+                    model_dir.to_string(),
+                    precision,
+                ),
+            )
         } else {
             bail!("serve needs --artifacts <bundle> or --model <dir>");
         };

@@ -49,15 +49,28 @@ pub struct Response {
 }
 
 /// Why a submit was refused.
-#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum SubmitError {
-    #[error("queue full ({0} pending): backpressure")]
     QueueFull(usize),
-    #[error("coordinator is shut down")]
     ShutDown,
-    #[error("feature width {got} != expected {want}")]
     BadWidth { got: usize, want: usize },
 }
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull(pending) => {
+                write!(f, "queue full ({pending} pending): backpressure")
+            }
+            SubmitError::ShutDown => write!(f, "coordinator is shut down"),
+            SubmitError::BadWidth { got, want } => {
+                write!(f, "feature width {got} != expected {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 struct Job {
     request: Request,

@@ -1,11 +1,13 @@
 //! Inference engines the coordinator can run.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
 use crate::encoder::Encoder;
 use crate::loghd::model::LogHdModel;
+use crate::loghd::qmodel::QuantizedLogHdModel;
+use crate::quant::{self, Precision};
 use crate::runtime::PjrtRuntime;
 use crate::tensor::Matrix;
 
@@ -23,7 +25,7 @@ pub struct PjrtEngine {
 
 impl PjrtEngine {
     /// Load an artifact bundle and serve `entry` (e.g. "infer_loghd").
-    pub fn load(dir: &PathBuf, entry: &str) -> Result<Self> {
+    pub fn load(dir: &Path, entry: &str) -> Result<Self> {
         let runtime = PjrtRuntime::load(dir)?;
         runtime
             .manifest
@@ -60,26 +62,93 @@ impl Engine for PjrtEngine {
     }
 }
 
-/// The native path: encoder + LogHD decode in pure Rust.
+/// The native path: encoder + LogHD decode in pure Rust, at a selectable
+/// serving precision.
+///
+/// - `F32` (default): the dense model as trained.
+/// - `B1` / `B8`: the bit-packed twin (`loghd::qmodel`) — XNOR/popcount
+///   resp. int8/i32 kernels over the packed stored state.
+/// - `B2` / `B4`: post-training-quantized weights served through the f32
+///   kernels (no packed kernel exists at those widths).
 pub struct NativeEngine {
     pub encoder: Encoder,
-    pub model: LogHdModel,
+    pub precision: Precision,
+    state: ModelState,
     label: String,
 }
 
+/// What the engine actually holds: the dense f32 tensors are dropped at
+/// the packed precisions — keeping both would make the memory-reduction
+/// mode cost *more* memory per worker than plain f32.
+enum ModelState {
+    Dense(LogHdModel),
+    Packed(QuantizedLogHdModel),
+}
+
 impl NativeEngine {
+    /// F32 engine (the historical constructor).
     pub fn new(encoder: Encoder, model: LogHdModel, label: impl Into<String>) -> Self {
-        Self { encoder, model, label: label.into() }
+        Self::with_precision(encoder, model, label, Precision::F32)
+    }
+
+    /// Engine serving at an explicit precision (see type docs).
+    pub fn with_precision(
+        encoder: Encoder,
+        model: LogHdModel,
+        label: impl Into<String>,
+        precision: Precision,
+    ) -> Self {
+        let state = match precision {
+            Precision::F32 => ModelState::Dense(model),
+            Precision::B1 | Precision::B8 => {
+                ModelState::Packed(QuantizedLogHdModel::from_model(&model, precision))
+            }
+            Precision::B2 | Precision::B4 => {
+                let bundles = quant::quantize_roundtrip(&model.bundles, precision);
+                let profiles = quant::quantize_roundtrip(&model.profiles, precision);
+                ModelState::Dense(LogHdModel { bundles, profiles, ..model })
+            }
+        };
+        Self { encoder, precision, state, label: label.into() }
+    }
+
+    /// The dense model, when this precision serves one (F32/B2/B4).
+    pub fn model(&self) -> Option<&LogHdModel> {
+        match &self.state {
+            ModelState::Dense(m) => Some(m),
+            ModelState::Packed(_) => None,
+        }
+    }
+
+    /// The packed twin, when this precision serves one (B1/B8).
+    pub fn quantized_model(&self) -> Option<&QuantizedLogHdModel> {
+        match &self.state {
+            ModelState::Dense(_) => None,
+            ModelState::Packed(q) => Some(q),
+        }
     }
 
     pub fn factory(encoder: Encoder, model: LogHdModel, label: String) -> EngineFactory {
-        Box::new(move || Ok(Box::new(NativeEngine::new(encoder, model, label)) as Box<dyn Engine>))
+        Self::factory_with_precision(encoder, model, label, Precision::F32)
+    }
+
+    /// Factory for [`super::Coordinator::start`] at an explicit precision.
+    pub fn factory_with_precision(
+        encoder: Encoder,
+        model: LogHdModel,
+        label: String,
+        precision: Precision,
+    ) -> EngineFactory {
+        Box::new(move || {
+            Ok(Box::new(NativeEngine::with_precision(encoder, model, label, precision))
+                as Box<dyn Engine>)
+        })
     }
 }
 
 impl Engine for NativeEngine {
     fn name(&self) -> String {
-        format!("native:{}", self.label)
+        format!("native:{}:{}", self.label, self.precision.label())
     }
 
     fn features(&self) -> usize {
@@ -88,7 +157,10 @@ impl Engine for NativeEngine {
 
     fn infer(&mut self, x: &Matrix) -> Result<Vec<i32>> {
         let enc = self.encoder.encode(x);
-        Ok(self.model.predict(&enc))
+        Ok(match &self.state {
+            ModelState::Dense(model) => model.predict(&enc),
+            ModelState::Packed(qm) => qm.predict(&enc),
+        })
     }
 }
 
@@ -109,5 +181,35 @@ mod tests {
         assert_eq!(labels.len(), 10);
         assert!(labels.iter().all(|l| (0..5).contains(l)));
         assert!(engine.name().starts_with("native:"));
+        assert!(engine.name().ends_with(":f32"));
+    }
+
+    #[test]
+    fn native_engine_serves_every_precision() {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 400, 50);
+        let opts = TrainOptions { epochs: 2, conv_epochs: 0, extra_bundles: 1, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 256, 1, &opts).unwrap();
+        for precision in [
+            Precision::F32,
+            Precision::B8,
+            Precision::B4,
+            Precision::B2,
+            Precision::B1,
+        ] {
+            let mut engine = NativeEngine::with_precision(
+                st.encoder.clone(),
+                st.loghd.clone(),
+                "page",
+                precision,
+            );
+            let labels = engine.infer(&ds.x_test.rows_slice(0, 16)).unwrap();
+            assert_eq!(labels.len(), 16, "{precision:?}");
+            assert!(labels.iter().all(|l| (0..5).contains(l)), "{precision:?}");
+            assert!(engine.name().ends_with(precision.label()), "{precision:?}");
+            // packed precisions must not keep the dense tensors alive
+            let packed = matches!(precision, Precision::B1 | Precision::B8);
+            assert_eq!(engine.model().is_none(), packed, "{precision:?}");
+            assert_eq!(engine.quantized_model().is_some(), packed, "{precision:?}");
+        }
     }
 }

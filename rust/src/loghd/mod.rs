@@ -5,14 +5,17 @@
 //! - [`profiles`]: per-class expected activation profiles (Eq. 5/6)
 //! - [`refine`]: perceptron-style bundle refinement (Eq. 8/9)
 //! - [`model`]: the assembled classifier (train / predict / memory math)
+//! - [`qmodel`]: the bit-packed serving twin (XNOR/popcount + int8 path)
 
 pub mod bundling;
 pub mod codebook;
 pub mod model;
 pub mod profiles;
+pub mod qmodel;
 pub mod refine;
 
 pub mod persist;
 
 pub use codebook::{min_bundles, Codebook};
 pub use model::{LogHdModel, TrainOptions, TrainedStack};
+pub use qmodel::QuantizedLogHdModel;

@@ -98,16 +98,15 @@ impl LogHdModel {
     }
 
     /// Activation-space distances (B, C): ||A(x) - P_c||^2 (paper Eq. 7).
+    ///
+    /// Fused form: `|A|² − 2·A·Pᵀ + |P|²` turns the old O(B·C·n) scalar
+    /// `sqdist` loop into one small GEMM over the profile matrix (with
+    /// tiny negative expansion residues clamped to zero) — see
+    /// EXPERIMENTS.md §Perf. The packed twin (`qmodel`) shares the same
+    /// primitive with `|P|²` precomputed at build.
     pub fn decode_dists(&self, enc: &Matrix) -> Matrix {
         let a = activations(enc, &self.bundles); // (B, n)
-        let mut out = Matrix::zeros(a.rows(), self.classes);
-        for i in 0..a.rows() {
-            let arow = a.row(i);
-            for c in 0..self.classes {
-                out.set(i, c, tensor::sqdist(arow, self.profiles.row(c)));
-            }
-        }
-        out
+        tensor::pairwise_sqdists(&a, &self.profiles)
     }
 
     /// Predicted labels for encoded queries.

@@ -1,0 +1,318 @@
+//! Quantized LogHD inference: similarity computed directly on the packed
+//! bit-planes, never materializing f32 bundle tensors.
+//!
+//! [`QuantizedLogHdModel`] is the precision-tagged serving twin of
+//! [`LogHdModel`]: the stored state is the bit-packed quantizer output
+//! ([`Quantized`] bundles + centered per-column profiles, exactly the
+//! representation the fault injector flips bits in), and inference runs
+//! on derived kernel views:
+//!
+//! - **1-bit**: queries are sign-binarized and bundle activations come
+//!   from XNOR/popcount over u64 words (`tensor::xnor_popcount_nt`). The
+//!   raw ±1 agreement rate is mapped back to cosine scale through the
+//!   small-angle linearization of the arcsine law, `ρ ≈ (π/2)·s`, so the
+//!   activations land where the f32-trained profiles expect them. The
+//!   calibration is one positive per-model scalar: per-query activation
+//!   *rankings* are bit-exact with the sign-dequantized f32 path (the
+//!   properties test pins this).
+//! - **8-bit**: queries are symmetrically quantized per batch and the
+//!   activation GEMM runs in i32 over i16 containers
+//!   (`tensor::i16_matmul_nt`), per-tensor scales folded once.
+//!
+//! Decoding is the fused form `|A|² − 2·A·Pᵀ + |P|²`
+//! (`tensor::pairwise_sqdists_pre`) with the profile norms precomputed at
+//! build; after fault injection [`refresh`](QuantizedLogHdModel::refresh)
+//! re-derives the kernel views from the (possibly corrupted) packed
+//! words — flip → infer, with no dequantize round-trip of the bundles.
+
+use crate::faults;
+use crate::loghd::model::LogHdModel;
+use crate::quant::{self, Precision, Quantized};
+use crate::tensor::{self, BitMatrix, I16Matrix, Matrix};
+use crate::util::rng::SplitMix64;
+
+/// First-order arcsine-law calibration from sign-agreement scale to
+/// cosine scale: `ρ ≈ sin(π·s/2) ≈ (π/2)·s` for the small activations
+/// HDC similarity produces.
+const SIGN_COS_CALIBRATION: f32 = std::f32::consts::FRAC_PI_2;
+
+/// The derived, row-aligned view the similarity kernel consumes.
+enum BundleKernel {
+    Bits(BitMatrix),
+    I16(I16Matrix),
+}
+
+/// Stored activation profiles in the robust representation the sweep
+/// engine corrupts (`eval::sweep::corrupt_profiles`): per-bundle-column
+/// deviations from the cross-class mean, plus that mean — every part
+/// quantized and packed, every part a fault target.
+struct StoredProfiles {
+    classes: usize,
+    n: usize,
+    mean: Quantized,      // (1, n)
+    cols: Vec<Quantized>, // n columns of shape (C, 1)
+}
+
+impl StoredProfiles {
+    fn from_matrix(p: &Matrix, precision: Precision) -> Self {
+        let (classes, n) = (p.rows(), p.cols());
+        let mean = tensor::col_means(p);
+        let mut dev = p.clone();
+        tensor::sub_row_inplace(&mut dev, &mean);
+        let cols = (0..n)
+            .map(|j| {
+                let col: Vec<f32> = (0..classes).map(|r| dev.at(r, j)).collect();
+                quant::quantize(&Matrix::from_vec(classes, 1, col), precision)
+            })
+            .collect();
+        let mean_q = quant::quantize(&Matrix::from_vec(1, n, mean), precision);
+        Self { classes, n, mean: mean_q, cols }
+    }
+
+    /// Reassemble the (C, n) profile matrix from the packed state.
+    fn dequantize(&self) -> Matrix {
+        let mean = quant::dequantize(&self.mean);
+        let mut out = Matrix::zeros(self.classes, self.n);
+        for (j, col_q) in self.cols.iter().enumerate() {
+            let col = quant::dequantize(col_q);
+            for r in 0..self.classes {
+                out.set(r, j, col.at(r, 0) + mean.at(0, j));
+            }
+        }
+        out
+    }
+
+    /// Per-value single-bit upsets across every stored part.
+    fn inject(&mut self, p: f64, rng: &mut SplitMix64) -> usize {
+        let mut flips = 0;
+        for col_q in &mut self.cols {
+            flips += faults::flip_values_packed(&mut col_q.packed, p, rng);
+        }
+        flips + faults::flip_values_packed(&mut self.mean.packed, p, rng)
+    }
+
+    fn total_bits(&self) -> usize {
+        self.mean.packed.total_bits()
+            + self.cols.iter().map(|c| c.packed.total_bits()).sum::<usize>()
+    }
+}
+
+/// A LogHD classifier whose stored state is bit-packed and whose hot path
+/// runs in the packed domain (see module docs).
+pub struct QuantizedLogHdModel {
+    pub precision: Precision,
+    pub classes: usize,
+    pub d: usize,
+    /// Packed bundle storage — the (n·D·bits)-bit fault surface.
+    pub bundles: Quantized,
+    profiles: StoredProfiles,
+    kernel: BundleKernel,
+    profiles_f32: Matrix,
+    profile_sqnorms: Vec<f32>,
+    activation_gain: f32,
+}
+
+impl QuantizedLogHdModel {
+    /// Post-training quantization of a trained model. Only the widths
+    /// with packed kernels are accepted (1 and 8 bits); 2/4-bit models
+    /// keep the dequantize-and-score path in `eval::sweep`.
+    pub fn from_model(model: &LogHdModel, precision: Precision) -> Self {
+        assert!(
+            matches!(precision, Precision::B1 | Precision::B8),
+            "packed inference supports B1/B8, got {precision:?}"
+        );
+        let bundles = quant::quantize(&model.bundles, precision);
+        let profiles = StoredProfiles::from_matrix(&model.profiles, precision);
+        let kernel = Self::kernel_view(&bundles);
+        let profiles_f32 = profiles.dequantize();
+        let profile_sqnorms = tensor::row_sqnorms(&profiles_f32);
+        Self {
+            precision,
+            classes: model.classes,
+            d: model.d,
+            bundles,
+            profiles,
+            kernel,
+            profiles_f32,
+            profile_sqnorms,
+            activation_gain: 1.0,
+        }
+    }
+
+    /// Constant multiplier applied to activations before decoding.
+    ///
+    /// Needed when the model was column-compacted from a wider space
+    /// (hybrid masking): the kernels normalize by the *kept*-dimension
+    /// query norm, while the stored profiles were trained against
+    /// full-width normalization — a systematic ratio of
+    /// `≈ sqrt(D_kept / D_full)` that this gain restores.
+    pub fn set_activation_gain(&mut self, gain: f32) {
+        assert!(gain > 0.0 && gain.is_finite(), "activation gain must be positive");
+        self.activation_gain = gain;
+    }
+
+    fn kernel_view(bundles: &Quantized) -> BundleKernel {
+        match bundles.precision {
+            Precision::B1 => BundleKernel::Bits(bundles.to_bit_matrix()),
+            Precision::B8 => BundleKernel::I16(bundles.to_i16_matrix()),
+            other => unreachable!("no packed kernel for {other:?}"),
+        }
+    }
+
+    /// Re-derive the kernel views from the packed words. Call after any
+    /// direct mutation of the packed state (fault injection).
+    pub fn refresh(&mut self) {
+        self.kernel = Self::kernel_view(&self.bundles);
+        self.profiles_f32 = self.profiles.dequantize();
+        self.profile_sqnorms = tensor::row_sqnorms(&self.profiles_f32);
+    }
+
+    /// Per-value single-random-bit upsets with probability `p` over the
+    /// whole stored state (bundles, then profiles — the order the f32
+    /// sweep path drew in), followed by a view refresh. Returns flips.
+    pub fn inject_value_faults(&mut self, p: f64, rng: &mut SplitMix64) -> usize {
+        let mut flips = faults::flip_values_packed(&mut self.bundles.packed, p, rng);
+        flips += self.profiles.inject(p, rng);
+        self.refresh();
+        flips
+    }
+
+    /// Bundle activations (B, n) in cosine scale, computed in the packed
+    /// domain (see module docs for the per-precision semantics).
+    pub fn activations(&self, enc: &Matrix) -> Matrix {
+        assert_eq!(enc.cols(), self.d, "encoded width mismatch");
+        match &self.kernel {
+            BundleKernel::Bits(bundles) => {
+                let q = BitMatrix::from_signs(enc);
+                let mut a = tensor::xnor_popcount_nt(&q, bundles);
+                let scale = self.activation_gain * SIGN_COS_CALIBRATION / self.d.max(1) as f32;
+                for v in a.data_mut() {
+                    *v *= scale;
+                }
+                a
+            }
+            BundleKernel::I16(bundles) => {
+                let q = I16Matrix::quantize(enc);
+                let mut a = tensor::i16_matmul_nt(&q, bundles);
+                for (i, qn) in q.row_norms().into_iter().enumerate() {
+                    let scale = self.activation_gain / qn.max(1e-12);
+                    for v in a.row_mut(i) {
+                        *v *= scale;
+                    }
+                }
+                a
+            }
+        }
+    }
+
+    /// Fused activation-space decode: (B, C) squared distances to the
+    /// stored profiles, `|A|² − 2·A·Pᵀ + |P|²` with precomputed `|P|²`.
+    pub fn decode_dists(&self, enc: &Matrix) -> Matrix {
+        let a = self.activations(enc);
+        tensor::pairwise_sqdists_pre(&a, &self.profiles_f32, &self.profile_sqnorms)
+    }
+
+    /// Predicted labels for encoded queries.
+    pub fn predict(&self, enc: &Matrix) -> Vec<i32> {
+        let d = self.decode_dists(enc);
+        (0..d.rows()).map(|i| tensor::argmin(d.row(i)) as i32).collect()
+    }
+
+    pub fn n_bundles(&self) -> usize {
+        self.bundles.rows
+    }
+
+    /// Total stored payload bits (the fault-injection surface).
+    pub fn memory_bits(&self) -> usize {
+        self.bundles.packed.total_bits() + self.profiles.total_bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::loghd::model::{TrainOptions, TrainedStack};
+
+    fn small_stack() -> (data::Dataset, TrainedStack) {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 500, 200);
+        let opts = TrainOptions { epochs: 3, conv_epochs: 1, extra_bundles: 2, ..Default::default() };
+        let stack = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 512, 0xE5C0DE, &opts).unwrap();
+        (ds, stack)
+    }
+
+    #[test]
+    fn packed_models_predict_reasonably() {
+        let (ds, stack) = small_stack();
+        let enc = stack.encoder.encode(&ds.x_test);
+        let f32_acc = {
+            let pred = stack.loghd.predict(&enc);
+            crate::eval::accuracy(&pred, &ds.y_test)
+        };
+        for precision in [Precision::B8, Precision::B1] {
+            let qm = QuantizedLogHdModel::from_model(&stack.loghd, precision);
+            let acc = crate::eval::accuracy(&qm.predict(&enc), &ds.y_test);
+            let floor = if precision == Precision::B8 { f32_acc - 0.08 } else { 0.3 };
+            assert!(acc > floor, "{precision:?}: packed acc {acc} (f32 {f32_acc})");
+        }
+    }
+
+    #[test]
+    fn b8_activations_close_to_f32_of_quantized_operands() {
+        let (ds, stack) = small_stack();
+        let enc = stack.encoder.encode(&ds.x_test.rows_slice(0, 12));
+        let qm = QuantizedLogHdModel::from_model(&stack.loghd, Precision::B8);
+        let got = qm.activations(&enc);
+        let enc_q = quant::quantize_roundtrip(&enc, Precision::B8);
+        let bundles_q = quant::dequantize(&qm.bundles);
+        let want = crate::hd::similarity::activations(&enc_q, &bundles_q);
+        for i in 0..got.rows() {
+            for j in 0..got.cols() {
+                assert!(
+                    (got.at(i, j) - want.at(i, j)).abs() < 1e-3,
+                    "({i},{j}): {} vs {}",
+                    got.at(i, j),
+                    want.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fault_injection_flips_packed_state_and_refreshes_views() {
+        let (_, stack) = small_stack();
+        let mut qm = QuantizedLogHdModel::from_model(&stack.loghd, Precision::B1);
+        let before = qm.bundles.packed.clone();
+        let mut rng = SplitMix64::new(5);
+        let flips = qm.inject_value_faults(0.5, &mut rng);
+        assert!(flips > 0);
+        assert_ne!(qm.bundles.packed, before, "bundle words unchanged");
+        // the kernel view must reflect the corrupted words, not the clean model
+        let fresh_view = qm.bundles.to_bit_matrix();
+        match &qm.kernel {
+            BundleKernel::Bits(view) => assert_eq!(view, &fresh_view),
+            BundleKernel::I16(_) => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn zero_flip_probability_is_identity() {
+        let (ds, stack) = small_stack();
+        let enc = stack.encoder.encode(&ds.x_test.rows_slice(0, 32));
+        let mut qm = QuantizedLogHdModel::from_model(&stack.loghd, Precision::B8);
+        let clean = qm.predict(&enc);
+        let mut rng = SplitMix64::new(9);
+        assert_eq!(qm.inject_value_faults(0.0, &mut rng), 0);
+        assert_eq!(qm.predict(&enc), clean);
+    }
+
+    #[test]
+    fn memory_accounting_counts_every_stored_bit() {
+        let (_, stack) = small_stack();
+        let qm = QuantizedLogHdModel::from_model(&stack.loghd, Precision::B8);
+        let n = stack.loghd.n_bundles();
+        let (c, d) = (stack.loghd.classes, stack.loghd.d);
+        assert_eq!(qm.memory_bits(), 8 * (n * d + c * n + n));
+        assert_eq!(qm.n_bundles(), n);
+    }
+}

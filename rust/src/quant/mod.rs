@@ -4,13 +4,16 @@
 //! stored model tensors are quantized symmetrically per-tensor and packed
 //! into bit-plane words ([`packed::PackedTensor`]). Bit flips are injected
 //! into the *packed representation* — exactly the stored-state fault model
-//! of the paper — and evaluation dequantizes on the fly.
+//! of the paper. At 1 and 8 bits inference runs directly in the packed
+//! domain (`loghd::qmodel` over the [`to_bit_matrix`](Quantized::to_bit_matrix)
+//! / [`to_i16_matrix`](Quantized::to_i16_matrix) kernel views); the other
+//! widths dequantize on the fly as before.
 
 pub mod packed;
 
 pub use packed::PackedTensor;
 
-use crate::tensor::Matrix;
+use crate::tensor::{BitMatrix, I16Matrix, Matrix};
 
 /// Quantization precision in bits (1, 2, 4, or 8). `F32` is the
 /// unquantized control.
@@ -49,6 +52,19 @@ impl Precision {
         [Precision::B1, Precision::B2, Precision::B4, Precision::B8];
 }
 
+impl Precision {
+    /// Short lowercase tag for logs / CSV / JSON keys.
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::B1 => "b1",
+            Precision::B2 => "b2",
+            Precision::B4 => "b4",
+            Precision::B8 => "b8",
+            Precision::F32 => "f32",
+        }
+    }
+}
+
 /// Symmetric uniform quantizer state for one tensor.
 #[derive(Debug, Clone)]
 pub struct Quantized {
@@ -57,6 +73,28 @@ pub struct Quantized {
     pub cols: usize,
     pub scale: f32,
     pub packed: PackedTensor,
+}
+
+impl Quantized {
+    /// Lift 1-bit packed storage into the row-aligned [`BitMatrix`]
+    /// kernel layout (a bit copy, not a dequantization — the packed
+    /// stream stays the canonical stored state / fault surface).
+    pub fn to_bit_matrix(&self) -> BitMatrix {
+        assert_eq!(self.precision, Precision::B1, "to_bit_matrix needs 1-bit storage");
+        let cols = self.cols;
+        BitMatrix::from_fn(self.rows, cols, |r, c| self.packed.get(r * cols + c) == 1)
+    }
+
+    /// Lift 8-bit offset-binary packed storage into the [`I16Matrix`]
+    /// kernel container. The all-ones fault code decodes to +128, which
+    /// is why the container is i16 (it must not saturate).
+    pub fn to_i16_matrix(&self) -> I16Matrix {
+        assert_eq!(self.precision, Precision::B8, "to_i16_matrix needs 8-bit storage");
+        let qmax = 127i64;
+        let count = self.rows * self.cols;
+        let data = (0..count).map(|i| (self.packed.get(i) as i64 - qmax) as i16).collect();
+        I16Matrix::new(self.rows, self.cols, self.scale, data)
+    }
 }
 
 /// Quantize a matrix. 1-bit is the sign representation at the tensor's
@@ -179,6 +217,56 @@ mod tests {
             assert!(err < last, "{p:?} err {err} not < {last}");
             last = err;
         }
+    }
+
+    #[test]
+    fn bit_matrix_view_matches_signs() {
+        let mut rng = SplitMix64::new(13);
+        let m = Matrix::from_vec(3, 70, rng.normals_f32(210));
+        let q = quantize(&m, Precision::B1);
+        let bits = q.to_bit_matrix();
+        for r in 0..3 {
+            for c in 0..70 {
+                assert_eq!(bits.get(r, c), m.at(r, c) >= 0.0, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn i16_view_matches_dequantized_levels() {
+        let mut rng = SplitMix64::new(17);
+        let m = Matrix::from_vec(2, 40, rng.normals_f32(80));
+        let q = quantize(&m, Precision::B8);
+        let view = q.to_i16_matrix();
+        let back = dequantize(&q);
+        for r in 0..2 {
+            for c in 0..40 {
+                let want = back.at(r, c);
+                let got = view.row(r)[c] as f32 * view.scale;
+                assert!((got - want).abs() < 1e-6, "({r},{c}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn i16_query_quantizer_pins_stored_b8_policy() {
+        // The serving hot path quantizes queries via I16Matrix::quantize;
+        // stored tensors go through quantize(.., B8). The two implement
+        // one level policy (scale = max|x|/127, round, clamp) and must
+        // stay bit-identical, or the int8 engine drifts from its stored
+        // operands.
+        let mut rng = SplitMix64::new(23);
+        let m = Matrix::from_vec(3, 77, rng.normals_f32(231));
+        assert_eq!(I16Matrix::quantize(&m), quantize(&m, Precision::B8).to_i16_matrix());
+    }
+
+    #[test]
+    fn i16_view_carries_fault_code_without_saturating() {
+        let m = Matrix::from_vec(1, 2, vec![1.0, -1.0]);
+        let mut q = quantize(&m, Precision::B8);
+        // Force value 0 to the all-ones code (only reachable via flips).
+        q.packed.set(0, 0xFF);
+        assert_eq!(q.to_i16_matrix().row(0)[0], 128);
     }
 
     #[test]

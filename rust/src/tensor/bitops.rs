@@ -1,0 +1,332 @@
+//! Bit-plane and low-precision similarity kernels (the quantized serving
+//! hot path; EXPERIMENTS.md §Perf).
+//!
+//! Two operand containers + two GEMM-shaped kernels:
+//!
+//! - [`BitMatrix`] — one sign bit per value, rows padded to whole u64
+//!   words. [`xnor_popcount_nt`] computes the ±1 dot product of every
+//!   query row against every model row via the XNOR/popcount identity
+//!   `<a, b> = D − 2·popcount(a ⊕ b)` (XOR of the zero padding is zero,
+//!   so padding never contributes), streaming whole words through
+//!   `count_ones` with a 4-way unrolled accumulator.
+//! - [`I16Matrix`] — int8-valued fields held in i16 (the +2^(b−1) code is
+//!   reachable through stored-state bit flips and must not saturate;
+//!   widening i16 multiplies are also the form SIMD likes).
+//!   [`i16_matmul_nt`] accumulates in i32 and folds the two per-tensor
+//!   scales into the f32 output, register-blocked over 4 model rows like
+//!   `matmul_nt`.
+//!
+//! Both kernels parallelize over query rows via `util::threadpool`.
+
+use super::Matrix;
+use crate::util::threadpool;
+
+/// Sign-bit matrix: bit = 1 encodes "value >= 0" (the same convention as
+/// `quant::quantize` at 1 bit). Rows are padded to u64 boundaries.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitMatrix {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+}
+
+impl BitMatrix {
+    /// All-zero-bit matrix (every field "negative").
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let words_per_row = cols.div_ceil(64);
+        Self { rows, cols, words_per_row, words: vec![0; rows * words_per_row] }
+    }
+
+    /// Binarize a dense matrix by sign.
+    pub fn from_signs(m: &Matrix) -> Self {
+        Self::from_fn(m.rows(), m.cols(), |r, c| m.at(r, c) >= 0.0)
+    }
+
+    /// Build from a bit-valued closure (used to lift packed storage into
+    /// the row-aligned kernel layout).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> bool) -> Self {
+        let mut out = Self::zeros(rows, cols);
+        for r in 0..rows {
+            let base = r * out.words_per_row;
+            for c in 0..cols {
+                if f(r, c) {
+                    out.words[base + c / 64] |= 1u64 << (c % 64);
+                }
+            }
+        }
+        out
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The padded u64 words of one row.
+    #[inline]
+    pub fn row_words(&self, r: usize) -> &[u64] {
+        debug_assert!(r < self.rows);
+        &self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// Read one bit (tests / debugging).
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols);
+        (self.words[r * self.words_per_row + c / 64] >> (c % 64)) & 1 == 1
+    }
+}
+
+/// Hamming distance between two equal-length word slices, 4-way unrolled
+/// so the popcounts retire on independent accumulators.
+#[inline]
+pub fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut h0 = 0u32;
+    let mut h1 = 0u32;
+    let mut h2 = 0u32;
+    let mut h3 = 0u32;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let k = i * 4;
+        h0 += (a[k] ^ b[k]).count_ones();
+        h1 += (a[k + 1] ^ b[k + 1]).count_ones();
+        h2 += (a[k + 2] ^ b[k + 2]).count_ones();
+        h3 += (a[k + 3] ^ b[k + 3]).count_ones();
+    }
+    let mut rest = 0u32;
+    for k in chunks * 4..a.len() {
+        rest += (a[k] ^ b[k]).count_ones();
+    }
+    h0 + h1 + h2 + h3 + rest
+}
+
+/// C[i][j] = <±1 row a_i, ±1 row b_j> = D − 2·hamming(a_i, b_j), as f32.
+/// The similarity shape (`A · Bᵀ`), computed entirely on packed words.
+pub fn xnor_popcount_nt(a: &BitMatrix, b: &BitMatrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "xnor_popcount_nt width mismatch");
+    let (m, n, d) = (a.rows(), b.rows(), a.cols() as i64);
+    let mut out = Matrix::zeros(m, n);
+    let threads = threadpool::available_threads();
+    threadpool::parallel_rows(out.data_mut(), n, threads, |i, crow| {
+        let qwords = a.row_words(i);
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let ham = hamming_words(qwords, b.row_words(j)) as i64;
+            *cv = (d - 2 * ham) as f32;
+        }
+    });
+    out
+}
+
+/// Int8-valued matrix in i16 storage with one per-tensor scale:
+/// `value = data[i] * scale`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct I16Matrix {
+    rows: usize,
+    cols: usize,
+    pub scale: f32,
+    data: Vec<i16>,
+}
+
+impl I16Matrix {
+    pub fn new(rows: usize, cols: usize, scale: f32, data: Vec<i16>) -> Self {
+        assert_eq!(data.len(), rows * cols, "i16 shape mismatch");
+        Self { rows, cols, scale, data }
+    }
+
+    /// Symmetric per-tensor int8 quantization of a dense matrix — the
+    /// same levels as `quant::quantize` at 8 bits (scale = max|x|/127,
+    /// round-to-nearest, clamp to ±127).
+    pub fn quantize(m: &Matrix) -> Self {
+        let qmax = 127.0f32;
+        let max_abs = m.data().iter().fold(0.0f32, |acc, v| acc.max(v.abs()));
+        let scale = (max_abs / qmax).max(1e-12);
+        let data = m
+            .data()
+            .iter()
+            .map(|v| (v / scale).round().clamp(-qmax, qmax) as i16)
+            .collect();
+        Self { rows: m.rows(), cols: m.cols(), scale, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i16] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Per-row L2 norms in real units (scale folded in), exact integer
+    /// sum-of-squares before the square root.
+    pub fn row_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| {
+                let ss: i64 = self.row(r).iter().map(|v| *v as i64 * *v as i64).sum();
+                self.scale * (ss as f64).sqrt() as f32
+            })
+            .collect()
+    }
+}
+
+/// Integer dot of two i16 rows in i32, 4-way unrolled.
+#[inline]
+fn dot_i16(a: &[i16], b: &[i16]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0i32;
+    let mut acc1 = 0i32;
+    let mut acc2 = 0i32;
+    let mut acc3 = 0i32;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let k = i * 4;
+        acc0 += a[k] as i32 * b[k] as i32;
+        acc1 += a[k + 1] as i32 * b[k + 1] as i32;
+        acc2 += a[k + 2] as i32 * b[k + 2] as i32;
+        acc3 += a[k + 3] as i32 * b[k + 3] as i32;
+    }
+    let mut rest = 0i32;
+    for k in chunks * 4..a.len() {
+        rest += a[k] as i32 * b[k] as i32;
+    }
+    acc0 + acc1 + acc2 + acc3 + rest
+}
+
+/// C = A · Bᵀ over int8-valued operands: i32 accumulation, the two
+/// per-tensor scales folded into the f32 result. Register-blocked over 4
+/// B rows (each query element loads once for 4 accumulator chains).
+pub fn i16_matmul_nt(a: &I16Matrix, b: &I16Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "i16_matmul_nt width mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let fold = a.scale * b.scale;
+    let mut out = Matrix::zeros(m, n);
+    let threads = threadpool::available_threads();
+    threadpool::parallel_rows(out.data_mut(), n, threads, |i, crow| {
+        let arow = a.row(i);
+        let mut j = 0;
+        while j + 4 <= n {
+            let (b0, b1, b2, b3) = (b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
+            let mut acc0 = 0i32;
+            let mut acc1 = 0i32;
+            let mut acc2 = 0i32;
+            let mut acc3 = 0i32;
+            for kk in 0..k {
+                let av = arow[kk] as i32;
+                acc0 += av * b0[kk] as i32;
+                acc1 += av * b1[kk] as i32;
+                acc2 += av * b2[kk] as i32;
+                acc3 += av * b3[kk] as i32;
+            }
+            crow[j] = acc0 as f32 * fold;
+            crow[j + 1] = acc1 as f32 * fold;
+            crow[j + 2] = acc2 as f32 * fold;
+            crow[j + 3] = acc3 as f32 * fold;
+            j += 4;
+        }
+        for (jj, cv) in crow.iter_mut().enumerate().skip(j) {
+            *cv = dot_i16(arow, b.row(jj)) as f32 * fold;
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn bitmatrix_from_signs_roundtrip() {
+        let m = Matrix::from_vec(2, 5, vec![1.0, -2.0, 0.0, -0.5, 3.0, -1.0, 1.0, 1.0, -1.0, -1.0]);
+        let b = BitMatrix::from_signs(&m);
+        for r in 0..2 {
+            for c in 0..5 {
+                assert_eq!(b.get(r, c), m.at(r, c) >= 0.0, "({r},{c})");
+            }
+        }
+        assert_eq!(b.row_words(0).len(), 1);
+    }
+
+    #[test]
+    fn xnor_matches_sign_dot_across_widths() {
+        let mut rng = SplitMix64::new(31);
+        for cols in [1usize, 63, 64, 65, 200, 256] {
+            let a = Matrix::from_vec(3, cols, rng.normals_f32(3 * cols));
+            let b = Matrix::from_vec(5, cols, rng.normals_f32(5 * cols));
+            let got = xnor_popcount_nt(&BitMatrix::from_signs(&a), &BitMatrix::from_signs(&b));
+            for i in 0..3 {
+                for j in 0..5 {
+                    let want: f32 = (0..cols)
+                        .map(|c| {
+                            let sa = if a.at(i, c) >= 0.0 { 1.0f32 } else { -1.0 };
+                            let sb = if b.at(j, c) >= 0.0 { 1.0f32 } else { -1.0 };
+                            sa * sb
+                        })
+                        .sum();
+                    assert_eq!(got.at(i, j), want, "cols={cols} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hamming_words_counts_xor_bits() {
+        assert_eq!(hamming_words(&[0b1011, 0, u64::MAX], &[0b0001, 0, 0]), 2 + 64);
+        assert_eq!(hamming_words(&[], &[]), 0);
+    }
+
+    #[test]
+    fn i16_quantize_matches_reference_levels() {
+        let m = Matrix::from_vec(1, 4, vec![1.0, -0.5, 0.25, -1.0]);
+        let q = I16Matrix::quantize(&m);
+        assert!((q.scale - 1.0 / 127.0).abs() < 1e-9);
+        assert_eq!(q.row(0), &[127, -64, 32, -127]);
+    }
+
+    #[test]
+    fn i16_matmul_matches_f32_reference() {
+        let mut rng = SplitMix64::new(77);
+        for (m, k, n) in [(1usize, 7usize, 1usize), (3, 33, 5), (4, 128, 3), (2, 64, 4)] {
+            let a = Matrix::from_vec(m, k, rng.normals_f32(m * k));
+            let b = Matrix::from_vec(n, k, rng.normals_f32(n * k));
+            let qa = I16Matrix::quantize(&a);
+            let qb = I16Matrix::quantize(&b);
+            let got = i16_matmul_nt(&qa, &qb);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f32 = (0..k)
+                        .map(|kk| {
+                            (qa.row(i)[kk] as f32 * qa.scale) * (qb.row(j)[kk] as f32 * qb.scale)
+                        })
+                        .sum();
+                    let tol = 1e-4 * (1.0 + want.abs());
+                    assert!(
+                        (got.at(i, j) - want).abs() <= tol,
+                        "({i},{j}): {} vs {want}",
+                        got.at(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i16_row_norms_exact() {
+        let q = I16Matrix::new(1, 3, 0.5, vec![3, 4, 0]);
+        let norms = q.row_norms();
+        assert!((norms[0] - 2.5).abs() < 1e-6);
+    }
+}

@@ -86,25 +86,33 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
 
 /// C = Aᵀ (k×m)ᵀ·B ... i.e. A is (k×m), B is (k×n), C = AᵀB (m×n).
 /// Used by bundling: Gᵀ(C×n)ᵀ · H(C×D).
+///
+/// Parallelized over output-row chunks: output row i is the B-row
+/// combination Σ_k A[k,i]·B[k,:], so rows are independent and each worker
+/// streams B once per owned row with the same contiguous n-wide axpy
+/// inner loop the rank-1 form had. The strided A[k,i] reads touch one
+/// column of A (k is the class count in the bundling shape — tiny).
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.rows(), b.rows(), "matmul_tn shared-dim mismatch");
     let (k, m, n) = (a.rows(), a.cols(), b.cols());
     let mut out = Matrix::zeros(m, n);
-    // Accumulate rank-1 updates; m and n are small in our uses (n bundles).
-    for kk in 0..k {
-        let arow = a.row(kk);
-        let brow = b.row(kk);
-        for i in 0..m {
-            let aik = arow[i];
+    if n == 0 || m == 0 {
+        return out;
+    }
+    let threads = threadpool::available_threads();
+    let b_data = b.data();
+    threadpool::parallel_rows(out.data_mut(), n, threads, |i, crow| {
+        for kk in 0..k {
+            let aik = a.at(kk, i);
             if aik == 0.0 {
                 continue;
             }
-            let crow = &mut out.data_mut()[i * n..(i + 1) * n];
+            let brow = &b_data[kk * n..(kk + 1) * n];
             for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
                 *cv += aik * *bv;
             }
         }
-    }
+    });
     out
 }
 

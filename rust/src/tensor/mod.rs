@@ -5,9 +5,11 @@
 //! for clarity first and then hand-optimized where the profile said it
 //! matters (see `matmul.rs` and EXPERIMENTS.md §Perf).
 
+mod bitops;
 mod matmul;
 mod ops;
 
+pub use bitops::{hamming_words, i16_matmul_nt, xnor_popcount_nt, BitMatrix, I16Matrix};
 pub use matmul::{dot_unrolled, matmul, matmul_nt, matmul_tn};
 pub use ops::*;
 

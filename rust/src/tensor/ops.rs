@@ -87,6 +87,34 @@ pub fn row_norms(m: &Matrix) -> Vec<f32> {
     (0..m.rows()).map(|r| norm(m.row(r))).collect()
 }
 
+/// Per-row squared L2 norms.
+pub fn row_sqnorms(m: &Matrix) -> Vec<f32> {
+    (0..m.rows()).map(|r| m.row(r).iter().map(|v| v * v).sum()).collect()
+}
+
+/// All-pairs squared distances via the expansion
+/// `|a_i − p_c|² = |a_i|² − 2·a_i·p_c + |p_c|²`: one GEMM instead of a
+/// B·C·n scalar loop, with the tiny negative residues the expansion can
+/// produce clamped to zero. `p_sqnorms` must be `row_sqnorms(p)` —
+/// callers that store `p` precompute it once at model build.
+pub fn pairwise_sqdists_pre(a: &Matrix, p: &Matrix, p_sqnorms: &[f32]) -> Matrix {
+    assert_eq!(a.cols(), p.cols(), "pairwise_sqdists width mismatch");
+    assert_eq!(p.rows(), p_sqnorms.len(), "p_sqnorms length mismatch");
+    let mut out = super::matmul_nt(a, p);
+    let a_sq = row_sqnorms(a);
+    for (i, &asq) in a_sq.iter().enumerate() {
+        for (v, &psq) in out.row_mut(i).iter_mut().zip(p_sqnorms) {
+            *v = (asq - 2.0 * *v + psq).max(0.0);
+        }
+    }
+    out
+}
+
+/// [`pairwise_sqdists_pre`] with the `|p_c|²` terms computed on the fly.
+pub fn pairwise_sqdists(a: &Matrix, p: &Matrix) -> Matrix {
+    pairwise_sqdists_pre(a, p, &row_sqnorms(p))
+}
+
 /// Squared Euclidean distance.
 #[inline]
 pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
@@ -140,5 +168,27 @@ mod tests {
     #[test]
     fn sqdist_works() {
         assert_eq!(sqdist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn pairwise_sqdists_matches_scalar_loop() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(21);
+        let a = Matrix::from_vec(4, 6, rng.normals_f32(24));
+        let p = Matrix::from_vec(3, 6, rng.normals_f32(18));
+        let d = pairwise_sqdists(&a, &p);
+        for i in 0..4 {
+            for c in 0..3 {
+                let want = sqdist(a.row(i), p.row(c));
+                assert!((d.at(i, c) - want).abs() < 1e-4, "({i},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn pairwise_sqdists_clamps_self_distance_to_zero() {
+        let a = Matrix::from_vec(1, 3, vec![0.3, -0.7, 0.11]);
+        let d = pairwise_sqdists(&a, &a);
+        assert_eq!(d.at(0, 0), 0.0);
     }
 }

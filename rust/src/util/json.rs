@@ -81,12 +81,19 @@ impl Value {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("json parse error at byte {offset}: {message}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
     pub offset: usize,
     pub message: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

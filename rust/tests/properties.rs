@@ -3,7 +3,10 @@
 //! deterministic SplitMix64 stream; failures print the case seed so they
 //! reproduce exactly.
 
+use loghd::hd::similarity::activations;
 use loghd::loghd::codebook;
+use loghd::loghd::model::LogHdModel;
+use loghd::loghd::qmodel::QuantizedLogHdModel;
 use loghd::quant::{self, Precision};
 use loghd::tensor::{self, Matrix};
 use loghd::util::json;
@@ -185,6 +188,154 @@ fn prop_profile_decode_permutation_invariance() {
         let preds2 = model2.predict(&enc);
         for (a, b2) in preds.iter().zip(&preds2) {
             assert_eq!((*a + 1) % c as i32, *b2);
+        }
+    });
+}
+
+/// Random LogHD model with unit-norm bundles and bounded profiles (the
+/// shapes the packed kernels serve).
+fn random_model(rng: &mut SplitMix64, c: usize, d: usize, n: usize) -> LogHdModel {
+    let mut bundles = Matrix::from_vec(n, d, rng.normals_f32(n * d));
+    tensor::normalize_rows(&mut bundles);
+    let profiles = Matrix::from_vec(
+        c,
+        n,
+        rng.normals_f32(c * n).into_iter().map(|v| 0.3 * v).collect(),
+    );
+    let book = codebook::build(c, 2, codebook::min_bundles(c, 2).max(n), 1.0, rng.next_u64())
+        .unwrap();
+    LogHdModel { classes: c, d, book, bundles, profiles }
+}
+
+#[test]
+fn prop_b1_xnor_activations_match_sign_dequant_argmax() {
+    // The XNOR/popcount path and the f32 path over sign-dequantized
+    // operands see the same ±1 geometry, so per-query activation argmax
+    // must agree exactly whenever the packed maximum is unique (ties are
+    // integer-exact in the packed domain but summation-order-dependent in
+    // f32, so tied rows are checked for tied-ness instead).
+    forall("b1-xnor-argmax", 30, |rng| {
+        let b = 1 + rng.below(6) as usize;
+        let d = 32 + rng.below(480) as usize;
+        let n = 2 + rng.below(5) as usize;
+        let c = 3 + rng.below(4) as usize;
+        let model = random_model(rng, c, d, n);
+        let enc = Matrix::from_vec(b, d, rng.normals_f32(b * d));
+        let qm = QuantizedLogHdModel::from_model(&model, Precision::B1);
+        let got = qm.activations(&enc);
+        let enc_signs = quant::quantize_roundtrip(&enc, Precision::B1);
+        let bundles_signs = quant::dequantize(&qm.bundles);
+        let want = activations(&enc_signs, &bundles_signs);
+        // one packed activation step = 2·calibration/D
+        let step = std::f32::consts::FRAC_PI_2 / d as f32 * 2.0;
+        for i in 0..b {
+            let row = got.row(i);
+            let best = tensor::argmax(row);
+            let second = row
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| *j != best)
+                .map(|(_, v)| *v)
+                .fold(f32::NEG_INFINITY, f32::max);
+            let wrow = want.row(i);
+            if row[best] - second > 0.5 * step {
+                assert_eq!(
+                    best,
+                    tensor::argmax(wrow),
+                    "row {i}: packed argmax {best} vs f32 {}",
+                    tensor::argmax(wrow)
+                );
+            } else {
+                // packed tie: the f32 winner must be one of the tied ints
+                let diff = (wrow[tensor::argmax(wrow)] - wrow[best]).abs();
+                assert!(diff < 1e-3, "row {i}: tie mishandled (diff {diff})");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_b8_packed_activations_within_quant_tolerance() {
+    // The i32/int8 kernel must reproduce the f32 activations of the
+    // quantized operands (same levels, exact integer accumulation).
+    forall("b8-activations", 30, |rng| {
+        let b = 1 + rng.below(6) as usize;
+        let d = 16 + rng.below(300) as usize;
+        let n = 2 + rng.below(5) as usize;
+        let c = 3 + rng.below(4) as usize;
+        let model = random_model(rng, c, d, n);
+        let enc = Matrix::from_vec(b, d, rng.normals_f32(b * d));
+        let qm = QuantizedLogHdModel::from_model(&model, Precision::B8);
+        let got = qm.activations(&enc);
+        let enc_q = quant::quantize_roundtrip(&enc, Precision::B8);
+        let bundles_q = quant::dequantize(&qm.bundles);
+        let want = activations(&enc_q, &bundles_q);
+        for (g, w) in got.data().iter().zip(want.data()) {
+            assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+        // and both stay within quantization distance of the f32 model
+        let full = activations(&enc, &model.bundles);
+        for (g, w) in got.data().iter().zip(full.data()) {
+            assert!((g - w).abs() < 0.05, "int8 drifted from f32: {g} vs {w}");
+        }
+    });
+}
+
+#[test]
+fn prop_fused_decode_matches_naive_sqdist() {
+    // decode_dists' |A|² − 2AᵀP + |P|² fusion vs the scalar loop,
+    // including the clamp-to-zero of tiny negative expansion residues.
+    forall("fused-decode", 30, |rng| {
+        let b = 1 + rng.below(8) as usize;
+        let d = 16 + rng.below(128) as usize;
+        let n = 2 + rng.below(6) as usize;
+        let c = 3 + rng.below(6) as usize;
+        let model = random_model(rng, c, d, n);
+        let enc = Matrix::from_vec(b, d, rng.normals_f32(b * d));
+        let dists = model.decode_dists(&enc);
+        let a = activations(&enc, &model.bundles);
+        for i in 0..b {
+            for cls in 0..c {
+                let naive = tensor::sqdist(a.row(i), model.profiles.row(cls));
+                assert!(
+                    (dists.at(i, cls) - naive).abs() < 1e-4 * (1.0 + naive),
+                    "({i},{cls}): fused {} vs naive {naive}",
+                    dists.at(i, cls)
+                );
+                assert!(dists.at(i, cls) >= 0.0, "negative distance at ({i},{cls})");
+            }
+        }
+        // degenerate case: a profile equal to a query's activation row
+        // must clamp to exactly zero, never a negative residue
+        let mut profiles = model.profiles.clone();
+        profiles.row_mut(0).copy_from_slice(a.row(0));
+        let model2 = LogHdModel { profiles, ..model };
+        let d2 = model2.decode_dists(&enc);
+        assert!(d2.at(0, 0) >= 0.0);
+        assert!(d2.at(0, 0) < 1e-5, "self-distance {}", d2.at(0, 0));
+    });
+}
+
+#[test]
+fn prop_packed_fault_injection_stays_in_domain() {
+    // flip → infer must stay packed: predictions remain valid labels and
+    // p = 0 is the identity, for both packed widths.
+    forall("packed-faults", 12, |rng| {
+        let b = 2 + rng.below(4) as usize;
+        let d = 64 + rng.below(192) as usize;
+        let n = 3 + rng.below(3) as usize;
+        let c = 3 + rng.below(4) as usize;
+        let model = random_model(rng, c, d, n);
+        let enc = Matrix::from_vec(b, d, rng.normals_f32(b * d));
+        for precision in [Precision::B1, Precision::B8] {
+            let mut qm = QuantizedLogHdModel::from_model(&model, precision);
+            let clean = qm.predict(&enc);
+            assert!(clean.iter().all(|l| (0..c as i32).contains(l)));
+            assert_eq!(qm.inject_value_faults(0.0, rng), 0);
+            assert_eq!(qm.predict(&enc), clean, "{precision:?}: p=0 changed output");
+            qm.inject_value_faults(0.7, rng);
+            let faulted = qm.predict(&enc);
+            assert!(faulted.iter().all(|l| (0..c as i32).contains(l)), "{precision:?}");
         }
     });
 }

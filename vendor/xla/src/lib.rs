@@ -1,0 +1,149 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! This build environment has no registry access and no XLA shared
+//! library, so the real crate cannot be used. This stub keeps the crate
+//! API-compatible with the subset `loghd::runtime` calls: everything
+//! type-checks, and every entry point that would touch PJRT returns
+//! [`Error::Unavailable`] at runtime. The PJRT halves of the serving
+//! bench, the artifact integration tests, and `loghd serve --artifacts`
+//! already skip (loudly) when no artifact bundle is present, so the
+//! native engine remains fully usable.
+//!
+//! To restore the real AOT path, replace the `xla = { path = "vendor/xla" }`
+//! dependency with the actual bindings — no source changes needed.
+
+use std::fmt;
+
+/// Stub error: PJRT is not available in this build.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT backend unavailable (built against the vendored xla stub)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Stub of a PJRT client.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+}
+
+/// Stub of a compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Stub of a device buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Stub of a parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Stub of an XLA computation.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// Stub of a host literal.
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Self {
+        Self { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let lit = Literal::vec1(&[1.0]);
+        assert!(lit.reshape(&[1]).is_err());
+        assert!(lit.to_tuple().is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("unavailable"));
+    }
+}
