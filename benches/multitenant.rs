@@ -1,0 +1,209 @@
+//! Multi-tenant serving bench: N named tenants at mixed precisions
+//! (LogHD f32/int8/1-bit + the conventional baseline) behind one
+//! [`ModelRegistry`], driven by concurrent per-tenant load generators at
+//! replica counts 1 and 2 — the shard-dispatch scaling proof.
+//!
+//! Output: results/multitenant.csv plus machine-readable
+//! results/BENCH_multitenant.json (per-tenant throughput + p50/p99 and
+//! the replicas=2 speedup) so the trajectory is trackable across PRs
+//! (EXPERIMENTS.md §Multi-tenant).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use loghd::baselines::conventional::ConventionalModel;
+use loghd::bench::CsvWriter;
+use loghd::coordinator::{BatcherConfig, ModelRegistry, TenantSpec};
+use loghd::data;
+use loghd::loghd::model::{TrainOptions, TrainedStack};
+use loghd::loghd::persist;
+use loghd::quant::Precision;
+use loghd::tensor::Matrix;
+use loghd::util::json::{self, Value};
+
+const REQUESTS_PER_TENANT: usize = 1000;
+const D: usize = 2000;
+
+/// Drive every tenant concurrently (open loop: enqueue the full backlog,
+/// then await it) and report (elapsed seconds, per-tenant JSON rows).
+fn run_mixed_load(
+    specs: &[TenantSpec],
+    replicas: usize,
+    queries: &Matrix,
+) -> anyhow::Result<(f64, Vec<Value>)> {
+    let specs: Vec<TenantSpec> = specs
+        .iter()
+        .cloned()
+        .map(|mut s| {
+            s.replicas = replicas;
+            s
+        })
+        .collect();
+    let cfg = BatcherConfig {
+        max_batch: 64,
+        max_delay: std::time::Duration::from_millis(1),
+        max_pending: 8192,
+    };
+    let registry = Arc::new(ModelRegistry::open(&specs, None, &cfg)?);
+    // Warm-up: engine construction happens on the worker threads; one
+    // blocking request per tenant keeps cold starts out of the timings.
+    for s in &specs {
+        registry.submit_blocking(Some(&s.name), queries.row(0).to_vec())?;
+    }
+    let t0 = Instant::now();
+    let mut drain_s: Vec<(String, f64)> = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|s| {
+                let reg = Arc::clone(&registry);
+                scope.spawn(move || {
+                    let tenant_t0 = Instant::now();
+                    let coord = reg.coordinator(Some(&s.name)).expect("tenant");
+                    let rxs: Vec<_> = (0..REQUESTS_PER_TENANT)
+                        .map(|i| {
+                            coord
+                                .submit(queries.row(i % queries.rows()).to_vec())
+                                .expect("submit")
+                        })
+                        .collect();
+                    for rx in rxs {
+                        let _ = rx.recv();
+                    }
+                    (s.name.clone(), tenant_t0.elapsed().as_secs_f64())
+                })
+            })
+            .collect();
+        for h in handles {
+            drain_s.push(h.join().expect("generator thread"));
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut rows = Vec::new();
+    for info in registry.describe() {
+        let tenant_elapsed = drain_s
+            .iter()
+            .find(|(n, _)| *n == info.name)
+            .map(|(_, e)| *e)
+            .unwrap_or(elapsed);
+        let rps = REQUESTS_PER_TENANT as f64 / tenant_elapsed;
+        println!(
+            "  replicas={replicas} {:<10} {:<4} {rps:>9.0} req/s  p50 {:>7.0}µs  p99 {:>7.0}µs  mean_batch {:>5.1}",
+            info.name,
+            info.precision,
+            info.stats.latency_p50_us,
+            info.stats.latency_p99_us,
+            info.stats.mean_batch_size
+        );
+        rows.push(json::obj(vec![
+            ("model", json::s(info.name.clone())),
+            ("kind", json::s(info.kind.clone())),
+            ("precision", json::s(info.precision)),
+            ("throughput_rps", json::num(rps)),
+            ("drain_s", json::num(tenant_elapsed)),
+            ("p50_us", json::num(info.stats.latency_p50_us)),
+            ("p99_us", json::num(info.stats.latency_p99_us)),
+            ("mean_batch", json::num(info.stats.mean_batch_size)),
+            ("rejected", json::num(info.stats.rejected as f64)),
+        ]));
+    }
+    Ok((elapsed, rows))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut csv = CsvWriter::create(
+        "results/multitenant.csv",
+        "replicas,model,metric,value",
+    )?;
+
+    // One trained stack feeds four tenants: three LogHD precisions + the
+    // conventional baseline, all under one registry (the paper's
+    // many-models-per-budget pitch, exercised end-to-end).
+    let ds = data::generate_scaled(data::spec("page").unwrap(), 1500, 256);
+    let opts =
+        TrainOptions { epochs: 3, conv_epochs: 1, extra_bundles: 4, ..Default::default() };
+    let stack = TrainedStack::train(&ds.x_train, &ds.y_train, 5, D, 0xE5C0DE, &opts)?;
+    let root = std::env::temp_dir().join("loghd_bench_multitenant");
+    let _ = std::fs::remove_dir_all(&root);
+    persist::save(&root.join("log"), &stack.encoder, &stack.loghd)?;
+    persist::save_conventional(
+        &root.join("conv"),
+        &stack.encoder,
+        &ConventionalModel::new(stack.prototypes.clone()),
+    )?;
+    let specs = vec![
+        TenantSpec {
+            name: "log_f32".into(),
+            path: root.join("log"),
+            precision: Precision::F32,
+            replicas: 1,
+        },
+        TenantSpec {
+            name: "log_b8".into(),
+            path: root.join("log"),
+            precision: Precision::B8,
+            replicas: 1,
+        },
+        TenantSpec {
+            name: "log_b1".into(),
+            path: root.join("log"),
+            precision: Precision::B1,
+            replicas: 1,
+        },
+        TenantSpec {
+            name: "conv_f32".into(),
+            path: root.join("conv"),
+            precision: Precision::F32,
+            replicas: 1,
+        },
+    ];
+
+    println!(
+        "multi-tenant load: {} tenants x {REQUESTS_PER_TENANT} requests, D={D}",
+        specs.len()
+    );
+    let mut runs = Vec::new();
+    let mut elapsed_by_replicas = Vec::new();
+    for replicas in [1usize, 2] {
+        let (elapsed, rows) = run_mixed_load(&specs, replicas, &ds.x_test)?;
+        let aggregate = (specs.len() * REQUESTS_PER_TENANT) as f64 / elapsed;
+        println!(
+            "  replicas={replicas}: {:.2}s total, aggregate {aggregate:.0} req/s",
+            elapsed
+        );
+        for row in &rows {
+            let model = row.get("model").and_then(Value::as_str).unwrap_or("?");
+            for metric in ["throughput_rps", "p50_us", "p99_us"] {
+                if let Some(v) = row.get(metric).and_then(Value::as_f64) {
+                    csv.row(&[
+                        replicas.to_string(),
+                        model.to_string(),
+                        metric.to_string(),
+                        format!("{v:.1}"),
+                    ])?;
+                }
+            }
+        }
+        runs.push(json::obj(vec![
+            ("replicas", json::num(replicas as f64)),
+            ("elapsed_s", json::num(elapsed)),
+            ("aggregate_rps", json::num(aggregate)),
+            ("tenants", json::arr(rows)),
+        ]));
+        elapsed_by_replicas.push(elapsed);
+    }
+    let speedup = elapsed_by_replicas[0] / elapsed_by_replicas[1];
+    println!("replicas=2 speedup over replicas=1: {speedup:.2}x");
+
+    let report = json::obj(vec![
+        ("d", json::num(D as f64)),
+        ("requests_per_tenant", json::num(REQUESTS_PER_TENANT as f64)),
+        ("tenants", json::num(specs.len() as f64)),
+        ("runs", json::arr(runs)),
+        ("replicas2_speedup", json::num(speedup)),
+    ]);
+    std::fs::write("results/BENCH_multitenant.json", json::to_string_pretty(&report))?;
+    println!("wrote results/BENCH_multitenant.json");
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(())
+}

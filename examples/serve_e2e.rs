@@ -15,7 +15,7 @@ use std::net::TcpStream;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use loghd::coordinator::{BatcherConfig, Coordinator, PjrtEngine, Server};
+use loghd::coordinator::{BatcherConfig, Coordinator, ModelRegistry, PjrtEngine, Server};
 use loghd::eval::accuracy;
 use loghd::loghd::persist;
 use loghd::runtime::artifact::Manifest;
@@ -45,7 +45,9 @@ fn main() -> anyhow::Result<()> {
         cfg,
         PjrtEngine::factory(bundle.clone(), "infer_loghd".into()),
     ));
-    let mut server = Server::start("127.0.0.1:0", Arc::clone(&coord))?;
+    let registry =
+        Arc::new(ModelRegistry::single_with(&manifest.name, "aot-bundle", Arc::clone(&coord)));
+    let mut server = Server::start("127.0.0.1:0", Arc::clone(&registry))?;
     println!("coordinator + TCP server up on {}", server.addr);
 
     // Drive the bundle's real held-out test set through the coordinator.

@@ -3,9 +3,11 @@
 //! ```text
 //! loghd info                              # datasets + artifact bundles
 //! loghd train  --dataset page --d 2000 --out models/page [--k 2 ...]
+//!              [--baseline_out models/page_conv]
 //! loghd eval   --model models/page [--p 0.2 --bits 8]
-//! loghd serve  --artifacts artifacts/page_smoke [--entry infer_loghd]
-//!              [--addr 127.0.0.1:7878] | --model models/page --native
+//! loghd serve  --model page=models/page:8,conv=models/page_conv
+//!              [--replicas 2 --default page --addr 127.0.0.1:7878]
+//!              | --artifacts artifacts/page_smoke [--entry infer_loghd]
 //! loghd table2 [--n 7]                    # hardware-efficiency ratios
 //! ```
 
@@ -16,7 +18,9 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
-use crate::coordinator::{BatcherConfig, Coordinator, NativeEngine, PjrtEngine, Server};
+use crate::coordinator::{
+    BatcherConfig, EngineFactory, ModelRegistry, PjrtEngine, Server, TenantSpec,
+};
 use crate::data;
 use crate::eval::{accuracy, corrupt, Workbench};
 use crate::eval::sweep::Method;
@@ -93,10 +97,17 @@ loghd — LogHD: class-axis compression of HDC classifiers (paper reproduction)
 USAGE:
   loghd info
   loghd train  --dataset <name> --d <dim> --out <dir> [--k K --extra_bundles E --epochs T]
+               [--baseline_out <dir>]   # also save the conventional O(C*D) baseline
   loghd eval   --model <dir> [--p <flip prob>] [--bits 1|2|4|8|32] [--seed S]
-  loghd serve  (--artifacts <bundle dir> [--entry infer_loghd] | --model <dir> --native)
-               [--bits 1|2|4|8|32] [--addr 127.0.0.1:7878] [--max_batch 64] [--max_delay_ms 2]
+  loghd serve  (--model <name=dir[:bits],...> | --artifacts <bundle dir> [--entry infer_loghd])
+               [--replicas R] [--default <name>] [--bits 1|2|4|8|32]
+               [--addr 127.0.0.1:7878] [--max_batch 64] [--max_delay_ms 2]
   loghd table2 [--n <bundles>]
+
+serve hosts every named model behind one JSON-lines TCP endpoint (see
+docs/PROTOCOL.md): requests route by their \"model\" field (default: the
+--default tenant), {\"cmd\":\"models\"} lists tenants, {\"cmd\":\"reload\"}
+hot-swaps one tenant's artifact without dropping in-flight requests.
 ";
 
 fn cmd_info() -> Result<()> {
@@ -154,6 +165,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     let enc_test = stack.encoder.encode(&ds.x_test);
     let acc = accuracy(&stack.loghd.predict(&enc_test), &ds.y_test);
     persist::save(&out, &stack.encoder, &stack.loghd)?;
+    if let Some(bdir) = flag(args, "baseline_out") {
+        let conv =
+            crate::baselines::conventional::ConventionalModel::new(stack.prototypes.clone());
+        persist::save_conventional(&PathBuf::from(bdir), &stack.encoder, &conv)?;
+        println!("saved conventional baseline ({} floats) to {bdir}", conv.memory_floats());
+    }
     println!(
         "trained loghd(k={}, n={}) on {}: clean acc {:.4}, budget {:.3} of C*D, saved to {}",
         stack.loghd.book.k,
@@ -198,39 +215,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = flag(args, "addr").unwrap_or("127.0.0.1:7878").to_string();
     let max_batch: usize = flag(args, "max_batch").unwrap_or("64").parse()?;
     let max_delay_ms: u64 = flag(args, "max_delay_ms").unwrap_or("2").parse()?;
+    let replicas: usize =
+        flag(args, "replicas").unwrap_or("1").parse().context("--replicas")?;
+    let replicas = replicas.max(1);
     let cfg = BatcherConfig {
         max_batch,
         max_delay: std::time::Duration::from_millis(max_delay_ms),
         ..Default::default()
     };
 
-    let (features, factory): (usize, crate::coordinator::EngineFactory) =
-        if let Some(bundle) = flag(args, "artifacts") {
-            let dir = PathBuf::from(bundle);
-            let manifest = crate::runtime::artifact::Manifest::load(&dir)?;
-            let entry = flag(args, "entry").unwrap_or("infer_loghd").to_string();
-            (manifest.features, PjrtEngine::factory(dir, entry))
-        } else if let Some(model_dir) = flag(args, "model") {
-            let (encoder, model) = persist::load(&PathBuf::from(model_dir))?;
-            let features = encoder.features();
-            let bits: u32 = flag(args, "bits").unwrap_or("32").parse().context("--bits")?;
-            let precision = Precision::from_bits(bits).context("--bits must be 1|2|4|8|32")?;
-            (
-                features,
-                NativeEngine::factory_with_precision(
-                    encoder,
-                    model,
-                    model_dir.to_string(),
-                    precision,
-                ),
-            )
-        } else {
-            bail!("serve needs --artifacts <bundle> or --model <dir>");
-        };
+    let registry = if let Some(bundle) = flag(args, "artifacts") {
+        let dir = PathBuf::from(bundle);
+        let manifest = crate::runtime::artifact::Manifest::load(&dir)?;
+        let entry = flag(args, "entry").unwrap_or("infer_loghd").to_string();
+        let factories: Vec<EngineFactory> = (0..replicas)
+            .map(|_| PjrtEngine::factory(dir.clone(), entry.clone()))
+            .collect();
+        ModelRegistry::single(&manifest.name, "aot-bundle", manifest.features, &cfg, factories)
+    } else if let Some(spec_str) = flag(args, "model") {
+        let default_bits: u32 = flag(args, "bits").unwrap_or("32").parse().context("--bits")?;
+        let specs = spec_str
+            .split(',')
+            .map(|frag| TenantSpec::parse(frag.trim(), default_bits, replicas))
+            .collect::<Result<Vec<_>>>()?;
+        ModelRegistry::open(&specs, flag(args, "default"), &cfg)?
+    } else {
+        bail!("serve needs --artifacts <bundle> or --model <name=dir[:bits],...>");
+    };
 
-    let coordinator = Arc::new(Coordinator::start(features, cfg, factory));
-    let mut server = Server::start(&addr, Arc::clone(&coordinator))?;
-    println!("serving on {} (features={features}); Ctrl-C to stop", server.addr);
+    let registry = Arc::new(registry);
+    let mut server = Server::start(&addr, Arc::clone(&registry))?;
+    println!("serving on {} — tenants:", server.addr);
+    for info in registry.describe() {
+        println!(
+            "  {:<16} kind={:<12} precision={:<4} replicas={} features={}{}",
+            info.name,
+            info.kind,
+            info.precision,
+            info.replicas,
+            info.features,
+            if info.is_default { "  (default)" } else { "" }
+        );
+    }
     // Block forever (Ctrl-C kills the process; graceful path is tested via
     // the library API).
     loop {
@@ -298,7 +324,9 @@ mod tests {
     #[test]
     fn train_eval_roundtrip_via_cli() {
         let dir = std::env::temp_dir().join("loghd_cli_train");
+        let bdir = std::env::temp_dir().join("loghd_cli_train_conv");
         let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&bdir);
         run(vec![
             "train".into(),
             "--dataset".into(), "page".into(),
@@ -306,6 +334,7 @@ mod tests {
             "--epochs".into(), "1".into(),
             "--conv_epochs".into(), "0".into(),
             "--out".into(), dir.to_str().unwrap().into(),
+            "--baseline_out".into(), bdir.to_str().unwrap().into(),
         ])
         .unwrap();
         run(vec![
@@ -315,6 +344,10 @@ mod tests {
             "--p".into(), "0.1".into(),
         ])
         .unwrap();
+        // both artifact kinds landed on disk with registry-loadable manifests
+        assert_eq!(persist::load_any(&dir).unwrap().kind(), "loghd");
+        assert_eq!(persist::load_any(&bdir).unwrap().kind(), "conventional");
         let _ = std::fs::remove_dir_all(dir);
+        let _ = std::fs::remove_dir_all(bdir);
     }
 }

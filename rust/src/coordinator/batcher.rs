@@ -1,13 +1,21 @@
 //! Dynamic batcher + request lifecycle.
 //!
 //! Policy (vLLM-router-like, scaled to this problem): a bounded pending
-//! queue (backpressure: `submit` rejects when full); the worker drains up
-//! to `max_batch` requests, waiting at most `max_delay` past the oldest
-//! request's arrival to fill the batch — the knob that trades p99 latency
-//! against PJRT dispatch amortization (the batcher bench sweeps it).
+//! queue (backpressure: `submit` rejects when full); each worker replica
+//! drains up to `max_batch` requests, waiting at most `max_delay` past the
+//! oldest request's arrival to fill the batch — the knob that trades p99
+//! latency against PJRT dispatch amortization (the batcher bench sweeps it).
+//!
+//! A [`Coordinator`] may run **several worker replicas** over the same
+//! queue ([`Coordinator::start_pool`]): each replica owns its own engine
+//! instance and pulls the next ready batch (shard) in arrival order, so
+//! dispatch is round-robin across idle replicas and degrades to
+//! least-loaded under skew. [`Coordinator::reload`] hot-swaps every
+//! replica's engine between batches without dropping queued or in-flight
+//! requests (generation-counted factory handoff).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -48,12 +56,15 @@ pub struct Response {
     pub latency: Duration,
 }
 
-/// Why a submit was refused.
+/// Why a submit was refused (or an admitted request went unanswered).
 #[derive(Debug, PartialEq, Eq)]
 pub enum SubmitError {
     QueueFull(usize),
     ShutDown,
     BadWidth { got: usize, want: usize },
+    /// The batch this request landed in failed inference; the engine is
+    /// still serving and a retry may land in a healthy batch.
+    EngineFailure,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -66,11 +77,34 @@ impl std::fmt::Display for SubmitError {
             SubmitError::BadWidth { got, want } => {
                 write!(f, "feature width {got} != expected {want}")
             }
+            SubmitError::EngineFailure => {
+                write!(f, "inference failed for this request's batch")
+            }
         }
     }
 }
 
 impl std::error::Error for SubmitError {}
+
+/// Why a hot reload was refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ReloadError {
+    ShutDown,
+    WrongReplicaCount { got: usize, want: usize },
+}
+
+impl std::fmt::Display for ReloadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReloadError::ShutDown => write!(f, "coordinator is shut down"),
+            ReloadError::WrongReplicaCount { got, want } => {
+                write!(f, "reload needs one engine factory per replica ({got} != {want})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ReloadError {}
 
 struct Job {
     request: Request,
@@ -86,18 +120,39 @@ struct Shared {
     shutdown: AtomicBool,
     next_id: AtomicU64,
     stats: Mutex<StatsCollector>,
+    /// Bumped once per [`Coordinator::reload`]. Each replica has its own
+    /// slot in `pending_engines`; a reload overwrites every slot
+    /// (latest-wins), so a replica that missed an intermediate reload
+    /// adopts only the newest engine and can never strand on a stale one.
+    reload_gen: AtomicU64,
+    pending_engines: Vec<Mutex<Option<EngineFactory>>>,
+    /// Serializes [`Coordinator::reload`] callers so two concurrent
+    /// reloads cannot interleave their per-replica slot writes and leave
+    /// the pool serving a mix of generations.
+    reload_lock: Mutex<()>,
+    /// Workers still alive; the last one to die on a construction failure
+    /// shuts the pool down so callers see `ShutDown` instead of hanging.
+    live_workers: AtomicUsize,
 }
 
-/// The running coordinator: router + batcher + one engine worker thread.
+/// The running coordinator: router + batcher + a pool of engine worker
+/// threads (one engine instance per replica).
 pub struct Coordinator {
     shared: Arc<Shared>,
-    worker: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the coordinator. The engine is constructed ON the worker
-    /// thread from `factory` (PJRT handles are not Sync/Send).
+    /// Start a single-replica coordinator. The engine is constructed ON
+    /// the worker thread from `factory` (PJRT handles are not Sync/Send).
     pub fn start(features: usize, cfg: BatcherConfig, factory: EngineFactory) -> Self {
+        Self::start_pool(features, cfg, vec![factory])
+    }
+
+    /// Start a sharded pool: one worker thread (and one engine instance)
+    /// per factory, all draining the shared batcher queue.
+    pub fn start_pool(features: usize, cfg: BatcherConfig, factories: Vec<EngineFactory>) -> Self {
+        assert!(!factories.is_empty(), "coordinator needs at least one replica");
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             not_empty: Condvar::new(),
@@ -109,13 +164,68 @@ impl Coordinator {
                 started: Some(Instant::now()),
                 ..Default::default()
             }),
+            reload_gen: AtomicU64::new(0),
+            pending_engines: (0..factories.len()).map(|_| Mutex::new(None)).collect(),
+            reload_lock: Mutex::new(()),
+            live_workers: AtomicUsize::new(factories.len()),
         });
-        let w = Arc::clone(&shared);
-        let worker = std::thread::Builder::new()
-            .name("loghd-worker".into())
-            .spawn(move || worker_loop(w, factory))
-            .expect("spawning worker");
-        Self { shared, worker: Some(worker) }
+        let workers = factories
+            .into_iter()
+            .enumerate()
+            .map(|(replica, factory)| {
+                let w = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("loghd-worker-{replica}"))
+                    .spawn(move || worker_loop(w, replica, factory))
+                    .expect("spawning worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Number of worker replicas the pool was started with.
+    pub fn replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Replicas whose engine constructed successfully. Lower than
+    /// [`replicas`](Self::replicas) when a replica died at startup — the
+    /// pool degrades instead of poisoning, and this is how operators see
+    /// the lost capacity (surfaced by the `models` admin verb).
+    pub fn live_replicas(&self) -> usize {
+        self.shared.live_workers.load(Ordering::Acquire)
+    }
+
+    /// Feature width this coordinator admits.
+    pub fn features(&self) -> usize {
+        self.shared.features
+    }
+
+    /// Hot-swap every replica's engine: drop one replacement factory into
+    /// each replica's slot (overwriting any not-yet-adopted one —
+    /// latest-wins) and bump the reload generation. Workers adopt the new
+    /// engine between batches, so queued and in-flight requests are
+    /// served without drops (the current batch finishes on the old
+    /// engine). A factory that fails to construct leaves that replica on
+    /// its previous engine. The new engines must accept the same feature
+    /// width — the queue may still hold requests admitted against it.
+    pub fn reload(&self, factories: Vec<EngineFactory>) -> Result<(), ReloadError> {
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(ReloadError::ShutDown);
+        }
+        if factories.len() != self.workers.len() {
+            return Err(ReloadError::WrongReplicaCount {
+                got: factories.len(),
+                want: self.workers.len(),
+            });
+        }
+        let _serialize = self.shared.reload_lock.lock().unwrap();
+        for (slot, factory) in self.shared.pending_engines.iter().zip(factories) {
+            *slot.lock().unwrap() = Some(factory);
+        }
+        self.shared.reload_gen.fetch_add(1, Ordering::Release);
+        self.shared.not_empty.notify_all();
+        Ok(())
     }
 
     /// Enqueue a request; returns the receiver for its response.
@@ -132,6 +242,12 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
+            // Re-check under the lock: a dying pool clears the queue while
+            // holding it, so this load is ordered against that clear and a
+            // request can never be enqueued after it (it would hang).
+            if self.shared.shutdown.load(Ordering::Acquire) {
+                return Err(SubmitError::ShutDown);
+            }
             if q.len() >= self.shared.cfg.max_pending {
                 self.shared.stats.lock().unwrap().rejected += 1;
                 return Err(SubmitError::QueueFull(q.len()));
@@ -144,21 +260,30 @@ impl Coordinator {
         Ok(rx)
     }
 
-    /// Submit and wait for the answer.
+    /// Submit and wait for the answer. A dropped response channel means
+    /// either the pool shut down or this request's batch failed
+    /// inference — disambiguated via the shutdown flag so transient
+    /// engine errors do not masquerade as a dead coordinator.
     pub fn submit_blocking(&self, features: Vec<f32>) -> Result<Response, SubmitError> {
         let rx = self.submit(features)?;
-        rx.recv().map_err(|_| SubmitError::ShutDown)
+        rx.recv().map_err(|_| {
+            if self.shared.shutdown.load(Ordering::Acquire) {
+                SubmitError::ShutDown
+            } else {
+                SubmitError::EngineFailure
+            }
+        })
     }
 
     pub fn stats(&self) -> StatsSnapshot {
         self.shared.stats.lock().unwrap().snapshot()
     }
 
-    /// Graceful shutdown: drain the queue, stop the worker.
+    /// Graceful shutdown: drain the queue, stop every worker.
     pub fn shutdown(&mut self) {
         self.shared.shutdown.store(true, Ordering::Release);
         self.shared.not_empty.notify_all();
-        if let Some(h) = self.worker.take() {
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -170,19 +295,58 @@ impl Drop for Coordinator {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>, factory: EngineFactory) {
+fn worker_loop(shared: Arc<Shared>, replica: usize, factory: EngineFactory) {
     let mut engine = match factory() {
         Ok(e) => e,
         Err(err) => {
-            crate::log_error!("engine construction failed: {err:#}");
-            // Drain everything with a poison response path: drop senders.
-            shared.shutdown.store(true, Ordering::Release);
+            crate::log_error!("worker {replica} engine construction failed: {err:#}");
+            // Degrade, don't poison: surviving replicas keep serving. Only
+            // when the LAST worker dies does the pool shut down — and the
+            // queue is cleared so already-enqueued senders drop and
+            // blocked callers observe the failure instead of hanging.
+            if shared.live_workers.fetch_sub(1, Ordering::AcqRel) == 1 {
+                shared.shutdown.store(true, Ordering::Release);
+                shared.queue.lock().unwrap().clear();
+                shared.not_empty.notify_all();
+            }
             return;
         }
     };
-    crate::log_info!("worker up: engine={} features={}", engine.name(), shared.features);
+    crate::log_info!(
+        "worker {replica} up: engine={} features={}",
+        engine.name(),
+        shared.features
+    );
+    // Engine generation this replica has adopted. Each reload overwrites
+    // this replica's slot and bumps the generation; adopting jumps
+    // straight to the latest generation (intermediate reloads collapse).
+    let mut seen_gen = 0u64;
     loop {
-        let batch = collect_batch(&shared);
+        // Adopt a pending engine swap before pulling the next shard.
+        let current_gen = shared.reload_gen.load(Ordering::Acquire);
+        if current_gen != seen_gen {
+            seen_gen = current_gen;
+            let pending = shared.pending_engines[replica].lock().unwrap().take();
+            if let Some(build) = pending {
+                match build() {
+                    Ok(e) => {
+                        engine = e;
+                        shared.stats.lock().unwrap().reloads += 1;
+                        crate::log_info!(
+                            "worker {replica} hot-swapped engine -> {}",
+                            engine.name()
+                        );
+                    }
+                    Err(err) => {
+                        crate::log_error!(
+                            "worker {replica} reload failed (keeping {}): {err:#}",
+                            engine.name()
+                        );
+                    }
+                }
+            }
+        }
+        let batch = collect_batch(&shared, seen_gen);
         let Some(jobs) = batch else { break };
         if jobs.is_empty() {
             continue;
@@ -195,7 +359,8 @@ fn worker_loop(shared: Arc<Shared>, factory: EngineFactory) {
             Ok(l) => l,
             Err(err) => {
                 crate::log_error!("inference failed for batch of {}: {err:#}", jobs.len());
-                continue; // senders drop -> callers see disconnect
+                shared.stats.lock().unwrap().failures += jobs.len() as u64;
+                continue; // senders drop -> callers see EngineFailure
             }
         };
         let now = Instant::now();
@@ -209,12 +374,15 @@ fn worker_loop(shared: Arc<Shared>, factory: EngineFactory) {
             let _ = job.tx.send(Response { id: job.request.id, label, latency });
         }
     }
-    crate::log_info!("worker drained; shutting down");
+    crate::log_info!("worker {replica} drained; shutting down");
 }
 
 /// Wait for work, then apply the max-batch/max-delay policy.
-/// Returns None when shut down AND the queue is empty (drain semantics).
-fn collect_batch(shared: &Shared) -> Option<Vec<Job>> {
+/// Returns None when shut down AND the queue is empty (drain semantics);
+/// returns an empty batch when a reload generation newer than `seen_gen`
+/// arrives, so the caller can adopt the new engine promptly even while
+/// idle.
+fn collect_batch(shared: &Shared, seen_gen: u64) -> Option<Vec<Job>> {
     let cfg = &shared.cfg;
     let mut q = shared.queue.lock().unwrap();
     loop {
@@ -223,6 +391,9 @@ fn collect_batch(shared: &Shared) -> Option<Vec<Job>> {
         }
         if shared.shutdown.load(Ordering::Acquire) {
             return None;
+        }
+        if shared.reload_gen.load(Ordering::Acquire) != seen_gen {
+            return Some(Vec::new());
         }
         let (guard, _) =
             shared.not_empty.wait_timeout(q, Duration::from_millis(50)).unwrap();
@@ -364,6 +535,130 @@ mod tests {
             "expected at least one multi-request batch, got {sizes:?}"
         );
         assert!(sizes.iter().all(|s| *s <= 16));
+    }
+
+    /// Engine that answers every request with a fixed tag.
+    struct Tagged(i32);
+
+    impl Engine for Tagged {
+        fn name(&self) -> String {
+            format!("tagged-{}", self.0)
+        }
+        fn features(&self) -> usize {
+            1
+        }
+        fn infer(&mut self, x: &Matrix) -> AResult<Vec<i32>> {
+            Ok(vec![self.0; x.rows()])
+        }
+    }
+
+    fn tagged_factory(tag: i32) -> EngineFactory {
+        Box::new(move || Ok(Box::new(Tagged(tag)) as Box<dyn Engine>))
+    }
+
+    #[test]
+    fn pool_replicas_share_the_queue() {
+        let coord = Coordinator::start_pool(
+            1,
+            BatcherConfig { max_batch: 4, ..Default::default() },
+            vec![tagged_factory(7), tagged_factory(7)],
+        );
+        assert_eq!(coord.replicas(), 2);
+        assert_eq!(coord.features(), 1);
+        let rxs: Vec<_> = (0..64).map(|_| coord.submit(vec![0.0]).unwrap()).collect();
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().label, 7);
+        }
+        assert_eq!(coord.stats().responses, 64);
+    }
+
+    #[test]
+    fn reload_hot_swaps_without_dropping() {
+        let coord = Coordinator::start_pool(
+            1,
+            BatcherConfig::default(),
+            vec![tagged_factory(1), tagged_factory(1)],
+        );
+        assert_eq!(
+            coord.reload(vec![tagged_factory(9)]).unwrap_err(),
+            ReloadError::WrongReplicaCount { got: 1, want: 2 }
+        );
+        let rxs: Vec<_> = (0..16).map(|_| coord.submit(vec![0.0]).unwrap()).collect();
+        coord.reload(vec![tagged_factory(2), tagged_factory(2)]).unwrap();
+        // Every pre-reload request is answered (by either generation).
+        for rx in rxs {
+            let label = rx.recv().unwrap().label;
+            assert!(label == 1 || label == 2, "unexpected label {label}");
+        }
+        // The new engine takes over for later requests.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let resp = coord.submit_blocking(vec![0.0]).unwrap();
+            if resp.label == 2 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "engine never swapped");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(coord.stats().reloads >= 1);
+    }
+
+    #[test]
+    fn rapid_reloads_collapse_to_latest() {
+        let coord = Coordinator::start_pool(
+            1,
+            BatcherConfig::default(),
+            vec![tagged_factory(1), tagged_factory(1)],
+        );
+        coord.submit_blocking(vec![0.0]).unwrap();
+        coord.reload(vec![tagged_factory(2), tagged_factory(2)]).unwrap();
+        coord.reload(vec![tagged_factory(3), tagged_factory(3)]).unwrap();
+        // Every replica must converge on the LATEST generation — a
+        // replica that missed the intermediate reload must still land on
+        // 3, never strand on 1 or 2.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut consecutive = 0;
+        while consecutive < 12 {
+            let label = coord.submit_blocking(vec![0.0]).unwrap().label;
+            assert!((1..=3).contains(&label), "unexpected label {label}");
+            consecutive = if label == 3 { consecutive + 1 } else { 0 };
+            assert!(Instant::now() < deadline, "replicas never converged on latest engine");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn pool_survives_one_replica_construction_failure() {
+        let coord = Coordinator::start_pool(
+            1,
+            BatcherConfig::default(),
+            vec![Box::new(|| anyhow::bail!("boom")), tagged_factory(5)],
+        );
+        for _ in 0..8 {
+            assert_eq!(coord.submit_blocking(vec![0.0]).unwrap().label, 5);
+        }
+        // The lost capacity is observable.
+        assert_eq!(coord.replicas(), 2);
+        assert_eq!(coord.live_replicas(), 1);
+    }
+
+    #[test]
+    fn pool_shuts_down_when_every_replica_fails() {
+        let coord = Coordinator::start_pool(
+            1,
+            BatcherConfig::default(),
+            vec![Box::new(|| anyhow::bail!("a")), Box::new(|| anyhow::bail!("b"))],
+        );
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match coord.submit_blocking(vec![0.0]) {
+                Err(SubmitError::ShutDown) => break,
+                Ok(_) | Err(SubmitError::EngineFailure) => {}
+                Err(e) => panic!("unexpected {e}"),
+            }
+            assert!(Instant::now() < deadline, "pool never reported shutdown");
+            std::thread::sleep(Duration::from_millis(5));
+        }
     }
 
     #[test]

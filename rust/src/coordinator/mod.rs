@@ -1,26 +1,68 @@
 //! The serving coordinator — L3's system contribution.
 //!
-//! Shape: request router → dynamic batcher (max-batch / max-delay, bounded
-//! queue with backpressure) → a worker thread that owns the inference
-//! engine (PJRT executables are not `Sync`; the engine is *constructed on*
-//! the worker thread from a `Send` factory) → per-request response
-//! channels → metrics.
+//! Shape: TCP front-end ([`Server`]) → multi-tenant [`ModelRegistry`]
+//! (named models, per-tenant admission control, hot reload) → per-tenant
+//! [`Coordinator`]: a dynamic batcher (max-batch / max-delay, bounded
+//! queue with backpressure) feeding a pool of worker replicas. Each
+//! replica owns its engine instance (PJRT executables are not `Sync`; the
+//! engine is *constructed on* the worker thread from a `Send` factory)
+//! and pulls ready batches off the shared queue — round-robin across idle
+//! replicas, least-loaded under skew. Per-request response channels carry
+//! answers back; [`stats`] aggregates per-tenant metrics.
 //!
-//! Two engines implement [`Engine`]:
+//! Three engines implement [`Engine`]:
 //! - [`worker::PjrtEngine`] — the AOT path: compiled HLO via the PJRT C
 //!   API (Python never runs here).
-//! - [`worker::NativeEngine`] — the pure-Rust path used by the figure
-//!   harnesses and as a serving fallback; also the parity reference.
+//! - [`worker::NativeEngine`] — the pure-Rust LogHD path used by the
+//!   figure harnesses and as a serving fallback; also the parity
+//!   reference. Serves f32, int8, and 1-bit packed precisions.
+//! - [`worker::ConventionalEngine`] — the O(C·D) baseline, for tenant
+//!   mixes that compare LogHD against it under one memory budget.
+//!
+//! # Example
+//!
+//! Any [`Engine`] can be served; a registry routes by model name and
+//! answers on per-request channels:
+//!
+//! ```
+//! use loghd::coordinator::{BatcherConfig, Engine, ModelRegistry};
+//! use loghd::tensor::Matrix;
+//!
+//! struct Echo;
+//! impl Engine for Echo {
+//!     fn name(&self) -> String {
+//!         "echo".into()
+//!     }
+//!     fn features(&self) -> usize {
+//!         2
+//!     }
+//!     fn infer(&mut self, x: &Matrix) -> anyhow::Result<Vec<i32>> {
+//!         Ok((0..x.rows()).map(|i| x.at(i, 0) as i32).collect())
+//!     }
+//! }
+//!
+//! let registry = ModelRegistry::single(
+//!     "echo",
+//!     "demo",
+//!     2,
+//!     &BatcherConfig::default(),
+//!     vec![Box::new(|| Ok(Box::new(Echo) as Box<dyn Engine>))],
+//! );
+//! let (model, resp) = registry.submit_blocking(None, vec![7.0, 0.0]).unwrap();
+//! assert_eq!((model.as_str(), resp.label), ("echo", 7));
+//! ```
 
 pub mod batcher;
+pub mod registry;
 pub mod server;
 pub mod stats;
 pub mod worker;
 
-pub use batcher::{BatcherConfig, Coordinator, Request, Response, SubmitError};
+pub use batcher::{BatcherConfig, Coordinator, ReloadError, Request, Response, SubmitError};
+pub use registry::{ModelRegistry, RouteError, TenantInfo, TenantSpec};
 pub use server::Server;
 pub use stats::StatsSnapshot;
-pub use worker::{EngineFactory, NativeEngine, PjrtEngine};
+pub use worker::{ConventionalEngine, EngineFactory, NativeEngine, PjrtEngine};
 
 use anyhow::Result;
 

@@ -1,0 +1,527 @@
+//! Multi-tenant model registry: named models → sharded coordinator pools.
+//!
+//! The paper's pitch is that class-axis reduction makes a classifier
+//! O(D·log_k C) instead of O(C·D) — small enough to pack *many* models
+//! into one serving budget. This module is that packing layer: a
+//! [`ModelRegistry`] hosts several named tenants, each a
+//! [`Coordinator`] pool of worker replicas at its own precision
+//! (f32 / int8 / 1-bit, LogHD or the conventional baseline), routes
+//! requests by tenant name with per-tenant backpressure, and hot-swaps a
+//! tenant's artifact in place without dropping in-flight requests.
+//!
+//! The TCP front-end ([`super::Server`]) speaks to this registry; see
+//! `docs/PROTOCOL.md` for the wire protocol (the `"model"` routing field
+//! and the `models` / `reload` admin verbs map 1:1 onto this API).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::loghd::persist::{self, LoadedModel};
+use crate::quant::Precision;
+use crate::runtime::artifact::ModelCard;
+
+use super::batcher::{BatcherConfig, Coordinator, Response, SubmitError};
+use super::stats::StatsSnapshot;
+use super::worker::{ConventionalEngine, EngineFactory, NativeEngine};
+
+/// How one tenant is provisioned: artifact path, serving precision, and
+/// replica count.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub precision: Precision,
+    pub replicas: usize,
+}
+
+impl TenantSpec {
+    /// Parse one `name=path[:bits]` CLI fragment (`loghd serve --model`).
+    /// A bare `path` names the tenant after the directory basename
+    /// (computed *after* any `:bits` suffix is stripped); a missing
+    /// `:bits` suffix falls back to `default_bits`. The suffix is only
+    /// treated as bits when it is a *valid* precision (1|2|4|8|32), so a
+    /// directory like `/data/nightly:2024` parses as a plain path; the
+    /// residual ambiguity is a directory literally ending in one of the
+    /// five valid suffixes — rename it or symlink around it.
+    pub fn parse(fragment: &str, default_bits: u32, replicas: usize) -> Result<Self> {
+        let (explicit_name, rest) = match fragment.split_once('=') {
+            Some((n, r)) => (Some(n.to_string()), r),
+            None => (None, fragment),
+        };
+        let parsed = rest.rsplit_once(':').and_then(|(p, suffix)| {
+            let b = suffix.parse::<u32>().ok()?;
+            Precision::from_bits(b).map(|precision| (p.to_string(), precision))
+        });
+        let (path, precision) = match parsed {
+            Some(pair) => pair,
+            None => {
+                let precision = Precision::from_bits(default_bits)
+                    .with_context(|| format!("--bits must be 1|2|4|8|32, got {default_bits}"))?;
+                (rest.to_string(), precision)
+            }
+        };
+        let name = explicit_name.unwrap_or_else(|| {
+            Path::new(&path)
+                .file_name()
+                .and_then(|s| s.to_str())
+                .unwrap_or("default")
+                .to_string()
+        });
+        if name.is_empty() || path.is_empty() {
+            bail!("bad model spec '{fragment}' (want name=path[:bits])");
+        }
+        Ok(Self { name, path: PathBuf::from(path), precision, replicas })
+    }
+}
+
+/// Why the registry refused a request (maps to the wire protocol's
+/// `{"error", "code"}` replies — see [`RouteError::code`]).
+#[derive(Debug)]
+pub enum RouteError {
+    UnknownModel(String),
+    Submit { model: String, err: SubmitError },
+    Reload { model: String, message: String },
+}
+
+impl RouteError {
+    /// Stable machine-readable code for the wire protocol.
+    pub fn code(&self) -> &'static str {
+        match self {
+            RouteError::UnknownModel(_) => "unknown_model",
+            RouteError::Submit { err: SubmitError::QueueFull(_), .. } => "backpressure",
+            RouteError::Submit { err: SubmitError::BadWidth { .. }, .. } => "bad_width",
+            RouteError::Submit { err: SubmitError::ShutDown, .. } => "shutdown",
+            RouteError::Submit { err: SubmitError::EngineFailure, .. } => "engine_error",
+            RouteError::Reload { .. } => "reload_failed",
+        }
+    }
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            RouteError::Submit { model, err } => write!(f, "model '{model}': {err}"),
+            RouteError::Reload { model, message } => {
+                write!(f, "reload of '{model}' failed: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// Point-in-time description of one tenant (the `models` admin verb).
+#[derive(Debug, Clone)]
+pub struct TenantInfo {
+    pub name: String,
+    pub kind: String,
+    pub path: Option<PathBuf>,
+    pub precision: &'static str,
+    pub replicas: usize,
+    /// Replicas actually serving; < `replicas` when one died at startup.
+    pub live_replicas: usize,
+    pub features: usize,
+    pub is_default: bool,
+    pub stats: StatsSnapshot,
+}
+
+/// Mutable tenant metadata, swapped under lock on hot reload.
+struct TenantMeta {
+    kind: String,
+    path: Option<PathBuf>,
+    precision: Precision,
+}
+
+struct Tenant {
+    coordinator: Arc<Coordinator>,
+    meta: Mutex<TenantMeta>,
+}
+
+/// A fixed set of named tenants, each served by its own sharded
+/// [`Coordinator`] pool. The tenant set is decided at startup; *what*
+/// each tenant serves can be hot-swapped via [`ModelRegistry::reload`].
+pub struct ModelRegistry {
+    tenants: HashMap<String, Tenant>,
+    default: String,
+}
+
+impl ModelRegistry {
+    /// Load every spec'd artifact and start its pool. `default` names the
+    /// tenant that serves requests without a `"model"` field (falls back
+    /// to the first spec).
+    pub fn open(specs: &[TenantSpec], default: Option<&str>, cfg: &BatcherConfig) -> Result<Self> {
+        if specs.is_empty() {
+            bail!("registry needs at least one model spec");
+        }
+        let mut tenants = HashMap::new();
+        for spec in specs {
+            if tenants.contains_key(&spec.name) {
+                bail!("duplicate tenant name '{}'", spec.name);
+            }
+            let replicas = spec.replicas.max(1);
+            let (kind, features, factories) =
+                build_factories(&spec.path, spec.precision, replicas, &spec.name)?;
+            crate::log_info!(
+                "tenant '{}': kind={kind} path={} precision={} replicas={replicas}",
+                spec.name,
+                spec.path.display(),
+                spec.precision.label()
+            );
+            let coordinator = Arc::new(Coordinator::start_pool(features, cfg.clone(), factories));
+            tenants.insert(
+                spec.name.clone(),
+                Tenant {
+                    coordinator,
+                    meta: Mutex::new(TenantMeta {
+                        kind,
+                        path: Some(spec.path.clone()),
+                        precision: spec.precision,
+                    }),
+                },
+            );
+        }
+        let default = match default {
+            Some(d) => {
+                if !tenants.contains_key(d) {
+                    bail!("default model '{d}' is not among the configured tenants");
+                }
+                d.to_string()
+            }
+            None => specs[0].name.clone(),
+        };
+        Ok(Self { tenants, default })
+    }
+
+    /// Single-tenant registry over pre-built engine factories (the PJRT
+    /// serve path and tests use this — no artifact directory involved).
+    pub fn single(
+        name: &str,
+        kind: &str,
+        features: usize,
+        cfg: &BatcherConfig,
+        factories: Vec<EngineFactory>,
+    ) -> Self {
+        let coordinator = Arc::new(Coordinator::start_pool(features, cfg.clone(), factories));
+        Self::single_with(name, kind, coordinator)
+    }
+
+    /// Wrap an already-running coordinator as the sole tenant.
+    pub fn single_with(name: &str, kind: &str, coordinator: Arc<Coordinator>) -> Self {
+        let mut tenants = HashMap::new();
+        tenants.insert(
+            name.to_string(),
+            Tenant {
+                coordinator,
+                meta: Mutex::new(TenantMeta {
+                    kind: kind.to_string(),
+                    path: None,
+                    precision: Precision::F32,
+                }),
+            },
+        );
+        Self { tenants, default: name.to_string() }
+    }
+
+    fn tenant(&self, model: Option<&str>) -> Result<(&str, &Tenant), RouteError> {
+        let name = model.unwrap_or(&self.default);
+        match self.tenants.get_key_value(name) {
+            Some((k, t)) => Ok((k.as_str(), t)),
+            None => Err(RouteError::UnknownModel(name.to_string())),
+        }
+    }
+
+    /// The tenant serving requests that carry no `"model"` field.
+    pub fn default_model(&self) -> &str {
+        &self.default
+    }
+
+    /// Tenant names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.tenants.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Route a request to `model` (or the default tenant) and wait for
+    /// the answer. Admission control is per tenant: a full queue on one
+    /// tenant rejects with backpressure without affecting the others.
+    pub fn submit_blocking(
+        &self,
+        model: Option<&str>,
+        features: Vec<f32>,
+    ) -> Result<(String, Response), RouteError> {
+        let (name, tenant) = self.tenant(model)?;
+        let resp = tenant
+            .coordinator
+            .submit_blocking(features)
+            .map_err(|err| RouteError::Submit { model: name.to_string(), err })?;
+        Ok((name.to_string(), resp))
+    }
+
+    /// Per-tenant stats snapshot.
+    pub fn stats(&self, model: Option<&str>) -> Result<(String, StatsSnapshot), RouteError> {
+        let (name, tenant) = self.tenant(model)?;
+        Ok((name.to_string(), tenant.coordinator.stats()))
+    }
+
+    /// The coordinator behind a tenant (benches drive it directly).
+    pub fn coordinator(&self, model: Option<&str>) -> Result<Arc<Coordinator>, RouteError> {
+        let (_, tenant) = self.tenant(model)?;
+        Ok(Arc::clone(&tenant.coordinator))
+    }
+
+    /// Describe every tenant (sorted by name).
+    pub fn describe(&self) -> Vec<TenantInfo> {
+        let mut out: Vec<TenantInfo> =
+            self.tenants.iter().map(|(name, t)| self.info(name, t)).collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    fn info(&self, name: &str, t: &Tenant) -> TenantInfo {
+        let meta = t.meta.lock().unwrap();
+        TenantInfo {
+            name: name.to_string(),
+            kind: meta.kind.clone(),
+            path: meta.path.clone(),
+            precision: meta.precision.label(),
+            replicas: t.coordinator.replicas(),
+            live_replicas: t.coordinator.live_replicas(),
+            features: t.coordinator.features(),
+            is_default: name == self.default,
+            stats: t.coordinator.stats(),
+        }
+    }
+
+    /// Hot-swap one tenant's artifact without dropping in-flight
+    /// requests. `path` defaults to the tenant's current artifact path
+    /// (re-read from disk — the retrain-in-place flow); `bits` defaults
+    /// to its current precision. The replacement must admit the same
+    /// feature width, because queued requests were validated against it.
+    pub fn reload(
+        &self,
+        model: Option<&str>,
+        path: Option<&Path>,
+        bits: Option<u32>,
+    ) -> Result<TenantInfo, RouteError> {
+        let (name, tenant) = self.tenant(model)?;
+        let fail =
+            |message: String| RouteError::Reload { model: name.to_string(), message };
+        let (path, precision) = {
+            let meta = tenant.meta.lock().unwrap();
+            let path = match path {
+                Some(p) => p.to_path_buf(),
+                None => meta.path.clone().ok_or_else(|| {
+                    fail("tenant has no artifact path; pass \"path\"".to_string())
+                })?,
+            };
+            let precision = match bits {
+                Some(b) => Precision::from_bits(b)
+                    .ok_or_else(|| fail(format!("bits must be 1|2|4|8|32, got {b}")))?,
+                None => meta.precision,
+            };
+            (path, precision)
+        };
+        // Cheap admission check before touching tensors.
+        let card = ModelCard::load(&path).map_err(|e| fail(format!("{e:#}")))?;
+        let want = tenant.coordinator.features();
+        if card.features != want {
+            return Err(fail(format!(
+                "artifact feature width {} != serving width {want}",
+                card.features
+            )));
+        }
+        let replicas = tenant.coordinator.replicas();
+        let (kind, features, factories) = build_factories(&path, precision, replicas, name)
+            .map_err(|e| fail(format!("{e:#}")))?;
+        if features != want {
+            return Err(fail(format!("artifact feature width {features} != serving width {want}")));
+        }
+        {
+            // The meta lock is held ACROSS the coordinator reload so two
+            // racing registry reloads of one tenant serialize as a unit:
+            // the meta always describes the engines the pool last adopted.
+            let mut meta = tenant.meta.lock().unwrap();
+            tenant.coordinator.reload(factories).map_err(|e| fail(e.to_string()))?;
+            meta.kind = kind;
+            meta.path = Some(path);
+            meta.precision = precision;
+        }
+        crate::log_info!("tenant '{name}' reloaded ({} replicas notified)", replicas);
+        Ok(self.info(name, tenant))
+    }
+}
+
+/// Load an artifact and build one engine factory per replica. Each
+/// replica owns its own engine instance (dense tensors cloned per
+/// replica; packed precisions pack on the worker thread), which is what
+/// lets replicas serve batches fully in parallel.
+fn build_factories(
+    path: &Path,
+    precision: Precision,
+    replicas: usize,
+    label: &str,
+) -> Result<(String, usize, Vec<EngineFactory>)> {
+    let loaded = persist::load_any(path)
+        .with_context(|| format!("loading artifact {}", path.display()))?;
+    let kind = loaded.kind().to_string();
+    let features = loaded.features();
+    let factories: Vec<EngineFactory> = match loaded {
+        LoadedModel::LogHd(encoder, model) => (0..replicas)
+            .map(|_| {
+                NativeEngine::factory_with_precision(
+                    encoder.clone(),
+                    model.clone(),
+                    label.to_string(),
+                    precision,
+                )
+            })
+            .collect(),
+        LoadedModel::Conventional(encoder, model) => (0..replicas)
+            .map(|_| {
+                ConventionalEngine::factory(
+                    encoder.clone(),
+                    model.clone(),
+                    label.to_string(),
+                    precision,
+                )
+            })
+            .collect(),
+    };
+    Ok((kind, features, factories))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::conventional::ConventionalModel;
+    use crate::coordinator::Engine;
+    use crate::data;
+    use crate::loghd::model::{TrainOptions, TrainedStack};
+    use crate::tensor::Matrix;
+
+    #[test]
+    fn tenant_spec_parse_forms() {
+        let s = TenantSpec::parse("page=models/page:8", 32, 2).unwrap();
+        assert_eq!(s.name, "page");
+        assert_eq!(s.path, PathBuf::from("models/page"));
+        assert_eq!(s.precision, Precision::B8);
+        assert_eq!(s.replicas, 2);
+        let s = TenantSpec::parse("page=models/page", 32, 1).unwrap();
+        assert_eq!(s.precision, Precision::F32);
+        let s = TenantSpec::parse("models/page", 1, 1).unwrap();
+        assert_eq!(s.name, "page");
+        assert_eq!(s.precision, Precision::B1);
+        // bare path WITH bits: the name comes from the stripped path
+        let s = TenantSpec::parse("models/page:8", 32, 1).unwrap();
+        assert_eq!(s.name, "page");
+        assert_eq!(s.path, PathBuf::from("models/page"));
+        assert_eq!(s.precision, Precision::B8);
+        // a ':<n>' suffix that is NOT a valid precision is part of the
+        // path, so directories containing colons stay servable
+        let s = TenantSpec::parse("snap=/data/nightly:2024", 32, 1).unwrap();
+        assert_eq!(s.path, PathBuf::from("/data/nightly:2024"));
+        assert_eq!(s.precision, Precision::F32);
+        assert!(TenantSpec::parse("=x", 32, 1).is_err());
+        assert!(TenantSpec::parse("page=models/page", 7, 1).is_err(), "bad default bits");
+    }
+
+    struct Echo;
+
+    impl Engine for Echo {
+        fn name(&self) -> String {
+            "echo".into()
+        }
+        fn features(&self) -> usize {
+            2
+        }
+        fn infer(&mut self, x: &Matrix) -> anyhow::Result<Vec<i32>> {
+            Ok((0..x.rows()).map(|i| x.at(i, 0) as i32).collect())
+        }
+    }
+
+    #[test]
+    fn single_registry_routes_and_maps_error_codes() {
+        let registry = ModelRegistry::single(
+            "echo",
+            "demo",
+            2,
+            &BatcherConfig::default(),
+            vec![Box::new(|| Ok(Box::new(Echo) as Box<dyn Engine>))],
+        );
+        assert_eq!(registry.default_model(), "echo");
+        assert_eq!(registry.names(), vec!["echo".to_string()]);
+        let (model, resp) = registry.submit_blocking(None, vec![5.0, 0.0]).unwrap();
+        assert_eq!((model.as_str(), resp.label), ("echo", 5));
+        let err = registry.submit_blocking(Some("nope"), vec![1.0, 0.0]).unwrap_err();
+        assert_eq!(err.code(), "unknown_model");
+        let err = registry.submit_blocking(Some("echo"), vec![1.0]).unwrap_err();
+        assert_eq!(err.code(), "bad_width");
+        let err = registry.reload(Some("echo"), None, None).unwrap_err();
+        assert_eq!(err.code(), "reload_failed");
+        let infos = registry.describe();
+        assert_eq!(infos.len(), 1);
+        assert!(infos[0].is_default);
+        assert_eq!(infos[0].stats.responses, 1);
+    }
+
+    #[test]
+    fn open_serves_mixed_tenants_and_hot_swaps() {
+        let root = std::env::temp_dir().join("loghd_registry_test");
+        let _ = std::fs::remove_dir_all(&root);
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 300, 40);
+        let opts =
+            TrainOptions { epochs: 1, conv_epochs: 1, extra_bundles: 1, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 128, 1, &opts).unwrap();
+        crate::loghd::persist::save(&root.join("log"), &st.encoder, &st.loghd).unwrap();
+        crate::loghd::persist::save_conventional(
+            &root.join("conv"),
+            &st.encoder,
+            &ConventionalModel::new(st.prototypes.clone()),
+        )
+        .unwrap();
+        let specs = vec![
+            TenantSpec {
+                name: "log".into(),
+                path: root.join("log"),
+                precision: Precision::B1,
+                replicas: 2,
+            },
+            TenantSpec {
+                name: "conv".into(),
+                path: root.join("conv"),
+                precision: Precision::F32,
+                replicas: 1,
+            },
+        ];
+        let registry =
+            ModelRegistry::open(&specs, Some("log"), &BatcherConfig::default()).unwrap();
+        for i in 0..6 {
+            let (m, resp) = registry.submit_blocking(None, ds.x_test.row(i).to_vec()).unwrap();
+            assert_eq!(m, "log");
+            assert!((0..5).contains(&resp.label));
+        }
+        let (m, resp) =
+            registry.submit_blocking(Some("conv"), ds.x_test.row(0).to_vec()).unwrap();
+        assert_eq!(m, "conv");
+        assert!((0..5).contains(&resp.label));
+        let infos = registry.describe();
+        assert_eq!(infos.len(), 2);
+        let log = infos.iter().find(|i| i.name == "log").unwrap();
+        assert_eq!((log.kind.as_str(), log.precision, log.replicas), ("loghd", "b1", 2));
+        // Hot-swap the loghd tenant to int8; old and new widths match.
+        let info = registry.reload(Some("log"), None, Some(8)).unwrap();
+        assert_eq!(info.precision, "b8");
+        let (_, resp) =
+            registry.submit_blocking(Some("log"), ds.x_test.row(0).to_vec()).unwrap();
+        assert!((0..5).contains(&resp.label));
+        // Unknown tenant and bad default are rejected.
+        assert!(registry.reload(Some("nope"), None, None).is_err());
+        assert!(ModelRegistry::open(&specs, Some("nope"), &BatcherConfig::default()).is_err());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,12 +1,22 @@
-//! TCP JSON-lines front-end over the coordinator.
+//! TCP JSON-lines front-end over the model registry.
 //!
-//! Wire protocol (one JSON document per line):
-//!   -> {"features": [f, f, ...]}
-//!   <- {"id": N, "label": L, "latency_us": T}
-//!   <- {"error": "..."}            (bad request / backpressure)
-//! A line `{"cmd": "stats"}` returns the metrics snapshot. Connections are
-//! handled on per-client threads; the coordinator itself serializes work
-//! through the dynamic batcher.
+//! One JSON document per line; the full protocol (schemas, admin verbs,
+//! error codes, backpressure semantics) is specified in
+//! `docs/PROTOCOL.md` at the repo root — that file is the source of
+//! truth for client authors. In short:
+//!
+//!   -> {"features": [f, ...], "model": "name"?}
+//!   <- {"id": N, "model": "name", "label": L, "latency_us": T}
+//!   -> {"cmd": "stats", "model": "name"?}     per-tenant metrics snapshot
+//!   -> {"cmd": "models"}                      tenant list + per-model stats
+//!   -> {"cmd": "reload", "model"?, "path"?, "bits"?}   hot-swap a tenant
+//!   <- {"error": "...", "code": "..."}        bad request / routing /
+//!                                             per-tenant backpressure
+//!
+//! Every error is a *reply*, not a disconnect: the connection survives
+//! malformed lines, unknown tenants, width mismatches, and queue-full
+//! rejections. Connections are handled on per-client threads; each
+//! tenant's coordinator serializes work through its own dynamic batcher.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -17,7 +27,8 @@ use anyhow::{Context, Result};
 
 use crate::util::json::{self, Value};
 
-use super::batcher::Coordinator;
+use super::registry::{ModelRegistry, TenantInfo};
+use super::stats::StatsSnapshot;
 
 /// A running TCP server.
 pub struct Server {
@@ -27,8 +38,8 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `coordinator`.
-    pub fn start(addr: &str, coordinator: Arc<Coordinator>) -> Result<Self> {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `registry`.
+    pub fn start(addr: &str, registry: Arc<ModelRegistry>) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -40,9 +51,9 @@ impl Server {
                 while !stop2.load(Ordering::Acquire) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let coord = Arc::clone(&coordinator);
+                            let reg = Arc::clone(&registry);
                             std::thread::spawn(move || {
-                                let _ = handle_client(stream, coord);
+                                let _ = handle_client(stream, reg);
                             });
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -70,11 +81,11 @@ impl Drop for Server {
     }
 }
 
-fn error_line(msg: &str) -> String {
-    json::to_string(&json::obj(vec![("error", json::s(msg))]))
+fn error_line(msg: &str, code: &str) -> String {
+    json::to_string(&json::obj(vec![("error", json::s(msg)), ("code", json::s(code))]))
 }
 
-fn handle_client(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
+fn handle_client(stream: TcpStream, registry: Arc<ModelRegistry>) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -83,9 +94,9 @@ fn handle_client(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match handle_line(&line, &coord) {
+        let reply = match handle_line(&line, &registry) {
             Ok(v) => v,
-            Err(msg) => error_line(&msg),
+            Err((msg, code)) => error_line(&msg, code),
         };
         writer.write_all(reply.as_bytes())?;
         writer.write_all(b"\n")?;
@@ -94,34 +105,115 @@ fn handle_client(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
     Ok(())
 }
 
-fn handle_line(line: &str, coord: &Coordinator) -> Result<String, String> {
-    let v = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
-    if v.get("cmd").and_then(Value::as_str) == Some("stats") {
-        let s = coord.stats();
-        return Ok(json::to_string(&json::obj(vec![
-            ("requests", json::num(s.requests as f64)),
-            ("responses", json::num(s.responses as f64)),
-            ("rejected", json::num(s.rejected as f64)),
-            ("mean_batch", json::num(s.mean_batch_size)),
-            ("latency_p50_us", json::num(s.latency_p50_us)),
-            ("latency_p99_us", json::num(s.latency_p99_us)),
-            ("throughput_rps", json::num(s.throughput_rps)),
-        ])));
+fn stats_fields(s: &StatsSnapshot) -> Vec<(&'static str, Value)> {
+    vec![
+        ("requests", json::num(s.requests as f64)),
+        ("responses", json::num(s.responses as f64)),
+        ("rejected", json::num(s.rejected as f64)),
+        ("failures", json::num(s.failures as f64)),
+        ("reloads", json::num(s.reloads as f64)),
+        ("mean_batch", json::num(s.mean_batch_size)),
+        ("latency_p50_us", json::num(s.latency_p50_us)),
+        ("latency_p99_us", json::num(s.latency_p99_us)),
+        ("throughput_rps", json::num(s.throughput_rps)),
+    ]
+}
+
+fn tenant_json(info: &TenantInfo) -> Value {
+    let mut fields = vec![
+        ("model", json::s(info.name.clone())),
+        ("kind", json::s(info.kind.clone())),
+        ("precision", json::s(info.precision)),
+        ("replicas", json::num(info.replicas as f64)),
+        ("live_replicas", json::num(info.live_replicas as f64)),
+        ("features", json::num(info.features as f64)),
+        ("default", Value::Bool(info.is_default)),
+    ];
+    if let Some(path) = &info.path {
+        fields.push(("path", json::s(path.display().to_string())));
     }
-    let feats = v
-        .get("features")
-        .and_then(Value::as_array)
-        .ok_or_else(|| "missing 'features' array".to_string())?;
-    let features: Vec<f32> = feats
-        .iter()
-        .map(|f| f.as_f64().map(|x| x as f32).ok_or_else(|| "non-numeric feature".to_string()))
-        .collect::<Result<_, _>>()?;
-    let resp = coord.submit_blocking(features).map_err(|e| e.to_string())?;
-    Ok(json::to_string(&json::obj(vec![
-        ("id", json::num(resp.id as f64)),
-        ("label", json::num(resp.label as f64)),
-        ("latency_us", json::num(resp.latency.as_secs_f64() * 1e6)),
-    ])))
+    fields.extend(stats_fields(&info.stats));
+    json::obj(fields)
+}
+
+type WireError = (String, &'static str);
+
+/// A field that must be a string when present — a non-string value is a
+/// protocol error, never silently treated as absent (a numeric "model"
+/// must not route to the default tenant).
+fn optional_str<'a>(v: &'a Value, key: &str) -> Result<Option<&'a str>, WireError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(Value::String(s)) => Ok(Some(s.as_str())),
+        Some(_) => Err((format!("'{key}' must be a string"), "bad_request")),
+    }
+}
+
+fn handle_line(line: &str, registry: &ModelRegistry) -> Result<String, WireError> {
+    let v = json::parse(line).map_err(|e| (format!("bad json: {e}"), "bad_request"))?;
+    let model = optional_str(&v, "model")?;
+    match optional_str(&v, "cmd")? {
+        Some("stats") => {
+            let (name, s) =
+                registry.stats(model).map_err(|e| (e.to_string(), e.code()))?;
+            let mut fields = vec![("model", json::s(name))];
+            fields.extend(stats_fields(&s));
+            Ok(json::to_string(&json::obj(fields)))
+        }
+        Some("models") => {
+            let models: Vec<Value> =
+                registry.describe().iter().map(tenant_json).collect();
+            Ok(json::to_string(&json::obj(vec![
+                ("default", json::s(registry.default_model())),
+                ("models", json::arr(models)),
+            ])))
+        }
+        Some("reload") => {
+            let path = optional_str(&v, "path")?.map(std::path::Path::new);
+            let bits = match v.get("bits") {
+                None => None,
+                Some(b) => match b.as_f64() {
+                    Some(x) if x.fract() == 0.0 && x >= 0.0 => Some(x as u32),
+                    _ => {
+                        return Err(("'bits' must be a non-negative integer".into(), "bad_request"))
+                    }
+                },
+            };
+            let info = registry
+                .reload(model, path, bits)
+                .map_err(|e| (e.to_string(), e.code()))?;
+            Ok(json::to_string(&json::obj(vec![
+                ("reloaded", json::s(info.name)),
+                ("kind", json::s(info.kind)),
+                ("precision", json::s(info.precision)),
+                ("replicas", json::num(info.replicas as f64)),
+            ])))
+        }
+        Some(other) => Err((format!("unknown cmd '{other}'"), "bad_request")),
+        None => {
+            let feats = v
+                .get("features")
+                .and_then(Value::as_array)
+                .ok_or_else(|| ("missing 'features' array".to_string(), "bad_request"))?;
+            let features: Vec<f32> = feats
+                .iter()
+                .map(|f| {
+                    f.as_f64()
+                        .map(|x| x as f32)
+                        .ok_or_else(|| ("non-numeric feature".to_string(), "bad_request"))
+                })
+                .collect::<Result<_, _>>()?;
+            let (name, resp) = registry
+                .submit_blocking(model, features)
+                .map_err(|e| (e.to_string(), e.code()))?;
+            Ok(json::to_string(&json::obj(vec![
+                ("id", json::num(resp.id as f64)),
+                ("model", json::s(name)),
+                ("label", json::num(resp.label as f64)),
+                ("latency_us", json::num(resp.latency.as_secs_f64() * 1e6)),
+            ])))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -144,46 +236,83 @@ mod tests {
         }
     }
 
-    #[test]
-    fn round_trip_over_tcp() {
-        let coord = Arc::new(Coordinator::start(
+    fn echo_registry() -> Arc<ModelRegistry> {
+        Arc::new(ModelRegistry::single(
+            "echo",
+            "demo",
             2,
-            BatcherConfig::default(),
-            Box::new(|| Ok(Box::new(Echo))),
-        ));
-        let mut server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
-        let mut stream = TcpStream::connect(server.addr).unwrap();
-        stream.write_all(b"{\"features\": [7, 0]}\n{\"cmd\": \"stats\"}\n").unwrap();
-        stream.shutdown(std::net::Shutdown::Write).unwrap();
-        let reader = BufReader::new(stream);
-        let lines: Vec<String> = reader.lines().map(|l| l.unwrap()).collect();
-        assert_eq!(lines.len(), 2);
-        let first = json::parse(&lines[0]).unwrap();
-        assert_eq!(first.get("label").and_then(Value::as_f64), Some(7.0));
-        let stats = json::parse(&lines[1]).unwrap();
-        assert_eq!(stats.get("responses").and_then(Value::as_f64), Some(1.0));
-        server.shutdown();
+            &BatcherConfig::default(),
+            vec![Box::new(|| Ok(Box::new(Echo) as Box<dyn Engine>))],
+        ))
     }
 
     #[test]
-    fn bad_requests_get_errors() {
-        let coord = Arc::new(Coordinator::start(
-            2,
-            BatcherConfig::default(),
-            Box::new(|| Ok(Box::new(Echo))),
-        ));
-        let mut server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    fn round_trip_over_tcp() {
+        let registry = echo_registry();
+        let mut server = Server::start("127.0.0.1:0", Arc::clone(&registry)).unwrap();
         let mut stream = TcpStream::connect(server.addr).unwrap();
         stream
-            .write_all(b"not json\n{\"features\": [1]}\n{\"nope\": 1}\n")
+            .write_all(
+                b"{\"features\": [7, 0]}\n{\"model\": \"echo\", \"features\": [3, 0]}\n{\"cmd\": \"stats\"}\n{\"cmd\": \"models\"}\n",
+            )
             .unwrap();
         stream.shutdown(std::net::Shutdown::Write).unwrap();
         let reader = BufReader::new(stream);
         let lines: Vec<String> = reader.lines().map(|l| l.unwrap()).collect();
-        assert_eq!(lines.len(), 3);
-        for line in lines {
-            assert!(json::parse(&line).unwrap().get("error").is_some(), "{line}");
-        }
+        assert_eq!(lines.len(), 4);
+        let first = json::parse(&lines[0]).unwrap();
+        assert_eq!(first.get("label").and_then(Value::as_f64), Some(7.0));
+        assert_eq!(first.get("model").and_then(Value::as_str), Some("echo"));
+        let second = json::parse(&lines[1]).unwrap();
+        assert_eq!(second.get("label").and_then(Value::as_f64), Some(3.0));
+        let stats = json::parse(&lines[2]).unwrap();
+        assert_eq!(stats.get("responses").and_then(Value::as_f64), Some(2.0));
+        assert_eq!(stats.get("model").and_then(Value::as_str), Some("echo"));
+        let models = json::parse(&lines[3]).unwrap();
+        assert_eq!(models.get("default").and_then(Value::as_str), Some("echo"));
+        let list = models.get("models").and_then(Value::as_array).unwrap();
+        assert_eq!(list.len(), 1);
+        assert_eq!(list[0].get("replicas").and_then(Value::as_f64), Some(1.0));
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_get_coded_errors() {
+        let registry = echo_registry();
+        let mut server = Server::start("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        stream
+            .write_all(
+                b"not json\n{\"features\": [1]}\n{\"nope\": 1}\n{\"model\": \"ghost\", \"features\": [1, 2]}\n{\"cmd\": \"frobnicate\"}\n{\"model\": 5, \"features\": [1, 2]}\n{\"cmd\": 7, \"features\": [1, 2]}\n{\"cmd\": \"reload\", \"bits\": \"8\"}\n{\"features\": [4, 0]}\n",
+            )
+            .unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let reader = BufReader::new(stream);
+        let lines: Vec<String> = reader.lines().map(|l| l.unwrap()).collect();
+        assert_eq!(lines.len(), 9);
+        let code = |i: usize| {
+            json::parse(&lines[i])
+                .unwrap()
+                .get("code")
+                .and_then(Value::as_str)
+                .map(String::from)
+        };
+        assert_eq!(code(0).as_deref(), Some("bad_request"));
+        assert_eq!(code(1).as_deref(), Some("bad_width"));
+        assert_eq!(code(2).as_deref(), Some("bad_request"));
+        assert_eq!(code(3).as_deref(), Some("unknown_model"));
+        assert_eq!(code(4).as_deref(), Some("bad_request"));
+        // Type-strict fields: a numeric "model" or "cmd" must NOT silently
+        // route to the default tenant, and string "bits" must not silently
+        // reload at the old precision.
+        assert_eq!(code(5).as_deref(), Some("bad_request"));
+        assert_eq!(code(6).as_deref(), Some("bad_request"));
+        assert_eq!(code(7).as_deref(), Some("bad_request"));
+        // The connection survived all eight errors: the final good request
+        // is answered normally.
+        let last = json::parse(&lines[8]).unwrap();
+        assert!(last.get("error").is_none(), "{}", lines[8]);
+        assert_eq!(last.get("label").and_then(Value::as_f64), Some(4.0));
         server.shutdown();
     }
 }

@@ -74,8 +74,16 @@ pub struct StatsCollector {
     pub requests: u64,
     pub responses: u64,
     pub rejected: u64,
+    /// Admitted requests whose batch failed inference (answered with an
+    /// engine-failure error, not a label) — without this, a tenant
+    /// failing every batch would only show up as requests leaking past
+    /// responses+rejected.
+    pub failures: u64,
     pub batches: u64,
     pub batched_items: u64,
+    /// Successful per-replica engine hot-swaps (a pool-wide reload of R
+    /// replicas increments this R times as each worker adopts it).
+    pub reloads: u64,
     pub started: Option<std::time::Instant>,
 }
 
@@ -85,7 +93,9 @@ pub struct StatsSnapshot {
     pub requests: u64,
     pub responses: u64,
     pub rejected: u64,
+    pub failures: u64,
     pub batches: u64,
+    pub reloads: u64,
     pub mean_batch_size: f64,
     pub latency_p50_us: f64,
     pub latency_p95_us: f64,
@@ -102,7 +112,9 @@ impl StatsCollector {
             requests: self.requests,
             responses: self.responses,
             rejected: self.rejected,
+            failures: self.failures,
             batches: self.batches,
+            reloads: self.reloads,
             mean_batch_size: if self.batches == 0 {
                 0.0
             } else {

@@ -1,9 +1,15 @@
 //! Inference engines the coordinator can run.
+//!
+//! Each worker replica in a [`super::Coordinator`] pool owns one engine
+//! instance built from an [`EngineFactory`]; the pool pulls ready batches
+//! (shards) off the shared queue in arrival order — round-robin across
+//! idle replicas, least-loaded under skew.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::baselines::conventional::ConventionalModel;
 use crate::encoder::Encoder;
 use crate::loghd::model::LogHdModel;
 use crate::loghd::qmodel::QuantizedLogHdModel;
@@ -164,6 +170,61 @@ impl Engine for NativeEngine {
     }
 }
 
+/// The conventional-HDC baseline served natively: encoder + one-prototype-
+/// per-class cosine argmax. Sub-f32 precisions are post-training-quantized
+/// round-trips of the prototype matrix served through the f32 kernels
+/// (there is no packed conventional kernel — the O(C·D) baseline exists
+/// for tenant-mix comparisons, not throughput records).
+pub struct ConventionalEngine {
+    pub encoder: Encoder,
+    pub precision: Precision,
+    model: ConventionalModel,
+    label: String,
+}
+
+impl ConventionalEngine {
+    pub fn new(
+        encoder: Encoder,
+        model: ConventionalModel,
+        label: impl Into<String>,
+        precision: Precision,
+    ) -> Self {
+        let model = match precision {
+            Precision::F32 => model,
+            _ => ConventionalModel::new(quant::quantize_roundtrip(&model.prototypes, precision)),
+        };
+        Self { encoder, precision, model, label: label.into() }
+    }
+
+    /// Factory for [`super::Coordinator::start`] / `start_pool`.
+    pub fn factory(
+        encoder: Encoder,
+        model: ConventionalModel,
+        label: String,
+        precision: Precision,
+    ) -> EngineFactory {
+        Box::new(move || {
+            Ok(Box::new(ConventionalEngine::new(encoder, model, label, precision))
+                as Box<dyn Engine>)
+        })
+    }
+}
+
+impl Engine for ConventionalEngine {
+    fn name(&self) -> String {
+        format!("conv:{}:{}", self.label, self.precision.label())
+    }
+
+    fn features(&self) -> usize {
+        self.encoder.features()
+    }
+
+    fn infer(&mut self, x: &Matrix) -> Result<Vec<i32>> {
+        let enc = self.encoder.encode(x);
+        Ok(self.model.predict(&enc))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +271,23 @@ mod tests {
             let packed = matches!(precision, Precision::B1 | Precision::B8);
             assert_eq!(engine.model().is_none(), packed, "{precision:?}");
             assert_eq!(engine.quantized_model().is_some(), packed, "{precision:?}");
+        }
+    }
+
+    #[test]
+    fn conventional_engine_serves() {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 400, 50);
+        let opts = TrainOptions { epochs: 1, conv_epochs: 1, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 128, 1, &opts).unwrap();
+        let conv = ConventionalModel::new(st.prototypes.clone());
+        for precision in [Precision::F32, Precision::B8] {
+            let mut engine =
+                ConventionalEngine::new(st.encoder.clone(), conv.clone(), "page", precision);
+            assert_eq!(engine.features(), 10);
+            let labels = engine.infer(&ds.x_test.rows_slice(0, 10)).unwrap();
+            assert_eq!(labels.len(), 10);
+            assert!(labels.iter().all(|l| (0..5).contains(l)));
+            assert!(engine.name().starts_with("conv:"), "{}", engine.name());
         }
     }
 }

@@ -6,6 +6,25 @@
 //! - [`refine`]: perceptron-style bundle refinement (Eq. 8/9)
 //! - [`model`]: the assembled classifier (train / predict / memory math)
 //! - [`qmodel`]: the bit-packed serving twin (XNOR/popcount + int8 path)
+//! - [`persist`]: artifact save/load (the format the serving registry hosts)
+//!
+//! # Example
+//!
+//! Train a stack on a synthetic Table-I dataset and classify with the
+//! compressed model — `n ≈ log_k C` bundles instead of `C` prototypes:
+//!
+//! ```
+//! use loghd::data;
+//! use loghd::loghd::model::{TrainOptions, TrainedStack};
+//!
+//! let ds = data::generate_scaled(data::spec("page").unwrap(), 200, 40);
+//! let opts = TrainOptions { epochs: 1, conv_epochs: 0, extra_bundles: 0, ..Default::default() };
+//! let stack = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 256, 1, &opts).unwrap();
+//! let labels = stack.loghd.predict(&stack.encoder.encode(&ds.x_test));
+//! assert_eq!(labels.len(), 40);
+//! // Stored floats: n·D bundles + C·n profiles, below the C·D baseline.
+//! assert!(stack.loghd.budget_fraction() < 1.0);
+//! ```
 
 pub mod bundling;
 pub mod codebook;

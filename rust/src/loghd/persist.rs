@@ -2,11 +2,19 @@
 //! the same on-disk shapes the Python AOT path emits, so a Rust-trained
 //! stack and a Python-trained bundle are interchangeable for the native
 //! engine.
+//!
+//! Two native kinds share the layout (`model.json` `kind` field):
+//! `native-loghd` (bundles + profiles + codebook) and
+//! `native-conventional` (the O(C·D) prototype baseline). [`load_any`]
+//! dispatches on the kind — and falls back to the Python AOT
+//! `manifest.json` layout — which is what lets the serving registry host
+//! a mixed fleet of artifacts behind one wire protocol.
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::baselines::conventional::ConventionalModel;
 use crate::encoder::Encoder;
 use crate::loghd::codebook::Codebook;
 use crate::loghd::model::LogHdModel;
@@ -76,6 +84,83 @@ pub fn load(dir: &Path) -> Result<(Encoder, LogHdModel)> {
     Ok((encoder, model))
 }
 
+/// Save encoder + conventional baseline (prototype matrix) into `dir`.
+pub fn save_conventional(dir: &Path, encoder: &Encoder, model: &ConventionalModel) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let w = &encoder.w;
+    write_lht_f32(&dir.join("w.lht"), &[w.rows(), w.cols()], w.data())?;
+    write_lht_f32(&dir.join("b.lht"), &[encoder.b.len()], &encoder.b)?;
+    write_lht_f32(&dir.join("mu.lht"), &[encoder.mu.len()], &encoder.mu)?;
+    let h = &model.prototypes;
+    write_lht_f32(&dir.join("prototypes.lht"), &[h.rows(), h.cols()], h.data())?;
+    let manifest = json::obj(vec![
+        ("format", json::num(1.0)),
+        ("kind", json::s("native-conventional")),
+        ("classes", json::num(model.classes() as f64)),
+        ("d", json::num(model.d() as f64)),
+        ("features", json::num(encoder.features() as f64)),
+    ]);
+    std::fs::write(dir.join("model.json"), json::to_string_pretty(&manifest))?;
+    Ok(())
+}
+
+/// Load a baseline saved by [`save_conventional`].
+pub fn load_conventional(dir: &Path) -> Result<(Encoder, ConventionalModel)> {
+    let w = read_lht(&dir.join("w.lht"))?.to_matrix()?;
+    let b = read_lht(&dir.join("b.lht"))?.as_f32()?.to_vec();
+    let mu = read_lht(&dir.join("mu.lht"))?.as_f32()?.to_vec();
+    let encoder = Encoder::from_parts(w, b, mu);
+    let prototypes = read_lht(&dir.join("prototypes.lht"))?.to_matrix()?;
+    Ok((encoder, ConventionalModel::new(prototypes)))
+}
+
+/// A native artifact of any supported kind, as loaded by [`load_any`].
+pub enum LoadedModel {
+    LogHd(Encoder, LogHdModel),
+    Conventional(Encoder, ConventionalModel),
+}
+
+impl LoadedModel {
+    /// Short kind tag for logs and the `models` admin verb.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            LoadedModel::LogHd(..) => "loghd",
+            LoadedModel::Conventional(..) => "conventional",
+        }
+    }
+
+    /// Feature width the artifact's encoder admits.
+    pub fn features(&self) -> usize {
+        match self {
+            LoadedModel::LogHd(e, _) | LoadedModel::Conventional(e, _) => e.features(),
+        }
+    }
+}
+
+/// Load any artifact directory the registry can serve: a native model
+/// or a Python AOT bundle (served through the native engine). The kind
+/// probe is [`crate::runtime::artifact::ModelCard::load`] — the single
+/// place that knows how artifact directories identify themselves — so
+/// the registry's admission check and this loader can never disagree.
+pub fn load_any(dir: &Path) -> Result<LoadedModel> {
+    let card = crate::runtime::artifact::ModelCard::load(dir)?;
+    match card.kind.as_str() {
+        "native-loghd" => {
+            let (e, m) = load(dir)?;
+            Ok(LoadedModel::LogHd(e, m))
+        }
+        "native-conventional" => {
+            let (e, m) = load_conventional(dir)?;
+            Ok(LoadedModel::Conventional(e, m))
+        }
+        "aot-bundle" => {
+            let (e, m) = load_from_aot_bundle(dir)?;
+            Ok(LoadedModel::LogHd(e, m))
+        }
+        other => anyhow::bail!("{}: unknown artifact kind '{other}'", dir.display()),
+    }
+}
+
 /// Load a *Python-trained* artifact bundle (aot.py manifest layout) into a
 /// native engine pair — proves the two worlds interoperate.
 pub fn load_from_aot_bundle(dir: &Path) -> Result<(Encoder, LogHdModel)> {
@@ -128,6 +213,34 @@ mod tests {
         // predictions identical
         let e = st.encoder.encode(&ds.x_test);
         assert_eq!(st.loghd.predict(&e), model2.predict(&enc2.encode(&ds.x_test)));
+        // load_any dispatches to the same model
+        match load_any(&dir).unwrap() {
+            LoadedModel::LogHd(_, m) => assert_eq!(m.bundles.data(), st.loghd.bundles.data()),
+            LoadedModel::Conventional(..) => panic!("wrong kind"),
+        }
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn conventional_roundtrip_and_kind_dispatch() {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 300, 60);
+        let opts = TrainOptions { epochs: 1, conv_epochs: 1, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 128, 3, &opts).unwrap();
+        let conv = ConventionalModel::new(st.prototypes.clone());
+        let dir = std::env::temp_dir().join("loghd_persist_conv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        save_conventional(&dir, &st.encoder, &conv).unwrap();
+        let loaded = load_any(&dir).unwrap();
+        assert_eq!(loaded.kind(), "conventional");
+        assert_eq!(loaded.features(), 10);
+        match loaded {
+            LoadedModel::Conventional(enc2, conv2) => {
+                let e = st.encoder.encode(&ds.x_test);
+                assert_eq!(conv.predict(&e), conv2.predict(&enc2.encode(&ds.x_test)));
+            }
+            LoadedModel::LogHd(..) => panic!("wrong kind"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(load_any(&dir).is_err(), "missing dir must error");
     }
 }

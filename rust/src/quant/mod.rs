@@ -8,6 +8,23 @@
 //! domain (`loghd::qmodel` over the [`to_bit_matrix`](Quantized::to_bit_matrix)
 //! / [`to_i16_matrix`](Quantized::to_i16_matrix) kernel views); the other
 //! widths dequantize on the fly as before.
+//!
+//! # Example
+//!
+//! Symmetric per-tensor quantization bounds the round-trip error by the
+//! step size:
+//!
+//! ```
+//! use loghd::quant::{self, Precision};
+//! use loghd::tensor::Matrix;
+//!
+//! let m = Matrix::from_vec(1, 4, vec![-1.0, -0.25, 0.25, 1.0]);
+//! let q = quant::quantize(&m, Precision::B8);
+//! let back = quant::dequantize(&q);
+//! for (a, b) in m.data().iter().zip(back.data()) {
+//!     assert!((a - b).abs() <= q.scale);
+//! }
+//! ```
 
 pub mod packed;
 

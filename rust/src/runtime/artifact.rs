@@ -218,6 +218,17 @@ impl Manifest {
         self.entries.iter().find(|e| e.name == name)
     }
 
+    /// The registry-facing identity of this bundle.
+    pub fn card(&self) -> ModelCard {
+        ModelCard {
+            dir: self.dir.clone(),
+            kind: "aot-bundle".to_string(),
+            classes: self.classes,
+            d: self.d,
+            features: self.features,
+        }
+    }
+
     /// Load a named tensor from the bundle.
     pub fn tensor(&self, name: &str) -> Result<LhtTensor> {
         let (_, path) = self
@@ -226,6 +237,53 @@ impl Manifest {
             .find(|(n, _)| n == name)
             .with_context(|| format!("tensor '{name}' not in manifest"))?;
         read_lht(path)
+    }
+}
+
+/// The registry-facing identity of an artifact directory: just enough
+/// metadata to admit, route, and hot-swap a serving tenant without loading
+/// its tensors. Covers both native artifacts (`model.json`, kinds
+/// `native-loghd` / `native-conventional`) and Python AOT bundles
+/// (`manifest.json`, kind `aot-bundle`).
+#[derive(Debug, Clone)]
+pub struct ModelCard {
+    pub dir: PathBuf,
+    pub kind: String,
+    pub classes: usize,
+    pub d: usize,
+    pub features: usize,
+}
+
+impl ModelCard {
+    /// Read the identity of the artifact at `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let native = dir.join("model.json");
+        if native.exists() {
+            let text = std::fs::read_to_string(&native)
+                .with_context(|| format!("reading {}", native.display()))?;
+            let v = json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", native.display()))?;
+            let get = |key: &str| -> Result<usize> {
+                v.get(key)
+                    .and_then(json::Value::as_usize)
+                    .with_context(|| format!("model.json missing {key}"))
+            };
+            return Ok(Self {
+                dir: dir.to_path_buf(),
+                kind: v
+                    .get("kind")
+                    .and_then(json::Value::as_str)
+                    .unwrap_or("native-loghd")
+                    .to_string(),
+                classes: get("classes")?,
+                d: get("d")?,
+                features: get("features")?,
+            });
+        }
+        if dir.join("manifest.json").exists() {
+            return Ok(Manifest::load(dir)?.card());
+        }
+        bail!("{}: no model.json or manifest.json — not an artifact dir", dir.display())
     }
 }
 
@@ -278,6 +336,27 @@ mod tests {
         assert_eq!(m.entry("encode").unwrap().inputs[0].1, vec![4, 10]);
         assert!(m.entry("nope").is_none());
         assert!((m.clean_acc_loghd - 0.8).abs() < 1e-12);
+        let card = ModelCard::load(&dir).unwrap();
+        assert_eq!(card.kind, "aot-bundle");
+        assert_eq!(card.features, 10);
+        assert_eq!(card.classes, 5);
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn model_card_reads_native_manifest() {
+        let dir = std::env::temp_dir().join("loghd_card_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+ "format": 1, "kind": "native-conventional",
+ "classes": 12, "d": 2000, "features": 261
+}"#;
+        std::fs::write(dir.join("model.json"), manifest).unwrap();
+        let card = ModelCard::load(&dir).unwrap();
+        assert_eq!(card.kind, "native-conventional");
+        assert_eq!(card.features, 261);
+        assert_eq!(card.d, 2000);
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(ModelCard::load(&dir).is_err());
     }
 }

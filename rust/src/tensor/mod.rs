@@ -4,6 +4,21 @@
 //! bundling, refinement — runs on this small tensor layer. It is written
 //! for clarity first and then hand-optimized where the profile said it
 //! matters (see `matmul.rs` and EXPERIMENTS.md §Perf).
+//!
+//! # Example
+//!
+//! The serving hot path is `matmul_nt` — rows of `a` dotted with rows of
+//! `b` (i.e. `a · bᵀ`, the activation shape):
+//!
+//! ```
+//! use loghd::tensor::{matmul_nt, Matrix};
+//!
+//! let a = Matrix::from_vec(2, 3, vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0]);
+//! let b = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+//! let c = matmul_nt(&a, &b);
+//! assert_eq!((c.rows(), c.cols()), (2, 2));
+//! assert_eq!(c.data(), &[1.0, 4.0, 2.0, 5.0]);
+//! ```
 
 mod bitops;
 mod matmul;

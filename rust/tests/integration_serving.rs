@@ -1,0 +1,236 @@
+//! Multi-tenant serving integration (the PR-2 acceptance path):
+//!
+//! - a registry hosting ≥2 named models at different precisions AND
+//!   feature widths behind one TCP endpoint,
+//! - routing by the request's `"model"` field (default tenant when
+//!   omitted),
+//! - a mid-stream hot reload that drops no request,
+//! - per-model stats snapshots that diverge under skewed load,
+//! - and the error-path contract: malformed JSON, wrong feature width,
+//!   unknown model, and queue-full backpressure each produce a structured
+//!   `{"error", "code"}` reply without killing the connection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use loghd::coordinator::{BatcherConfig, Engine, ModelRegistry, Server, TenantSpec};
+use loghd::data;
+use loghd::loghd::model::{TrainOptions, TrainedStack};
+use loghd::loghd::persist;
+use loghd::quant::Precision;
+use loghd::tensor::Matrix;
+use loghd::util::json::{self, Value};
+
+fn train_and_save(dataset: &str, d: usize, seed: u64, dir: &Path) {
+    let spec = data::spec(dataset).unwrap();
+    let ds = data::generate_scaled(spec, 400, 50);
+    let opts =
+        TrainOptions { epochs: 2, conv_epochs: 0, extra_bundles: 1, ..Default::default() };
+    let st =
+        TrainedStack::train(&ds.x_train, &ds.y_train, spec.classes, d, seed, &opts).unwrap();
+    persist::save(dir, &st.encoder, &st.loghd).unwrap();
+}
+
+/// One JSON-lines client connection.
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Self { writer: stream, reader }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Value {
+        writeln!(self.writer, "{line}").unwrap();
+        let mut buf = String::new();
+        self.reader.read_line(&mut buf).unwrap();
+        json::parse(buf.trim()).unwrap_or_else(|e| panic!("bad reply '{buf}': {e}"))
+    }
+}
+
+fn features_json(width: usize) -> String {
+    format!("{{\"features\": [{}]}}", vec!["0.5"; width].join(", "))
+}
+
+#[test]
+fn multi_tenant_routing_hot_reload_and_stats_divergence() {
+    let root = std::env::temp_dir().join("loghd_it_serving");
+    let _ = std::fs::remove_dir_all(&root);
+    let page_dir = root.join("page");
+    let pamap_dir = root.join("pamap");
+    train_and_save("page", 128, 1, &page_dir); // F=10
+    train_and_save("pamap2", 128, 2, &pamap_dir); // F=75
+    let specs = vec![
+        TenantSpec {
+            name: "page".into(),
+            path: page_dir.clone(),
+            precision: Precision::F32,
+            replicas: 2,
+        },
+        TenantSpec {
+            name: "pamap".into(),
+            path: pamap_dir.clone(),
+            precision: Precision::B1,
+            replicas: 1,
+        },
+    ];
+    let registry = Arc::new(
+        ModelRegistry::open(&specs, Some("page"), &BatcherConfig::default()).unwrap(),
+    );
+    let mut server = Server::start("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+    let mut client = Client::connect(server.addr);
+
+    // The models verb sees both tenants at their precisions.
+    let models = client.roundtrip(r#"{"cmd": "models"}"#);
+    assert_eq!(models.get("default").and_then(Value::as_str), Some("page"));
+    let list = models.get("models").and_then(Value::as_array).unwrap();
+    assert_eq!(list.len(), 2);
+    let pamap = list
+        .iter()
+        .find(|m| m.get("model").and_then(Value::as_str) == Some("pamap"))
+        .unwrap();
+    assert_eq!(pamap.get("precision").and_then(Value::as_str), Some("b1"));
+    let page = list
+        .iter()
+        .find(|m| m.get("model").and_then(Value::as_str) == Some("page"))
+        .unwrap();
+    assert_eq!(page.get("replicas").and_then(Value::as_f64), Some(2.0));
+
+    // Routing: no "model" field -> default tenant; explicit field routes.
+    let r = client.roundtrip(&features_json(10));
+    assert_eq!(r.get("model").and_then(Value::as_str), Some("page"), "{r:?}");
+    assert!(r.get("label").and_then(Value::as_f64).is_some());
+    let r = client.roundtrip(&format!(
+        "{{\"model\": \"pamap\", \"features\": [{}]}}",
+        vec!["0.5"; 75].join(", ")
+    ));
+    assert_eq!(r.get("model").and_then(Value::as_str), Some("pamap"));
+
+    // Skewed load makes the per-model snapshots diverge.
+    for _ in 0..8 {
+        let r = client.roundtrip(&features_json(10));
+        assert!(r.get("error").is_none(), "{r:?}");
+    }
+    let s_page = client.roundtrip(r#"{"cmd": "stats", "model": "page"}"#);
+    let s_pamap = client.roundtrip(r#"{"cmd": "stats", "model": "pamap"}"#);
+    let responses =
+        |v: &Value| v.get("responses").and_then(Value::as_f64).unwrap() as u64;
+    assert!(responses(&s_page) >= 9);
+    assert_eq!(responses(&s_pamap), 1);
+    assert_ne!(responses(&s_page), responses(&s_pamap));
+
+    // Hot reload mid-stream: a background client keeps the default tenant
+    // under load while the artifact is retrained on disk and swapped to
+    // int8 — every request must be answered.
+    let streamer = {
+        let reg = Arc::clone(&registry);
+        std::thread::spawn(move || {
+            let mut ok = 0;
+            for _ in 0..200 {
+                if reg.submit_blocking(Some("page"), vec![0.5; 10]).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        })
+    };
+    train_and_save("page", 128, 7, &page_dir); // retrain in place (same width)
+    let r = client.roundtrip(r#"{"cmd": "reload", "model": "page", "bits": 8}"#);
+    assert_eq!(r.get("reloaded").and_then(Value::as_str), Some("page"), "{r:?}");
+    assert_eq!(r.get("precision").and_then(Value::as_str), Some("b8"));
+    assert_eq!(streamer.join().unwrap(), 200, "requests dropped across hot swap");
+    // Both replicas adopt the swap once they pass through the batch loop.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let s = client.roundtrip(r#"{"cmd": "stats", "model": "page"}"#);
+        if s.get("reloads").and_then(Value::as_f64).unwrap_or(0.0) >= 2.0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "replicas never adopted the reload: {s:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // Serving continues on the swapped engine.
+    let r = client.roundtrip(&features_json(10));
+    assert!(r.get("label").and_then(Value::as_f64).is_some(), "{r:?}");
+
+    // A reload that would change the admitted feature width is refused
+    // with a structured error (and the tenant keeps serving).
+    let r = client.roundtrip(&format!(
+        "{{\"cmd\": \"reload\", \"model\": \"page\", \"path\": \"{}\"}}",
+        pamap_dir.display()
+    ));
+    assert_eq!(r.get("code").and_then(Value::as_str), Some("reload_failed"), "{r:?}");
+    let r = client.roundtrip(&features_json(10));
+    assert!(r.get("error").is_none(), "{r:?}");
+
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Trivial engine for the backpressure test (no model load needed).
+struct Echo;
+
+impl Engine for Echo {
+    fn name(&self) -> String {
+        "echo".into()
+    }
+    fn features(&self) -> usize {
+        2
+    }
+    fn infer(&mut self, x: &Matrix) -> anyhow::Result<Vec<i32>> {
+        Ok((0..x.rows()).map(|i| x.at(i, 0) as i32).collect())
+    }
+}
+
+#[test]
+fn queue_full_backpressure_is_a_structured_reply() {
+    // Tiny queue + long fill window: concurrent clients overflow
+    // max_pending while the worker is still waiting to fill its batch.
+    let cfg = BatcherConfig {
+        max_batch: 64,
+        max_delay: Duration::from_millis(400),
+        max_pending: 2,
+    };
+    let registry = Arc::new(ModelRegistry::single(
+        "echo",
+        "demo",
+        2,
+        &cfg,
+        vec![Box::new(|| Ok(Box::new(Echo) as Box<dyn Engine>))],
+    ));
+    let mut server = Server::start("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+    let handles: Vec<_> = (0..10)
+        .map(|_| {
+            let addr = server.addr;
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let v = c.roundtrip(r#"{"features": [1, 0]}"#);
+                let rejected = v.get("error").is_some();
+                if rejected {
+                    assert_eq!(
+                        v.get("code").and_then(Value::as_str),
+                        Some("backpressure"),
+                        "{v:?}"
+                    );
+                }
+                // The connection survives the rejection: a follow-up
+                // command on the same socket still gets an answer.
+                let s = c.roundtrip(r#"{"cmd": "stats"}"#);
+                assert!(s.get("requests").is_some(), "{s:?}");
+                rejected
+            })
+        })
+        .collect();
+    let results: Vec<bool> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let rejections = results.iter().filter(|r| **r).count();
+    assert!(rejections >= 1, "expected at least one backpressure rejection");
+    assert!(rejections < results.len(), "some requests must be admitted");
+    server.shutdown();
+}
