@@ -1,0 +1,145 @@
+//! Encoder hot-path benchmark: the fused SIMD panel-GEMM + polynomial-cos
+//! encode vs the scalar reference, plus the encode-vs-decode cost
+//! breakdown per serving precision (EXPERIMENTS.md §Perf).
+//!
+//! The kernel comparison is **single-core by construction** (both sides
+//! loop `encode_row` on the calling thread), so the reported speedup is
+//! the SIMD win, not a thread-count artifact. The end-to-end section uses
+//! the normal (pooled) engine path.
+//!
+//! Output: results/encode.csv, results/BENCH_encode.json, and a repo-root
+//! BENCH_encode.json snapshot so the perf trajectory is reviewable in the
+//! tree (refresh it from CI's artifact or a local run).
+
+use loghd::bench::{bench, CsvWriter};
+use loghd::coordinator::{Engine, NativeEngine};
+use loghd::data;
+use loghd::encoder::Encoder;
+use loghd::loghd::model::{TrainOptions, TrainedStack};
+use loghd::loghd::qmodel::QuantizedLogHdModel;
+use loghd::quant::Precision;
+use loghd::tensor::{simd, Matrix};
+use loghd::util::json;
+use loghd::util::rng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    let mut csv = CsvWriter::create("results/encode.csv", "path,metric,value")?;
+    let dispatch = simd::path_label();
+    println!("dispatch path: {dispatch}");
+
+    // --- Single-core fused-encode kernel vs scalar reference ---
+    // Serving-adjacent shape: batch=64 queries, F=64 features, D=2048.
+    let (bsz, f, d) = (64usize, 64usize, 2048usize);
+    let enc = Encoder::new(f, d, 0xE5C0DE);
+    let wpack = enc.wpack();
+    let mut rng = SplitMix64::new(42);
+    let x = Matrix::from_vec(bsz, f, rng.normals_f32(bsz * f));
+    let mut out = Matrix::zeros(bsz, d);
+
+    let scalar_stats = bench(3, 40, || {
+        for i in 0..bsz {
+            simd::scalar::encode_row(x.row(i), wpack, &enc.b, &enc.mu, out.row_mut(i));
+        }
+    });
+    println!("{}", scalar_stats.format_line("encode scalar 1-core batch=64 F=64 D=2048"));
+
+    let fused_stats = bench(3, 40, || {
+        for i in 0..bsz {
+            simd::encode_row(x.row(i), wpack, &enc.b, &enc.mu, out.row_mut(i));
+        }
+    });
+    let fused_label = format!("encode {dispatch} 1-core batch=64 F=64 D=2048");
+    println!("{}", fused_stats.format_line(&fused_label));
+
+    let speedup = scalar_stats.median / fused_stats.median;
+    let melems = (bsz * d) as f64 / fused_stats.median / 1e6;
+    println!(
+        "encode speedup vs scalar: {speedup:.2}x ({melems:.1} Melem/s fused; target >= 3x on AVX2)"
+    );
+    for (path, stats) in [("encode_scalar", &scalar_stats), ("encode_simd", &fused_stats)] {
+        csv.row(&[path.into(), "batch64_median_s".into(), format!("{:.9}", stats.median)])?;
+    }
+
+    // --- Encode-vs-decode breakdown on the serving shape (page model,
+    // D=2000, n=7 bundles) ---
+    let ds = data::generate_scaled(data::spec("page").unwrap(), 1500, 256);
+    let opts = TrainOptions { epochs: 3, conv_epochs: 1, extra_bundles: 4, ..Default::default() };
+    let stack = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 2000, 0xE5C0DE, &opts)?;
+    let xb = ds.x_test.rows_slice(0, 64);
+    let encoded = stack.encoder.encode(&xb);
+
+    let encode_stats = bench(3, 30, || {
+        let _ = stack.encoder.encode(&xb);
+    });
+    println!("{}", encode_stats.format_line("stage encode batch=64 D=2000"));
+
+    let dec_f32 = bench(3, 30, || {
+        let _ = stack.loghd.predict(&encoded);
+    });
+    let qm8 = QuantizedLogHdModel::from_model(&stack.loghd, Precision::B8);
+    let dec_b8 = bench(3, 30, || {
+        let _ = qm8.predict(&encoded);
+    });
+    let qm1 = QuantizedLogHdModel::from_model(&stack.loghd, Precision::B1);
+    let dec_b1 = bench(3, 30, || {
+        let _ = qm1.predict(&encoded);
+    });
+    println!("{}", dec_f32.format_line("stage decode f32 batch=64"));
+    println!("{}", dec_b8.format_line("stage decode b8 batch=64"));
+    println!("{}", dec_b1.format_line("stage decode b1 batch=64"));
+    for (path, stats) in [
+        ("stage_encode", encode_stats),
+        ("stage_decode_f32", dec_f32),
+        ("stage_decode_b8", dec_b8),
+        ("stage_decode_b1", dec_b1),
+    ] {
+        csv.row(&[path.into(), "batch64_median_s".into(), format!("{:.9}", stats.median)])?;
+    }
+
+    // --- End-to-end engine latency per precision ---
+    let mut e2e = Vec::new();
+    for precision in [Precision::F32, Precision::B8, Precision::B1] {
+        let mut engine = NativeEngine::with_precision(
+            stack.encoder.clone(),
+            stack.loghd.clone(),
+            "page",
+            precision,
+        );
+        let stats = bench(3, 30, || {
+            let _ = engine.infer(&xb).unwrap();
+        });
+        println!("{}", stats.format_line(&format!("e2e native {} batch=64", precision.label())));
+        csv.row(&[
+            format!("e2e_{}", precision.label()),
+            "batch64_median_s".into(),
+            format!("{:.9}", stats.median),
+        ])?;
+        e2e.push((precision.label(), json::num(stats.median)));
+    }
+
+    let report = json::obj(vec![
+        ("dispatch", json::s(dispatch)),
+        ("threads", json::num(loghd::util::threadpool::available_threads() as f64)),
+        ("kernel_batch", json::num(bsz as f64)),
+        ("kernel_features", json::num(f as f64)),
+        ("kernel_d", json::num(d as f64)),
+        ("scalar_encode_median_s", json::num(scalar_stats.median)),
+        ("simd_encode_median_s", json::num(fused_stats.median)),
+        ("encode_speedup_vs_scalar", json::num(speedup)),
+        (
+            "stages_batch64_d2000_s",
+            json::obj(vec![
+                ("encode", json::num(encode_stats.median)),
+                ("decode_f32", json::num(dec_f32.median)),
+                ("decode_b8", json::num(dec_b8.median)),
+                ("decode_b1", json::num(dec_b1.median)),
+            ]),
+        ),
+        ("e2e_batch64_median_s", json::obj(e2e)),
+    ]);
+    let text = json::to_string_pretty(&report);
+    std::fs::write("results/BENCH_encode.json", &text)?;
+    std::fs::write("BENCH_encode.json", &text)?;
+    println!("wrote results/BENCH_encode.json (+ repo-root snapshot)");
+    Ok(())
+}

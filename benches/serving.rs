@@ -63,6 +63,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     let report = json::obj(vec![
+        ("dispatch", json::s(loghd::tensor::simd::path_label())),
         ("batch", json::num(64.0)),
         ("d", json::num(2000.0)),
         ("n_bundles", json::num(stack.loghd.n_bundles() as f64)),

@@ -2,8 +2,8 @@
 //! cosine argmax. The O(C·D) baseline every compression method is
 //! measured against.
 
-use crate::hd::similarity::activations;
-use crate::tensor::{self, Matrix};
+use crate::hd::similarity::{activations, activations_with};
+use crate::tensor::{self, Matrix, NtPrepared};
 
 /// Conventional model: (C, D) unit-row prototype matrix.
 #[derive(Debug, Clone)]
@@ -32,6 +32,20 @@ impl ConventionalModel {
     /// Argmax labels.
     pub fn predict(&self, enc: &Matrix) -> Vec<i32> {
         let s = self.scores(enc);
+        (0..s.rows()).map(|i| tensor::argmax(s.row(i)) as i32).collect()
+    }
+
+    /// The prepared GEMM form of the prototype matrix for serving
+    /// (build once next to the model; C typically sits in the mid-width
+    /// regime, so this hoists the per-batch transposed copy).
+    pub fn prepare(&self) -> NtPrepared {
+        NtPrepared::for_operand(&self.prototypes)
+    }
+
+    /// [`Self::predict`] over the prepared operand from
+    /// [`Self::prepare`] — identical math, per-batch prep hoisted.
+    pub fn predict_prepared(&self, enc: &Matrix, prep: &NtPrepared) -> Vec<i32> {
+        let s = activations_with(enc, &self.prototypes, prep);
         (0..s.rows()).map(|i| tensor::argmax(s.row(i)) as i32).collect()
     }
 

@@ -11,11 +11,11 @@ use anyhow::{Context, Result};
 
 use crate::baselines::conventional::ConventionalModel;
 use crate::encoder::Encoder;
-use crate::loghd::model::LogHdModel;
-use crate::loghd::qmodel::QuantizedLogHdModel;
+use crate::loghd::model::{DecodePrep, LogHdModel};
+use crate::loghd::qmodel::{QuantizedLogHdModel, QueryScratch};
 use crate::quant::{self, Precision};
 use crate::runtime::PjrtRuntime;
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, NtPrepared};
 
 use super::Engine;
 
@@ -85,10 +85,34 @@ pub struct NativeEngine {
 
 /// What the engine actually holds: the dense f32 tensors are dropped at
 /// the packed precisions — keeping both would make the memory-reduction
-/// mode cost *more* memory per worker than plain f32.
+/// mode cost *more* memory per worker than plain f32. Both variants
+/// carry per-replica serving state the model structs themselves don't:
+/// prepared GEMM operand forms (built once at engine construction) and,
+/// for the packed path, the reusable query-quantization scratch.
 enum ModelState {
-    Dense(LogHdModel),
-    Packed(QuantizedLogHdModel),
+    Dense(DenseDecode),
+    Packed { model: QuantizedLogHdModel, scratch: QueryScratch },
+}
+
+/// A dense LogHD model plus its request-invariant decode state
+/// ([`DecodePrep`]: prepared GEMM operand forms + `|P|²`), built once at
+/// engine construction. The decode pipeline itself stays on the model
+/// type (`LogHdModel::predict_prepared`) so serving cannot drift from
+/// the reference `predict`.
+struct DenseDecode {
+    model: LogHdModel,
+    prep: DecodePrep,
+}
+
+impl DenseDecode {
+    fn new(model: LogHdModel) -> Self {
+        let prep = DecodePrep::new(&model);
+        Self { model, prep }
+    }
+
+    fn predict(&self, enc: &Matrix) -> Vec<i32> {
+        self.model.predict_prepared(enc, &self.prep)
+    }
 }
 
 impl NativeEngine {
@@ -105,14 +129,15 @@ impl NativeEngine {
         precision: Precision,
     ) -> Self {
         let state = match precision {
-            Precision::F32 => ModelState::Dense(model),
-            Precision::B1 | Precision::B8 => {
-                ModelState::Packed(QuantizedLogHdModel::from_model(&model, precision))
-            }
+            Precision::F32 => ModelState::Dense(DenseDecode::new(model)),
+            Precision::B1 | Precision::B8 => ModelState::Packed {
+                model: QuantizedLogHdModel::from_model(&model, precision),
+                scratch: QueryScratch::new(),
+            },
             Precision::B2 | Precision::B4 => {
                 let bundles = quant::quantize_roundtrip(&model.bundles, precision);
                 let profiles = quant::quantize_roundtrip(&model.profiles, precision);
-                ModelState::Dense(LogHdModel { bundles, profiles, ..model })
+                ModelState::Dense(DenseDecode::new(LogHdModel { bundles, profiles, ..model }))
             }
         };
         Self { encoder, precision, state, label: label.into() }
@@ -121,8 +146,8 @@ impl NativeEngine {
     /// The dense model, when this precision serves one (F32/B2/B4).
     pub fn model(&self) -> Option<&LogHdModel> {
         match &self.state {
-            ModelState::Dense(m) => Some(m),
-            ModelState::Packed(_) => None,
+            ModelState::Dense(d) => Some(&d.model),
+            ModelState::Packed { .. } => None,
         }
     }
 
@@ -130,7 +155,7 @@ impl NativeEngine {
     pub fn quantized_model(&self) -> Option<&QuantizedLogHdModel> {
         match &self.state {
             ModelState::Dense(_) => None,
-            ModelState::Packed(q) => Some(q),
+            ModelState::Packed { model, .. } => Some(model),
         }
     }
 
@@ -163,9 +188,9 @@ impl Engine for NativeEngine {
 
     fn infer(&mut self, x: &Matrix) -> Result<Vec<i32>> {
         let enc = self.encoder.encode(x);
-        Ok(match &self.state {
-            ModelState::Dense(model) => model.predict(&enc),
-            ModelState::Packed(qm) => qm.predict(&enc),
+        Ok(match &mut self.state {
+            ModelState::Dense(dense) => dense.predict(&enc),
+            ModelState::Packed { model, scratch } => model.predict_scratch(&enc, scratch),
         })
     }
 }
@@ -179,6 +204,10 @@ pub struct ConventionalEngine {
     pub encoder: Encoder,
     pub precision: Precision,
     model: ConventionalModel,
+    /// Prepared GEMM form of the (C, D) prototype matrix — C sits
+    /// squarely in the mid-width regime for most datasets, so this is
+    /// the transposed copy that used to be rebuilt every batch.
+    prototypes_prep: NtPrepared,
     label: String,
 }
 
@@ -193,7 +222,8 @@ impl ConventionalEngine {
             Precision::F32 => model,
             _ => ConventionalModel::new(quant::quantize_roundtrip(&model.prototypes, precision)),
         };
-        Self { encoder, precision, model, label: label.into() }
+        let prototypes_prep = model.prepare();
+        Self { encoder, precision, model, prototypes_prep, label: label.into() }
     }
 
     /// Factory for [`super::Coordinator::start`] / `start_pool`.
@@ -221,7 +251,7 @@ impl Engine for ConventionalEngine {
 
     fn infer(&mut self, x: &Matrix) -> Result<Vec<i32>> {
         let enc = self.encoder.encode(x);
-        Ok(self.model.predict(&enc))
+        Ok(self.model.predict_prepared(&enc, &self.prototypes_prep))
     }
 }
 
@@ -272,6 +302,36 @@ mod tests {
             assert_eq!(engine.model().is_none(), packed, "{precision:?}");
             assert_eq!(engine.quantized_model().is_some(), packed, "{precision:?}");
         }
+    }
+
+    #[test]
+    fn engines_match_plain_model_predictions() {
+        // The prepared-operand serving paths (hoisted transposes, query
+        // scratch) must be prediction-identical to the model structs'
+        // own predict methods.
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 400, 50);
+        let opts =
+            TrainOptions { epochs: 2, conv_epochs: 1, extra_bundles: 1, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 512, 9, &opts).unwrap();
+        let xb = ds.x_test.rows_slice(0, 24);
+        let enc = st.encoder.encode(&xb);
+        for precision in [Precision::F32, Precision::B8, Precision::B1] {
+            let mut engine = NativeEngine::with_precision(
+                st.encoder.clone(),
+                st.loghd.clone(),
+                "page",
+                precision,
+            );
+            let want = match precision {
+                Precision::F32 => st.loghd.predict(&enc),
+                p => QuantizedLogHdModel::from_model(&st.loghd, p).predict(&enc),
+            };
+            assert_eq!(engine.infer(&xb).unwrap(), want, "{precision:?}");
+        }
+        let conv = ConventionalModel::new(st.prototypes.clone());
+        let mut engine =
+            ConventionalEngine::new(st.encoder.clone(), conv.clone(), "page", Precision::F32);
+        assert_eq!(engine.infer(&xb).unwrap(), conv.predict(&enc));
     }
 
     #[test]

@@ -3,20 +3,39 @@
 //! The Rust twin of `python/compile/trainer.py::make_encoder` (same
 //! SplitMix64 draw order: W normals row-major scaled 1/√F, then b
 //! uniforms×2π), so a Rust-trained model and a Python-trained model with
-//! the same seed share the same encoder. The encode hot path is a matmul
-//! (see `tensor::matmul`) followed by a fused cos+center pass.
+//! the same seed share the same encoder.
+//!
+//! The encode hot path is a single fused pass: `W` is re-packed into
+//! contiguous column panels at construction ([`simd::PackedPanels`])
+//! and each output tile gets its GEMM, cos, bias and centering applied
+//! while register-resident — no separate B·D libm `cos` sweep. On the
+//! SIMD dispatch paths the cosine is the range-reduced polynomial
+//! (≤ 1e-6 absolute from libm); the forced-scalar path keeps libm `cos`
+//! and is bit-identical to the historical two-pass encoder.
 
-use crate::tensor::{self, Matrix};
+use crate::tensor::{simd, Matrix};
 use crate::util::rng::SplitMix64;
 use crate::util::threadpool;
 
 /// Encoder parameters. `mu` (the training-set mean encoding) is filled in
 /// by the trainer; until then encodings are uncentered.
+///
+/// Memory note: both the row-major `w` (persistence / parity surface)
+/// and its packed panel copy are kept, so an encoder costs ~2×F×D floats
+/// per replica. F is small for every current dataset (≤ tens), which
+/// keeps this far below the model tensors; if a wide-F workload ever
+/// matters, the serving clone can drop `w` and keep only the panels.
 #[derive(Debug, Clone)]
 pub struct Encoder {
-    pub w: Matrix,      // (F, D)
-    pub b: Vec<f32>,    // (D,)
-    pub mu: Vec<f32>,   // (D,) zeros until trained
+    /// (F, D) — private so it cannot drift from the packed copy below;
+    /// read through [`Self::w`].
+    w: Matrix,
+    pub b: Vec<f32>,  // (D,)
+    pub mu: Vec<f32>, // (D,) zeros until trained
+    /// Column-panel packed copy of `w`, built once at construction for
+    /// the fused encode kernel (in sync by construction: `w` is
+    /// immutable after `from_parts`).
+    wpack: simd::PackedPanels,
 }
 
 impl Encoder {
@@ -30,14 +49,26 @@ impl Encoder {
         }
         let b: Vec<f32> =
             (0..d).map(|_| (std::f64::consts::TAU * rng.uniform()) as f32).collect();
-        Self { w, b, mu: vec![0.0; d] }
+        Self::from_parts(w, b, vec![0.0; d])
     }
 
     /// Construct from pre-loaded tensors (artifact path).
     pub fn from_parts(w: Matrix, b: Vec<f32>, mu: Vec<f32>) -> Self {
         assert_eq!(w.cols(), b.len());
         assert_eq!(w.cols(), mu.len());
-        Self { w, b, mu }
+        let wpack = simd::PackedPanels::pack_columns(&w);
+        Self { w, b, mu, wpack }
+    }
+
+    /// The projection matrix (F, D).
+    pub fn w(&self) -> &Matrix {
+        &self.w
+    }
+
+    /// The column-panel packed form of [`Self::w`] the fused encode
+    /// kernel consumes (built at construction; exposed for benches).
+    pub fn wpack(&self) -> &simd::PackedPanels {
+        &self.wpack
     }
 
     pub fn features(&self) -> usize {
@@ -48,16 +79,18 @@ impl Encoder {
         self.w.cols()
     }
 
-    /// Encode a batch: (B, F) -> (B, D), centered by `mu`.
+    /// Encode a batch: (B, F) -> (B, D), centered by `mu`. One fused
+    /// GEMM + cos + center pass per row, parallelized over rows.
     pub fn encode(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols(), self.features(), "feature width mismatch");
-        let mut out = tensor::matmul(x, &self.w);
         let d = self.dim();
+        let mut out = Matrix::zeros(x.rows(), d);
+        if x.rows() == 0 {
+            return out;
+        }
         let threads = threadpool::available_threads();
-        threadpool::parallel_rows(out.data_mut(), d, threads, |_, row| {
-            for (v, (bb, mm)) in row.iter_mut().zip(self.b.iter().zip(self.mu.iter())) {
-                *v = (*v + *bb).cos() - *mm;
-            }
+        threadpool::parallel_rows(out.data_mut(), d, threads, |i, row| {
+            simd::encode_row(x.row(i), &self.wpack, &self.b, &self.mu, row);
         });
         out
     }
@@ -99,6 +132,19 @@ mod tests {
         assert!((out.at(1, 5) - want).abs() < 1e-5);
         // output bounded by 1 (mu = 0 here)
         assert!(out.data().iter().all(|v| v.abs() <= 1.0 + 1e-6));
+    }
+
+    // Fused-encode agreement with the two-pass reference (including tail
+    // panels at odd D) is pinned at the kernel level in
+    // `tensor::simd::tests` and end-to-end by
+    // `prop_fused_encode_matches_two_pass_reference` in
+    // rust/tests/properties.rs.
+
+    #[test]
+    fn encode_empty_batch() {
+        let enc = Encoder::new(4, 16, 3);
+        let out = enc.encode(&Matrix::zeros(0, 4));
+        assert_eq!((out.rows(), out.cols()), (0, 16));
     }
 
     #[test]

@@ -9,7 +9,19 @@ use crate::tensor::{self, Matrix};
 /// `ref.activation_ref`.
 pub fn activations(enc: &Matrix, m: &Matrix) -> Matrix {
     assert_eq!(enc.cols(), m.cols(), "dimension mismatch");
-    let mut dots = tensor::matmul_nt(enc, m);
+    scale_by_query_norm(tensor::matmul_nt(enc, m), enc)
+}
+
+/// [`activations`] against a *fixed* model-side operand with its
+/// [`tensor::NtPrepared`] state: serving engines build the prepared form
+/// once (model load) instead of re-transposing `m` every batch in the
+/// mid-width GEMM regime.
+pub fn activations_with(enc: &Matrix, m: &Matrix, prep: &tensor::NtPrepared) -> Matrix {
+    assert_eq!(enc.cols(), m.cols(), "dimension mismatch");
+    scale_by_query_norm(tensor::matmul_nt_with(enc, m, prep), enc)
+}
+
+fn scale_by_query_norm(mut dots: Matrix, enc: &Matrix) -> Matrix {
     for i in 0..enc.rows() {
         let qn = tensor::norm(enc.row(i)).max(1e-12);
         let inv = 1.0 / qn;
@@ -57,6 +69,22 @@ mod tests {
         normalize_rows(&mut m);
         let a = activations(&enc, &m);
         assert!(a.data().iter().all(|v| v.abs() <= 1.0 + 1e-5));
+    }
+
+    #[test]
+    fn prepared_matches_plain_in_both_gemm_regimes() {
+        let mut rng = SplitMix64::new(21);
+        for (n, d) in [(7usize, 300usize), (26, 300), (26, 64)] {
+            let enc = Matrix::from_vec(3, d, rng.normals_f32(3 * d));
+            let mut m = Matrix::from_vec(n, d, rng.normals_f32(n * d));
+            normalize_rows(&mut m);
+            let prep = crate::tensor::NtPrepared::for_operand(&m);
+            let a = activations(&enc, &m);
+            let b = activations_with(&enc, &m, &prep);
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert!((x - y).abs() < 1e-5, "n={n} d={d}");
+            }
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::encoder::Encoder;
 use crate::hd::prototype::{refine_conventional, train_prototypes};
-use crate::hd::similarity::activations;
+use crate::hd::similarity::{activations, activations_with};
 use crate::loghd::bundling::build_bundles;
 use crate::loghd::codebook::{self, Codebook};
 use crate::loghd::profiles::compute_profiles;
@@ -115,6 +115,25 @@ impl LogHdModel {
         (0..d.rows()).map(|i| tensor::argmin(d.row(i)) as i32).collect()
     }
 
+    /// [`Self::decode_dists`] over request-invariant prepared state (see
+    /// [`DecodePrep`]) — the serving-engine form, identical math with
+    /// the per-batch operand preparation hoisted out.
+    pub fn decode_dists_prepared(&self, enc: &Matrix, prep: &DecodePrep) -> Matrix {
+        let a = activations_with(enc, &self.bundles, &prep.bundles_nt);
+        tensor::pairwise_sqdists_prepared(
+            &a,
+            &self.profiles,
+            &prep.profile_sqnorms,
+            &prep.profiles_nt,
+        )
+    }
+
+    /// [`Self::predict`] over prepared state.
+    pub fn predict_prepared(&self, enc: &Matrix, prep: &DecodePrep) -> Vec<i32> {
+        let d = self.decode_dists_prepared(enc, prep);
+        (0..d.rows()).map(|i| tensor::argmin(d.row(i)) as i32).collect()
+    }
+
     /// Stored model floats: n*D bundles + C*n profiles (paper §III-G).
     pub fn memory_floats(&self) -> usize {
         self.bundles.rows() * self.bundles.cols() + self.profiles.rows() * self.profiles.cols()
@@ -127,6 +146,30 @@ impl LogHdModel {
 
     pub fn n_bundles(&self) -> usize {
         self.bundles.rows()
+    }
+}
+
+/// Request-invariant decode state for a fixed [`LogHdModel`]: the
+/// prepared GEMM forms of bundles and profiles ([`tensor::NtPrepared`],
+/// hoisting the mid-width transposed copy out of the per-batch path) and
+/// the precomputed `|P|²` terms of the fused squared-distance decode.
+/// Serving engines build one per replica at model load
+/// (`coordinator::worker`); the model's own `predict` recomputes these
+/// per call and stays the reference.
+#[derive(Debug, Clone)]
+pub struct DecodePrep {
+    bundles_nt: tensor::NtPrepared,
+    profiles_nt: tensor::NtPrepared,
+    profile_sqnorms: Vec<f32>,
+}
+
+impl DecodePrep {
+    pub fn new(model: &LogHdModel) -> Self {
+        Self {
+            bundles_nt: tensor::NtPrepared::for_operand(&model.bundles),
+            profiles_nt: tensor::NtPrepared::for_operand(&model.profiles),
+            profile_sqnorms: tensor::row_sqnorms(&model.profiles),
+        }
     }
 }
 

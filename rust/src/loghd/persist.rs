@@ -25,7 +25,7 @@ use crate::util::json::{self, Value};
 /// Save encoder + LogHD model into `dir`.
 pub fn save(dir: &Path, encoder: &Encoder, model: &LogHdModel) -> Result<()> {
     std::fs::create_dir_all(dir)?;
-    let w = &encoder.w;
+    let w = encoder.w();
     write_lht_f32(&dir.join("w.lht"), &[w.rows(), w.cols()], w.data())?;
     write_lht_f32(&dir.join("b.lht"), &[encoder.b.len()], &encoder.b)?;
     write_lht_f32(&dir.join("mu.lht"), &[encoder.mu.len()], &encoder.mu)?;
@@ -87,7 +87,7 @@ pub fn load(dir: &Path) -> Result<(Encoder, LogHdModel)> {
 /// Save encoder + conventional baseline (prototype matrix) into `dir`.
 pub fn save_conventional(dir: &Path, encoder: &Encoder, model: &ConventionalModel) -> Result<()> {
     std::fs::create_dir_all(dir)?;
-    let w = &encoder.w;
+    let w = encoder.w();
     write_lht_f32(&dir.join("w.lht"), &[w.rows(), w.cols()], w.data())?;
     write_lht_f32(&dir.join("b.lht"), &[encoder.b.len()], &encoder.b)?;
     write_lht_f32(&dir.join("mu.lht"), &[encoder.mu.len()], &encoder.mu)?;
@@ -206,7 +206,7 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         save(&dir, &st.encoder, &st.loghd).unwrap();
         let (enc2, model2) = load(&dir).unwrap();
-        assert_eq!(enc2.w.data(), st.encoder.w.data());
+        assert_eq!(enc2.w().data(), st.encoder.w().data());
         assert_eq!(enc2.mu, st.encoder.mu);
         assert_eq!(model2.bundles.data(), st.loghd.bundles.data());
         assert_eq!(model2.book, st.loghd.book);

@@ -28,7 +28,7 @@
 use crate::faults;
 use crate::loghd::model::LogHdModel;
 use crate::quant::{self, Precision, Quantized};
-use crate::tensor::{self, BitMatrix, I16Matrix, Matrix};
+use crate::tensor::{self, BitMatrix, I16Matrix, Matrix, NtPrepared};
 use crate::util::rng::SplitMix64;
 
 /// First-order arcsine-law calibration from sign-agreement scale to
@@ -108,8 +108,30 @@ pub struct QuantizedLogHdModel {
     profiles: StoredProfiles,
     kernel: BundleKernel,
     profiles_f32: Matrix,
+    profiles_prep: NtPrepared,
     profile_sqnorms: Vec<f32>,
     activation_gain: f32,
+}
+
+/// Reusable query-side buffers for the packed hot paths. The B8 engine
+/// re-quantizes every incoming batch; routing that through one of these
+/// (held in engine state) makes the steady-state quantize allocation-free
+/// (`I16Matrix::quantize_into`).
+#[derive(Debug)]
+pub struct QueryScratch {
+    q8: I16Matrix,
+}
+
+impl QueryScratch {
+    pub fn new() -> Self {
+        Self { q8: I16Matrix::empty() }
+    }
+}
+
+impl Default for QueryScratch {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl QuantizedLogHdModel {
@@ -125,6 +147,7 @@ impl QuantizedLogHdModel {
         let profiles = StoredProfiles::from_matrix(&model.profiles, precision);
         let kernel = Self::kernel_view(&bundles);
         let profiles_f32 = profiles.dequantize();
+        let profiles_prep = NtPrepared::for_operand(&profiles_f32);
         let profile_sqnorms = tensor::row_sqnorms(&profiles_f32);
         Self {
             precision,
@@ -134,6 +157,7 @@ impl QuantizedLogHdModel {
             profiles,
             kernel,
             profiles_f32,
+            profiles_prep,
             profile_sqnorms,
             activation_gain: 1.0,
         }
@@ -164,6 +188,7 @@ impl QuantizedLogHdModel {
     pub fn refresh(&mut self) {
         self.kernel = Self::kernel_view(&self.bundles);
         self.profiles_f32 = self.profiles.dequantize();
+        self.profiles_prep = NtPrepared::for_operand(&self.profiles_f32);
         self.profile_sqnorms = tensor::row_sqnorms(&self.profiles_f32);
     }
 
@@ -180,6 +205,13 @@ impl QuantizedLogHdModel {
     /// Bundle activations (B, n) in cosine scale, computed in the packed
     /// domain (see module docs for the per-precision semantics).
     pub fn activations(&self, enc: &Matrix) -> Matrix {
+        self.activations_scratch(enc, &mut QueryScratch::new())
+    }
+
+    /// [`Self::activations`] through a caller-held [`QueryScratch`]: the
+    /// B8 query batch is quantized into the reused buffer instead of a
+    /// fresh allocation (serving engines keep one scratch per replica).
+    pub fn activations_scratch(&self, enc: &Matrix, scratch: &mut QueryScratch) -> Matrix {
         assert_eq!(enc.cols(), self.d, "encoded width mismatch");
         match &self.kernel {
             BundleKernel::Bits(bundles) => {
@@ -192,9 +224,9 @@ impl QuantizedLogHdModel {
                 a
             }
             BundleKernel::I16(bundles) => {
-                let q = I16Matrix::quantize(enc);
-                let mut a = tensor::i16_matmul_nt(&q, bundles);
-                for (i, qn) in q.row_norms().into_iter().enumerate() {
+                I16Matrix::quantize_into(enc, &mut scratch.q8);
+                let mut a = tensor::i16_matmul_nt(&scratch.q8, bundles);
+                for (i, qn) in scratch.q8.row_norms().into_iter().enumerate() {
                     let scale = self.activation_gain / qn.max(1e-12);
                     for v in a.row_mut(i) {
                         *v *= scale;
@@ -206,15 +238,31 @@ impl QuantizedLogHdModel {
     }
 
     /// Fused activation-space decode: (B, C) squared distances to the
-    /// stored profiles, `|A|² − 2·A·Pᵀ + |P|²` with precomputed `|P|²`.
+    /// stored profiles, `|A|² − 2·A·Pᵀ + |P|²` with precomputed `|P|²`
+    /// and the profile operand's GEMM form prepared at build.
     pub fn decode_dists(&self, enc: &Matrix) -> Matrix {
-        let a = self.activations(enc);
-        tensor::pairwise_sqdists_pre(&a, &self.profiles_f32, &self.profile_sqnorms)
+        self.decode_dists_scratch(enc, &mut QueryScratch::new())
+    }
+
+    /// [`Self::decode_dists`] through a caller-held [`QueryScratch`].
+    pub fn decode_dists_scratch(&self, enc: &Matrix, scratch: &mut QueryScratch) -> Matrix {
+        let a = self.activations_scratch(enc, scratch);
+        tensor::pairwise_sqdists_prepared(
+            &a,
+            &self.profiles_f32,
+            &self.profile_sqnorms,
+            &self.profiles_prep,
+        )
     }
 
     /// Predicted labels for encoded queries.
     pub fn predict(&self, enc: &Matrix) -> Vec<i32> {
-        let d = self.decode_dists(enc);
+        self.predict_scratch(enc, &mut QueryScratch::new())
+    }
+
+    /// [`Self::predict`] through a caller-held [`QueryScratch`].
+    pub fn predict_scratch(&self, enc: &Matrix, scratch: &mut QueryScratch) -> Vec<i32> {
+        let d = self.decode_dists_scratch(enc, scratch);
         (0..d.rows()).map(|i| tensor::argmin(d.row(i)) as i32).collect()
     }
 
@@ -275,6 +323,22 @@ mod tests {
                     want.at(i, j)
                 );
             }
+        }
+    }
+
+    #[test]
+    fn scratch_paths_match_plain_and_survive_reuse() {
+        let (ds, stack) = small_stack();
+        let enc = stack.encoder.encode(&ds.x_test.rows_slice(0, 16));
+        for precision in [Precision::B8, Precision::B1] {
+            let qm = QuantizedLogHdModel::from_model(&stack.loghd, precision);
+            let mut scratch = QueryScratch::new();
+            let plain = qm.predict(&enc);
+            assert_eq!(plain, qm.predict_scratch(&enc, &mut scratch), "{precision:?}");
+            // reuse across batches of different sizes
+            let small = stack.encoder.encode(&ds.x_test.rows_slice(16, 21));
+            assert_eq!(qm.predict(&small), qm.predict_scratch(&small, &mut scratch));
+            assert_eq!(plain, qm.predict_scratch(&enc, &mut scratch), "{precision:?} reuse");
         }
     }
 

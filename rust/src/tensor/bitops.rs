@@ -16,9 +16,11 @@
 //!   scales into the f32 output, register-blocked over 4 model rows like
 //!   `matmul_nt`.
 //!
-//! Both kernels parallelize over query rows via `util::threadpool`.
+//! Both kernels parallelize over query rows via `util::threadpool` and
+//! dispatch their inner loops through [`super::simd`] (AVX2 `vpmaddwd` /
+//! `vpshufb` popcount, NEON `vmlal`/`vcnt`, scalar fallback).
 
-use super::Matrix;
+use super::{simd, Matrix};
 use crate::util::threadpool;
 
 /// Sign-bit matrix: bit = 1 encodes "value >= 0" (the same convention as
@@ -82,28 +84,12 @@ impl BitMatrix {
     }
 }
 
-/// Hamming distance between two equal-length word slices, 4-way unrolled
-/// so the popcounts retire on independent accumulators.
+/// Hamming distance between two equal-length word slices (dispatched:
+/// AVX2 nibble-LUT popcount / NEON byte popcount / unrolled scalar).
 #[inline]
 pub fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut h0 = 0u32;
-    let mut h1 = 0u32;
-    let mut h2 = 0u32;
-    let mut h3 = 0u32;
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let k = i * 4;
-        h0 += (a[k] ^ b[k]).count_ones();
-        h1 += (a[k + 1] ^ b[k + 1]).count_ones();
-        h2 += (a[k + 2] ^ b[k + 2]).count_ones();
-        h3 += (a[k + 3] ^ b[k + 3]).count_ones();
-    }
-    let mut rest = 0u32;
-    for k in chunks * 4..a.len() {
-        rest += (a[k] ^ b[k]).count_ones();
-    }
-    h0 + h1 + h2 + h3 + rest
+    simd::hamming(a, b)
 }
 
 /// C[i][j] = <±1 row a_i, ±1 row b_j> = D − 2·hamming(a_i, b_j), as f32.
@@ -139,19 +125,39 @@ impl I16Matrix {
         Self { rows, cols, scale, data }
     }
 
+    /// An empty (0×0) container, for use as a [`Self::quantize_into`]
+    /// target that amortizes across batches.
+    pub fn empty() -> Self {
+        Self { rows: 0, cols: 0, scale: 1.0, data: Vec::new() }
+    }
+
     /// Symmetric per-tensor int8 quantization of a dense matrix — the
     /// same levels as `quant::quantize` at 8 bits (scale = max|x|/127,
     /// round-to-nearest, clamp to ±127).
     pub fn quantize(m: &Matrix) -> Self {
-        let qmax = 127.0f32;
-        let max_abs = m.data().iter().fold(0.0f32, |acc, v| acc.max(v.abs()));
-        let scale = (max_abs / qmax).max(1e-12);
-        let data = m
-            .data()
-            .iter()
-            .map(|v| (v / scale).round().clamp(-qmax, qmax) as i16)
-            .collect();
-        Self { rows: m.rows(), cols: m.cols(), scale, data }
+        let mut out = Self::empty();
+        Self::quantize_into(m, &mut out);
+        out
+    }
+
+    /// [`Self::quantize`] into a reused container (the B8 query side
+    /// re-quantizes every batch; engines keep one scratch so the steady
+    /// state allocates nothing). Both stages run through the dispatched
+    /// vector kernels: one max-abs reduction pass (the scale depends on
+    /// the global maximum, so it must precede the map), then one
+    /// divide/round/clamp/narrow map pass straight into the buffer —
+    /// replacing the old two scalar iterator sweeps plus a fresh `Vec`
+    /// per call.
+    pub fn quantize_into(m: &Matrix, out: &mut I16Matrix) {
+        let max_abs = simd::max_abs(m.data());
+        let scale = (max_abs / 127.0).max(1e-12);
+        out.rows = m.rows();
+        out.cols = m.cols();
+        out.scale = scale;
+        // resize alone: a same-size reuse is a no-op (no redundant
+        // zero-fill — the map below writes every element).
+        out.data.resize(m.data().len(), 0);
+        simd::quantize_i16(m.data(), scale, &mut out.data);
     }
 
     #[inline]
@@ -182,35 +188,13 @@ impl I16Matrix {
     }
 }
 
-/// Integer dot of two i16 rows in i32, 4-way unrolled.
-#[inline]
-fn dot_i16(a: &[i16], b: &[i16]) -> i32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc0 = 0i32;
-    let mut acc1 = 0i32;
-    let mut acc2 = 0i32;
-    let mut acc3 = 0i32;
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let k = i * 4;
-        acc0 += a[k] as i32 * b[k] as i32;
-        acc1 += a[k + 1] as i32 * b[k + 1] as i32;
-        acc2 += a[k + 2] as i32 * b[k + 2] as i32;
-        acc3 += a[k + 3] as i32 * b[k + 3] as i32;
-    }
-    let mut rest = 0i32;
-    for k in chunks * 4..a.len() {
-        rest += a[k] as i32 * b[k] as i32;
-    }
-    acc0 + acc1 + acc2 + acc3 + rest
-}
-
 /// C = A · Bᵀ over int8-valued operands: i32 accumulation, the two
 /// per-tensor scales folded into the f32 result. Register-blocked over 4
-/// B rows (each query element loads once for 4 accumulator chains).
+/// B rows (each query element loads once for 4 accumulator chains)
+/// through the dispatched [`simd::dot_i16_4`].
 pub fn i16_matmul_nt(a: &I16Matrix, b: &I16Matrix) -> Matrix {
     assert_eq!(a.cols(), b.cols(), "i16_matmul_nt width mismatch");
-    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let (m, n) = (a.rows(), b.rows());
     let fold = a.scale * b.scale;
     let mut out = Matrix::zeros(m, n);
     let threads = threadpool::available_threads();
@@ -218,26 +202,14 @@ pub fn i16_matmul_nt(a: &I16Matrix, b: &I16Matrix) -> Matrix {
         let arow = a.row(i);
         let mut j = 0;
         while j + 4 <= n {
-            let (b0, b1, b2, b3) = (b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
-            let mut acc0 = 0i32;
-            let mut acc1 = 0i32;
-            let mut acc2 = 0i32;
-            let mut acc3 = 0i32;
-            for kk in 0..k {
-                let av = arow[kk] as i32;
-                acc0 += av * b0[kk] as i32;
-                acc1 += av * b1[kk] as i32;
-                acc2 += av * b2[kk] as i32;
-                acc3 += av * b3[kk] as i32;
+            let block = simd::dot_i16_4(arow, b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
+            for (cv, acc) in crow[j..j + 4].iter_mut().zip(block) {
+                *cv = acc as f32 * fold;
             }
-            crow[j] = acc0 as f32 * fold;
-            crow[j + 1] = acc1 as f32 * fold;
-            crow[j + 2] = acc2 as f32 * fold;
-            crow[j + 3] = acc3 as f32 * fold;
             j += 4;
         }
         for (jj, cv) in crow.iter_mut().enumerate().skip(j) {
-            *cv = dot_i16(arow, b.row(jj)) as f32 * fold;
+            *cv = simd::dot_i16(arow, b.row(jj)) as f32 * fold;
         }
     });
     out
@@ -320,6 +292,17 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn quantize_into_reuses_buffer_and_matches_fresh() {
+        let mut rng = SplitMix64::new(91);
+        let mut scratch = I16Matrix::empty();
+        for cols in [5usize, 64, 100, 17] {
+            let m = Matrix::from_vec(2, cols, rng.normals_f32(2 * cols));
+            I16Matrix::quantize_into(&m, &mut scratch);
+            assert_eq!(scratch, I16Matrix::quantize(&m), "cols={cols}");
         }
     }
 

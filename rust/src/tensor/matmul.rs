@@ -1,12 +1,19 @@
 //! Matrix multiplication kernels for the native path.
 //!
 //! `matmul` (A·B) uses the cache-friendly i-k-j loop order: the inner loop
-//! streams one row of B while accumulating into one row of C, which the
-//! compiler auto-vectorizes. `matmul_nt` (A·Bᵀ) is the dot-product form
+//! streams one row of B while accumulating into one row of C through the
+//! dispatched [`simd::axpy`]. `matmul_nt` (A·Bᵀ) is the dot-product form
 //! used by the similarity stage (both operands row-major along the shared
-//! axis), unrolled into four independent accumulators to break the FP add
-//! dependency chain. Both parallelize over output rows.
+//! axis), register-blocked over 4 B-rows through [`simd::dot4`]. Both
+//! parallelize over output rows.
+//!
+//! Model-side right-hand operands (bundles, profiles, prototypes) are
+//! fixed across requests; [`NtPrepared`] hoists the transposed copy the
+//! mid-width regime wants out of the per-batch path and into model/engine
+//! state (`matmul_nt` alone still rebuilds it per call for ad-hoc
+//! operands).
 
+use super::simd;
 use super::Matrix;
 use crate::util::threadpool;
 
@@ -25,60 +32,87 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
                 continue;
             }
             let brow = &b_data[kk * n..(kk + 1) * n];
-            // i-k-j: stream brow into crow (auto-vectorized axpy).
-            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += aik * *bv;
-            }
+            // i-k-j: stream brow into crow (dispatched axpy).
+            simd::axpy(aik, brow, crow);
         }
     });
     out
 }
 
+/// Does the `matmul_nt` mid-width regime apply to a right-hand operand
+/// with `n_rows` rows and shared width `k`? (Similarity against a few
+/// dozen class rows: transposing B once makes the inner loop a contiguous
+/// n-wide axpy over a cache-resident output row. Measured fastest for
+/// 12..=64 target rows at k ≥ 256; below that the 4-row register-blocked
+/// dot wins — EXPERIMENTS.md §Perf iterations 2–3.)
+#[inline]
+fn nt_prefers_transposed(n_rows: usize, k: usize) -> bool {
+    (12..=64).contains(&n_rows) && k >= 256
+}
+
+/// Pre-built auxiliary state for a *fixed* `matmul_nt` right-hand side:
+/// holds the transposed copy iff the mid-width regime applies to that
+/// operand, so serving batches stop paying the per-call `transposed()`
+/// allocation. Build once next to the operand (model/engine state) and
+/// pass both to [`matmul_nt_with`].
+#[derive(Debug, Clone, Default)]
+pub struct NtPrepared {
+    bt: Option<Matrix>,
+}
+
+impl NtPrepared {
+    /// Prepare for the given operand (the future `b` of `matmul_nt`).
+    pub fn for_operand(b: &Matrix) -> Self {
+        let bt = nt_prefers_transposed(b.rows(), b.cols()).then(|| b.transposed());
+        Self { bt }
+    }
+
+    /// Whether the transposed copy was materialized.
+    pub fn is_transposed(&self) -> bool {
+        self.bt.is_some()
+    }
+}
+
+/// [`matmul_nt`] against a fixed operand with its [`NtPrepared`] state
+/// (must have been built from this same `b`).
+pub fn matmul_nt_with(a: &Matrix, b: &Matrix, prep: &NtPrepared) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt inner-dim mismatch");
+    if let Some(bt) = &prep.bt {
+        debug_assert_eq!((bt.rows(), bt.cols()), (b.cols(), b.rows()), "stale NtPrepared");
+        return matmul(a, bt);
+    }
+    matmul_nt_blocked(a, b)
+}
+
 /// C = A (m×k) · Bᵀ where B is (n×k): similarity shape.
 ///
-/// Register-blocked over 4 B-rows: each element of the query row is
-/// loaded once and multiplied into 4 accumulators, quadrupling arithmetic
-/// intensity vs the naive one-row-at-a-time dot (measured 2.6 → ~8
-/// GFLOP/s single-core on the serving shape; EXPERIMENTS.md §Perf).
+/// Register-blocked over 4 B-rows via [`simd::dot4`]: each element of the
+/// query row is loaded once and multiplied into 4 accumulator chains
+/// (measured 2.6 → ~8 GFLOP/s single-core pre-SIMD on the serving shape;
+/// EXPERIMENTS.md §Perf). Mid-width outputs switch to the transposed
+/// i-k-j form (see [`NtPrepared`] to hoist that copy for fixed operands).
 pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.cols(), "matmul_nt inner-dim mismatch");
-    let (m, k, n) = (a.rows(), a.cols(), b.rows());
-    // Mid-width-output regime (similarity against a few dozen class
-    // rows): transposing B once makes the inner loop a contiguous n-wide
-    // axpy over a cache-resident output row — the i-k-j form. Measured
-    // fastest for 12..=64 target rows (C=26: 11.8 → 9.1 ms at the Table II
-    // shape); below that the axpy is too short to vectorize well and the
-    // 4-row register-blocked path wins (n=7: 3.4 ms vs 6.1 ms) — §Perf
-    // iterations 2–3.
-    if (12..=64).contains(&n) && k >= 256 {
+    if nt_prefers_transposed(b.rows(), a.cols()) {
         return matmul(a, &b.transposed());
     }
+    matmul_nt_blocked(a, b)
+}
+
+fn matmul_nt_blocked(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, n) = (a.rows(), b.rows());
     let mut out = Matrix::zeros(m, n);
     let threads = threadpool::available_threads();
     threadpool::parallel_rows(out.data_mut(), n, threads, |i, crow| {
         let arow = a.row(i);
         let mut j = 0;
         while j + 4 <= n {
-            let (b0, b1, b2, b3) = (b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
-            let mut acc0 = 0.0f32;
-            let mut acc1 = 0.0f32;
-            let mut acc2 = 0.0f32;
-            let mut acc3 = 0.0f32;
-            for kk in 0..k {
-                let av = arow[kk];
-                acc0 += av * b0[kk];
-                acc1 += av * b1[kk];
-                acc2 += av * b2[kk];
-                acc3 += av * b3[kk];
-            }
-            crow[j] = acc0;
-            crow[j + 1] = acc1;
-            crow[j + 2] = acc2;
-            crow[j + 3] = acc3;
+            let block = simd::dot4(arow, b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
+            crow[j..j + 4].copy_from_slice(&block);
             j += 4;
         }
         for (jj, cv) in crow.iter_mut().enumerate().skip(j) {
-            *cv = dot_unrolled(arow, b.row(jj), k);
+            *cv = simd::dot(arow, b.row(jj));
         }
     });
     out
@@ -108,34 +142,17 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
                 continue;
             }
             let brow = &b_data[kk * n..(kk + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += aik * *bv;
-            }
+            simd::axpy(aik, brow, crow);
         }
     });
     out
 }
 
-/// Dot product with 4-way unrolling (independent accumulators).
+/// Dot product over the first `len` elements (dispatched; see
+/// [`simd::dot`] — kept under its historical name for call sites).
 #[inline]
 pub fn dot_unrolled(a: &[f32], b: &[f32], len: usize) -> f32 {
-    let mut acc0 = 0.0f32;
-    let mut acc1 = 0.0f32;
-    let mut acc2 = 0.0f32;
-    let mut acc3 = 0.0f32;
-    let chunks = len / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc0 += a[i] * b[i];
-        acc1 += a[i + 1] * b[i + 1];
-        acc2 += a[i + 2] * b[i + 2];
-        acc3 += a[i + 3] * b[i + 3];
-    }
-    let mut rest = 0.0f32;
-    for i in chunks * 4..len {
-        rest += a[i] * b[i];
-    }
-    acc0 + acc1 + acc2 + acc3 + rest
+    simd::dot(&a[..len], &b[..len])
 }
 
 #[cfg(test)]
@@ -185,6 +202,18 @@ mod tests {
             let a = rand_matrix(m, k, seed);
             let b = rand_matrix(n, k, seed + 7);
             assert_close(&matmul_nt(&a, &b), &naive(&a, &b.transposed()), 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_nt_with_matches_plain_in_both_regimes() {
+        // (n, k) pairs straddling the mid-width boundary
+        for (m, k, n, seed) in [(3, 300, 26, 1), (2, 300, 7, 2), (4, 64, 26, 3)] {
+            let a = rand_matrix(m, k, seed);
+            let b = rand_matrix(n, k, seed + 31);
+            let prep = NtPrepared::for_operand(&b);
+            assert_eq!(prep.is_transposed(), (12..=64).contains(&n) && k >= 256);
+            assert_close(&matmul_nt_with(&a, &b, &prep), &matmul_nt(&a, &b), 1e-5);
         }
     }
 

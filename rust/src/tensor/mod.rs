@@ -3,7 +3,10 @@
 //! Everything the native (non-XLA) path computes — encoding, similarities,
 //! bundling, refinement — runs on this small tensor layer. It is written
 //! for clarity first and then hand-optimized where the profile said it
-//! matters (see `matmul.rs` and EXPERIMENTS.md §Perf).
+//! matters (see `matmul.rs` and EXPERIMENTS.md §Perf). The inner loops of
+//! every kernel dispatch once per process into explicit AVX2/NEON or
+//! scalar code — see [`simd`] for the dispatch contract and the
+//! `LOGHD_FORCE_SCALAR` escape hatch.
 //!
 //! # Example
 //!
@@ -23,9 +26,10 @@
 mod bitops;
 mod matmul;
 mod ops;
+pub mod simd;
 
 pub use bitops::{hamming_words, i16_matmul_nt, xnor_popcount_nt, BitMatrix, I16Matrix};
-pub use matmul::{dot_unrolled, matmul, matmul_nt, matmul_tn};
+pub use matmul::{dot_unrolled, matmul, matmul_nt, matmul_nt_with, matmul_tn, NtPrepared};
 pub use ops::*;
 
 /// Dense row-major f32 matrix.

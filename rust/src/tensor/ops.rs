@@ -100,7 +100,24 @@ pub fn row_sqnorms(m: &Matrix) -> Vec<f32> {
 pub fn pairwise_sqdists_pre(a: &Matrix, p: &Matrix, p_sqnorms: &[f32]) -> Matrix {
     assert_eq!(a.cols(), p.cols(), "pairwise_sqdists width mismatch");
     assert_eq!(p.rows(), p_sqnorms.len(), "p_sqnorms length mismatch");
-    let mut out = super::matmul_nt(a, p);
+    sqdist_epilogue(super::matmul_nt(a, p), a, p_sqnorms)
+}
+
+/// [`pairwise_sqdists_pre`] against a fixed profile operand with its
+/// [`super::NtPrepared`] state (model/engine-resident, so the mid-width
+/// GEMM regime stops re-transposing `p` every batch).
+pub fn pairwise_sqdists_prepared(
+    a: &Matrix,
+    p: &Matrix,
+    p_sqnorms: &[f32],
+    prep: &super::NtPrepared,
+) -> Matrix {
+    assert_eq!(a.cols(), p.cols(), "pairwise_sqdists width mismatch");
+    assert_eq!(p.rows(), p_sqnorms.len(), "p_sqnorms length mismatch");
+    sqdist_epilogue(super::matmul_nt_with(a, p, prep), a, p_sqnorms)
+}
+
+fn sqdist_epilogue(mut out: Matrix, a: &Matrix, p_sqnorms: &[f32]) -> Matrix {
     let a_sq = row_sqnorms(a);
     for (i, &asq) in a_sq.iter().enumerate() {
         for (v, &psq) in out.row_mut(i).iter_mut().zip(p_sqnorms) {

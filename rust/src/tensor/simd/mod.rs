@@ -1,0 +1,424 @@
+//! Explicit-SIMD kernels with one-time runtime dispatch.
+//!
+//! Every f32/int/popcount kernel the tensor layer runs hot lives here
+//! three times: a scalar reference ([`scalar`]), an AVX2+FMA version
+//! (`x86_64`), and a NEON version (`aarch64`), all behind dispatching
+//! wrappers (`dot`, [`axpy`], [`hamming`], [`encode_row`], …) so call
+//! sites above the tensor layer never change.
+//!
+//! # Dispatch contract
+//!
+//! - The path is detected **once per process** ([`path`], cached in a
+//!   `OnceLock`): AVX2+FMA or NEON when the CPU reports them, scalar
+//!   otherwise. Setting `LOGHD_FORCE_SCALAR=1` (any value other than
+//!   `0`/empty) forces the scalar path — the escape hatch for A/B
+//!   benching and for debugging a suspected kernel divergence.
+//! - [`scalar`] is the *reference*: the SIMD paths must agree with it
+//!   bit-for-bit on the integer kernels ([`dot_i16`], [`hamming`],
+//!   [`quantize_i16`]) and within 1e-5 relative on the f32 reductions
+//!   (FMA and lane-order differences only). `rust/tests/properties.rs`
+//!   pins both across widths and unaligned tails.
+//! - [`cos_poly`] (and the vector epilogues built from it) stays within
+//!   1e-6 absolute of libm `cos` for |x| ≤ [`POLY_COS_MAX`] — the
+//!   encoder's post-GEMM angles are a few tens at most. Beyond that
+//!   domain (adversarial client features), every path falls back to
+//!   libm for the affected values, so outputs stay bounded and
+//!   libm-accurate everywhere. The scalar *encode* path keeps libm
+//!   `cos` throughout so it remains the Python-parity reference.
+//! - The i16 kernels require int8-valued operands (|v| ≤ 128, the
+//!   [`super::I16Matrix`] container contract); i32 accumulation is then
+//!   exact for any row width the models use (overflow needs ≥ 2^16
+//!   elements per row).
+//!
+//! The fused encoder path additionally needs the projection matrix in
+//! column-panel layout ([`PackedPanels`]): panels of [`PANEL`] columns
+//! stored k-major, so the GEMM inner loop is one broadcast-FMA per
+//! feature per panel with the output tile resident in registers, and the
+//! cos/bias/centering epilogue runs on the tile before it is stored.
+
+use std::sync::OnceLock;
+
+use super::Matrix;
+
+pub mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+/// Column-panel width of [`PackedPanels`] (one AVX2 register; two NEON
+/// registers).
+pub const PANEL: usize = 8;
+
+/// Which kernel family [`path`] selected for this process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Path {
+    /// Portable reference kernels (also the forced-scalar escape hatch).
+    Scalar,
+    /// AVX2 + FMA (x86_64, runtime-detected).
+    Avx2Fma,
+    /// NEON (aarch64).
+    Neon,
+}
+
+impl Path {
+    /// Short label for logs / bench JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            Path::Scalar => "scalar",
+            Path::Avx2Fma => "avx2+fma",
+            Path::Neon => "neon",
+        }
+    }
+}
+
+/// The dispatch decision for this process (detected once, then cached).
+pub fn path() -> Path {
+    static PATH: OnceLock<Path> = OnceLock::new();
+    *PATH.get_or_init(|| {
+        let forced = std::env::var("LOGHD_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        if forced {
+            return Path::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Path::Avx2Fma;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Path::Neon;
+        }
+        Path::Scalar
+    })
+}
+
+/// Label of the active dispatch path (for bench reports).
+pub fn path_label() -> &'static str {
+    path().label()
+}
+
+// --- Cody–Waite range reduction + cephes-style minimax polynomials.
+//
+// π/2 split into three f32 terms with short mantissas so `q * term` is
+// exact for the quotients the encoder produces; the residual r lands in
+// [-π/4, π/4] (± a few ulp) where the polynomials are accurate to ~9e-8
+// absolute (validated numerically; pinned at 1e-6 by the property test).
+#[allow(clippy::excessive_precision)]
+mod consts {
+    pub const PIO2_HI: f32 = 1.5703125;
+    pub const PIO2_MID: f32 = 4.8375129699707031e-4;
+    pub const PIO2_LO: f32 = 7.5497899548918861e-8;
+    pub const COS_C0: f32 = 4.166664568298827e-2;
+    pub const COS_C1: f32 = -1.388731625493765e-3;
+    pub const COS_C2: f32 = 2.443315711809948e-5;
+    pub const SIN_C0: f32 = -1.6666654611e-1;
+    pub const SIN_C1: f32 = 8.3321608736e-3;
+    pub const SIN_C2: f32 = -1.9515295891e-4;
+}
+pub(crate) use consts::*;
+
+/// Largest |angle| the polynomial cosine's Cody–Waite reduction handles
+/// at the 1e-6 bound; beyond it the kernels fall back to libm.
+pub const POLY_COS_MAX: f32 = 8192.0;
+
+/// Range-reduced polynomial `cos` (the scalar form of the SIMD encoder
+/// epilogue): |error| ≤ 1e-6 absolute vs libm for |x| ≤ [`POLY_COS_MAX`];
+/// larger (or NaN) inputs take the libm fallback, so the function is
+/// total and always bounded.
+pub fn cos_poly(x: f32) -> f32 {
+    let ax = x.abs();
+    if ax.is_nan() || ax > POLY_COS_MAX {
+        return x.cos();
+    }
+    let q = (ax * std::f32::consts::FRAC_2_PI).round();
+    let qi = q as i32;
+    let r = ((ax - q * PIO2_HI) - q * PIO2_MID) - q * PIO2_LO;
+    let z = r * r;
+    let pc = ((COS_C2 * z + COS_C1) * z + COS_C0) * (z * z) + (1.0 - 0.5 * z);
+    let ps = (((SIN_C2 * z + SIN_C1) * z + SIN_C0) * z) * r + r;
+    let v = if qi & 1 == 1 { ps } else { pc };
+    if ((qi + 1) >> 1) & 1 == 1 {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Dot product of two equal-length f32 slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if path() == Path::Avx2Fma {
+        return unsafe { x86::dot(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if path() == Path::Neon {
+        return unsafe { neon::dot(a, b) };
+    }
+    scalar::dot(a, b)
+}
+
+/// Dot of one query row against four model rows at once (each query
+/// element loads once and feeds four accumulator chains).
+#[inline]
+pub fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    assert!(b0.len() == a.len() && b1.len() == a.len(), "dot4 length mismatch");
+    assert!(b2.len() == a.len() && b3.len() == a.len(), "dot4 length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if path() == Path::Avx2Fma {
+        return unsafe { x86::dot4(a, b0, b1, b2, b3) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if path() == Path::Neon {
+        return unsafe { neon::dot4(a, b0, b1, b2, b3) };
+    }
+    scalar::dot4(a, b0, b1, b2, b3)
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if path() == Path::Avx2Fma {
+        return unsafe { x86::axpy(alpha, x, y) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if path() == Path::Neon {
+        return unsafe { neon::axpy(alpha, x, y) };
+    }
+    scalar::axpy(alpha, x, y)
+}
+
+/// Integer dot of two int8-valued i16 rows, accumulated in i32.
+#[inline]
+pub fn dot_i16(a: &[i16], b: &[i16]) -> i32 {
+    assert_eq!(a.len(), b.len(), "dot_i16 length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if path() == Path::Avx2Fma {
+        return unsafe { x86::dot_i16(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if path() == Path::Neon {
+        return unsafe { neon::dot_i16(a, b) };
+    }
+    scalar::dot_i16(a, b)
+}
+
+/// Four-model-row variant of [`dot_i16`].
+#[inline]
+pub fn dot_i16_4(a: &[i16], b0: &[i16], b1: &[i16], b2: &[i16], b3: &[i16]) -> [i32; 4] {
+    assert!(b0.len() == a.len() && b1.len() == a.len(), "dot_i16_4 length mismatch");
+    assert!(b2.len() == a.len() && b3.len() == a.len(), "dot_i16_4 length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if path() == Path::Avx2Fma {
+        return unsafe { x86::dot_i16_4(a, b0, b1, b2, b3) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if path() == Path::Neon {
+        return unsafe { neon::dot_i16_4(a, b0, b1, b2, b3) };
+    }
+    scalar::dot_i16_4(a, b0, b1, b2, b3)
+}
+
+/// Hamming distance between two equal-length u64 word slices.
+#[inline]
+pub fn hamming(a: &[u64], b: &[u64]) -> u32 {
+    assert_eq!(a.len(), b.len(), "hamming length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if path() == Path::Avx2Fma {
+        return unsafe { x86::hamming(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if path() == Path::Neon {
+        return unsafe { neon::hamming(a, b) };
+    }
+    scalar::hamming(a, b)
+}
+
+/// Maximum absolute value of a slice (0.0 for an empty slice).
+#[inline]
+pub fn max_abs(v: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if path() == Path::Avx2Fma {
+        return unsafe { x86::max_abs(v) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if path() == Path::Neon {
+        return unsafe { neon::max_abs(v) };
+    }
+    scalar::max_abs(v)
+}
+
+/// Symmetric int8 map `dst[i] = round(src[i] / scale).clamp(±127)`,
+/// bit-identical to the scalar quantizer policy (`quant::quantize` at 8
+/// bits). `src[i] / scale` must stay within i32 range — guaranteed when
+/// `scale = max_abs(src) / 127`.
+#[inline]
+pub fn quantize_i16(src: &[f32], scale: f32, dst: &mut [i16]) {
+    assert_eq!(src.len(), dst.len(), "quantize_i16 length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if path() == Path::Avx2Fma {
+        return unsafe { x86::quantize_i16(src, scale, dst) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if path() == Path::Neon {
+        return unsafe { neon::quantize_i16(src, scale, dst) };
+    }
+    scalar::quantize_i16(src, scale, dst)
+}
+
+/// Projection matrix `W` (F×D) repacked into contiguous column panels of
+/// [`PANEL`] columns, k-major inside each panel (`panel[k*PANEL + lane]`),
+/// zero-padded to a whole panel. Built once at `Encoder` construction so
+/// the fused encode GEMM streams one contiguous block per output tile.
+#[derive(Debug, Clone)]
+pub struct PackedPanels {
+    features: usize,
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl PackedPanels {
+    /// Pack the columns of `w` (features × dim).
+    pub fn pack_columns(w: &Matrix) -> Self {
+        let (f, d) = (w.rows(), w.cols());
+        let panels = d.div_ceil(PANEL);
+        let mut data = vec![0.0f32; panels * f * PANEL];
+        for p in 0..panels {
+            let base = p * f * PANEL;
+            let width = (d - p * PANEL).min(PANEL);
+            for k in 0..f {
+                let src = &w.row(k)[p * PANEL..p * PANEL + width];
+                data[base + k * PANEL..base + k * PANEL + width].copy_from_slice(src);
+            }
+        }
+        Self { features: f, dim: d, data }
+    }
+
+    #[inline]
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// True (unpadded) output width.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn panels(&self) -> usize {
+        self.dim.div_ceil(PANEL)
+    }
+
+    /// The packed panel stream (`panels() * features * PANEL` floats).
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// One panel's contiguous k-major block.
+    #[inline]
+    pub fn panel(&self, p: usize) -> &[f32] {
+        let stride = self.features * PANEL;
+        &self.data[p * stride..(p + 1) * stride]
+    }
+}
+
+/// Fused encode of one query row: `out[j] = cos(<x, W[:,j]> + bias[j]) -
+/// mu[j]`, GEMM epilogue applied on the register-resident panel tile.
+/// The scalar path keeps libm `cos` (the reference); SIMD paths use the
+/// range-reduced polynomial (≤ 1e-6 absolute from libm).
+#[inline]
+pub fn encode_row(x: &[f32], w: &PackedPanels, bias: &[f32], mu: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), w.features(), "encode_row: feature width mismatch");
+    assert_eq!(out.len(), w.dim(), "encode_row: output width mismatch");
+    assert_eq!(bias.len(), w.dim(), "encode_row: bias width mismatch");
+    assert_eq!(mu.len(), w.dim(), "encode_row: mu width mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if path() == Path::Avx2Fma {
+        return unsafe { x86::encode_row(x, w, bias, mu, out) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if path() == Path::Neon {
+        return unsafe { neon::encode_row(x, w, bias, mu, out) };
+    }
+    scalar::encode_row(x, w, bias, mu, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn path_is_cached_and_labeled() {
+        assert_eq!(path(), path());
+        assert!(!path_label().is_empty());
+    }
+
+    #[test]
+    fn cos_poly_tracks_libm_on_encoder_range() {
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..20_000 {
+            let x = ((rng.uniform() - 0.5) * 200.0) as f32;
+            let want = (x as f64).cos() as f32;
+            assert!((cos_poly(x) - want).abs() <= 1e-6, "x={x}");
+        }
+    }
+
+    #[test]
+    fn dispatched_dot_matches_scalar() {
+        let mut rng = SplitMix64::new(7);
+        for len in [0usize, 1, 7, 64, 65, 200] {
+            let a = rng.normals_f32(len);
+            let b = rng.normals_f32(len);
+            let got = dot(&a, &b);
+            let want = scalar::dot(&a, &b);
+            assert!((got - want).abs() <= 1e-5 * (1.0 + want.abs()), "len={len}");
+        }
+    }
+
+    #[test]
+    fn packed_panels_layout() {
+        let w = Matrix::from_vec(2, 10, (0..20).map(|v| v as f32).collect());
+        let p = PackedPanels::pack_columns(&w);
+        assert_eq!(p.panels(), 2);
+        assert_eq!(p.data().len(), 2 * 2 * PANEL);
+        // panel 0, k=1, lane 3 is w[1][3] = 13
+        assert_eq!(p.panel(0)[PANEL + 3], 13.0);
+        // panel 1 holds cols 8..10 then zero padding
+        assert_eq!(p.panel(1)[0], 8.0);
+        assert_eq!(p.panel(1)[2], 0.0);
+    }
+
+    #[test]
+    fn encode_row_matches_two_pass_reference() {
+        let mut rng = SplitMix64::new(11);
+        for d in [1usize, 8, 13, 64, 65] {
+            let f = 5;
+            let w = Matrix::from_vec(f, d, rng.normals_f32(f * d));
+            let x = rng.normals_f32(f);
+            let bias = rng.normals_f32(d);
+            let mu = rng.normals_f32(d);
+            let packed = PackedPanels::pack_columns(&w);
+            let mut out = vec![0.0f32; d];
+            encode_row(&x, &packed, &bias, &mu, &mut out);
+            for j in 0..d {
+                let mut acc = 0.0f32;
+                for (k, xv) in x.iter().enumerate() {
+                    acc += xv * w.at(k, j);
+                }
+                let angle = acc + bias[j];
+                let want = angle.cos() - mu[j];
+                let tol = 2e-6 + 1e-5 * (1.0 + angle.abs());
+                assert!((out[j] - want).abs() <= tol, "d={d} j={j}: {} vs {want}", out[j]);
+            }
+        }
+    }
+}

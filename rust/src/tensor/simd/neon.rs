@@ -1,0 +1,317 @@
+//! NEON kernels (aarch64). Selected by `super::path()` after runtime
+//! detection; NEON is baseline on every aarch64 target we build for, so
+//! these are effectively the default path on ARM servers and Apple
+//! silicon. Structured as the 128-bit twin of the AVX2 module: same
+//! loop shapes, same reduction identities, same polynomial constants.
+
+#![allow(clippy::missing_safety_doc)] // crate-internal; callers are the detected dispatchers
+
+use std::arch::aarch64::*;
+
+use super::{COS_C0, COS_C1, COS_C2, PANEL, PIO2_HI, PIO2_LO, PIO2_MID, PackedPanels};
+use super::{POLY_COS_MAX, SIN_C0, SIN_C1, SIN_C2};
+
+#[target_feature(enable = "neon")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i + 8 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(ap.add(i + 4)), vld1q_f32(bp.add(i + 4)));
+        i += 8;
+    }
+    if i + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+        i += 4;
+    }
+    let mut total = vaddvq_f32(vaddq_f32(acc0, acc1));
+    while i < n {
+        total += a[i] * b[i];
+        i += 1;
+    }
+    total
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    let n = a.len();
+    let ap = a.as_ptr();
+    let mut c0 = vdupq_n_f32(0.0);
+    let mut c1 = vdupq_n_f32(0.0);
+    let mut c2 = vdupq_n_f32(0.0);
+    let mut c3 = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i + 4 <= n {
+        let av = vld1q_f32(ap.add(i));
+        c0 = vfmaq_f32(c0, av, vld1q_f32(b0.as_ptr().add(i)));
+        c1 = vfmaq_f32(c1, av, vld1q_f32(b1.as_ptr().add(i)));
+        c2 = vfmaq_f32(c2, av, vld1q_f32(b2.as_ptr().add(i)));
+        c3 = vfmaq_f32(c3, av, vld1q_f32(b3.as_ptr().add(i)));
+        i += 4;
+    }
+    let mut out = [vaddvq_f32(c0), vaddvq_f32(c1), vaddvq_f32(c2), vaddvq_f32(c3)];
+    while i < n {
+        let av = a[i];
+        out[0] += av * b0[i];
+        out[1] += av * b1[i];
+        out[2] += av * b2[i];
+        out[3] += av * b3[i];
+        i += 1;
+    }
+    out
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len();
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        let r = vfmaq_n_f32(vld1q_f32(yp.add(i)), vld1q_f32(xp.add(i)), alpha);
+        vst1q_f32(yp.add(i), r);
+        i += 4;
+    }
+    while i < n {
+        y[i] += alpha * x[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_i16(a: &[i16], b: &[i16]) -> i32 {
+    let n = a.len();
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = vdupq_n_s32(0);
+    let mut acc1 = vdupq_n_s32(0);
+    let mut i = 0;
+    while i + 8 <= n {
+        let av = vld1q_s16(ap.add(i));
+        let bv = vld1q_s16(bp.add(i));
+        acc0 = vmlal_s16(acc0, vget_low_s16(av), vget_low_s16(bv));
+        acc1 = vmlal_s16(acc1, vget_high_s16(av), vget_high_s16(bv));
+        i += 8;
+    }
+    let mut total = vaddvq_s32(vaddq_s32(acc0, acc1));
+    while i < n {
+        total += a[i] as i32 * b[i] as i32;
+        i += 1;
+    }
+    total
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_i16_4(a: &[i16], b0: &[i16], b1: &[i16], b2: &[i16], b3: &[i16]) -> [i32; 4] {
+    let n = a.len();
+    let ap = a.as_ptr();
+    let mut c0 = vdupq_n_s32(0);
+    let mut c1 = vdupq_n_s32(0);
+    let mut c2 = vdupq_n_s32(0);
+    let mut c3 = vdupq_n_s32(0);
+    let mut i = 0;
+    while i + 8 <= n {
+        let av = vld1q_s16(ap.add(i));
+        let (alo, ahi) = (vget_low_s16(av), vget_high_s16(av));
+        let v0 = vld1q_s16(b0.as_ptr().add(i));
+        let v1 = vld1q_s16(b1.as_ptr().add(i));
+        let v2 = vld1q_s16(b2.as_ptr().add(i));
+        let v3 = vld1q_s16(b3.as_ptr().add(i));
+        c0 = vmlal_s16(vmlal_s16(c0, alo, vget_low_s16(v0)), ahi, vget_high_s16(v0));
+        c1 = vmlal_s16(vmlal_s16(c1, alo, vget_low_s16(v1)), ahi, vget_high_s16(v1));
+        c2 = vmlal_s16(vmlal_s16(c2, alo, vget_low_s16(v2)), ahi, vget_high_s16(v2));
+        c3 = vmlal_s16(vmlal_s16(c3, alo, vget_low_s16(v3)), ahi, vget_high_s16(v3));
+        i += 8;
+    }
+    let mut out = [vaddvq_s32(c0), vaddvq_s32(c1), vaddvq_s32(c2), vaddvq_s32(c3)];
+    while i < n {
+        let av = a[i] as i32;
+        out[0] += av * b0[i] as i32;
+        out[1] += av * b1[i] as i32;
+        out[2] += av * b2[i] as i32;
+        out[3] += av * b3[i] as i32;
+        i += 1;
+    }
+    out
+}
+
+/// XOR + byte popcount (`vcnt`): each 16-byte chunk holds ≤ 128 set
+/// bits, so the per-chunk byte-sum fits u8 and accumulates in u32.
+#[target_feature(enable = "neon")]
+pub unsafe fn hamming(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len();
+    let mut total = 0u32;
+    let ap = a.as_ptr() as *const u8;
+    let bp = b.as_ptr() as *const u8;
+    let mut i = 0;
+    while i + 2 <= n {
+        let av = vld1q_u8(ap.add(i * 8));
+        let bv = vld1q_u8(bp.add(i * 8));
+        let cnt = vcntq_u8(veorq_u8(av, bv));
+        total += vaddvq_u8(cnt) as u32;
+        i += 2;
+    }
+    while i < n {
+        total += (a[i] ^ b[i]).count_ones();
+        i += 1;
+    }
+    total
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn max_abs(v: &[f32]) -> f32 {
+    let n = v.len();
+    let vp = v.as_ptr();
+    let mut m = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i + 4 <= n {
+        m = vmaxq_f32(m, vabsq_f32(vld1q_f32(vp.add(i))));
+        i += 4;
+    }
+    let mut best = vmaxvq_f32(m);
+    while i < n {
+        best = best.max(v[i].abs());
+        i += 1;
+    }
+    best
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn quantize_i16(src: &[f32], scale: f32, dst: &mut [i16]) {
+    let n = src.len();
+    let vscale = vdupq_n_f32(scale);
+    let qmax = vdupq_n_s32(127);
+    let qmin = vdupq_n_s32(-127);
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        let x0 = vdivq_f32(vld1q_f32(sp.add(i)), vscale);
+        let x1 = vdivq_f32(vld1q_f32(sp.add(i + 4)), vscale);
+        // vcvtaq rounds to nearest, ties away from zero — `f32::round`
+        let q0 = vminq_s32(vmaxq_s32(vcvtaq_s32_f32(x0), qmin), qmax);
+        let q1 = vminq_s32(vmaxq_s32(vcvtaq_s32_f32(x1), qmin), qmax);
+        let narrowed = vcombine_s16(vqmovn_s32(q0), vqmovn_s32(q1));
+        vst1q_s16(dp.add(i), narrowed);
+        i += 8;
+    }
+    while i < n {
+        dst[i] = (src[i] / scale).round().clamp(-127.0, 127.0) as i16;
+        i += 1;
+    }
+}
+
+/// 4-lane reduced-range polynomial cos (same constants and quadrant
+/// logic as the AVX2 `cos_ps`).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn cos_q(x: float32x4_t) -> float32x4_t {
+    let ax = vabsq_f32(x);
+    let q = vrndnq_f32(vmulq_n_f32(ax, std::f32::consts::FRAC_2_PI));
+    let qi = vcvtq_s32_f32(q);
+    let r = vfmsq_f32(ax, q, vdupq_n_f32(PIO2_HI));
+    let r = vfmsq_f32(r, q, vdupq_n_f32(PIO2_MID));
+    let r = vfmsq_f32(r, q, vdupq_n_f32(PIO2_LO));
+    let z = vmulq_f32(r, r);
+    let pc = vfmaq_f32(vdupq_n_f32(COS_C1), vdupq_n_f32(COS_C2), z);
+    let pc = vfmaq_f32(vdupq_n_f32(COS_C0), pc, z);
+    let pc = vmulq_f32(pc, vmulq_f32(z, z));
+    let base = vfmsq_f32(vdupq_n_f32(1.0), vdupq_n_f32(0.5), z);
+    let pc = vaddq_f32(pc, base);
+    let ps = vfmaq_f32(vdupq_n_f32(SIN_C1), vdupq_n_f32(SIN_C2), z);
+    let ps = vfmaq_f32(vdupq_n_f32(SIN_C0), ps, z);
+    let ps = vmulq_f32(ps, z);
+    let ps = vfmaq_f32(r, ps, r);
+    let odd = vtstq_s32(qi, vdupq_n_s32(1));
+    let v = vbslq_f32(odd, ps, pc);
+    let quad = vandq_u32(vreinterpretq_u32_s32(vaddq_s32(qi, vdupq_n_s32(1))), vdupq_n_u32(2));
+    let sgn = vshlq_n_u32(quad, 30);
+    vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(v), sgn))
+}
+
+/// `cos_q` guarded by its reduction domain: any lane with
+/// |angle| > `POLY_COS_MAX` (or NaN) sends the 4-lane tile through libm
+/// — never taken on sane inputs, keeps adversarial features bounded.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn cos_tile(v: float32x4_t) -> float32x4_t {
+    let out_of_domain = vcagtq_f32(v, vdupq_n_f32(POLY_COS_MAX));
+    let nan = vmvnq_u32(vceqq_f32(v, v));
+    if vmaxvq_u32(vorrq_u32(out_of_domain, nan)) == 0 {
+        return cos_q(v);
+    }
+    let mut a = [0.0f32; 4];
+    vst1q_f32(a.as_mut_ptr(), v);
+    for x in a.iter_mut() {
+        *x = x.cos();
+    }
+    vld1q_f32(a.as_ptr())
+}
+
+/// One panel tile (8 columns = two 4-lane halves), 2-way k-unrolled.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn panel_dot(x: &[f32], panel: &[f32]) -> (float32x4_t, float32x4_t) {
+    let f = x.len();
+    let pp = panel.as_ptr();
+    let mut lo0 = vdupq_n_f32(0.0);
+    let mut hi0 = vdupq_n_f32(0.0);
+    let mut lo1 = vdupq_n_f32(0.0);
+    let mut hi1 = vdupq_n_f32(0.0);
+    let mut k = 0;
+    while k + 2 <= f {
+        let x0 = x[k];
+        let x1 = x[k + 1];
+        lo0 = vfmaq_n_f32(lo0, vld1q_f32(pp.add(k * PANEL)), x0);
+        hi0 = vfmaq_n_f32(hi0, vld1q_f32(pp.add(k * PANEL + 4)), x0);
+        lo1 = vfmaq_n_f32(lo1, vld1q_f32(pp.add((k + 1) * PANEL)), x1);
+        hi1 = vfmaq_n_f32(hi1, vld1q_f32(pp.add((k + 1) * PANEL + 4)), x1);
+        k += 2;
+    }
+    if k < f {
+        let x0 = x[k];
+        lo0 = vfmaq_n_f32(lo0, vld1q_f32(pp.add(k * PANEL)), x0);
+        hi0 = vfmaq_n_f32(hi0, vld1q_f32(pp.add(k * PANEL + 4)), x0);
+    }
+    (vaddq_f32(lo0, lo1), vaddq_f32(hi0, hi1))
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn encode_row(x: &[f32], w: &PackedPanels, bias: &[f32], mu: &[f32], out: &mut [f32]) {
+    let d = w.dim();
+    let full = d / PANEL;
+    for p in 0..w.panels() {
+        let (lo, hi) = panel_dot(x, w.panel(p));
+        let col = p * PANEL;
+        if p < full {
+            let bp = bias.as_ptr().add(col);
+            let mp = mu.as_ptr().add(col);
+            let op = out.as_mut_ptr().add(col);
+            let clo = cos_tile(vaddq_f32(lo, vld1q_f32(bp)));
+            let chi = cos_tile(vaddq_f32(hi, vld1q_f32(bp.add(4))));
+            let vlo = vsubq_f32(clo, vld1q_f32(mp));
+            let vhi = vsubq_f32(chi, vld1q_f32(mp.add(4)));
+            vst1q_f32(op, vlo);
+            vst1q_f32(op.add(4), vhi);
+        } else {
+            let rem = d - col;
+            let mut bb = [0.0f32; PANEL];
+            let mut mm = [0.0f32; PANEL];
+            let mut vv = [0.0f32; PANEL];
+            bb[..rem].copy_from_slice(&bias[col..]);
+            mm[..rem].copy_from_slice(&mu[col..]);
+            let bbp = bb.as_ptr();
+            let mmp = mm.as_ptr();
+            let vvp = vv.as_mut_ptr();
+            let clo = cos_tile(vaddq_f32(lo, vld1q_f32(bbp)));
+            let chi = cos_tile(vaddq_f32(hi, vld1q_f32(bbp.add(4))));
+            let vlo = vsubq_f32(clo, vld1q_f32(mmp));
+            let vhi = vsubq_f32(chi, vld1q_f32(mmp.add(4)));
+            vst1q_f32(vvp, vlo);
+            vst1q_f32(vvp.add(4), vhi);
+            out[col..].copy_from_slice(&vv[..rem]);
+        }
+    }
+}

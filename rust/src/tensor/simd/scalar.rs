@@ -1,0 +1,193 @@
+//! Portable reference kernels (the forced-scalar dispatch path).
+//!
+//! These define the semantics the SIMD paths are tested against: the
+//! integer kernels must match bit-for-bit, the f32 reductions within
+//! FMA/lane-reassociation tolerance, and [`encode_row`] keeps libm `cos`
+//! so the scalar path stays the Python-parity reference. They are the
+//! pre-SIMD hand-unrolled loops, moved here unchanged so auto-
+//! vectorization still does its best when dispatch is forced scalar.
+
+use super::{PANEL, PackedPanels};
+
+/// Dot product with 4 independent accumulator chains.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let len = a.len();
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = len / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc0 += a[i] * b[i];
+        acc1 += a[i + 1] * b[i + 1];
+        acc2 += a[i + 2] * b[i + 2];
+        acc3 += a[i + 3] * b[i + 3];
+    }
+    let mut rest = 0.0f32;
+    for i in chunks * 4..len {
+        rest += a[i] * b[i];
+    }
+    acc0 + acc1 + acc2 + acc3 + rest
+}
+
+/// One query row against four model rows (each query element loads once).
+pub fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    for (k, av) in a.iter().enumerate() {
+        acc0 += av * b0[k];
+        acc1 += av * b1[k];
+        acc2 += av * b2[k];
+        acc3 += av * b3[k];
+    }
+    [acc0, acc1, acc2, acc3]
+}
+
+/// `y += alpha * x` (the auto-vectorizable axpy form).
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, xv) in y.iter_mut().zip(x.iter()) {
+        *yv += alpha * *xv;
+    }
+}
+
+/// Integer dot of two i16 rows in i32, 4-way unrolled.
+pub fn dot_i16(a: &[i16], b: &[i16]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0i32;
+    let mut acc1 = 0i32;
+    let mut acc2 = 0i32;
+    let mut acc3 = 0i32;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let k = i * 4;
+        acc0 += a[k] as i32 * b[k] as i32;
+        acc1 += a[k + 1] as i32 * b[k + 1] as i32;
+        acc2 += a[k + 2] as i32 * b[k + 2] as i32;
+        acc3 += a[k + 3] as i32 * b[k + 3] as i32;
+    }
+    let mut rest = 0i32;
+    for k in chunks * 4..a.len() {
+        rest += a[k] as i32 * b[k] as i32;
+    }
+    acc0 + acc1 + acc2 + acc3 + rest
+}
+
+/// One i16 query row against four model rows.
+pub fn dot_i16_4(a: &[i16], b0: &[i16], b1: &[i16], b2: &[i16], b3: &[i16]) -> [i32; 4] {
+    let mut acc0 = 0i32;
+    let mut acc1 = 0i32;
+    let mut acc2 = 0i32;
+    let mut acc3 = 0i32;
+    for (k, av) in a.iter().enumerate() {
+        let av = *av as i32;
+        acc0 += av * b0[k] as i32;
+        acc1 += av * b1[k] as i32;
+        acc2 += av * b2[k] as i32;
+        acc3 += av * b3[k] as i32;
+    }
+    [acc0, acc1, acc2, acc3]
+}
+
+/// Hamming distance between equal-length word slices, 4-way unrolled so
+/// the popcounts retire on independent accumulators.
+pub fn hamming(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut h0 = 0u32;
+    let mut h1 = 0u32;
+    let mut h2 = 0u32;
+    let mut h3 = 0u32;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let k = i * 4;
+        h0 += (a[k] ^ b[k]).count_ones();
+        h1 += (a[k + 1] ^ b[k + 1]).count_ones();
+        h2 += (a[k + 2] ^ b[k + 2]).count_ones();
+        h3 += (a[k + 3] ^ b[k + 3]).count_ones();
+    }
+    let mut rest = 0u32;
+    for k in chunks * 4..a.len() {
+        rest += (a[k] ^ b[k]).count_ones();
+    }
+    h0 + h1 + h2 + h3 + rest
+}
+
+/// Maximum absolute value (0.0 for an empty slice).
+pub fn max_abs(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |acc, x| acc.max(x.abs()))
+}
+
+/// The symmetric int8 map: `round(v / scale)` clamped to ±127. This is
+/// the level policy of `quant::quantize` at 8 bits; the SIMD paths must
+/// reproduce it bit-for-bit (division, round-half-away, clamp order).
+pub fn quantize_i16(src: &[f32], scale: f32, dst: &mut [i16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, v) in dst.iter_mut().zip(src.iter()) {
+        *d = (v / scale).round().clamp(-127.0, 127.0) as i16;
+    }
+}
+
+/// Fused encode of one row over the packed panels, with libm `cos`
+/// (reference semantics: identical sum order to the old matmul + cos
+/// two-pass, so forced-scalar output is bit-identical to the pre-fusion
+/// encoder).
+pub fn encode_row(x: &[f32], w: &PackedPanels, bias: &[f32], mu: &[f32], out: &mut [f32]) {
+    let d = w.dim();
+    for p in 0..w.panels() {
+        let panel = w.panel(p);
+        let col = p * PANEL;
+        let width = (d - col).min(PANEL);
+        let mut acc = [0.0f32; PANEL];
+        for (k, xv) in x.iter().enumerate() {
+            let prow = &panel[k * PANEL..(k + 1) * PANEL];
+            for (av, pv) in acc.iter_mut().zip(prow.iter()) {
+                *av += *xv * *pv;
+            }
+        }
+        for lane in 0..width {
+            let j = col + lane;
+            out[j] = (acc[lane] + bias[j]).cos() - mu[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn dot_matches_simple_sum() {
+        let mut rng = SplitMix64::new(11);
+        for len in [0, 1, 3, 4, 7, 64, 129] {
+            let a = rng.normals_f32(len);
+            let b = rng.normals_f32(len);
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - want).abs() < 1e-4, "len={len}");
+        }
+    }
+
+    #[test]
+    fn dot4_matches_four_dots() {
+        let mut rng = SplitMix64::new(13);
+        let a = rng.normals_f32(37);
+        let rows: Vec<Vec<f32>> = (0..4).map(|_| rng.normals_f32(37)).collect();
+        let got = dot4(&a, &rows[0], &rows[1], &rows[2], &rows[3]);
+        for (j, row) in rows.iter().enumerate() {
+            assert!((got[j] - dot(&a, row)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn quantize_matches_scalar_policy() {
+        let src = [1.0f32, -0.5, 0.247, -1.0, 0.0];
+        let scale = 1.0 / 127.0;
+        let mut dst = [0i16; 5];
+        quantize_i16(&src, scale, &mut dst);
+        assert_eq!(dst, [127, -64, 31, -127, 0]);
+    }
+}

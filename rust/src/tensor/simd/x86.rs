@@ -1,0 +1,373 @@
+//! AVX2 + FMA kernels (x86_64). Selected by `super::path()` only after
+//! runtime detection of both features; every function here carries
+//! `#[target_feature(enable = "avx2,fma")]` and must only be called from
+//! the dispatch wrappers. Unaligned loads/stores throughout — the tensor
+//! layer makes no alignment promises.
+
+#![allow(clippy::missing_safety_doc)] // crate-internal; callers are the detected dispatchers
+
+use std::arch::x86_64::*;
+
+use super::{COS_C0, COS_C1, COS_C2, PANEL, PIO2_HI, PIO2_LO, PIO2_MID, PackedPanels};
+use super::{POLY_COS_MAX, SIN_C0, SIN_C1, SIN_C2};
+
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hsum_ps(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps(v, 1);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 0b01));
+    _mm_cvtss_f32(s)
+}
+
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hsum_epi32(v: __m256i) -> i32 {
+    let lo = _mm256_castsi256_si128(v);
+    let hi = _mm256_extracti128_si256(v, 1);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b10_11_00_01));
+    _mm_cvtsi128_si32(s)
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 16 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+        let (a1, b1) = (_mm256_loadu_ps(ap.add(i + 8)), _mm256_loadu_ps(bp.add(i + 8)));
+        acc1 = _mm256_fmadd_ps(a1, b1, acc1);
+        i += 16;
+    }
+    if i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+        i += 8;
+    }
+    let mut total = hsum_ps(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        total += a[i] * b[i];
+        i += 1;
+    }
+    total
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    let n = a.len();
+    let ap = a.as_ptr();
+    let mut c0 = _mm256_setzero_ps();
+    let mut c1 = _mm256_setzero_ps();
+    let mut c2 = _mm256_setzero_ps();
+    let mut c3 = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 8 <= n {
+        let av = _mm256_loadu_ps(ap.add(i));
+        c0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b0.as_ptr().add(i)), c0);
+        c1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b1.as_ptr().add(i)), c1);
+        c2 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b2.as_ptr().add(i)), c2);
+        c3 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b3.as_ptr().add(i)), c3);
+        i += 8;
+    }
+    let mut out = [hsum_ps(c0), hsum_ps(c1), hsum_ps(c2), hsum_ps(c3)];
+    while i < n {
+        let av = a[i];
+        out[0] += av * b0[i];
+        out[1] += av * b1[i];
+        out[2] += av * b2[i];
+        out[3] += av * b3[i];
+        i += 1;
+    }
+    out
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len();
+    let va = _mm256_set1_ps(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        let r = _mm256_fmadd_ps(va, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+        _mm256_storeu_ps(yp.add(i), r);
+        i += 8;
+    }
+    while i < n {
+        y[i] += alpha * x[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot_i16(a: &[i16], b: &[i16]) -> i32 {
+    let n = a.len();
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 16 <= n {
+        let av = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+        let bv = _mm256_loadu_si256(bp.add(i) as *const __m256i);
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+        i += 16;
+    }
+    let mut total = hsum_epi32(acc);
+    while i < n {
+        total += a[i] as i32 * b[i] as i32;
+        i += 1;
+    }
+    total
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot_i16_4(a: &[i16], b0: &[i16], b1: &[i16], b2: &[i16], b3: &[i16]) -> [i32; 4] {
+    let n = a.len();
+    let ap = a.as_ptr();
+    let mut c0 = _mm256_setzero_si256();
+    let mut c1 = _mm256_setzero_si256();
+    let mut c2 = _mm256_setzero_si256();
+    let mut c3 = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 16 <= n {
+        let av = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+        let l0 = _mm256_loadu_si256(b0.as_ptr().add(i) as *const __m256i);
+        let l1 = _mm256_loadu_si256(b1.as_ptr().add(i) as *const __m256i);
+        let l2 = _mm256_loadu_si256(b2.as_ptr().add(i) as *const __m256i);
+        let l3 = _mm256_loadu_si256(b3.as_ptr().add(i) as *const __m256i);
+        c0 = _mm256_add_epi32(c0, _mm256_madd_epi16(av, l0));
+        c1 = _mm256_add_epi32(c1, _mm256_madd_epi16(av, l1));
+        c2 = _mm256_add_epi32(c2, _mm256_madd_epi16(av, l2));
+        c3 = _mm256_add_epi32(c3, _mm256_madd_epi16(av, l3));
+        i += 16;
+    }
+    let mut out = [hsum_epi32(c0), hsum_epi32(c1), hsum_epi32(c2), hsum_epi32(c3)];
+    while i < n {
+        let av = a[i] as i32;
+        out[0] += av * b0[i] as i32;
+        out[1] += av * b1[i] as i32;
+        out[2] += av * b2[i] as i32;
+        out[3] += av * b3[i] as i32;
+        i += 1;
+    }
+    out
+}
+
+/// XOR + popcount over whole words via the nibble-LUT (`vpshufb`)
+/// popcount, byte counts folded with `vpsadbw` into u64 lanes.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn hamming(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len();
+    #[rustfmt::skip]
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low_mask = _mm256_set1_epi8(0x0F);
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 4 <= n {
+        let av = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let bv = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+        let x = _mm256_xor_si256(av, bv);
+        let lo = _mm256_and_si256(x, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16(x, 4), low_mask);
+        let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, _mm256_setzero_si256()));
+        i += 4;
+    }
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut total = (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32;
+    while i < n {
+        total += (a[i] ^ b[i]).count_ones();
+        i += 1;
+    }
+    total
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn max_abs(v: &[f32]) -> f32 {
+    let n = v.len();
+    let mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+    let mut m = _mm256_setzero_ps();
+    let vp = v.as_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        m = _mm256_max_ps(m, _mm256_and_ps(_mm256_loadu_ps(vp.add(i)), mask));
+        i += 8;
+    }
+    let lo = _mm256_castps256_ps128(m);
+    let hi = _mm256_extractf128_ps(m, 1);
+    let s = _mm_max_ps(lo, hi);
+    let s = _mm_max_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_max_ss(s, _mm_shuffle_ps(s, s, 0b01));
+    let mut best = _mm_cvtss_f32(s);
+    while i < n {
+        best = best.max(v[i].abs());
+        i += 1;
+    }
+    best
+}
+
+/// Round-half-away-from-zero to i32 (`f32::round` semantics), without
+/// the double rounding a `trunc(x + 0.5)` trick suffers near values like
+/// `0.5 − 2⁻²⁵`: round to nearest-even first (exact — no pre-addition),
+/// then bump the exact halfway cases nearest-even sent toward zero back
+/// out by ±1. `x − r` is exact (Sterbenz), so ties are detected exactly.
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn round_away_epi32(x: __m256) -> __m256i {
+    let sign = _mm256_and_ps(x, _mm256_castsi256_ps(_mm256_set1_epi32(i32::MIN)));
+    let r = _mm256_round_ps(x, _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC);
+    let d = _mm256_sub_ps(x, r);
+    let half_signed = _mm256_or_ps(_mm256_set1_ps(0.5), sign);
+    let one_signed = _mm256_or_ps(_mm256_set1_ps(1.0), sign);
+    let tie_toward_zero = _mm256_cmp_ps(d, half_signed, _CMP_EQ_OQ);
+    let r = _mm256_add_ps(r, _mm256_and_ps(tie_toward_zero, one_signed));
+    _mm256_cvttps_epi32(r)
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn quantize_i16(src: &[f32], scale: f32, dst: &mut [i16]) {
+    let n = src.len();
+    let vscale = _mm256_set1_ps(scale);
+    let qmax = _mm256_set1_epi32(127);
+    let qmin = _mm256_set1_epi32(-127);
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut i = 0;
+    while i + 16 <= n {
+        let x0 = _mm256_div_ps(_mm256_loadu_ps(sp.add(i)), vscale);
+        let x1 = _mm256_div_ps(_mm256_loadu_ps(sp.add(i + 8)), vscale);
+        let q0 = _mm256_min_epi32(_mm256_max_epi32(round_away_epi32(x0), qmin), qmax);
+        let q1 = _mm256_min_epi32(_mm256_max_epi32(round_away_epi32(x1), qmin), qmax);
+        // packs interleaves the 128-bit lanes; permute restores order.
+        let packed = _mm256_packs_epi32(q0, q1);
+        let fixed = _mm256_permute4x64_epi64(packed, 0b11_01_10_00);
+        _mm256_storeu_si256(dp.add(i) as *mut __m256i, fixed);
+        i += 16;
+    }
+    while i < n {
+        dst[i] = (src[i] / scale).round().clamp(-127.0, 127.0) as i16;
+        i += 1;
+    }
+}
+
+/// Vector cos on the reduced-range polynomial (see `super::consts`):
+/// quadrant from `round(|x|·2/π)`, Cody–Waite residual, sin/cos minimax
+/// polys, blend + sign flip from the quadrant index.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn cos_ps(x: __m256) -> __m256 {
+    let abs_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+    let ax = _mm256_and_ps(x, abs_mask);
+    let t = _mm256_mul_ps(ax, _mm256_set1_ps(std::f32::consts::FRAC_2_PI));
+    let q = _mm256_round_ps(t, _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC);
+    let qi = _mm256_cvtps_epi32(q);
+    let r = _mm256_fnmadd_ps(q, _mm256_set1_ps(PIO2_HI), ax);
+    let r = _mm256_fnmadd_ps(q, _mm256_set1_ps(PIO2_MID), r);
+    let r = _mm256_fnmadd_ps(q, _mm256_set1_ps(PIO2_LO), r);
+    let z = _mm256_mul_ps(r, r);
+    // cos(r) = ((C2 z + C1) z + C0) z² + (1 − z/2)
+    let pc = _mm256_fmadd_ps(_mm256_set1_ps(COS_C2), z, _mm256_set1_ps(COS_C1));
+    let pc = _mm256_fmadd_ps(pc, z, _mm256_set1_ps(COS_C0));
+    let pc = _mm256_mul_ps(pc, _mm256_mul_ps(z, z));
+    let base = _mm256_fnmadd_ps(_mm256_set1_ps(0.5), z, _mm256_set1_ps(1.0));
+    let pc = _mm256_add_ps(pc, base);
+    // sin(r) = ((S2 z + S1) z + S0) z r + r
+    let ps = _mm256_fmadd_ps(_mm256_set1_ps(SIN_C2), z, _mm256_set1_ps(SIN_C1));
+    let ps = _mm256_fmadd_ps(ps, z, _mm256_set1_ps(SIN_C0));
+    let ps = _mm256_mul_ps(ps, z);
+    let ps = _mm256_fmadd_ps(ps, r, r);
+    // odd quadrant → sin; quadrants 1,2 (mod 4) → negate
+    let one = _mm256_set1_epi32(1);
+    let odd = _mm256_cmpeq_epi32(_mm256_and_si256(qi, one), one);
+    let v = _mm256_blendv_ps(pc, ps, _mm256_castsi256_ps(odd));
+    let quad = _mm256_and_si256(_mm256_add_epi32(qi, one), _mm256_set1_epi32(2));
+    let sgn = _mm256_slli_epi32(quad, 30);
+    _mm256_xor_ps(v, _mm256_castsi256_ps(sgn))
+}
+
+/// `cos_ps` guarded by its reduction domain: any lane with
+/// |angle| > `POLY_COS_MAX` (or NaN) sends the whole tile through libm —
+/// a branch that never fires on sane inputs but keeps adversarial client
+/// features bounded and libm-accurate instead of polynomial garbage.
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn cos_tile(v: __m256) -> __m256 {
+    let ax = _mm256_and_ps(v, _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF)));
+    let in_domain = _mm256_cmp_ps(ax, _mm256_set1_ps(POLY_COS_MAX), _CMP_LE_OQ);
+    if _mm256_movemask_ps(in_domain) == 0xFF {
+        return cos_ps(v);
+    }
+    let mut a = [0.0f32; PANEL];
+    _mm256_storeu_ps(a.as_mut_ptr(), v);
+    for x in a.iter_mut() {
+        *x = x.cos();
+    }
+    _mm256_loadu_ps(a.as_ptr())
+}
+
+/// One panel's GEMM tile: 4 k-unrolled broadcast-FMA chains into one
+/// 8-wide accumulator set.
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn panel_dot(x: &[f32], panel: &[f32]) -> __m256 {
+    let f = x.len();
+    let pp = panel.as_ptr();
+    let mut a0 = _mm256_setzero_ps();
+    let mut a1 = _mm256_setzero_ps();
+    let mut a2 = _mm256_setzero_ps();
+    let mut a3 = _mm256_setzero_ps();
+    let mut k = 0;
+    while k + 4 <= f {
+        let (x0, x1) = (_mm256_set1_ps(x[k]), _mm256_set1_ps(x[k + 1]));
+        let (x2, x3) = (_mm256_set1_ps(x[k + 2]), _mm256_set1_ps(x[k + 3]));
+        a0 = _mm256_fmadd_ps(x0, _mm256_loadu_ps(pp.add(k * PANEL)), a0);
+        a1 = _mm256_fmadd_ps(x1, _mm256_loadu_ps(pp.add((k + 1) * PANEL)), a1);
+        a2 = _mm256_fmadd_ps(x2, _mm256_loadu_ps(pp.add((k + 2) * PANEL)), a2);
+        a3 = _mm256_fmadd_ps(x3, _mm256_loadu_ps(pp.add((k + 3) * PANEL)), a3);
+        k += 4;
+    }
+    while k < f {
+        a0 = _mm256_fmadd_ps(_mm256_set1_ps(x[k]), _mm256_loadu_ps(pp.add(k * PANEL)), a0);
+        k += 1;
+    }
+    _mm256_add_ps(_mm256_add_ps(a0, a1), _mm256_add_ps(a2, a3))
+}
+
+/// Fused encode of one query row: panel GEMM, then the cos/bias/center
+/// epilogue applied to the register-resident tile before the store.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn encode_row(x: &[f32], w: &PackedPanels, bias: &[f32], mu: &[f32], out: &mut [f32]) {
+    let d = w.dim();
+    let full = d / PANEL;
+    for p in 0..w.panels() {
+        let acc = panel_dot(x, w.panel(p));
+        let col = p * PANEL;
+        if p < full {
+            let v = _mm256_add_ps(acc, _mm256_loadu_ps(bias.as_ptr().add(col)));
+            let v = cos_tile(v);
+            let v = _mm256_sub_ps(v, _mm256_loadu_ps(mu.as_ptr().add(col)));
+            _mm256_storeu_ps(out.as_mut_ptr().add(col), v);
+        } else {
+            // partial tail panel: stage bias/mu/result through stack tiles
+            let rem = d - col;
+            let mut bb = [0.0f32; PANEL];
+            let mut mm = [0.0f32; PANEL];
+            let mut vv = [0.0f32; PANEL];
+            bb[..rem].copy_from_slice(&bias[col..]);
+            mm[..rem].copy_from_slice(&mu[col..]);
+            let v = _mm256_add_ps(acc, _mm256_loadu_ps(bb.as_ptr()));
+            let v = cos_tile(v);
+            let v = _mm256_sub_ps(v, _mm256_loadu_ps(mm.as_ptr()));
+            _mm256_storeu_ps(vv.as_mut_ptr(), v);
+            out[col..].copy_from_slice(&vv[..rem]);
+        }
+    }
+}

@@ -1,6 +1,6 @@
 //! Substrate utilities built from scratch for the offline environment:
 //! deterministic PRNG (Python-parity), minimal JSON, leveled logging, and
-//! scoped thread-pool helpers.
+//! a persistent parked-worker thread pool.
 
 pub mod json;
 pub mod logging;

@@ -1,18 +1,203 @@
-//! Scoped data-parallel helpers over `std::thread` (no rayon offline).
+//! Persistent data-parallel worker pool (no rayon offline).
 //!
-//! The figure harnesses and the native inference hot path split batches of
-//! queries into contiguous chunks and process them on `available_threads()`
-//! OS threads via `std::thread::scope`. On this CI box that is 1 core (the
-//! pool degrades to an in-place loop); on a real machine it scales.
+//! The figure harnesses and the native inference hot path split batches
+//! of queries into contiguous chunks and fan them out over worker
+//! threads. Historically this spawned fresh OS threads per kernel call
+//! via `std::thread::scope`; a serving batch paid that spawn latency
+//! several times per request (encode, activations, decode). The pool is
+//! now **persistent**: [`available_threads`]` − 1` workers are spawned
+//! lazily on first use and then park on a condvar, and each
+//! [`parallel_rows`]/[`parallel_ranges`] call publishes one chunk-claiming
+//! job, participates in it from the calling thread, and blocks until the
+//! last chunk completes — the same borrowed-state fork-join shape, minus
+//! the spawns.
+//!
+//! Properties the call sites rely on:
+//!
+//! - The caller returns only after every chunk has run, so closures may
+//!   borrow stack state (the lifetime erasure below is sound for exactly
+//!   this reason).
+//! - Multiple jobs may be in flight concurrently (multi-tenant engines
+//!   share the one process-wide pool); workers drain whatever job has
+//!   unclaimed chunks.
+//! - Nested calls are safe: the inner caller claims its own chunks, so
+//!   progress never depends on a parked worker.
+//! - A panic inside a chunk is caught on the worker and re-raised on the
+//!   calling thread after the job drains (`std::thread::scope` parity).
+//! - `LOGHD_THREADS=N` pins the worker count (reproducible benching);
+//!   otherwise `available_parallelism` decides, cached once per process.
 
-/// Number of worker threads to use (>= 1).
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+
+/// Number of worker threads to use (>= 1). Honors `LOGHD_THREADS=N`;
+/// cached in a `OnceLock` after the first call (it used to be a fresh
+/// `available_parallelism` syscall per kernel invocation).
 pub fn available_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        if let Ok(v) = std::env::var("LOGHD_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// One published fork-join job: a lifetime-erased chunk runner plus the
+/// claim/completion counters. Workers claim chunk indices with a
+/// fetch-add race; the publishing caller participates too and then waits
+/// on `finished`.
+struct Job {
+    /// Erased `&F` where `F: Fn(usize) + Sync`, valid until `done`
+    /// reaches `n_chunks` (the publisher blocks until then).
+    ctx: *const (),
+    /// Monomorphized trampoline that reconstitutes `ctx` and runs one
+    /// chunk index.
+    call: unsafe fn(*const (), usize),
+    n_chunks: usize,
+    next: AtomicUsize,
+    done: AtomicUsize,
+    panic_payload: Mutex<Option<PanicPayload>>,
+    finished: Mutex<bool>,
+    finished_cv: Condvar,
+}
+
+// SAFETY: `ctx` points at an `F: Fn(usize) + Sync` owned by the
+// publishing call frame, which outlives every dereference (the publisher
+// blocks until `done == n_chunks`, and exhausted jobs are never called
+// again). Shared invocation is fine because `F: Sync`.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and run chunks until none remain.
+    fn run_chunks(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n_chunks {
+                return;
+            }
+            let result = catch_unwind(AssertUnwindSafe(|| unsafe { (self.call)(self.ctx, i) }));
+            if let Err(payload) = result {
+                *self.panic_payload.lock().unwrap() = Some(payload);
+            }
+            // AcqRel: the finishing increment acquires every prior
+            // chunk's release so the waiter observes all chunk writes.
+            if self.done.fetch_add(1, Ordering::AcqRel) + 1 == self.n_chunks {
+                let mut fin = self.finished.lock().unwrap();
+                *fin = true;
+                self.finished_cv.notify_all();
+            }
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.n_chunks
+    }
+
+    fn wait(&self) {
+        let mut fin = self.finished.lock().unwrap();
+        while !*fin {
+            fin = self.finished_cv.wait(fin).unwrap();
+        }
+    }
+}
+
+unsafe fn trampoline<F: Fn(usize) + Sync>(ctx: *const (), i: usize) {
+    (*(ctx as *const F))(i)
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    cv: Condvar,
+}
+
+fn worker_loop(shared: &'static Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                q.retain(|j| !j.exhausted());
+                if let Some(j) = q.front() {
+                    break j.clone();
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        job.run_chunks();
+    }
+}
+
+/// The process-wide pool: `available_threads() - 1` parked workers,
+/// spawned on first use (the calling thread is the Nth participant).
+fn pool() -> &'static Shared {
+    static POOL: OnceLock<&'static Shared> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let shared: &'static Shared =
+            Box::leak(Box::new(Shared { queue: Mutex::new(VecDeque::new()), cv: Condvar::new() }));
+        for i in 0..available_threads().saturating_sub(1) {
+            std::thread::Builder::new()
+                .name(format!("loghd-worker-{i}"))
+                .spawn(move || worker_loop(shared))
+                .expect("spawn loghd worker");
+        }
+        shared
+    })
+}
+
+/// Publish `n_chunks` invocations of `f` to the pool, participate from
+/// this thread, and return once all have run (re-raising any panic).
+fn run_parallel<F: Fn(usize) + Sync>(n_chunks: usize, f: F) {
+    debug_assert!(n_chunks >= 2, "single-chunk jobs run inline at the call site");
+    if available_threads() <= 1 {
+        // Zero-worker pool: publishing would only queue garbage — run
+        // the chunks inline on the caller.
+        for i in 0..n_chunks {
+            f(i);
+        }
+        return;
+    }
+    let job = Arc::new(Job {
+        ctx: &f as *const F as *const (),
+        call: trampoline::<F>,
+        n_chunks,
+        next: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        panic_payload: Mutex::new(None),
+        finished: Mutex::new(false),
+        finished_cv: Condvar::new(),
+    });
+    let shared = pool();
+    {
+        let mut q = shared.queue.lock().unwrap();
+        q.push_back(job.clone());
+    }
+    shared.cv.notify_all();
+    job.run_chunks();
+    job.wait();
+    // Publisher-side cleanup: workers also drop exhausted jobs, but only
+    // when one next wakes — removing our own entry keeps the queue from
+    // retaining finished jobs (and their dangling ctx) between calls.
+    {
+        let mut q = shared.queue.lock().unwrap();
+        q.retain(|j| !Arc::ptr_eq(j, &job));
+    }
+    if let Some(payload) = job.panic_payload.lock().unwrap().take() {
+        std::panic::resume_unwind(payload);
+    }
 }
 
 /// Run `f(chunk_start, chunk_end)` over `[0, len)` split into roughly equal
-/// contiguous chunks, one per thread. `f` runs on borrowed state — the
-/// classic fork-join shape.
+/// contiguous chunks, at most one per participating thread. `f` runs on
+/// borrowed state — the classic fork-join shape, now on parked workers.
 pub fn parallel_ranges<F>(len: usize, threads: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -23,16 +208,15 @@ where
         return;
     }
     let chunk = len.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for t in 0..threads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(len);
-            if lo >= hi {
-                break;
-            }
-            let f = &f;
-            scope.spawn(move || f(lo, hi));
-        }
+    let n_chunks = len.div_ceil(chunk);
+    if n_chunks <= 1 {
+        f(0, len);
+        return;
+    }
+    run_parallel(n_chunks, |c| {
+        let lo = c * chunk;
+        let hi = ((c + 1) * chunk).min(len);
+        f(lo, hi);
     });
 }
 
@@ -53,14 +237,23 @@ where
         return;
     }
     let chunk_rows = rows.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (t, slab) in out.chunks_mut(chunk_rows * row_width).enumerate() {
-            let f = &f;
-            scope.spawn(move || {
-                for (i, row) in slab.chunks_mut(row_width).enumerate() {
-                    f(t * chunk_rows + i, row);
-                }
-            });
+    let n_chunks = rows.div_ceil(chunk_rows);
+    if n_chunks <= 1 {
+        for (i, row) in out.chunks_mut(row_width).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    // Chunks are disjoint row ranges of `out`; each is re-sliced from the
+    // base pointer inside its own claim, so no two chunks alias.
+    let base = out.as_mut_ptr() as usize;
+    run_parallel(n_chunks, |c| {
+        let lo_row = c * chunk_rows;
+        let hi_row = ((c + 1) * chunk_rows).min(rows);
+        let ptr = (base as *mut f32).wrapping_add(lo_row * row_width);
+        let slab = unsafe { std::slice::from_raw_parts_mut(ptr, (hi_row - lo_row) * row_width) };
+        for (i, row) in slab.chunks_mut(row_width).enumerate() {
+            f(lo_row + i, row);
         }
     });
 }
@@ -102,5 +295,69 @@ mod tests {
         let mut out = vec![0.0f32; 6];
         parallel_rows(&mut out, 2, 1, |i, row| row.fill(i as f32));
         assert_eq!(out, vec![0., 0., 1., 1., 2., 2.]);
+    }
+
+    #[test]
+    fn available_threads_is_cached_and_positive() {
+        let a = available_threads();
+        assert!(a >= 1);
+        assert_eq!(a, available_threads());
+    }
+
+    #[test]
+    fn pool_survives_many_sequential_jobs() {
+        // Spawn-per-call would make this test expensive; on the parked
+        // pool it is one spawn set total. Also doubles as a correctness
+        // soak under claim races.
+        for round in 0..200usize {
+            let mut out = vec![0.0f32; 64];
+            parallel_rows(&mut out, 4, 4, |i, row| row.fill((i * (round + 1)) as f32));
+            for (i, chunk) in out.chunks(4).enumerate() {
+                assert!(chunk.iter().all(|v| *v == (i * (round + 1)) as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn nested_parallel_calls_complete() {
+        let mut out = vec![0.0f32; 32];
+        parallel_rows(&mut out, 8, 4, |i, row| {
+            let counter = AtomicUsize::new(0);
+            parallel_ranges(16, 2, |lo, hi| {
+                counter.fetch_add(hi - lo, Ordering::Relaxed);
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), 16);
+            row.fill(i as f32);
+        });
+        for (i, chunk) in out.chunks(8).enumerate() {
+            assert!(chunk.iter().all(|v| *v == i as f32));
+        }
+    }
+
+    #[test]
+    fn concurrent_jobs_from_many_threads() {
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                s.spawn(move || {
+                    let mut out = vec![0.0f32; 40];
+                    parallel_rows(&mut out, 5, 4, |i, row| row.fill((t * 100 + i) as f32));
+                    for (i, chunk) in out.chunks(5).enumerate() {
+                        assert!(chunk.iter().all(|v| *v == (t * 100 + i) as f32));
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let result = std::panic::catch_unwind(|| {
+            parallel_ranges(8, 4, |lo, _hi| {
+                if lo == 0 {
+                    panic!("chunk failure");
+                }
+            });
+        });
+        assert!(result.is_err(), "panic inside a chunk must reach the caller");
     }
 }

@@ -8,9 +8,14 @@ use loghd::loghd::codebook;
 use loghd::loghd::model::LogHdModel;
 use loghd::loghd::qmodel::QuantizedLogHdModel;
 use loghd::quant::{self, Precision};
-use loghd::tensor::{self, Matrix};
+use loghd::tensor::{self, simd, Matrix};
 use loghd::util::json;
 use loghd::util::rng::SplitMix64;
+
+/// The widths the SIMD agreement properties sweep: word/lane boundaries
+/// (63/64/65), sub-vector sizes, and a long row; each also checked on an
+/// offset sub-slice so unaligned tails are exercised.
+const SIMD_WIDTHS: [usize; 6] = [1, 63, 64, 65, 200, 1000];
 
 /// Run `cases` seeded property checks.
 fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut SplitMix64)) {
@@ -24,6 +29,202 @@ fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut SplitMix64)) {
             panic!("property '{name}' failed at case seed {seed:#x}: {e:?}");
         }
     }
+}
+
+#[test]
+fn prop_simd_f32_kernels_match_scalar_reference() {
+    // The dispatched f32 kernels must stay within FMA/lane-reassociation
+    // distance (1e-5 relative) of the scalar reference, across widths
+    // and unaligned tails, whatever path `simd::path()` picked. Under
+    // `LOGHD_FORCE_SCALAR=1` (the CI scalar leg) this degenerates to
+    // exact self-agreement — both dispatch modes run the same pins.
+    forall("simd-f32", 20, |rng| {
+        for width in SIMD_WIDTHS {
+            for off in [0usize, 1] {
+                let n = width + off;
+                let a = rng.normals_f32(n);
+                let rows: Vec<Vec<f32>> = (0..4).map(|_| rng.normals_f32(n)).collect();
+                let (a, r0, r1) = (&a[off..], &rows[0][off..], &rows[1][off..]);
+                let (r2, r3) = (&rows[2][off..], &rows[3][off..]);
+                let close = |g: f32, w: f32| (g - w).abs() <= 1e-5 * (1.0 + w.abs());
+
+                let want = simd::scalar::dot(a, r0);
+                assert!(close(simd::dot(a, r0), want), "dot w={width} off={off}");
+
+                let got4 = simd::dot4(a, r0, r1, r2, r3);
+                let want4 = simd::scalar::dot4(a, r0, r1, r2, r3);
+                for (g, w) in got4.iter().zip(want4) {
+                    assert!(close(*g, w), "dot4 w={width} off={off}");
+                }
+
+                assert_eq!(
+                    simd::max_abs(a),
+                    simd::scalar::max_abs(a),
+                    "max_abs w={width} off={off}"
+                );
+
+                let alpha = rng.normal() as f32;
+                let mut y_got = rows[0][off..].to_vec();
+                let mut y_want = y_got.clone();
+                simd::axpy(alpha, a, &mut y_got);
+                simd::scalar::axpy(alpha, a, &mut y_want);
+                for (g, w) in y_got.iter().zip(&y_want) {
+                    assert!(close(*g, *w), "axpy w={width} off={off}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_simd_int_kernels_bit_exact_vs_scalar() {
+    // Integer kernels have no reassociation slack: XNOR/popcount, the
+    // i16/i32 dots, and the int8 quantize map must match the scalar
+    // reference exactly (the quantize pin is what keeps the B8 query
+    // side bit-identical to the stored-tensor quantizer policy).
+    forall("simd-int", 20, |rng| {
+        for width in SIMD_WIDTHS {
+            for off in [0usize, 1] {
+                let n = width + off;
+                // int8-valued i16 rows, including the +128 fault code
+                let gen_row = |rng: &mut SplitMix64| -> Vec<i16> {
+                    (0..n).map(|_| (rng.below(256) as i64 - 127) as i16).collect()
+                };
+                let a = gen_row(rng);
+                let rows: Vec<Vec<i16>> = (0..4).map(|_| gen_row(rng)).collect();
+                let (av, r0, r1) = (&a[off..], &rows[0][off..], &rows[1][off..]);
+                let (r2, r3) = (&rows[2][off..], &rows[3][off..]);
+                assert_eq!(simd::dot_i16(av, r0), simd::scalar::dot_i16(av, r0), "w={width}");
+                assert_eq!(
+                    simd::dot_i16_4(av, r0, r1, r2, r3),
+                    simd::scalar::dot_i16_4(av, r0, r1, r2, r3),
+                    "dot_i16_4 w={width} off={off}"
+                );
+
+                let wa: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+                let wb: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+                assert_eq!(
+                    simd::hamming(&wa[off..], &wb[off..]),
+                    simd::scalar::hamming(&wa[off..], &wb[off..]),
+                    "hamming w={width} off={off}"
+                );
+
+                let src = rng.normals_f32(n);
+                let scale = (simd::max_abs(&src) / 127.0).max(1e-12);
+                let mut got = vec![0i16; n - off];
+                let mut want = got.clone();
+                simd::quantize_i16(&src[off..], scale, &mut got);
+                simd::scalar::quantize_i16(&src[off..], scale, &mut want);
+                assert_eq!(got, want, "quantize_i16 w={width} off={off}");
+            }
+        }
+    });
+}
+
+#[test]
+fn quantize_rounding_edges_match_f32_round() {
+    // Deterministic adversarial inputs for the int8 map: exact halfway
+    // ties (must round away from zero, like `f32::round`) and the
+    // double-rounding trap 0.5 − 2⁻²⁵ (where a trunc(x + 0.5) trick
+    // rounds up to 1 but `round` gives 0).
+    let trap = 0.5f32 - f32::EPSILON / 4.0;
+    let src = [trap, -trap, 0.5, -0.5, 1.5, 2.5, -1.5, -2.5, 63.5, -63.5, 126.5, -126.5];
+    let want: [i16; 12] = [0, 0, 1, -1, 2, 3, -2, -3, 64, -64, 127, -127];
+    let mut got = [0i16; 12];
+    simd::quantize_i16(&src, 1.0, &mut got);
+    assert_eq!(got, want, "dispatched path");
+    let mut got_scalar = [0i16; 12];
+    simd::scalar::quantize_i16(&src, 1.0, &mut got_scalar);
+    assert_eq!(got_scalar, want, "scalar reference");
+}
+
+#[test]
+fn prop_poly_cos_within_1e6_of_libm() {
+    // The SIMD encoder epilogue's cosine: ≤ 1e-6 absolute from libm over
+    // the documented |x| ≤ 8192 domain, including quadrant boundaries.
+    forall("poly-cos", 10, |rng| {
+        for _ in 0..5_000 {
+            let x = ((rng.uniform() - 0.5) * 2.0 * 8192.0) as f32;
+            let want = (x as f64).cos() as f32;
+            assert!((simd::cos_poly(x) - want).abs() <= 1e-6, "x={x}");
+        }
+        // near multiples of π/4 (reduction/select boundaries)
+        for k in -64i64..=64 {
+            for eps in [-1e-4f64, -1e-6, 0.0, 1e-6, 1e-4] {
+                let x = (k as f64 * std::f64::consts::FRAC_PI_4 + eps) as f32;
+                let want = (x as f64).cos() as f32;
+                assert!((simd::cos_poly(x) - want).abs() <= 1e-6, "k={k} eps={eps}");
+            }
+        }
+        // beyond the reduction domain the scalar twin is exactly libm
+        for x in [1.0e8f32, -1.0e8, 9000.0, f32::INFINITY] {
+            assert_eq!(simd::cos_poly(x).to_bits(), x.cos().to_bits(), "x={x}");
+        }
+        assert!(simd::cos_poly(f32::NAN).is_nan());
+    });
+}
+
+#[test]
+fn prop_vector_cos_epilogue_within_1e6_of_libm() {
+    // Pin the *vector* cosine (cos_ps / cos_q) that the SIMD encoder
+    // epilogue actually runs, not just the scalar `cos_poly` twin: with
+    // F = 1, x = [1.0], bias = mu = 0, the panel GEMM is the exact
+    // product 1.0 · w_j, so encode_row's output is the dispatched
+    // cosine of w_j alone — comparable to libm at the full 1e-6 bound.
+    forall("vector-cos", 10, |rng| {
+        let d = 64 + rng.below(200) as usize;
+        let mut angles: Vec<f32> =
+            (0..d).map(|_| ((rng.uniform() - 0.5) * 2.0 * 8192.0) as f32).collect();
+        // sprinkle quadrant boundaries into the batch
+        for (slot, k) in (0..d).step_by(7).zip(-32i64..) {
+            angles[slot] = (k as f64 * std::f64::consts::FRAC_PI_4) as f32;
+        }
+        // and out-of-domain magnitudes: the tile must fall back to libm
+        // (bounded output) instead of running the polynomial there
+        angles[3] = 1.0e8;
+        angles[11] = -2.5e7;
+        let w = Matrix::from_vec(1, d, angles.clone());
+        let packed = simd::PackedPanels::pack_columns(&w);
+        let zeros = vec![0.0f32; d];
+        let mut out = vec![0.0f32; d];
+        simd::encode_row(&[1.0], &packed, &zeros, &zeros, &mut out);
+        for (j, angle) in angles.iter().enumerate() {
+            let want = (*angle as f64).cos() as f32;
+            assert!((out[j] - want).abs() <= 1e-6, "j={j} angle={angle}");
+        }
+    });
+}
+
+#[test]
+fn prop_fused_encode_matches_two_pass_reference() {
+    // The fused panel-GEMM + cos encoder vs the explicit matmul-then-
+    // libm-cos reference: ≤ 1e-5 relative on the angle plus the 1e-6
+    // poly budget, across panel-boundary widths and batch shapes.
+    forall("fused-encode", 12, |rng| {
+        let f = 1 + rng.below(24) as usize;
+        let d = 1 + rng.below(300) as usize;
+        let b = 1 + rng.below(5) as usize;
+        let mut enc = loghd::encoder::Encoder::new(f, d, rng.next_u64());
+        enc.set_mu(rng.normals_f32(d));
+        let x = Matrix::from_vec(b, f, rng.normals_f32(b * f));
+        let out = enc.encode(&x);
+        for i in 0..b {
+            for j in 0..d {
+                let mut acc = 0.0f32;
+                for k in 0..f {
+                    acc += x.at(i, k) * enc.w().at(k, j);
+                }
+                let angle = acc + enc.b[j];
+                let want = angle.cos() - enc.mu[j];
+                let tol = 2e-6 + 1e-5 * (1.0 + angle.abs());
+                assert!(
+                    (out.at(i, j) - want).abs() <= tol,
+                    "f={f} d={d} ({i},{j}): {} vs {want}",
+                    out.at(i, j)
+                );
+            }
+        }
+    });
 }
 
 #[test]
