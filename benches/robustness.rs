@@ -1,0 +1,26 @@
+//! Equal-memory robustness campaign harness (EXPERIMENTS.md §Robustness).
+//!
+//! Runs `eval::campaign` — solve equal-memory cells at one stored-size
+//! budget, Monte-Carlo bit-flip campaigns over them, resilience metrics
+//! with bootstrap CIs — and writes `results/BENCH_robustness.json` plus
+//! a repo-root snapshot. Smoke profile by default (CI-sized);
+//! `LOGHD_FULL=1` switches to the paper-scale ISOLET grid.
+//!
+//! The artifact is deterministic outside its `meta` section for a fixed
+//! profile, at any `LOGHD_THREADS` — which is what lets CI and the
+//! golden conformance suite compare it at all.
+
+use loghd::eval::campaign::{self, CampaignConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = if std::env::var("LOGHD_FULL").as_deref() == Ok("1") {
+        CampaignConfig::full()
+    } else {
+        CampaignConfig::smoke()
+    };
+    let res = campaign::run(&cfg)?;
+    print!("{}", res.summary());
+    res.write_default_artifacts()?;
+    println!("wrote results/BENCH_robustness.json (+ repo-root snapshot)");
+    Ok(())
+}

@@ -43,11 +43,19 @@ pub fn dimension_saliency(h: &Matrix) -> Vec<f64> {
     var
 }
 
+/// Retained dimensions at sparsity S — the one rounding rule shared by
+/// [`build_mask`] and the equal-memory budget accounting
+/// (`eval::campaign::stored_bits`); if they ever diverged, "equal
+/// memory" cells would stop being equal memory.
+pub fn retained_dims(d: usize, sparsity: f64) -> usize {
+    ((1.0 - sparsity) * d as f64).round().max(1.0) as usize
+}
+
 /// Build the retained-dimension mask for sparsity S (stable top-k).
 pub fn build_mask(h: &Matrix, sparsity: f64) -> Vec<bool> {
     assert!((0.0..1.0).contains(&sparsity), "sparsity {sparsity} out of [0,1)");
     let d = h.cols();
-    let keep = ((1.0 - sparsity) * d as f64).round().max(1.0) as usize;
+    let keep = retained_dims(d, sparsity);
     let sal = dimension_saliency(h);
     let mut order: Vec<usize> = (0..d).collect();
     // stable sort descending by saliency (ties keep original order,

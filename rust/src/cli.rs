@@ -8,6 +8,7 @@
 //! loghd serve  --model page=models/page:8,conv=models/page_conv
 //!              [--replicas 2 --default page --addr 127.0.0.1:7878]
 //!              | --artifacts artifacts/page_smoke [--entry infer_loghd]
+//! loghd robustness [--profile smoke|full] [--out path.json]  # equal-memory campaign
 //! loghd table2 [--n 7]                    # hardware-efficiency ratios
 //! ```
 
@@ -86,6 +87,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "robustness" => cmd_robustness(&args),
         "table2" => cmd_table2(&args),
         other => bail!("unknown command '{other}' (try 'loghd help')"),
     }
@@ -102,12 +104,22 @@ USAGE:
   loghd serve  (--model <name=dir[:bits],...> | --artifacts <bundle dir> [--entry infer_loghd])
                [--replicas R] [--default <name>] [--bits 1|2|4|8|32]
                [--addr 127.0.0.1:7878] [--max_batch 64] [--max_delay_ms 2]
+  loghd robustness [--profile smoke|full] [--dataset <name>] [--d <dim>]
+               [--budget <frac of C*D*32>] [--target <frac of clean acc>]
+               [--trials T] [--seed S] [--out <path.json>]
   loghd table2 [--n <bundles>]
 
 serve hosts every named model behind one JSON-lines TCP endpoint (see
 docs/PROTOCOL.md): requests route by their \"model\" field (default: the
 --default tenant), {\"cmd\":\"models\"} lists tenants, {\"cmd\":\"reload\"}
 hot-swaps one tenant's artifact without dropping in-flight requests.
+
+robustness solves equal-memory (method, precision, n/sparsity) cells at
+one stored-size budget, runs Monte-Carlo bit-flip campaigns over them,
+and reports accuracy-vs-flip-rate curves plus the class-axis vs
+feature-axis resilience ratio (the paper's headline claim). Output is
+bit-identical for any LOGHD_THREADS; default --out is
+results/BENCH_robustness.json plus a repo-root snapshot.
 ";
 
 fn cmd_info() -> Result<()> {
@@ -265,6 +277,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
+fn cmd_robustness(args: &Args) -> Result<()> {
+    let profile = flag(args, "profile").unwrap_or("smoke");
+    let mut cfg = crate::eval::CampaignConfig::by_name(profile)
+        .with_context(|| format!("unknown profile '{profile}' (smoke|full)"))?;
+    if let Some(ds) = flag(args, "dataset") {
+        cfg.dataset = ds.to_string();
+    }
+    if let Some(d) = flag(args, "d") {
+        cfg.d = d.parse().context("--d")?;
+    }
+    if let Some(b) = flag(args, "budget") {
+        cfg.budget_frac_f32 = b.parse().context("--budget")?;
+    }
+    if let Some(t) = flag(args, "target") {
+        cfg.target_frac = t.parse().context("--target")?;
+    }
+    if let Some(t) = flag(args, "trials") {
+        cfg.trials = t.parse().context("--trials")?;
+    }
+    if let Some(s) = flag(args, "seed") {
+        cfg.seed = s.parse().context("--seed")?;
+    }
+    let res = crate::eval::campaign::run(&cfg)?;
+    print!("{}", res.summary());
+    match flag(args, "out") {
+        Some(path) => {
+            let path = PathBuf::from(path);
+            if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(&path, crate::util::json::to_string_pretty(&res.to_json()))?;
+            println!("wrote {}", path.display());
+        }
+        None => {
+            res.write_default_artifacts()?;
+            println!("wrote results/BENCH_robustness.json (+ repo-root snapshot)");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_table2(args: &Args) -> Result<()> {
     let n: usize = flag(args, "n").unwrap_or("7").parse()?;
     println!("Table II — hardware efficiency ratios (LogHD ASIC / baseline), ISOLET C=26 k=2 n={n}");
@@ -312,6 +365,13 @@ mod tests {
     #[test]
     fn unknown_command_errors() {
         assert!(run(vec!["frobnicate".into()]).is_err());
+    }
+
+    #[test]
+    fn robustness_rejects_unknown_profile() {
+        let err =
+            run(vec!["robustness".into(), "--profile".into(), "warp".into()]).unwrap_err();
+        assert!(err.to_string().contains("unknown profile"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,721 @@
+//! Equal-memory robustness campaign engine (the paper's headline claim,
+//! made regression-testable).
+//!
+//! The paper's core comparison is *matched-budget*: at the same stored
+//! model size, LogHD's class-axis reduction sustains target accuracy at
+//! ~2.5–3.0× higher bit-flip rates than feature-axis compression. This
+//! module turns that sentence into a pipeline:
+//!
+//! 1. **Solve** — [`solve_equal_memory`] enumerates (method, precision,
+//!    n / sparsity) tuples whose *stored* model size (in bits, counted
+//!    exactly over the representation the fault injector corrupts —
+//!    [`stored_bits`]) lands within a tolerance of one memory budget.
+//!    Lower precision buys redundancy: at the same bits a 1-bit LogHD
+//!    cell affords many more bundles than an 8-bit one — which is
+//!    exactly the robustness trade the paper studies.
+//! 2. **Run** — Monte-Carlo bit-flip campaigns over the solved cells on
+//!    the persistent worker pool. Every (cell, flip rate, trial) job
+//!    derives its own [`SplitMix64`] stream via
+//!    [`sweep::cell_stream`], and every tensor kernel parallelizes over
+//!    whole output rows, so campaign output is **bit-identical for any
+//!    `LOGHD_THREADS`** (pinned by `rust/tests/integration_robustness.rs`).
+//! 3. **Score** — accuracy-vs-flip-rate curves, the interpolated
+//!    "max flip rate sustaining target accuracy" resilience metric
+//!    ([`sustained_until`]), bootstrap 95% CIs, and the class-axis vs
+//!    feature-axis resilience ratio.
+//!
+//! `loghd robustness` (CLI) and `benches/robustness.rs` drive it and
+//! emit `results/BENCH_robustness.json`; `testkit::golden` pins the
+//! solver table + schema as a conformance suite.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::eval::metrics::{mean_std, percentile, sustained_until};
+use crate::eval::sweep::{self, Method, Workbench};
+use crate::loghd::codebook::min_bundles;
+use crate::loghd::model::TrainOptions;
+use crate::quant::Precision;
+use crate::testkit;
+use crate::util::json::{self, Value};
+use crate::util::rng::SplitMix64;
+use crate::util::threadpool;
+
+/// Campaign scope: dataset, memory budget, fault grid, statistics.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    pub profile: String,
+    pub dataset: String,
+    pub d: usize,
+    pub train_cap: usize,
+    pub test_cap: usize,
+    /// Budget as a fraction of the conventional f32 footprint:
+    /// `budget_bits = round(frac · C · D · 32)`.
+    pub budget_frac_f32: f64,
+    /// Max relative |stored − budget| / budget for a cell to qualify.
+    pub tolerance: f64,
+    /// Target accuracy as a fraction of the clean conventional accuracy.
+    pub target_frac: f64,
+    /// Ascending flip-rate grid; must start at 0.0 (the clean point).
+    pub ps: Vec<f64>,
+    pub trials: usize,
+    pub seed: u64,
+    pub epochs: usize,
+    pub conv_epochs: usize,
+    /// Hybrid cells run at n = min_bundles(C, k) + hybrid_extra.
+    pub hybrid_extra: usize,
+    pub k: u32,
+    /// Bootstrap resamples for the resilience CI.
+    pub bootstrap: usize,
+}
+
+impl CampaignConfig {
+    /// CI-sized profile: miniature page workload, minutes of CPU.
+    pub fn smoke() -> Self {
+        Self {
+            profile: "smoke".into(),
+            dataset: "page".into(),
+            d: 256,
+            train_cap: 400,
+            test_cap: 150,
+            budget_frac_f32: 0.15,
+            tolerance: 0.05,
+            target_frac: 0.8,
+            ps: vec![0.0, 0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.65, 0.8],
+            trials: 3,
+            seed: 1,
+            epochs: 3,
+            conv_epochs: 1,
+            hybrid_extra: 2,
+            k: 2,
+            bootstrap: 200,
+        }
+    }
+
+    /// Paper-scale profile (ISOLET, D=2000).
+    pub fn full() -> Self {
+        Self {
+            profile: "full".into(),
+            dataset: "isolet".into(),
+            d: 2000,
+            train_cap: 3000,
+            test_cap: 800,
+            budget_frac_f32: 0.15,
+            tolerance: 0.05,
+            target_frac: 0.8,
+            ps: vec![0.0, 0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9],
+            trials: 5,
+            seed: 1,
+            epochs: 5,
+            conv_epochs: 2,
+            hybrid_extra: 2,
+            k: 2,
+            bootstrap: 500,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "smoke" => Some(Self::smoke()),
+            "full" => Some(Self::full()),
+            _ => None,
+        }
+    }
+
+    /// The solved budget in bits for a (classes, d) workload.
+    pub fn budget_bits(&self, classes: usize, d: usize) -> usize {
+        (self.budget_frac_f32 * (classes * d * 32) as f64).round() as usize
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.ps.is_empty() || self.ps[0] != 0.0 {
+            bail!("flip-rate grid must start at 0.0 (the clean reference point)");
+        }
+        if !self.ps.windows(2).all(|w| w[0] < w[1]) {
+            bail!("flip-rate grid must be strictly ascending");
+        }
+        if self.trials == 0 {
+            bail!("trials must be >= 1");
+        }
+        if !self.budget_frac_f32.is_finite() || self.budget_frac_f32 <= 0.0 {
+            bail!("budget fraction must be a positive number, got {}", self.budget_frac_f32);
+        }
+        if !self.target_frac.is_finite() || self.target_frac <= 0.0 || self.target_frac > 1.0 {
+            bail!("target fraction must be in (0, 1], got {}", self.target_frac);
+        }
+        if !self.tolerance.is_finite() || self.tolerance < 0.0 || self.tolerance >= 1.0 {
+            bail!("budget tolerance must be in [0, 1), got {}", self.tolerance);
+        }
+        Ok(())
+    }
+}
+
+pub use crate::baselines::sparsehd::retained_dims;
+
+/// Stored model size in bits for one (method, precision) cell — counted
+/// over exactly the representation `eval::sweep` exposes to the fault
+/// injector (LogHD/Hybrid store bundles + per-column profile deviations
+/// + the n-vector profile mean; SparseHD stores only retained
+/// coordinates; the index bitmap is excluded, as in the paper).
+pub fn stored_bits(method: &Method, precision: Precision, classes: usize, d: usize) -> usize {
+    let b = precision.bits() as usize;
+    match *method {
+        Method::Conventional => classes * d * b,
+        Method::SparseHd { sparsity } => retained_dims(d, sparsity) * classes * b,
+        Method::LogHd { n, .. } => (n * d + classes * n + n) * b,
+        Method::Hybrid { n, sparsity, .. } => {
+            (n * retained_dims(d, sparsity) + classes * n + n) * b
+        }
+    }
+}
+
+/// One solved equal-memory grid cell.
+#[derive(Debug, Clone)]
+pub struct CampaignCell {
+    pub method: Method,
+    pub precision: Precision,
+    pub stored_bits: usize,
+    /// Relative deviation (stored − budget) / budget.
+    pub budget_dev: f64,
+}
+
+impl CampaignCell {
+    pub fn label(&self) -> String {
+        format!("{}@{}", self.method.label(), self.precision.label())
+    }
+
+    /// Which side of the paper's comparison the cell sits on.
+    pub fn family(&self) -> &'static str {
+        match self.method {
+            Method::Conventional => "reference",
+            Method::SparseHd { .. } => "feature-axis",
+            Method::LogHd { .. } | Method::Hybrid { .. } => "class-axis",
+        }
+    }
+}
+
+/// Solve the equal-memory grid: for each method family × precision,
+/// pick the free parameter (bundle count n, or sparsity S) that lands
+/// the stored size nearest `budget_bits`, and keep the cell if it is
+/// feasible and within `tolerance`. Enumeration order is fixed
+/// (conventional, LogHD, SparseHD, hybrid × f32, b8, b1) so campaign
+/// artifacts are stable.
+pub fn solve_equal_memory(
+    budget_bits: usize,
+    classes: usize,
+    d: usize,
+    k: u32,
+    hybrid_n: usize,
+    tolerance: f64,
+) -> Vec<CampaignCell> {
+    let precisions = [Precision::F32, Precision::B8, Precision::B1];
+    let budget = budget_bits as f64;
+    let mut out = Vec::new();
+    let mut push = |method: Method, precision: Precision| {
+        let stored = stored_bits(&method, precision, classes, d);
+        let dev = (stored as f64 - budget) / budget;
+        if dev.abs() <= tolerance {
+            out.push(CampaignCell { method, precision, stored_bits: stored, budget_dev: dev });
+        }
+    };
+    for precision in precisions {
+        push(Method::Conventional, precision);
+    }
+    for precision in precisions {
+        let b = precision.bits() as usize;
+        let per_n = (b * (d + classes + 1)) as f64;
+        let n = (budget / per_n).round() as usize;
+        if n >= min_bundles(classes, k) {
+            push(Method::LogHd { k, n }, precision);
+        }
+    }
+    for precision in precisions {
+        let b = precision.bits() as usize;
+        let r = (budget / (b * classes) as f64).round() as usize;
+        if (1..=d).contains(&r) {
+            push(Method::SparseHd { sparsity: 1.0 - r as f64 / d as f64 }, precision);
+        }
+    }
+    for precision in precisions {
+        let b = precision.bits() as usize;
+        let values = budget / b as f64;
+        let fixed = (classes * hybrid_n + hybrid_n) as f64; // profiles + mean
+        let r = ((values - fixed) / hybrid_n as f64).round() as usize;
+        if (1..=d).contains(&r) {
+            push(
+                Method::Hybrid { k, n: hybrid_n, sparsity: 1.0 - r as f64 / d as f64 },
+                precision,
+            );
+        }
+    }
+    out
+}
+
+/// Per-cell campaign outcome.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub cell: CampaignCell,
+    /// Per-p per-trial accuracies, `acc_trials[p_index][trial]`.
+    pub acc_trials: Vec<Vec<f64>>,
+    pub acc_mean: Vec<f64>,
+    pub acc_std: Vec<f64>,
+    /// Clean (p = 0) mean accuracy.
+    pub clean: f64,
+    /// Max flip rate sustaining the target accuracy (interpolated).
+    pub resilience: f64,
+    /// Bootstrap 95% CI on the resilience.
+    pub resilience_ci95: (f64, f64),
+}
+
+/// Whole-campaign outcome (serialize with [`CampaignResult::to_json`]).
+#[derive(Debug, Clone)]
+pub struct CampaignResult {
+    pub config: CampaignConfig,
+    pub classes: usize,
+    pub budget_bits: usize,
+    pub clean_conventional: f64,
+    pub target_accuracy: f64,
+    pub cells: Vec<CellResult>,
+    pub class_axis_best: (String, f64),
+    pub feature_axis_best: (String, f64),
+    /// class-axis best / feature-axis best; `None` when the feature-axis
+    /// side never reaches the target even clean.
+    pub resilience_ratio: Option<f64>,
+    pub threads: usize,
+    pub elapsed_s: f64,
+}
+
+/// Run the campaign: solve cells, warm the model caches, fan the
+/// (cell × flip rate × trial) grid out over the worker pool, score.
+pub fn run(cfg: &CampaignConfig) -> Result<CampaignResult> {
+    cfg.validate()?;
+    let t0 = Instant::now();
+    let ds = testkit::scaled_dataset(&cfg.dataset, cfg.train_cap, cfg.test_cap)?;
+    let classes = ds.spec.classes;
+    let budget_bits = cfg.budget_bits(classes, cfg.d);
+    let hybrid_n = min_bundles(classes, cfg.k) + cfg.hybrid_extra;
+    let cells = solve_equal_memory(budget_bits, classes, cfg.d, cfg.k, hybrid_n, cfg.tolerance);
+    if !cells.iter().any(|c| c.family() == "class-axis") {
+        bail!("no class-axis cell fits budget {budget_bits} bits (tolerance {})", cfg.tolerance);
+    }
+    if !cells.iter().any(|c| c.family() == "feature-axis") {
+        bail!("no feature-axis cell fits budget {budget_bits} bits (tolerance {})", cfg.tolerance);
+    }
+    crate::log_info!(
+        "campaign[{}]: {} at D={}, budget {} bits, {} equal-memory cells",
+        cfg.profile,
+        cfg.dataset,
+        cfg.d,
+        budget_bits,
+        cells.len()
+    );
+
+    let opts = TrainOptions {
+        epochs: cfg.epochs,
+        conv_epochs: cfg.conv_epochs,
+        ..Default::default()
+    };
+    let mut wb = Workbench::new(&ds, cfg.d, 0xE5C0DE, opts);
+    for cell in &cells {
+        wb.warm(cell.method)?;
+    }
+    let clean_conventional = wb.conventional_clean();
+    let target_accuracy = cfg.target_frac * clean_conventional;
+
+    // Monte-Carlo grid on the persistent pool. Each job owns its slot
+    // and derives its own stream, so scheduling cannot shift a single
+    // draw — output is bit-identical at any LOGHD_THREADS.
+    let n_ps = cfg.ps.len();
+    let n_jobs = cells.len() * n_ps * cfg.trials;
+    let slots: Vec<AtomicU64> = (0..n_jobs).map(|_| AtomicU64::new(0)).collect();
+    let wb_ref = &wb;
+    let cells_ref = &cells;
+    threadpool::parallel_ranges(n_jobs, threadpool::available_threads(), |lo, hi| {
+        for j in lo..hi {
+            let ci = j / (n_ps * cfg.trials);
+            let rem = j % (n_ps * cfg.trials);
+            let (pi, trial) = (rem / cfg.trials, rem % cfg.trials);
+            let cell = &cells_ref[ci];
+            let p = cfg.ps[pi];
+            let mut rng =
+                sweep::cell_stream(cfg.seed, &cell.method, cell.precision, p, trial as u64);
+            let acc = wb_ref
+                .evaluate_cell(cell.method, cell.precision, p, &mut rng)
+                .expect("campaign cell evaluation");
+            slots[j].store(acc.to_bits(), Ordering::Relaxed);
+        }
+    });
+    let accs: Vec<f64> = slots.iter().map(|s| f64::from_bits(s.load(Ordering::Relaxed))).collect();
+
+    let mut results = Vec::with_capacity(cells.len());
+    for (ci, cell) in cells.iter().enumerate() {
+        let acc_trials: Vec<Vec<f64>> = (0..n_ps)
+            .map(|pi| {
+                (0..cfg.trials)
+                    .map(|t| accs[ci * n_ps * cfg.trials + pi * cfg.trials + t])
+                    .collect()
+            })
+            .collect();
+        let (acc_mean, acc_std): (Vec<f64>, Vec<f64>) =
+            acc_trials.iter().map(|tr| mean_std(tr)).unzip();
+        let resilience = sustained_until(&cfg.ps, &acc_mean, target_accuracy);
+        let resilience_ci95 = bootstrap_resilience_ci(
+            &acc_trials,
+            &cfg.ps,
+            target_accuracy,
+            cfg.bootstrap,
+            &mut sweep::cell_stream(cfg.seed ^ 0xB007, &cell.method, cell.precision, 0.0, 0),
+        );
+        results.push(CellResult {
+            cell: cell.clone(),
+            clean: acc_mean[0],
+            acc_trials,
+            acc_mean,
+            acc_std,
+            resilience,
+            resilience_ci95,
+        });
+    }
+
+    let best_of = |family: &str| -> (String, f64) {
+        results
+            .iter()
+            .filter(|r| r.cell.family() == family)
+            .map(|r| (r.cell.label(), r.resilience))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap_or_else(|| ("none".into(), 0.0))
+    };
+    let class_axis_best = best_of("class-axis");
+    let feature_axis_best = best_of("feature-axis");
+    let resilience_ratio = if feature_axis_best.1 > 0.0 {
+        Some(class_axis_best.1 / feature_axis_best.1)
+    } else {
+        None
+    };
+    crate::log_info!(
+        "campaign[{}]: class-axis best {} p<={:.3}, feature-axis best {} p<={:.3}, ratio {:?}",
+        cfg.profile,
+        class_axis_best.0,
+        class_axis_best.1,
+        feature_axis_best.0,
+        feature_axis_best.1,
+        resilience_ratio
+    );
+
+    Ok(CampaignResult {
+        config: cfg.clone(),
+        classes,
+        budget_bits,
+        clean_conventional,
+        target_accuracy,
+        cells: results,
+        class_axis_best,
+        feature_axis_best,
+        resilience_ratio,
+        threads: threadpool::available_threads(),
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Percentile-bootstrap 95% CI on the resilience metric: resample the
+/// trials at each flip rate with replacement, recompute the mean curve
+/// and its sustained flip rate, take the [2.5%, 97.5%] band.
+fn bootstrap_resilience_ci(
+    acc_trials: &[Vec<f64>],
+    ps: &[f64],
+    target: f64,
+    reps: usize,
+    rng: &mut SplitMix64,
+) -> (f64, f64) {
+    if reps == 0 {
+        let means: Vec<f64> = acc_trials.iter().map(|t| mean_std(t).0).collect();
+        let r = sustained_until(ps, &means, target);
+        return (r, r);
+    }
+    let trials = acc_trials[0].len() as u64;
+    let mut stats = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let means: Vec<f64> = acc_trials
+            .iter()
+            .map(|tr| {
+                let sum: f64 = (0..trials).map(|_| tr[rng.below(trials) as usize]).sum();
+                sum / trials as f64
+            })
+            .collect();
+        stats.push(sustained_until(ps, &means, target));
+    }
+    stats.sort_by(|a, b| a.total_cmp(b));
+    (percentile(&stats, 0.025), percentile(&stats, 0.975))
+}
+
+impl CampaignResult {
+    /// Serialize to the `loghd-robustness/v1` schema (the shape
+    /// `results/BENCH_robustness.json` and the golden conformance suite
+    /// consume). Everything outside `meta` is deterministic for a fixed
+    /// config, at any thread count.
+    pub fn to_json(&self) -> Value {
+        let cfg = &self.config;
+        let cells: Vec<Value> = self
+            .cells
+            .iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("label", json::s(r.cell.label())),
+                    ("family", json::s(r.cell.family())),
+                    ("method", json::s(r.cell.method.label())),
+                    ("precision", json::s(r.cell.precision.label())),
+                    ("stored_bits", json::num(r.cell.stored_bits as f64)),
+                    ("budget_dev", json::num(r.cell.budget_dev)),
+                    ("clean_accuracy", json::num(r.clean)),
+                    ("acc_mean", json::arr(r.acc_mean.iter().map(|v| json::num(*v)).collect())),
+                    ("acc_std", json::arr(r.acc_std.iter().map(|v| json::num(*v)).collect())),
+                    ("resilience", json::num(r.resilience)),
+                    (
+                        "resilience_ci95",
+                        json::arr(vec![
+                            json::num(r.resilience_ci95.0),
+                            json::num(r.resilience_ci95.1),
+                        ]),
+                    ),
+                ])
+            })
+            .collect();
+        let best = |label: &str, value: f64| {
+            json::obj(vec![("label", json::s(label)), ("value", json::num(value))])
+        };
+        json::obj(vec![
+            ("schema", json::s("loghd-robustness/v1")),
+            ("profile", json::s(cfg.profile.as_str())),
+            ("dataset", json::s(cfg.dataset.as_str())),
+            ("d", json::num(cfg.d as f64)),
+            ("classes", json::num(self.classes as f64)),
+            ("budget_bits", json::num(self.budget_bits as f64)),
+            ("budget_frac_f32", json::num(cfg.budget_frac_f32)),
+            ("tolerance", json::num(cfg.tolerance)),
+            ("target_frac", json::num(cfg.target_frac)),
+            ("target_accuracy", json::num(self.target_accuracy)),
+            ("clean_conventional_f32", json::num(self.clean_conventional)),
+            ("seed", json::num(cfg.seed as f64)),
+            ("trials", json::num(cfg.trials as f64)),
+            ("ps", json::arr(cfg.ps.iter().map(|p| json::num(*p)).collect())),
+            ("cells", json::arr(cells)),
+            (
+                "resilience",
+                json::obj(vec![
+                    ("class_axis_best", best(&self.class_axis_best.0, self.class_axis_best.1)),
+                    (
+                        "feature_axis_best",
+                        best(&self.feature_axis_best.0, self.feature_axis_best.1),
+                    ),
+                    (
+                        "ratio",
+                        match self.resilience_ratio {
+                            Some(r) => json::num(r),
+                            None => Value::Null,
+                        },
+                    ),
+                ]),
+            ),
+            (
+                "meta",
+                json::obj(vec![
+                    ("threads", json::num(self.threads as f64)),
+                    ("elapsed_s", json::num(self.elapsed_s)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Write the default artifact pair — `results/BENCH_robustness.json`
+    /// plus the repo-root snapshot — the one protocol the CLI, the bench
+    /// target, and the CI artifact upload all share.
+    pub fn write_default_artifacts(&self) -> std::io::Result<()> {
+        let text = json::to_string_pretty(&self.to_json());
+        std::fs::create_dir_all("results")?;
+        std::fs::write("results/BENCH_robustness.json", &text)?;
+        std::fs::write("BENCH_robustness.json", &text)
+    }
+
+    /// Human summary for the CLI / bench stdout.
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "equal-memory robustness campaign [{}]: {} D={} C={} budget={} bits, target acc {:.4} ({}% of clean conventional {:.4})\n",
+            self.config.profile,
+            self.config.dataset,
+            self.config.d,
+            self.classes,
+            self.budget_bits,
+            self.target_accuracy,
+            (self.config.target_frac * 100.0).round(),
+            self.clean_conventional,
+        );
+        out.push_str(&format!(
+            "{:<28} {:>10} {:>7} {:>7} {:>11} {:>17}\n",
+            "cell", "bits", "dev%", "clean", "resilience", "ci95"
+        ));
+        for r in &self.cells {
+            out.push_str(&format!(
+                "{:<28} {:>10} {:>6.1}% {:>7.4} {:>11.3} [{:.3}, {:.3}]\n",
+                r.cell.label(),
+                r.cell.stored_bits,
+                100.0 * r.cell.budget_dev,
+                r.clean,
+                r.resilience,
+                r.resilience_ci95.0,
+                r.resilience_ci95.1,
+            ));
+        }
+        match self.resilience_ratio {
+            Some(ratio) => out.push_str(&format!(
+                "resilience ratio (class-axis {} / feature-axis {}): {ratio:.2}x (paper claims 2.5-3.0x at matched memory)\n",
+                self.class_axis_best.0, self.feature_axis_best.0
+            )),
+            None => out.push_str(
+                "resilience ratio: undefined (feature-axis never reaches the target accuracy)\n",
+            ),
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loghd::model::TrainedStack;
+    use crate::loghd::qmodel::QuantizedLogHdModel;
+    use crate::testkit::golden;
+
+    /// Micro-profile for unit tests: same machinery, seconds of CPU.
+    fn micro() -> CampaignConfig {
+        CampaignConfig {
+            profile: "micro".into(),
+            d: 128,
+            train_cap: 250,
+            test_cap: 80,
+            ps: vec![0.0, 0.6],
+            trials: 2,
+            epochs: 1,
+            conv_epochs: 0,
+            bootstrap: 50,
+            ..CampaignConfig::smoke()
+        }
+    }
+
+    #[test]
+    fn smoke_solver_table_is_the_committed_golden() {
+        // The exact table rust/tests/golden/robustness_smoke.json pins:
+        // page C=5 D=256, budget 0.15·C·D·32 = 6144 bits, tolerance 5%.
+        let cells = solve_equal_memory(6144, 5, 256, 2, 5, 0.05);
+        let want: Vec<(&str, usize)> = vec![
+            ("loghd(k=2,n=3)@b8", 6288),
+            ("loghd(k=2,n=23)@b1", 6026),
+            ("sparsehd(S=0.85)@f32", 6080),
+            ("sparsehd(S=0.40)@b8", 6160),
+            ("hybrid(k=2,n=5,S=0.88)@f32", 6080),
+            ("hybrid(k=2,n=5,S=0.42)@b8", 6160),
+        ];
+        let got: Vec<(String, usize)> =
+            cells.iter().map(|c| (c.label(), c.stored_bits)).collect();
+        assert_eq!(
+            got,
+            want.iter().map(|(l, b)| (l.to_string(), *b)).collect::<Vec<_>>()
+        );
+        // class-axis redundancy trade: the 1-bit LogHD cell buys many
+        // more bundles than the 8-bit one at the same memory
+        assert!(matches!(cells[1].method, Method::LogHd { n: 23, .. }));
+        assert!(cells.iter().all(|c| c.budget_dev.abs() <= 0.05));
+    }
+
+    #[test]
+    fn stored_bits_matches_qmodel_accounting() {
+        // The solver's LogHD accounting must equal what the packed model
+        // actually stores (and the fault injector actually flips).
+        let ds = crate::data::generate_scaled(crate::data::spec("page").unwrap(), 300, 100);
+        let opts =
+            TrainOptions { epochs: 1, conv_epochs: 0, extra_bundles: 1, ..Default::default() };
+        let stack = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 128, 0xE5C0DE, &opts).unwrap();
+        let n = stack.loghd.n_bundles();
+        for precision in [Precision::B8, Precision::B1] {
+            let qm = QuantizedLogHdModel::from_model(&stack.loghd, precision);
+            assert_eq!(
+                qm.memory_bits(),
+                stored_bits(&Method::LogHd { k: 2, n }, precision, 5, 128)
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_accounting_matches_build_mask_rounding() {
+        use crate::baselines::SparseHdModel;
+        use crate::tensor::Matrix;
+        let mut rng = SplitMix64::new(5);
+        let h = Matrix::from_vec(5, 200, rng.normals_f32(1000));
+        for r in [1usize, 77, 129, 200] {
+            let sparsity = 1.0 - r as f64 / 200.0;
+            assert_eq!(retained_dims(200, sparsity), r);
+            let model = SparseHdModel::from_prototypes(&h, sparsity.min(1.0 - 1e-9));
+            if sparsity < 1.0 {
+                assert_eq!(model.retained(), r, "r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        let bad = |f: fn(&mut CampaignConfig)| {
+            let mut cfg = micro();
+            f(&mut cfg);
+            run(&cfg).unwrap_err()
+        };
+        assert!(bad(|c| c.target_frac = 0.0).to_string().contains("target"));
+        assert!(bad(|c| c.target_frac = 1.5).to_string().contains("target"));
+        assert!(bad(|c| c.budget_frac_f32 = -0.1).to_string().contains("budget"));
+        assert!(bad(|c| c.tolerance = 1.0).to_string().contains("tolerance"));
+        assert!(bad(|c| c.ps = vec![0.1, 0.2]).to_string().contains("clean reference"));
+        assert!(bad(|c| c.ps = vec![0.0, 0.4, 0.3]).to_string().contains("ascending"));
+        assert!(bad(|c| c.trials = 0).to_string().contains("trials"));
+    }
+
+    #[test]
+    fn infeasible_budgets_yield_no_cells() {
+        // A budget below every representable cell produces an empty grid
+        // (and run() would bail with a config error).
+        let cells = solve_equal_memory(10, 5, 256, 2, 5, 0.05);
+        assert!(cells.is_empty());
+    }
+
+    #[test]
+    fn micro_campaign_runs_and_scores() {
+        let res = run(&micro()).unwrap();
+        assert!(res.cells.len() >= 4, "only {} cells", res.cells.len());
+        assert!(res.cells.iter().any(|r| r.cell.family() == "class-axis"));
+        assert!(res.cells.iter().any(|r| r.cell.family() == "feature-axis"));
+        for r in &res.cells {
+            assert_eq!(r.acc_mean.len(), 2);
+            assert!(r.acc_mean.iter().all(|a| (0.0..=1.0).contains(a)));
+            assert!((0.0..=0.6).contains(&r.resilience));
+            assert!(r.resilience_ci95.0 <= r.resilience_ci95.1 + 1e-12);
+        }
+        let v = res.to_json();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("loghd-robustness/v1"));
+        assert_eq!(v.get("cells").unwrap().as_array().unwrap().len(), res.cells.len());
+        assert!(res.summary().contains("equal-memory"));
+    }
+
+    #[test]
+    fn campaign_is_deterministic_for_fixed_config() {
+        // Bit-identical artifacts (outside meta) across repeated runs in
+        // one process — the in-process half of the reproducibility
+        // contract (the cross-LOGHD_THREADS half lives in
+        // rust/tests/integration_robustness.rs).
+        let a = run(&micro()).unwrap();
+        let b = run(&micro()).unwrap();
+        let strip = |v: Value| golden::without_keys(v, &["meta"]);
+        assert_eq!(
+            json::to_string(&strip(a.to_json())),
+            json::to_string(&strip(b.to_json()))
+        );
+    }
+}

@@ -29,6 +29,23 @@ pub fn mean_std(values: &[f64]) -> (f64, f64) {
     (mean, var.sqrt())
 }
 
+/// Linear-interpolated percentile of an ascending-sorted slice
+/// (`q` in [0, 1]; the numpy `linear` convention). Used by the
+/// campaign engine's bootstrap confidence intervals.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    assert!((0.0..=1.0).contains(&q), "percentile q {q} out of [0,1]");
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
 /// Largest x in `xs` (assumed ascending) whose paired accuracy stays at or
 /// above `floor`; linear-interpolated crossing point when it drops.
 /// This is the "sustains target accuracy up to p" statistic the paper's
@@ -83,6 +100,16 @@ mod tests {
         let (m, s) = mean_std(&[1.0, 3.0]);
         assert_eq!(m, 2.0);
         assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        assert_eq!(percentile(&v, 0.5), 2.5);
+        assert!((percentile(&v, 0.25) - 1.75).abs() < 1e-12);
+        assert_eq!(percentile(&[7.0], 0.3), 7.0);
     }
 
     #[test]

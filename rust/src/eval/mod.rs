@@ -1,9 +1,12 @@
-//! Experiment engine: metrics + the (method × precision × fault-rate)
-//! sweep machinery that regenerates the paper's figures.
+//! Experiment engine: metrics, the (method × precision × fault-rate)
+//! sweep machinery that regenerates the paper's figures, and the
+//! equal-memory robustness campaign engine behind `loghd robustness`.
 
+pub mod campaign;
 pub mod figures;
 pub mod metrics;
 pub mod sweep;
 
-pub use metrics::{accuracy, confusion, mean_std, sustained_until};
-pub use sweep::{corrupt, corrupt_masked, Method, Workbench};
+pub use campaign::{solve_equal_memory, stored_bits, CampaignConfig, CampaignResult};
+pub use metrics::{accuracy, confusion, mean_std, percentile, sustained_until};
+pub use sweep::{cell_stream, corrupt, corrupt_masked, Method, Workbench};

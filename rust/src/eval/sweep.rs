@@ -25,6 +25,17 @@
 //! 1-bit accuracy series therefore carry a query-binarization component
 //! on top of storage effects and are not directly comparable to runs
 //! produced before this engine existed (EXPERIMENTS.md §Fig3/§Fig4).
+//!
+//! **Fault-stream discipline:** every grid cell draws its faults from its
+//! own [`SplitMix64`] stream, derived by [`cell_stream`] from
+//! (campaign seed, method, precision, flip rate, trial). Cells never
+//! share a sequential stream, so a sweep's numbers do not depend on cell
+//! visit order or on how many `LOGHD_THREADS` workers evaluate them —
+//! the campaign engine (`eval::campaign`) fans cells out over the
+//! persistent pool and stays bit-identical at any thread count.
+//! (Historically every cell re-seeded from `seed ^ 0xFA17` alone, which
+//! made different cells at the same seed draw *identical* fault
+//! streams — correlated corruption across methods.)
 
 use std::collections::HashMap;
 
@@ -82,6 +93,14 @@ pub struct Workbench {
     pub prototypes: Matrix,
     pub opts: TrainOptions,
     loghd_cache: HashMap<(u32, usize), LogHdModel>,
+    /// Hybrid variants keyed by (k, n, sparsity bits) — the masked
+    /// re-profile (a GEMM over the training set) is deterministic in the
+    /// key, so campaigns build it once in [`Self::warm`] instead of once
+    /// per Monte-Carlo job.
+    hybrid_cache: HashMap<(u32, usize, u64), HybridModel>,
+    /// SparseHD variants keyed by sparsity bits (same rationale: the
+    /// saliency sort over C·D prototype magnitudes is deterministic).
+    sparse_cache: HashMap<u64, SparseHdModel>,
 }
 
 impl Workbench {
@@ -122,6 +141,8 @@ impl Workbench {
             prototypes,
             opts,
             loghd_cache: HashMap::new(),
+            hybrid_cache: HashMap::new(),
+            sparse_cache: HashMap::new(),
         }
     }
 
@@ -142,7 +163,68 @@ impl Workbench {
         Ok(&self.loghd_cache[&(k, n)])
     }
 
+    /// Pre-train everything `method` needs so that [`evaluate_cell`]
+    /// (the shared-`&self` form campaigns run concurrently) can serve it
+    /// from the cache.
+    ///
+    /// [`evaluate_cell`]: Self::evaluate_cell
+    pub fn warm(&mut self, method: Method) -> Result<()> {
+        match method {
+            Method::LogHd { k, n } => {
+                self.loghd(k, n)?;
+            }
+            Method::Hybrid { k, n, sparsity } => {
+                self.loghd(k, n)?;
+                let key = (k, n, sparsity.to_bits());
+                if !self.hybrid_cache.contains_key(&key) {
+                    let hybrid = HybridModel::from_loghd(
+                        &self.loghd_cache[&(k, n)],
+                        &self.enc_train,
+                        &self.y_train,
+                        sparsity,
+                    )?;
+                    self.hybrid_cache.insert(key, hybrid);
+                }
+            }
+            Method::SparseHd { sparsity } => {
+                self.sparse_cache
+                    .entry(sparsity.to_bits())
+                    .or_insert_with(|| SparseHdModel::from_prototypes(&self.prototypes, sparsity));
+            }
+            Method::Conventional => {}
+        }
+        Ok(())
+    }
+
+    /// Cache-only LogHD lookup for the `&self` evaluation path.
+    fn loghd_cached(&self, k: u32, n: usize) -> Result<&LogHdModel> {
+        self.loghd_cache.get(&(k, n)).ok_or_else(|| {
+            anyhow::anyhow!("LogHD(k={k}, n={n}) not trained — call Workbench::warm first")
+        })
+    }
+
+    /// Cache-only hybrid lookup for the `&self` evaluation path.
+    fn hybrid_cached(&self, k: u32, n: usize, sparsity: f64) -> Result<&HybridModel> {
+        self.hybrid_cache.get(&(k, n, sparsity.to_bits())).ok_or_else(|| {
+            anyhow::anyhow!(
+                "Hybrid(k={k}, n={n}, S={sparsity}) not trained — call Workbench::warm first"
+            )
+        })
+    }
+
+    /// Cache-only SparseHD lookup for the `&self` evaluation path.
+    fn sparse_cached(&self, sparsity: f64) -> Result<&SparseHdModel> {
+        self.sparse_cache.get(&sparsity.to_bits()).ok_or_else(|| {
+            anyhow::anyhow!("SparseHD(S={sparsity}) not built — call Workbench::warm first")
+        })
+    }
+
     /// Evaluate one grid cell; returns test accuracy.
+    ///
+    /// Convenience wrapper: warms the model cache, derives the cell's
+    /// private fault stream via [`cell_stream`] (trial 0 — fold extra
+    /// trials into `seed`, or use [`Self::evaluate_cell`] directly), and
+    /// evaluates.
     pub fn evaluate(
         &mut self,
         method: Method,
@@ -150,15 +232,30 @@ impl Workbench {
         flip_p: f64,
         seed: u64,
     ) -> Result<f64> {
-        let mut rng = SplitMix64::new(seed ^ 0xFA17);
+        self.warm(method)?;
+        let mut rng = cell_stream(seed, &method, precision, flip_p, 0);
+        self.evaluate_cell(method, precision, flip_p, &mut rng)
+    }
+
+    /// Evaluate one grid cell against a caller-provided fault stream,
+    /// without touching the model cache (shared-`&self`, so campaigns
+    /// may fan cells out across the worker pool). Every model the cell
+    /// needs must have been trained via [`Self::warm`] first.
+    pub fn evaluate_cell(
+        &self,
+        method: Method,
+        precision: Precision,
+        flip_p: f64,
+        rng: &mut SplitMix64,
+    ) -> Result<f64> {
         let pred = match method {
             Method::Conventional => {
-                let h = corrupt(&self.prototypes, precision, flip_p, &mut rng);
+                let h = corrupt(&self.prototypes, precision, flip_p, rng);
                 ConventionalModel::new(h).predict(&self.enc_test)
             }
             Method::SparseHd { sparsity } => {
-                let model = SparseHdModel::from_prototypes(&self.prototypes, sparsity);
-                let h = corrupt_masked(&model.prototypes, &model.mask, precision, flip_p, &mut rng);
+                let model = self.sparse_cached(sparsity)?;
+                let h = corrupt_masked(&model.prototypes, &model.mask, precision, flip_p, rng);
                 // scores on the corrupted stored state
                 let s = activations(&self.enc_test, &h);
                 (0..s.rows()).map(|i| tensor::argmax(s.row(i)) as i32).collect()
@@ -168,23 +265,24 @@ impl Workbench {
                 // words, score on the corrupted bit-planes directly.
                 Precision::B1 | Precision::B8 => {
                     let mut qm =
-                        QuantizedLogHdModel::from_model(self.loghd(k, n)?, precision);
-                    qm.inject_value_faults(flip_p, &mut rng);
+                        QuantizedLogHdModel::from_model(self.loghd_cached(k, n)?, precision);
+                    qm.inject_value_faults(flip_p, rng);
                     qm.predict(&self.enc_test)
                 }
                 _ => {
-                    let model = self.loghd(k, n)?.clone();
-                    let bundles = corrupt(&model.bundles, precision, flip_p, &mut rng);
-                    let profiles =
-                        corrupt_profiles(&model.profiles, precision, flip_p, &mut rng);
-                    let corrupted = LogHdModel { bundles, profiles, ..model };
+                    let model = self.loghd_cached(k, n)?;
+                    let corrupted = LogHdModel {
+                        classes: model.classes,
+                        d: model.d,
+                        book: model.book.clone(),
+                        bundles: corrupt(&model.bundles, precision, flip_p, rng),
+                        profiles: corrupt_profiles(&model.profiles, precision, flip_p, rng),
+                    };
                     corrupted.predict(&self.enc_test)
                 }
             },
             Method::Hybrid { k, n, sparsity } => {
-                let base = self.loghd(k, n)?.clone();
-                let hybrid =
-                    HybridModel::from_loghd(&base, &self.enc_train, &self.y_train, sparsity)?;
+                let hybrid = self.hybrid_cached(k, n, sparsity)?;
                 match precision {
                     // Only retained coordinates are stored: compact them
                     // out, then run the packed flip → infer protocol on
@@ -198,33 +296,39 @@ impl Workbench {
                             .map(|(i, _)| i)
                             .collect();
                         let inner = LogHdModel {
+                            classes: hybrid.inner.classes,
                             d: kept.len(),
+                            book: hybrid.inner.book.clone(),
                             bundles: gather_cols(&hybrid.inner.bundles, &kept),
-                            ..hybrid.inner
+                            profiles: hybrid.inner.profiles.clone(),
                         };
                         let mut qm = QuantizedLogHdModel::from_model(&inner, precision);
                         // The hybrid profiles were trained against
                         // full-width query normalization; restore that
                         // scale on the compacted model.
                         qm.set_activation_gain((kept.len() as f32 / self.d as f32).sqrt());
-                        qm.inject_value_faults(flip_p, &mut rng);
+                        qm.inject_value_faults(flip_p, rng);
                         qm.predict(&gather_cols(&self.enc_test, &kept))
                     }
                     _ => {
-                        let bundles = corrupt_masked(
-                            &hybrid.inner.bundles,
-                            &hybrid.mask,
-                            precision,
-                            flip_p,
-                            &mut rng,
-                        );
-                        let profiles = corrupt_profiles(
-                            &hybrid.inner.profiles,
-                            precision,
-                            flip_p,
-                            &mut rng,
-                        );
-                        let corrupted = LogHdModel { bundles, profiles, ..hybrid.inner };
+                        let corrupted = LogHdModel {
+                            classes: hybrid.inner.classes,
+                            d: hybrid.inner.d,
+                            book: hybrid.inner.book.clone(),
+                            bundles: corrupt_masked(
+                                &hybrid.inner.bundles,
+                                &hybrid.mask,
+                                precision,
+                                flip_p,
+                                rng,
+                            ),
+                            profiles: corrupt_profiles(
+                                &hybrid.inner.profiles,
+                                precision,
+                                flip_p,
+                                rng,
+                            ),
+                        };
                         corrupted.predict(&self.enc_test)
                     }
                 }
@@ -240,6 +344,38 @@ impl Workbench {
             (0..s.rows()).map(|i| tensor::argmax(s.row(i)) as i32).collect();
         accuracy(&pred, &self.y_test)
     }
+}
+
+/// Derive the private fault stream of one (method, precision, flip rate,
+/// trial) grid cell from the campaign seed.
+///
+/// The method's *raw* fields (variant tag, k, n, full sparsity bits —
+/// not the display label, whose `{:.2}` sparsity rounding would
+/// collide), precision width, flip rate bits, and trial index are
+/// folded in through successive [`SplitMix64::fork`] steps, so two
+/// cells share a stream only if they are the *same* cell — evaluation
+/// order and `LOGHD_THREADS` cannot change any cell's draws.
+pub fn cell_stream(
+    seed: u64,
+    method: &Method,
+    precision: Precision,
+    flip_p: f64,
+    trial: u64,
+) -> SplitMix64 {
+    let (tag, m1, m2, m3) = match *method {
+        Method::Conventional => (0u64, 0, 0, 0),
+        Method::SparseHd { sparsity } => (1, sparsity.to_bits(), 0, 0),
+        Method::LogHd { k, n } => (2, k as u64, n as u64, 0),
+        Method::Hybrid { k, n, sparsity } => (3, k as u64, n as u64, sparsity.to_bits()),
+    };
+    let mut s = SplitMix64::new(seed ^ 0xFA17);
+    let mut s = s.fork(tag);
+    let mut s = s.fork(m1);
+    let mut s = s.fork(m2);
+    let mut s = s.fork(m3);
+    let mut s = s.fork(precision.bits() as u64);
+    let mut s = s.fork(flip_p.to_bits());
+    s.fork(trial)
 }
 
 /// Quantize to `precision`, inject faults (per-value single-random-bit
@@ -451,5 +587,52 @@ mod tests {
         assert_eq!(Method::Conventional.label(), "conventional");
         assert!(Method::SparseHd { sparsity: 0.5 }.label().contains("0.50"));
         assert!(Method::LogHd { k: 3, n: 4 }.label().contains("k=3"));
+    }
+
+    #[test]
+    fn cell_streams_are_cell_local() {
+        // identical cell -> identical stream
+        let draw = |m: &Method, pr, p, t| cell_stream(7, m, pr, p, t).next_u64();
+        let a = Method::LogHd { k: 2, n: 4 };
+        assert_eq!(
+            draw(&a, Precision::B8, 0.3, 1),
+            draw(&a, Precision::B8, 0.3, 1)
+        );
+        // any coordinate change -> a different stream
+        let base = draw(&a, Precision::B8, 0.3, 1);
+        assert_ne!(base, draw(&Method::Conventional, Precision::B8, 0.3, 1));
+        assert_ne!(base, draw(&a, Precision::B1, 0.3, 1));
+        assert_ne!(base, draw(&a, Precision::B8, 0.4, 1));
+        assert_ne!(base, draw(&a, Precision::B8, 0.3, 2));
+        assert_ne!(base, cell_stream(8, &a, Precision::B8, 0.3, 1).next_u64());
+        // sparsities colliding under the label's {:.2} rounding must
+        // still get distinct streams (raw bits are folded, not labels)
+        let s1 = Method::SparseHd { sparsity: 0.851 };
+        let s2 = Method::SparseHd { sparsity: 0.854 };
+        assert_eq!(s1.label(), s2.label());
+        assert_ne!(
+            draw(&s1, Precision::B8, 0.3, 1),
+            draw(&s2, Precision::B8, 0.3, 1)
+        );
+    }
+
+    #[test]
+    fn evaluate_cell_requires_warm() {
+        let wb = bench_small();
+        let mut rng = SplitMix64::new(1);
+        let err = wb
+            .evaluate_cell(Method::LogHd { k: 2, n: 4 }, Precision::B8, 0.0, &mut rng)
+            .unwrap_err();
+        assert!(err.to_string().contains("warm"), "{err}");
+    }
+
+    #[test]
+    fn evaluate_cell_matches_evaluate_after_warm() {
+        let mut wb = bench_small();
+        let method = Method::LogHd { k: 2, n: 4 };
+        let via_mut = wb.evaluate(method, Precision::B8, 0.4, 3).unwrap();
+        let mut rng = cell_stream(3, &method, Precision::B8, 0.4, 0);
+        let via_cell = wb.evaluate_cell(method, Precision::B8, 0.4, &mut rng).unwrap();
+        assert_eq!(via_mut, via_cell);
     }
 }

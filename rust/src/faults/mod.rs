@@ -74,26 +74,40 @@ pub fn flip_f32(data: &mut [f32], p: f64, rng: &mut SplitMix64) -> usize {
     positions.len()
 }
 
+/// Sample the per-VALUE fault mask: each entry is a `(victim index,
+/// bit-within-value)` pair, victims strictly increasing. Drawing the
+/// mask is separated from applying it so differential tests can apply
+/// the *same* seeded mask to a packed tensor and to its dequantized
+/// dense twin (`flip_values_packed`/`flip_values_f32` are thin appliers
+/// over this sampler and consume the stream identically).
+pub fn value_flip_mask(
+    count: usize,
+    bits: u32,
+    p: f64,
+    rng: &mut SplitMix64,
+) -> Vec<(usize, u32)> {
+    let victims = flip_positions(count, p, rng);
+    victims.into_iter().map(|v| (v, rng.below(bits as u64) as u32)).collect()
+}
+
 /// Per-VALUE fault model (the evaluation protocol): with probability `p`,
 /// flip one uniformly-chosen bit of each packed field. Returns flips.
 pub fn flip_values_packed(t: &mut PackedTensor, p: f64, rng: &mut SplitMix64) -> usize {
-    let bits = t.bits() as u64;
-    let victims = flip_positions(t.count(), p, rng);
-    for &v in &victims {
-        let bit = rng.below(bits) as usize;
-        t.flip_bit(v * bits as usize + bit);
+    let bits = t.bits();
+    let mask = value_flip_mask(t.count(), bits, p, rng);
+    for &(v, bit) in &mask {
+        t.flip_bit(v * bits as usize + bit as usize);
     }
-    victims.len()
+    mask.len()
 }
 
 /// Per-VALUE fault model on raw f32 storage.
 pub fn flip_values_f32(data: &mut [f32], p: f64, rng: &mut SplitMix64) -> usize {
-    let victims = flip_positions(data.len(), p, rng);
-    for &v in &victims {
-        let bit = rng.below(32) as u32;
+    let mask = value_flip_mask(data.len(), 32, p, rng);
+    for &(v, bit) in &mask {
         data[v] = f32::from_bits(data[v].to_bits() ^ (1u32 << bit));
     }
-    victims.len()
+    mask.len()
 }
 
 #[cfg(test)]
@@ -163,5 +177,38 @@ mod tests {
         let a = flip_positions(1000, 0.2, &mut SplitMix64::new(7));
         let b = flip_positions(1000, 0.2, &mut SplitMix64::new(7));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn value_flip_mask_matches_packed_applier() {
+        // Applying the sampled mask by hand must reproduce
+        // flip_values_packed from the same seed: same stream, same flips.
+        let mut t_direct = PackedTensor::new(8, 500);
+        let mut t_manual = t_direct.clone();
+        let flips = flip_values_packed(&mut t_direct, 0.3, &mut SplitMix64::new(11));
+        let mask = value_flip_mask(500, 8, 0.3, &mut SplitMix64::new(11));
+        assert_eq!(mask.len(), flips);
+        for &(v, bit) in &mask {
+            assert!(bit < 8);
+            t_manual.flip_bit(v * 8 + bit as usize);
+        }
+        assert_eq!(t_manual, t_direct);
+        // victims strictly increasing (duplicate-free by construction)
+        for w in mask.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+
+    #[test]
+    fn value_flip_mask_matches_f32_applier() {
+        let mut direct = vec![1.0f32; 300];
+        let flips = flip_values_f32(&mut direct, 0.25, &mut SplitMix64::new(13));
+        let mask = value_flip_mask(300, 32, 0.25, &mut SplitMix64::new(13));
+        assert_eq!(mask.len(), flips);
+        let mut manual = vec![1.0f32; 300];
+        for &(v, bit) in &mask {
+            manual[v] = f32::from_bits(manual[v].to_bits() ^ (1u32 << bit));
+        }
+        assert_eq!(manual, direct);
     }
 }

@@ -23,9 +23,10 @@
 //! | [`loghd`] | codebook/bundles/profiles/refinement (§III-C..F) |
 //! | [`baselines`] | conventional, SparseHD, hybrid (§II-B, §IV-D) |
 //! | [`quant`], [`faults`] | PTQ + stored-state bit flips (§IV-A) |
-//! | [`eval`] | the (method × precision × p) sweep engine (Figs. 3–6) |
+//! | [`eval`] | the (method × precision × p) sweep engine (Figs. 3–6) and the equal-memory robustness campaign (`eval::campaign`) |
 //! | [`hwmodel`] | Table II analytical ASIC/CPU/GPU model |
 //! | [`runtime`], [`coordinator`] | the serving system |
+//! | [`testkit`] | deterministic miniature datasets + golden-artifact conformance |
 
 pub mod baselines;
 pub mod bench;
@@ -42,4 +43,5 @@ pub mod loghd;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;
+pub mod testkit;
 pub mod util;

@@ -274,6 +274,15 @@ impl QuantizedLogHdModel {
     pub fn memory_bits(&self) -> usize {
         self.bundles.packed.total_bits() + self.profiles.total_bits()
     }
+
+    /// Dequantize the *current* packed state (bundles, profiles) into
+    /// dense f32 matrices — the dense twin of whatever the stored words
+    /// hold right now, faults included. Differential tests score this
+    /// twin through the f32 pipeline and compare predictions against the
+    /// packed kernels running on the very same corrupted words.
+    pub fn dequantized_state(&self) -> (Matrix, Matrix) {
+        (quant::dequantize(&self.bundles), self.profiles.dequantize())
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,234 @@
+//! Golden-artifact JSON comparison (subtree semantics, bless support).
+//!
+//! A golden pins the *stable core* of an artifact: every field the
+//! golden mentions must exist in the produced document and match; extra
+//! produced fields are unconstrained. Numbers compare exactly at
+//! `float_tol = 0.0` (the packed / integer paths) and within a relative
+//! band otherwise (the f32 paths). Dotted paths in `ignore` (e.g.
+//! `"meta"` or `"cells.3.acc_mean"`) are skipped entirely — array
+//! indices appear as numeric path segments.
+//!
+//! Re-bless a golden after an intentional artifact change with
+//! `LOGHD_BLESS=1 cargo test …` — the check then *writes* the produced
+//! document to the golden path and passes; review the diff like any
+//! other code change.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Comparison options.
+#[derive(Debug, Clone, Default)]
+pub struct GoldenOptions {
+    /// Relative tolerance for numbers: pass when
+    /// `|got − want| ≤ tol · (1 + |want|)`. `0.0` means exact.
+    pub float_tol: f64,
+    /// Dotted paths to skip (prefix match on whole segments).
+    pub ignore: Vec<String>,
+}
+
+impl GoldenOptions {
+    pub fn exact() -> Self {
+        Self::default()
+    }
+
+    pub fn with_tol(float_tol: f64) -> Self {
+        Self { float_tol, ignore: Vec::new() }
+    }
+
+    pub fn ignoring(mut self, path: &str) -> Self {
+        self.ignore.push(path.to_string());
+        self
+    }
+
+    fn is_ignored(&self, path: &str) -> bool {
+        self.ignore.iter().any(|ig| {
+            path == ig || path.strip_prefix(ig.as_str()).is_some_and(|rest| rest.starts_with('.'))
+        })
+    }
+}
+
+/// All mismatches between `got` and the golden subtree `want`, as
+/// human-readable `path: problem` lines. Empty means conformant.
+pub fn diffs(got: &Value, want: &Value, opts: &GoldenOptions) -> Vec<String> {
+    let mut out = Vec::new();
+    walk(got, want, opts, "$", &mut out);
+    out
+}
+
+fn walk(got: &Value, want: &Value, opts: &GoldenOptions, path: &str, out: &mut Vec<String>) {
+    let rel = path.strip_prefix("$.").unwrap_or("");
+    if opts.is_ignored(rel) {
+        return;
+    }
+    match (got, want) {
+        (Value::Object(_), Value::Object(want_fields)) => {
+            for (key, want_val) in want_fields {
+                match got.get(key) {
+                    Some(got_val) => {
+                        walk(got_val, want_val, opts, &format!("{path}.{key}"), out)
+                    }
+                    None => out.push(format!("{path}.{key}: missing from produced document")),
+                }
+            }
+        }
+        (Value::Array(got_items), Value::Array(want_items)) => {
+            if got_items.len() != want_items.len() {
+                out.push(format!(
+                    "{path}: array length {} != golden {}",
+                    got_items.len(),
+                    want_items.len()
+                ));
+                return;
+            }
+            for (i, (g, w)) in got_items.iter().zip(want_items).enumerate() {
+                walk(g, w, opts, &format!("{path}.{i}"), out);
+            }
+        }
+        (Value::Number(g), Value::Number(w)) => {
+            let ok = if opts.float_tol == 0.0 {
+                g == w
+            } else {
+                (g - w).abs() <= opts.float_tol * (1.0 + w.abs())
+            };
+            if !ok {
+                out.push(format!("{path}: {g} != golden {w} (tol {})", opts.float_tol));
+            }
+        }
+        (g, w) if g == w => {}
+        (g, w) => out.push(format!(
+            "{path}: {} != golden {}",
+            json::to_string(g),
+            json::to_string(w)
+        )),
+    }
+}
+
+/// `true` when re-blessing was requested via `LOGHD_BLESS=1`.
+pub fn blessing() -> bool {
+    matches!(std::env::var("LOGHD_BLESS").as_deref(), Ok(v) if !v.is_empty() && v != "0")
+}
+
+/// Check `got` against the golden file at `path`. Under `LOGHD_BLESS=1`
+/// the produced document is written to `path` instead (and the check
+/// passes). Errors list every mismatching path.
+pub fn check_file(path: impl AsRef<Path>, got: &Value, opts: &GoldenOptions) -> Result<()> {
+    let path = path.as_ref();
+    if blessing() {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, json::to_string_pretty(got) + "\n")
+            .with_context(|| format!("blessing golden {}", path.display()))?;
+        eprintln!("blessed golden {}", path.display());
+        return Ok(());
+    }
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading golden {} (LOGHD_BLESS=1 to create)", path.display()))?;
+    let want = json::parse(&text)
+        .map_err(|e| anyhow::Error::msg(format!("golden {}: {e}", path.display())))?;
+    let problems = diffs(got, &want, opts);
+    if !problems.is_empty() {
+        bail!(
+            "golden mismatch vs {} ({} problems):\n  {}",
+            path.display(),
+            problems.len(),
+            problems.join("\n  ")
+        );
+    }
+    Ok(())
+}
+
+/// A copy of `v` with the named top-level object keys removed — for
+/// comparing two produced documents while excluding run metadata.
+pub fn without_keys(v: Value, keys: &[&str]) -> Value {
+    match v {
+        Value::Object(fields) => Value::Object(
+            fields.into_iter().filter(|(k, _)| !keys.contains(&k.as_str())).collect(),
+        ),
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(text: &str) -> Value {
+        json::parse(text).unwrap()
+    }
+
+    #[test]
+    fn subtree_semantics_allow_extra_produced_fields() {
+        let got = doc(r#"{"a": 1, "b": {"x": 2, "y": 3}, "extra": true}"#);
+        let want = doc(r#"{"a": 1, "b": {"x": 2}}"#);
+        assert!(diffs(&got, &want, &GoldenOptions::exact()).is_empty());
+        // but golden fields must exist
+        let want2 = doc(r#"{"a": 1, "missing": 0}"#);
+        let d = diffs(&got, &want2, &GoldenOptions::exact());
+        assert_eq!(d.len(), 1);
+        assert!(d[0].contains("missing"));
+    }
+
+    #[test]
+    fn exact_vs_tolerant_numbers() {
+        let got = doc("{\"v\": 0.500001}");
+        let want = doc("{\"v\": 0.5}");
+        assert_eq!(diffs(&got, &want, &GoldenOptions::exact()).len(), 1);
+        assert!(diffs(&got, &want, &GoldenOptions::with_tol(1e-3)).is_empty());
+        assert_eq!(diffs(&got, &want, &GoldenOptions::with_tol(1e-9)).len(), 1);
+    }
+
+    #[test]
+    fn arrays_compare_elementwise_and_by_length() {
+        let got = doc("[1, 2, 3]");
+        assert!(diffs(&got, &doc("[1, 2, 3]"), &GoldenOptions::exact()).is_empty());
+        assert_eq!(diffs(&got, &doc("[1, 2]"), &GoldenOptions::exact()).len(), 1);
+        let d = diffs(&got, &doc("[1, 9, 3]"), &GoldenOptions::exact());
+        assert_eq!(d.len(), 1);
+        assert!(d[0].contains("$.1"), "{d:?}");
+    }
+
+    #[test]
+    fn ignore_paths_skip_subtrees() {
+        let got = doc(r#"{"meta": {"elapsed": 1.0}, "cells": [{"a": 1}]}"#);
+        let want = doc(r#"{"meta": {"elapsed": 2.0}, "cells": [{"a": 1}]}"#);
+        let opts = GoldenOptions::exact().ignoring("meta");
+        assert!(diffs(&got, &want, &opts).is_empty());
+        let opts2 = GoldenOptions::exact().ignoring("me");
+        assert_eq!(diffs(&got, &want, &opts2).len(), 1, "prefix must match whole segments");
+        let opts3 = GoldenOptions::exact().ignoring("cells.0.a");
+        let want3 = doc(r#"{"cells": [{"a": 99}]}"#);
+        assert!(diffs(&got, &want3, &opts3).is_empty());
+    }
+
+    #[test]
+    fn type_mismatch_reports() {
+        let d = diffs(&doc("{\"v\": \"s\"}"), &doc("{\"v\": 1}"), &GoldenOptions::exact());
+        assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn without_keys_strips_top_level() {
+        let v = doc(r#"{"a": 1, "meta": {"t": 2}}"#);
+        let stripped = without_keys(v, &["meta"]);
+        assert!(stripped.get("meta").is_none());
+        assert!(stripped.get("a").is_some());
+    }
+
+    #[test]
+    fn check_file_round_trip_with_bless() {
+        let dir = std::env::temp_dir().join("loghd_golden_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("g.json");
+        let got = doc(r#"{"a": 1, "b": [0.5]}"#);
+        std::fs::write(&path, json::to_string_pretty(&got)).unwrap();
+        check_file(&path, &got, &GoldenOptions::exact()).unwrap();
+        let other = doc(r#"{"a": 2, "b": [0.5]}"#);
+        assert!(check_file(&path, &other, &GoldenOptions::exact()).is_err());
+        assert!(check_file(dir.join("absent.json"), &got, &GoldenOptions::exact()).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

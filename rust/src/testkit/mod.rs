@@ -1,0 +1,69 @@
+//! Deterministic test fixtures + golden-artifact conformance tooling.
+//!
+//! Two things every conformance suite in this repo needs:
+//!
+//! - **Miniature datasets** — scaled-down Table I workloads that keep
+//!   the full generators' leading PRNG draws (same class means/scales,
+//!   fewer samples), so fixtures are deterministic across processes,
+//!   platforms, and thread counts. [`mini`] has one preset per dataset;
+//!   [`scaled_dataset`] takes explicit sample caps (the campaign engine
+//!   builds its workloads through it).
+//! - **Golden comparison** — [`golden`] checks a produced JSON document
+//!   against a committed golden with *subtree* semantics: every field
+//!   the golden pins must exist and match (exact for strings / bools /
+//!   integer-valued numbers under the default tolerance, relative
+//!   tolerance for floats), while fields the golden does not mention are
+//!   unconstrained — so goldens can pin the stable core of an artifact
+//!   (schema, solver tables, grids) without freezing measured values.
+//!   `LOGHD_BLESS=1` rewrites the golden from the produced document.
+
+pub mod golden;
+
+use anyhow::{Context, Result};
+
+use crate::data::{self, Dataset};
+
+/// A Table I dataset scaled to explicit sample counts (same geometry —
+/// identical leading PRNG draws — fewer samples).
+pub fn scaled_dataset(name: &str, n_train: usize, n_test: usize) -> Result<Dataset> {
+    let spec = data::spec(name).with_context(|| format!("unknown dataset '{name}'"))?;
+    Ok(data::generate_scaled(spec, spec.n_train.min(n_train), spec.n_test.min(n_test)))
+}
+
+/// The miniature preset for `name`: big enough to train meaningfully,
+/// small enough for tight test loops.
+pub fn mini(name: &str) -> Result<Dataset> {
+    let (n_train, n_test) = match name {
+        "page" => (400, 150),
+        "pamap2" => (600, 200),
+        "ucihar" => (800, 250),
+        "isolet" => (1000, 300),
+        _ => (500, 200),
+    };
+    scaled_dataset(name, n_train, n_test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mini_datasets_are_deterministic_and_scaled() {
+        let a = mini("page").unwrap();
+        let b = mini("page").unwrap();
+        assert_eq!(a.x_train.data(), b.x_train.data());
+        assert_eq!(a.y_test, b.y_test);
+        assert_eq!(a.x_train.rows(), 400);
+        assert_eq!(a.x_test.rows(), 150);
+        assert_eq!(a.spec.classes, data::spec("page").unwrap().classes);
+    }
+
+    #[test]
+    fn scaled_dataset_caps_at_spec_size() {
+        let ds = scaled_dataset("page", 10_000_000, 10_000_000).unwrap();
+        let spec = data::spec("page").unwrap();
+        assert_eq!(ds.x_train.rows(), spec.n_train);
+        assert_eq!(ds.x_test.rows(), spec.n_test);
+        assert!(scaled_dataset("nope", 10, 10).is_err());
+    }
+}

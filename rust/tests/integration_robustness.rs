@@ -1,0 +1,105 @@
+//! End-to-end conformance suite for the equal-memory robustness
+//! campaign (`loghd robustness`):
+//!
+//! - the smoke campaign runs and emits a schema-valid
+//!   `loghd-robustness/v1` document,
+//! - its solver table + schema match the committed golden artifact
+//!   (`rust/tests/golden/robustness_smoke.json`, re-bless with
+//!   `LOGHD_BLESS=1`),
+//! - the paper's headline statistic reproduces on the miniature
+//!   workload: the class-axis vs feature-axis resilience ratio is
+//!   finite and >= 1,
+//! - the artifact is bit-identical across `LOGHD_THREADS` settings
+//!   (pinned by running the actual binary twice).
+
+use loghd::eval::campaign::{self, CampaignConfig};
+use loghd::testkit::golden::{self, GoldenOptions};
+use loghd::util::json::{self, Value};
+
+fn smoke_result() -> (campaign::CampaignResult, Value) {
+    let res = campaign::run(&CampaignConfig::smoke()).expect("smoke campaign");
+    let v = res.to_json();
+    (res, v)
+}
+
+#[test]
+fn smoke_campaign_schema_golden_and_resilience_ratio() {
+    let (res, v) = smoke_result();
+
+    // --- schema sanity ---
+    assert_eq!(v.get("schema").unwrap().as_str(), Some("loghd-robustness/v1"));
+    let ps = v.get("ps").unwrap().as_array().unwrap();
+    let cells = v.get("cells").unwrap().as_array().unwrap();
+    assert_eq!(cells.len(), 6, "smoke grid must solve exactly 6 equal-memory cells");
+    for cell in cells {
+        let label = cell.get("label").unwrap().as_str().unwrap();
+        let mean = cell.get("acc_mean").unwrap().as_array().unwrap();
+        let std = cell.get("acc_std").unwrap().as_array().unwrap();
+        assert_eq!(mean.len(), ps.len(), "{label}: curve length");
+        assert_eq!(std.len(), ps.len(), "{label}: std length");
+        for a in mean {
+            let a = a.as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&a), "{label}: accuracy {a} out of range");
+        }
+        let r = cell.get("resilience").unwrap().as_f64().unwrap();
+        assert!(r.is_finite() && r >= 0.0, "{label}: resilience {r}");
+        let ci = cell.get("resilience_ci95").unwrap().as_array().unwrap();
+        assert!(ci[0].as_f64().unwrap() <= ci[1].as_f64().unwrap() + 1e-12, "{label}: ci order");
+        // every cell honors the memory budget within tolerance
+        let dev = cell.get("budget_dev").unwrap().as_f64().unwrap();
+        assert!(dev.abs() <= 0.05, "{label}: budget deviation {dev}");
+    }
+
+    // --- the committed golden pins schema + the solver table exactly ---
+    golden::check_file(
+        "rust/tests/golden/robustness_smoke.json",
+        &v,
+        &GoldenOptions::exact(),
+    )
+    .unwrap();
+
+    // --- the headline claim on the miniature workload ---
+    let ratio = res.resilience_ratio.expect("feature-axis side must reach the target clean");
+    assert!(ratio.is_finite(), "resilience ratio must be finite");
+    assert!(
+        ratio >= 1.0,
+        "LogHD-vs-feature-axis resilience ratio {ratio:.3} < 1 (class-axis best {:?}, \
+         feature-axis best {:?})",
+        res.class_axis_best,
+        res.feature_axis_best
+    );
+    // and both sides actually sustain the target somewhere on the grid
+    assert!(res.feature_axis_best.1 > 0.0);
+    assert!(res.class_axis_best.1 > 0.0);
+}
+
+/// `LOGHD_THREADS=1` and `=4` must produce byte-identical artifacts
+/// (outside `meta`, which records the thread count). The worker-pool
+/// size is latched per process, so this drives the real binary twice.
+#[test]
+fn campaign_artifact_is_thread_count_invariant() {
+    let bin = env!("CARGO_BIN_EXE_loghd");
+    let dir = std::env::temp_dir().join("loghd_robustness_threads");
+    let _ = std::fs::create_dir_all(&dir);
+
+    let mut docs = Vec::new();
+    for threads in ["1", "4"] {
+        let out = dir.join(format!("campaign_t{threads}.json"));
+        let status = std::process::Command::new(bin)
+            .args(["robustness", "--profile", "smoke", "--out"])
+            .arg(&out)
+            .env("LOGHD_THREADS", threads)
+            .current_dir(&dir)
+            .status()
+            .expect("spawn loghd robustness");
+        assert!(status.success(), "loghd robustness failed at LOGHD_THREADS={threads}");
+        let text = std::fs::read_to_string(&out).unwrap();
+        docs.push(golden::without_keys(json::parse(&text).unwrap(), &["meta"]));
+    }
+    assert_eq!(
+        json::to_string(&docs[0]),
+        json::to_string(&docs[1]),
+        "campaign output depends on LOGHD_THREADS"
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -542,6 +542,120 @@ fn prop_packed_fault_injection_stays_in_domain() {
 }
 
 #[test]
+fn prop_flip_positions_binomial_edges_and_determinism() {
+    // The i.i.d. per-bit sampler behind every fault model: counts must
+    // concentrate at p·total (binomial 6σ), positions must be strictly
+    // increasing (hence duplicate-free) and in range, p = 0 / p = 1 are
+    // exact, and the same seed replays the same mask.
+    use loghd::faults;
+    forall("flip-positions", 10, |rng| {
+        let total = 10_000 + rng.below(40_000) as usize;
+        let p = rng.uniform();
+        let seed = rng.next_u64();
+        let pos = faults::flip_positions(total, p, &mut SplitMix64::new(seed));
+        for w in pos.windows(2) {
+            assert!(w[0] < w[1], "positions not strictly increasing");
+        }
+        if let Some(&last) = pos.last() {
+            assert!(last < total);
+        }
+        let sigma = (p * (1.0 - p) * total as f64).sqrt();
+        assert!(
+            (pos.len() as f64 - p * total as f64).abs() <= 6.0 * sigma + 1.0,
+            "p={p}: {} flips of {total}, off by more than 6 sigma",
+            pos.len()
+        );
+        assert_eq!(pos, faults::flip_positions(total, p, &mut SplitMix64::new(seed)));
+        assert!(faults::flip_positions(total, 0.0, rng).is_empty());
+        assert_eq!(
+            faults::flip_positions(total, 1.0, rng),
+            (0..total).collect::<Vec<_>>()
+        );
+    });
+}
+
+#[test]
+fn prop_flip_packed_count_concentrates_and_replays() {
+    use loghd::faults;
+    use loghd::quant::PackedTensor;
+    forall("flip-packed", 8, |rng| {
+        let bits = 1 + rng.below(8) as u32;
+        let count = 4_000 + rng.below(4_000) as usize;
+        let p = 0.05 + 0.5 * rng.uniform();
+        let seed = rng.next_u64();
+        let mut t = PackedTensor::new(bits, count);
+        let flips = faults::flip_packed(&mut t, p, &mut SplitMix64::new(seed));
+        let total_bits = t.total_bits() as f64;
+        let sigma = (p * (1.0 - p) * total_bits).sqrt();
+        assert!(
+            (flips as f64 - p * total_bits).abs() <= 6.0 * sigma + 1.0,
+            "bits={bits}: {flips} flips of {total_bits}"
+        );
+        // from all-zero words, unique positions mean flips == set bits
+        let ones: u32 = t.words().iter().map(|w| w.count_ones()).sum();
+        assert_eq!(ones as usize, flips);
+        // same seed -> bit-identical corrupted words
+        let mut t2 = PackedTensor::new(bits, count);
+        faults::flip_packed(&mut t2, p, &mut SplitMix64::new(seed));
+        assert_eq!(t, t2);
+    });
+}
+
+#[test]
+fn prop_seeded_flip_mask_packed_and_dense_twins_agree() {
+    // Differential fault test: inject the same seeded per-value flip
+    // mask into a packed model, then score (a) the packed kernels on the
+    // corrupted words and (b) the f32 pipeline on the dequantized twin
+    // of those same words. Predictions must agree wherever the dense
+    // decision is not a near-tie (packed integer math and f32 math may
+    // legitimately split exact ties).
+    forall("flip-differential", 8, |rng| {
+        let b = 4 + rng.below(4) as usize;
+        let d = 64 + rng.below(192) as usize;
+        let n = 3 + rng.below(3) as usize;
+        let c = 3 + rng.below(4) as usize;
+        let model = random_model(rng, c, d, n);
+        let enc = Matrix::from_vec(b, d, rng.normals_f32(b * d));
+        for precision in [Precision::B8, Precision::B1] {
+            let mut qm = QuantizedLogHdModel::from_model(&model, precision);
+            let seed = rng.next_u64();
+            let p = 0.05 + 0.4 * rng.uniform();
+            qm.inject_value_faults(p, &mut SplitMix64::new(seed));
+            let packed_pred = qm.predict(&enc);
+
+            // dense twin of the corrupted stored state, scored in f32
+            let (bundles_deq, profiles_deq) = qm.dequantized_state();
+            let enc_q = quant::quantize_roundtrip(&enc, precision);
+            let mut a = activations(&enc_q, &bundles_deq);
+            if precision == Precision::B1 {
+                // packed 1-bit activations are arcsine-calibrated to
+                // cosine scale ((π/2)·s); the dense cosine against the
+                // ±scale twin rows is scale·sqrt(d)·s — align them.
+                let calib =
+                    std::f32::consts::FRAC_PI_2 / (qm.bundles.scale * (d as f32).sqrt());
+                for v in a.data_mut() {
+                    *v *= calib;
+                }
+            }
+            let dists = tensor::pairwise_sqdists(&a, &profiles_deq);
+            for (i, &packed_label) in packed_pred.iter().enumerate() {
+                let row = dists.row(i);
+                let dense_label = tensor::argmin(row) as i32;
+                if dense_label != packed_label {
+                    // only near-ties may split between the two datapaths
+                    let gap = (row[packed_label as usize] - row[dense_label as usize]).abs();
+                    assert!(
+                        gap < 5e-2 * (1.0 + row[dense_label as usize]),
+                        "{precision:?} row {i}: packed {packed_label} vs dense {dense_label}, \
+                         dist gap {gap}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_dataset_generator_statistics() {
     // per-class sample means approach the class means as samples grow
     forall("datagen", 4, |rng| {
