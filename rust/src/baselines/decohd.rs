@@ -1,0 +1,277 @@
+//! DecoHD-style decomposed classification (Yun et al., 2025) — the
+//! class-axis baseline that proves the model-core abstraction.
+//!
+//! DecoHD's idea, transplanted to this stack's post-training setting:
+//! instead of storing one prototype per class (O(C·D)) or LogHD's
+//! codebook bundles, store a small shared **basis** of r hypervectors
+//! (r ≤ C, typically r ≈ ⌈log₂ C⌉) plus per-class **coefficients** over
+//! that basis — the class weights are *decomposed* through a shared
+//! dictionary, O(r·D + C·r), the same asymptotic shape as LogHD with a
+//! learned rather than coded mixing matrix.
+//!
+//! Construction is deterministic truncated PCA of the prototype matrix
+//! through its C×C Gram matrix (cyclic Jacobi eigendecomposition — C is
+//! tiny, so this costs microseconds and needs no LAPACK): the top-r
+//! eigenvectors give an orthonormal basis of the best rank-r subspace
+//! (Eckart–Young), and row-normalized coefficients make the
+//! reconstructed class vectors unit — so clean scores are exactly the
+//! cosine scores of the conventional baseline against its rank-r
+//! projection.
+//!
+//! The family registers once in [`crate::model::zoo`] and is thereby
+//! servable (`loghd serve`), persistable (kind `native-decohd`),
+//! inspectable (`loghd inspect`), and evaluable in equal-memory fault
+//! campaigns (`Method::DecoHd`, `loghd robustness --decohd true`) —
+//! with no per-subsystem wiring. Fault surface: the basis plane and the
+//! coefficient plane (see `model::instances::decohd`).
+
+use anyhow::{bail, Result};
+
+use crate::hd::similarity::activations;
+use crate::loghd::codebook::min_bundles;
+use crate::tensor::{self, Matrix};
+
+/// A DecoHD model: shared basis + per-class mixing coefficients.
+#[derive(Debug, Clone)]
+pub struct DecoHdModel {
+    /// (r, D) orthonormal basis rows spanning the prototype subspace.
+    pub basis: Matrix,
+    /// (C, r) per-class coefficients, unit rows (so reconstructed class
+    /// vectors are unit and scores are cosine-scaled).
+    pub coeffs: Matrix,
+}
+
+impl DecoHdModel {
+    /// Decompose trained (unit-row) prototypes at `rank` basis vectors.
+    pub fn from_prototypes(h: &Matrix, rank: usize) -> Result<Self> {
+        let classes = h.rows();
+        if classes == 0 || h.cols() == 0 {
+            bail!("cannot decompose an empty prototype matrix");
+        }
+        if rank == 0 || rank > classes {
+            bail!("decohd rank must be in 1..=C (= {classes}), got {rank}");
+        }
+        // Gram matrix G = H·Hᵀ (C×C): eigenvectors of G are the left
+        // singular vectors of H, so U_rᵀ·H spans the best rank-r
+        // subspace of the class vectors.
+        let gram = tensor::matmul_nt(h, h);
+        let (eigvals, eigvecs) = jacobi_eigh(&gram);
+        let mut order: Vec<usize> = (0..classes).collect();
+        order.sort_by(|&a, &b| eigvals[b].total_cmp(&eigvals[a]));
+
+        let d = h.cols();
+        let mut basis = Matrix::zeros(rank, d);
+        for (i, &ei) in order.iter().take(rank).enumerate() {
+            let row = basis.row_mut(i);
+            for c in 0..classes {
+                let u = eigvecs[c * classes + ei] as f32;
+                if u != 0.0 {
+                    tensor::axpy(u, h.row(c), row);
+                }
+            }
+        }
+        tensor::normalize_rows(&mut basis);
+        let mut coeffs = tensor::matmul_nt(h, &basis);
+        tensor::normalize_rows(&mut coeffs);
+        Ok(Self { basis, coeffs })
+    }
+
+    pub fn classes(&self) -> usize {
+        self.coeffs.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.basis.cols()
+    }
+
+    /// Basis size r.
+    pub fn rank(&self) -> usize {
+        self.basis.rows()
+    }
+
+    /// Per-class decision scores (B, C): cosine activations against the
+    /// basis, mixed through the coefficients — equal to cosine scores
+    /// against the (unit) rank-r reconstructed class vectors.
+    pub fn scores(&self, enc: &Matrix) -> Matrix {
+        tensor::matmul_nt(&activations(enc, &self.basis), &self.coeffs)
+    }
+
+    /// Argmax labels.
+    pub fn predict(&self, enc: &Matrix) -> Vec<i32> {
+        let s = self.scores(enc);
+        (0..s.rows()).map(|i| tensor::argmax(s.row(i)) as i32).collect()
+    }
+
+    /// Stored values: r·D basis + C·r coefficients — one term of the
+    /// shared accounting the campaign solver uses.
+    pub fn memory_floats(&self) -> usize {
+        self.rank() * self.d() + self.classes() * self.rank()
+    }
+
+    /// Fraction of the conventional C·D footprint.
+    pub fn budget_fraction(&self) -> f64 {
+        self.memory_floats() as f64 / (self.classes() * self.d()) as f64
+    }
+}
+
+/// The default rank for C classes: ⌈log₂ C⌉ clamped to [1, C] — the
+/// same bundle-count scale LogHD's codebook needs, so the two class-axis
+/// families land in comparable memory regimes out of the box.
+pub fn default_rank(classes: usize) -> usize {
+    min_bundles(classes, 2).clamp(1, classes.max(1))
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix given as a
+/// row-major (n, n) [`Matrix`]. Returns `(eigenvalues, eigenvectors)`
+/// with eigenvectors stored column-major-by-index in a flat row-major
+/// n×n array: `eigvecs[i * n + j]` is component i of eigenvector j.
+/// Deterministic (fixed sweep order, no randomness); n is the class
+/// count here, so cost is negligible.
+fn jacobi_eigh(m: &Matrix) -> (Vec<f64>, Vec<f64>) {
+    let n = m.rows();
+    assert_eq!(n, m.cols(), "jacobi_eigh needs a square matrix");
+    let mut a: Vec<f64> = m.data().iter().map(|v| *v as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let scale: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-300);
+    for _sweep in 0..64 {
+        let off: f64 = (0..n)
+            .flat_map(|p| ((p + 1)..n).map(move |q| (p, q)))
+            .map(|(p, q)| a[p * n + q] * a[p * n + q])
+            .sum();
+        if off.sqrt() <= 1e-14 * scale {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[p * n + q];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for i in 0..n {
+                    let aip = a[i * n + p];
+                    let aiq = a[i * n + q];
+                    a[i * n + p] = c * aip - s * aiq;
+                    a[i * n + q] = s * aip + c * aiq;
+                }
+                for j in 0..n {
+                    let apj = a[p * n + j];
+                    let aqj = a[q * n + j];
+                    a[p * n + j] = c * apj - s * aqj;
+                    a[q * n + j] = s * apj + c * aqj;
+                }
+                for i in 0..n {
+                    let vip = v[i * n + p];
+                    let viq = v[i * n + q];
+                    v[i * n + p] = c * vip - s * viq;
+                    v[i * n + q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    let eigvals: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+    (eigvals, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn unit_prototypes(c: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = SplitMix64::new(seed);
+        let mut h = Matrix::from_vec(c, d, rng.normals_f32(c * d));
+        tensor::normalize_rows(&mut h);
+        h
+    }
+
+    #[test]
+    fn jacobi_recovers_a_known_spectrum() {
+        // diag(3, 1) rotated by 45°: eigenvalues {3, 1}.
+        let r = std::f32::consts::FRAC_1_SQRT_2;
+        let q = Matrix::from_vec(2, 2, vec![r, -r, r, r]);
+        let lam = Matrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 1.0]);
+        let m = tensor::matmul_nt(&tensor::matmul(&q, &lam), &q);
+        let (mut vals, _) = jacobi_eigh(&m);
+        vals.sort_by(|a, b| b.total_cmp(a));
+        assert!((vals[0] - 3.0).abs() < 1e-5, "{vals:?}");
+        assert!((vals[1] - 1.0).abs() < 1e-5, "{vals:?}");
+    }
+
+    #[test]
+    fn basis_rows_are_orthonormal() {
+        let h = unit_prototypes(6, 128, 1);
+        let m = DecoHdModel::from_prototypes(&h, 3).unwrap();
+        let g = tensor::matmul_nt(&m.basis, &m.basis);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g.at(i, j) - want).abs() < 1e-4, "G[{i}][{j}] = {}", g.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn full_rank_matches_conventional_scores() {
+        // At r = C the decomposition is exact: scores equal the cosine
+        // activations of the original unit prototypes.
+        let h = unit_prototypes(5, 96, 2);
+        let m = DecoHdModel::from_prototypes(&h, 5).unwrap();
+        let mut rng = SplitMix64::new(7);
+        let enc = Matrix::from_vec(8, 96, rng.normals_f32(8 * 96));
+        let got = m.scores(&enc);
+        let want = activations(&enc, &h);
+        for (a, b) in got.data().iter().zip(want.data()) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn truncation_compresses_and_still_classifies() {
+        let ds = crate::data::generate_scaled(crate::data::spec("page").unwrap(), 500, 150);
+        let opts = crate::loghd::model::TrainOptions {
+            epochs: 0,
+            conv_epochs: 1,
+            ..Default::default()
+        };
+        let stack = crate::loghd::model::TrainedStack::train(
+            &ds.x_train,
+            &ds.y_train,
+            5,
+            256,
+            0xE5C0DE,
+            &opts,
+        )
+        .unwrap();
+        let enc_test = stack.encoder.encode(&ds.x_test);
+        let conv_acc = {
+            let pred =
+                crate::baselines::ConventionalModel::new(stack.prototypes.clone()).predict(&enc_test);
+            crate::eval::accuracy(&pred, &ds.y_test)
+        };
+        let m = DecoHdModel::from_prototypes(&stack.prototypes, 3).unwrap();
+        let acc = crate::eval::accuracy(&m.predict(&enc_test), &ds.y_test);
+        assert!(m.memory_floats() < 5 * 256, "no compression: {}", m.memory_floats());
+        assert!((m.budget_fraction() - (3.0 * (256.0 + 5.0)) / (5.0 * 256.0)).abs() < 1e-12);
+        assert!(acc > conv_acc - 0.15, "rank-3 decohd collapsed: {acc} vs conv {conv_acc}");
+    }
+
+    #[test]
+    fn rank_validation_and_default() {
+        let h = unit_prototypes(5, 32, 3);
+        assert!(DecoHdModel::from_prototypes(&h, 0).is_err());
+        assert!(DecoHdModel::from_prototypes(&h, 6).is_err());
+        assert_eq!(default_rank(5), 3); // ceil(log2 5)
+        assert_eq!(default_rank(2), 1);
+        assert_eq!(default_rank(26), 5);
+        assert_eq!(default_rank(1), 1);
+    }
+}

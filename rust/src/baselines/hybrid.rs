@@ -59,10 +59,16 @@ impl HybridModel {
         self.mask.iter().filter(|m| **m).count()
     }
 
-    /// Stored values: n * retained + C * n.
+    /// Stored values: n bundles over the retained coordinates plus the
+    /// profiles in their deviations+mean stored form — the same
+    /// [`crate::model::loghd_stored_values`] rule the equal-memory
+    /// campaign solver budgets with.
     pub fn memory_floats(&self) -> usize {
-        self.inner.n_bundles() * self.retained()
-            + self.inner.classes * self.inner.n_bundles()
+        crate::model::loghd_stored_values(
+            self.inner.n_bundles(),
+            self.retained(),
+            self.inner.classes,
+        )
     }
 
     /// Fraction of the conventional C*D footprint.

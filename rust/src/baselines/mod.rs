@@ -1,11 +1,14 @@
 //! Baselines the paper evaluates against, plus the hybrid composition:
-//! conventional HDC (O(CD)), SparseHD (feature axis), and
-//! LogHD+SparseHD (hybrid, §IV-D).
+//! conventional HDC (O(CD)), SparseHD (feature axis), LogHD+SparseHD
+//! (hybrid, §IV-D), and the DecoHD-style decomposed class-weight
+//! classifier (class axis, follow-up work).
 
 pub mod conventional;
+pub mod decohd;
 pub mod hybrid;
 pub mod sparsehd;
 
 pub use conventional::ConventionalModel;
+pub use decohd::DecoHdModel;
 pub use hybrid::HybridModel;
 pub use sparsehd::SparseHdModel;

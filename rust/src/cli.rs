@@ -3,12 +3,13 @@
 //! ```text
 //! loghd info                              # datasets + artifact bundles
 //! loghd train  --dataset page --d 2000 --out models/page [--k 2 ...]
-//!              [--baseline_out models/page_conv]
-//! loghd eval   --model models/page [--p 0.2 --bits 8]
+//!              [--baseline_out models/page_conv] [--decohd_out models/page_deco [--rank 3]]
+//! loghd eval   --model models/page [--p 0.2 --bits 8]   # any registered artifact kind
+//! loghd inspect <dir>                     # ModelCard + zoo kind + trait stored_bits
 //! loghd serve  --model page=models/page:8,conv=models/page_conv
 //!              [--replicas 2 --default page --addr 127.0.0.1:7878]
 //!              | --artifacts artifacts/page_smoke [--entry infer_loghd]
-//! loghd robustness [--profile smoke|full] [--out path.json]  # equal-memory campaign
+//! loghd robustness [--profile smoke|full] [--decohd true] [--out path.json]
 //! loghd table2 [--n 7]                    # hardware-efficiency ratios
 //! ```
 
@@ -18,23 +19,29 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::baselines::decohd::{self, DecoHdModel};
 use crate::config::RunConfig;
 use crate::coordinator::{
     BatcherConfig, EngineFactory, ModelRegistry, PjrtEngine, Server, TenantSpec,
 };
 use crate::data;
-use crate::eval::{accuracy, corrupt, Workbench};
+use crate::eval::{accuracy, Workbench};
 use crate::eval::sweep::Method;
 use crate::hwmodel;
 use crate::loghd::model::TrainedStack;
 use crate::loghd::persist;
+use crate::model::{self, zoo, HdClassifier};
 use crate::quant::Precision;
+use crate::runtime::artifact::ModelCard;
 
-/// Parsed command line: subcommand + `--key value` flags.
+/// Parsed command line: subcommand + `--key value` flags + positionals.
 #[derive(Debug, Default)]
 pub struct Args {
     pub command: String,
     pub flags: HashMap<String, String>,
+    /// Bare (non-flag) arguments, in order. Only `inspect` accepts one;
+    /// [`run`] rejects strays for every other command.
+    pub positional: Vec<String>,
 }
 
 /// Parse argv-style input (exposed for tests).
@@ -42,6 +49,7 @@ pub fn parse_args<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
     let mut it = argv.into_iter();
     let command = it.next().unwrap_or_default();
     let mut flags = HashMap::new();
+    let mut positional = Vec::new();
     let mut pending: Option<String> = None;
     for tok in it {
         if let Some(key) = pending.take() {
@@ -53,13 +61,13 @@ pub fn parse_args<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
                 pending = Some(stripped.to_string());
             }
         } else {
-            bail!("unexpected positional argument '{tok}'");
+            positional.push(tok);
         }
     }
     if let Some(key) = pending {
         flags.insert(key, "true".to_string()); // boolean flag
     }
-    Ok(Args { command, flags })
+    Ok(Args { command, flags, positional })
 }
 
 fn flag<'a>(args: &'a Args, key: &str) -> Option<&'a str> {
@@ -78,6 +86,11 @@ pub fn main_entry() {
 /// Dispatch. Separated from `main_entry` for testing.
 pub fn run(argv: Vec<String>) -> Result<()> {
     let args = parse_args(argv)?;
+    if args.command != "inspect" {
+        if let Some(stray) = args.positional.first() {
+            bail!("unexpected positional argument '{stray}'");
+        }
+    }
     match args.command.as_str() {
         "" | "help" | "--help" => {
             print!("{}", HELP);
@@ -86,6 +99,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "info" => cmd_info(),
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
+        "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "robustness" => cmd_robustness(&args),
         "table2" => cmd_table2(&args),
@@ -100,14 +114,24 @@ USAGE:
   loghd info
   loghd train  --dataset <name> --d <dim> --out <dir> [--k K --extra_bundles E --epochs T]
                [--baseline_out <dir>]   # also save the conventional O(C*D) baseline
+               [--decohd_out <dir> [--rank r]]   # also save a DecoHD decomposition
   loghd eval   --model <dir> [--p <flip prob>] [--bits 1|2|4|8|32] [--seed S]
+  loghd inspect <dir>                    # or: loghd inspect --model <dir>
   loghd serve  (--model <name=dir[:bits],...> | --artifacts <bundle dir> [--entry infer_loghd])
                [--replicas R] [--default <name>] [--bits 1|2|4|8|32]
                [--addr 127.0.0.1:7878] [--max_batch 64] [--max_delay_ms 2]
   loghd robustness [--profile smoke|full] [--dataset <name>] [--d <dim>]
                [--budget <frac of C*D*32>] [--target <frac of clean acc>]
-               [--trials T] [--seed S] [--out <path.json>]
+               [--trials T] [--seed S] [--decohd true] [--out <path.json>]
   loghd table2 [--n <bundles>]
+
+eval loads ANY registered artifact kind (loghd, conventional, decohd,
+aot bundle), snapshots it at --bits, injects stored-state bit flips
+through the shared fault-surface driver, and reports test accuracy.
+
+inspect prints an artifact's ModelCard, its model-zoo registration, the
+trait-reported stored_bits per serving precision, and the enumeration
+of stored bit-planes the fault injector targets.
 
 serve hosts every named model behind one JSON-lines TCP endpoint (see
 docs/PROTOCOL.md): requests route by their \"model\" field (default: the
@@ -117,9 +141,10 @@ hot-swaps one tenant's artifact without dropping in-flight requests.
 robustness solves equal-memory (method, precision, n/sparsity) cells at
 one stored-size budget, runs Monte-Carlo bit-flip campaigns over them,
 and reports accuracy-vs-flip-rate curves plus the class-axis vs
-feature-axis resilience ratio (the paper's headline claim). Output is
-bit-identical for any LOGHD_THREADS; default --out is
-results/BENCH_robustness.json plus a repo-root snapshot.
+feature-axis resilience ratio (the paper's headline claim). --decohd
+true appends DecoHD cells to the solved grid. Output is bit-identical
+for any LOGHD_THREADS; default --out is results/BENCH_robustness.json
+plus a repo-root snapshot.
 ";
 
 fn cmd_info() -> Result<()> {
@@ -183,6 +208,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         persist::save_conventional(&PathBuf::from(bdir), &stack.encoder, &conv)?;
         println!("saved conventional baseline ({} floats) to {bdir}", conv.memory_floats());
     }
+    if let Some(ddir) = flag(args, "decohd_out") {
+        let rank = match flag(args, "rank") {
+            Some(r) => r.parse().context("--rank")?,
+            None => decohd::default_rank(spec.classes),
+        };
+        let deco = DecoHdModel::from_prototypes(&stack.prototypes, rank)?;
+        persist::save_decohd(&PathBuf::from(ddir), &stack.encoder, &deco)?;
+        println!(
+            "saved decohd(r={rank}) baseline ({} floats, {:.3} of C*D) to {ddir}",
+            deco.memory_floats(),
+            deco.budget_fraction()
+        );
+    }
     println!(
         "trained loghd(k={}, n={}) on {}: clean acc {:.4}, budget {:.3} of C*D, saved to {}",
         stack.loghd.book.k,
@@ -197,7 +235,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let model_dir = PathBuf::from(flag(args, "model").context("--model <dir> required")?);
-    let (encoder, model) = persist::load(&model_dir)?;
+    let loaded = persist::load_any(&model_dir)?;
     let p: f64 = flag(args, "p").unwrap_or("0").parse().context("--p must be a number")?;
     let bits: u32 = flag(args, "bits").unwrap_or("32").parse().context("--bits")?;
     let seed: u64 = flag(args, "seed").unwrap_or("1").parse().context("--seed")?;
@@ -206,20 +244,79 @@ fn cmd_eval(args: &Args) -> Result<()> {
     // dataset inferred from feature width
     let spec = data::SPECS
         .iter()
-        .find(|s| s.features == encoder.features())
+        .find(|s| s.features == loaded.features())
         .context("no dataset matches model feature width")?;
     let ds = data::generate(spec);
-    let enc_test = encoder.encode(&ds.x_test);
+    let enc_test = loaded.encoder().encode(&ds.x_test);
 
+    // The trait pipeline, uniform across every registered kind:
+    // snapshot the model at `precision`, flip bits across its whole
+    // stored fault surface, score the corrupted planes.
+    let mut inst = loaded.instance(precision);
     let mut rng = crate::util::rng::SplitMix64::new(seed ^ 0xFA17);
-    let bundles = corrupt(&model.bundles, precision, p, &mut rng);
-    let profiles = corrupt(&model.profiles, precision, p, &mut rng);
-    let corrupted = crate::loghd::model::LogHdModel { bundles, profiles, ..model };
-    let acc = accuracy(&corrupted.predict(&enc_test), &ds.y_test);
+    let flips = model::inject_value_faults(inst.as_mut(), p, &mut rng);
+    let acc = accuracy(&inst.predict(&enc_test), &ds.y_test);
     println!(
-        "dataset={} D={} n={} bits={} p={:.2} -> accuracy {:.4}",
-        spec.name, corrupted.d, corrupted.n_bundles(), bits, p, acc
+        "dataset={} kind={} D={} stored={} bits total, bits={} p={:.2} flips={} -> accuracy {:.4}",
+        spec.name,
+        loaded.kind(),
+        inst.d(),
+        inst.stored_bits(),
+        bits,
+        p,
+        flips,
+        acc
     );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| flag(args, "model"))
+        .context("usage: loghd inspect <artifact dir>")?;
+    if args.positional.len() > 1 {
+        bail!("inspect takes one artifact dir, got {:?}", args.positional);
+    }
+    let dir = PathBuf::from(dir);
+    let card = ModelCard::load(&dir)?;
+    let spec = zoo::lookup(&card.kind).with_context(|| {
+        format!("kind '{}' is not in the model zoo (registered: {})", card.kind, zoo::kinds())
+    })?;
+    println!("artifact   {}", dir.display());
+    println!("kind       {} — {}", spec.kind, spec.description);
+    println!("family     {}", spec.family);
+    println!("classes    {}", card.classes);
+    println!("d          {}", card.d);
+    println!("features   {}", card.features);
+
+    let loaded = spec.load(&dir)?;
+    let conv_bits = (card.classes * card.d * 32) as f64;
+    println!("stored size by serving precision (trait-reported, = fault surface):");
+    for precision in [Precision::F32, Precision::B8, Precision::B1] {
+        let inst = loaded.instance(precision);
+        let bits = inst.stored_bits();
+        println!(
+            "  {:<4} {:>12} bits  ({:>5.1}% of the f32 conventional C*D footprint)",
+            precision.label(),
+            bits,
+            100.0 * bits as f64 / conv_bits
+        );
+    }
+    let inst = loaded.instance(Precision::F32);
+    let surface = inst.fault_surface();
+    println!("fault surface ({} planes at f32):", surface.planes.len());
+    for plane in &surface.planes {
+        println!(
+            "  {:<16} {:>10} values x {:>2} bits = {:>12} bits",
+            plane.label,
+            plane.values,
+            plane.bits,
+            plane.total_bits()
+        );
+    }
     Ok(())
 }
 
@@ -299,6 +396,9 @@ fn cmd_robustness(args: &Args) -> Result<()> {
     if let Some(s) = flag(args, "seed") {
         cfg.seed = s.parse().context("--seed")?;
     }
+    if let Some(v) = flag(args, "decohd") {
+        cfg.decohd = v.parse().context("--decohd must be true|false")?;
+    }
     let res = crate::eval::campaign::run(&cfg)?;
     print!("{}", res.summary());
     match flag(args, "out") {
@@ -355,11 +455,20 @@ mod tests {
         assert_eq!(a.flags["dataset"], "page");
         assert_eq!(a.flags["d"], "512");
         assert_eq!(a.flags["native"], "true");
+        assert!(a.positional.is_empty());
     }
 
     #[test]
-    fn rejects_positional() {
-        assert!(parse_args(vec!["eval".into(), "stray".into()]).is_err());
+    fn parses_positional_for_inspect() {
+        let a = parse_args(vec!["inspect".into(), "models/page".into()]).unwrap();
+        assert_eq!(a.command, "inspect");
+        assert_eq!(a.positional, vec!["models/page".to_string()]);
+    }
+
+    #[test]
+    fn rejects_positional_outside_inspect() {
+        let err = run(vec!["eval".into(), "stray".into()]).unwrap_err();
+        assert!(err.to_string().contains("positional"), "{err}");
     }
 
     #[test]
@@ -382,11 +491,13 @@ mod tests {
     }
 
     #[test]
-    fn train_eval_roundtrip_via_cli() {
+    fn train_eval_inspect_roundtrip_via_cli() {
         let dir = std::env::temp_dir().join("loghd_cli_train");
         let bdir = std::env::temp_dir().join("loghd_cli_train_conv");
+        let ddir = std::env::temp_dir().join("loghd_cli_train_deco");
         let _ = std::fs::remove_dir_all(&dir);
         let _ = std::fs::remove_dir_all(&bdir);
+        let _ = std::fs::remove_dir_all(&ddir);
         run(vec![
             "train".into(),
             "--dataset".into(), "page".into(),
@@ -395,6 +506,7 @@ mod tests {
             "--conv_epochs".into(), "0".into(),
             "--out".into(), dir.to_str().unwrap().into(),
             "--baseline_out".into(), bdir.to_str().unwrap().into(),
+            "--decohd_out".into(), ddir.to_str().unwrap().into(),
         ])
         .unwrap();
         run(vec![
@@ -404,10 +516,19 @@ mod tests {
             "--p".into(), "0.1".into(),
         ])
         .unwrap();
-        // both artifact kinds landed on disk with registry-loadable manifests
+        // eval works for every registered kind through the trait layer
+        run(vec!["eval".into(), "--model".into(), ddir.to_str().unwrap().into()]).unwrap();
+        // inspect resolves each artifact through the zoo registry
+        for d in [&dir, &bdir, &ddir] {
+            run(vec!["inspect".into(), d.to_str().unwrap().into()]).unwrap();
+        }
+        assert!(run(vec!["inspect".into()]).is_err(), "inspect needs a dir");
+        // all three artifact kinds landed on disk with registry-loadable manifests
         assert_eq!(persist::load_any(&dir).unwrap().kind(), "loghd");
         assert_eq!(persist::load_any(&bdir).unwrap().kind(), "conventional");
+        assert_eq!(persist::load_any(&ddir).unwrap().kind(), "decohd");
         let _ = std::fs::remove_dir_all(dir);
         let _ = std::fs::remove_dir_all(bdir);
+        let _ = std::fs::remove_dir_all(ddir);
     }
 }

@@ -10,7 +10,7 @@
 //! replicas, least-loaded under skew. Per-request response channels carry
 //! answers back; [`stats`] aggregates per-tenant metrics.
 //!
-//! Three engines implement [`Engine`]:
+//! Four engines implement [`Engine`]:
 //! - [`worker::PjrtEngine`] — the AOT path: compiled HLO via the PJRT C
 //!   API (Python never runs here).
 //! - [`worker::NativeEngine`] — the pure-Rust LogHD path used by the
@@ -18,6 +18,10 @@
 //!   reference. Serves f32, int8, and 1-bit packed precisions.
 //! - [`worker::ConventionalEngine`] — the O(C·D) baseline, for tenant
 //!   mixes that compare LogHD against it under one memory budget.
+//! - [`worker::ZooEngine`] — the generic trait-backed engine: any
+//!   [`crate::model::HdClassifier`] instance from the model zoo
+//!   (currently the DecoHD baseline) serves through it with no
+//!   per-family wiring; engine dispatch lives in `model::zoo`.
 //!
 //! # Example
 //!
@@ -62,7 +66,7 @@ pub use batcher::{BatcherConfig, Coordinator, ReloadError, Request, Response, Su
 pub use registry::{ModelRegistry, RouteError, TenantInfo, TenantSpec};
 pub use server::Server;
 pub use stats::StatsSnapshot;
-pub use worker::{ConventionalEngine, EngineFactory, NativeEngine, PjrtEngine};
+pub use worker::{ConventionalEngine, EngineFactory, NativeEngine, PjrtEngine, ZooEngine};
 
 use anyhow::Result;
 

@@ -19,13 +19,13 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use crate::loghd::persist::{self, LoadedModel};
+use crate::model::zoo;
 use crate::quant::Precision;
 use crate::runtime::artifact::ModelCard;
 
 use super::batcher::{BatcherConfig, Coordinator, Response, SubmitError};
 use super::stats::StatsSnapshot;
-use super::worker::{ConventionalEngine, EngineFactory, NativeEngine};
+use super::worker::EngineFactory;
 
 /// How one tenant is provisioned: artifact path, serving precision, and
 /// replica count.
@@ -356,43 +356,17 @@ impl ModelRegistry {
     }
 }
 
-/// Load an artifact and build one engine factory per replica. Each
-/// replica owns its own engine instance (dense tensors cloned per
-/// replica; packed precisions pack on the worker thread), which is what
-/// lets replicas serve batches fully in parallel.
+/// Load an artifact and build one engine factory per replica — a thin
+/// alias for [`zoo::engine_factories`], the single engine-dispatch
+/// point of the model zoo. Any family registered there (including the
+/// DecoHD baseline) is servable here with no registry changes.
 fn build_factories(
     path: &Path,
     precision: Precision,
     replicas: usize,
     label: &str,
 ) -> Result<(String, usize, Vec<EngineFactory>)> {
-    let loaded = persist::load_any(path)
-        .with_context(|| format!("loading artifact {}", path.display()))?;
-    let kind = loaded.kind().to_string();
-    let features = loaded.features();
-    let factories: Vec<EngineFactory> = match loaded {
-        LoadedModel::LogHd(encoder, model) => (0..replicas)
-            .map(|_| {
-                NativeEngine::factory_with_precision(
-                    encoder.clone(),
-                    model.clone(),
-                    label.to_string(),
-                    precision,
-                )
-            })
-            .collect(),
-        LoadedModel::Conventional(encoder, model) => (0..replicas)
-            .map(|_| {
-                ConventionalEngine::factory(
-                    encoder.clone(),
-                    model.clone(),
-                    label.to_string(),
-                    precision,
-                )
-            })
-            .collect(),
-    };
-    Ok((kind, features, factories))
+    zoo::engine_factories(path, precision, replicas, label)
 }
 
 #[cfg(test)]
@@ -484,6 +458,9 @@ mod tests {
             &ConventionalModel::new(st.prototypes.clone()),
         )
         .unwrap();
+        let deco =
+            crate::baselines::DecoHdModel::from_prototypes(&st.prototypes, 3).unwrap();
+        crate::loghd::persist::save_decohd(&root.join("deco"), &st.encoder, &deco).unwrap();
         let specs = vec![
             TenantSpec {
                 name: "log".into(),
@@ -495,6 +472,12 @@ mod tests {
                 name: "conv".into(),
                 path: root.join("conv"),
                 precision: Precision::F32,
+                replicas: 1,
+            },
+            TenantSpec {
+                name: "deco".into(),
+                path: root.join("deco"),
+                precision: Precision::B8,
                 replicas: 1,
             },
         ];
@@ -509,10 +492,18 @@ mod tests {
             registry.submit_blocking(Some("conv"), ds.x_test.row(0).to_vec()).unwrap();
         assert_eq!(m, "conv");
         assert!((0..5).contains(&resp.label));
+        // The zoo-registered DecoHD tenant serves through the same wire
+        // path as the hand-wired engines.
+        let (m, resp) =
+            registry.submit_blocking(Some("deco"), ds.x_test.row(0).to_vec()).unwrap();
+        assert_eq!(m, "deco");
+        assert!((0..5).contains(&resp.label));
         let infos = registry.describe();
-        assert_eq!(infos.len(), 2);
+        assert_eq!(infos.len(), 3);
         let log = infos.iter().find(|i| i.name == "log").unwrap();
         assert_eq!((log.kind.as_str(), log.precision, log.replicas), ("loghd", "b1", 2));
+        let deco_info = infos.iter().find(|i| i.name == "deco").unwrap();
+        assert_eq!((deco_info.kind.as_str(), deco_info.precision), ("decohd", "b8"));
         // Hot-swap the loghd tenant to int8; old and new widths match.
         let info = registry.reload(Some("log"), None, Some(8)).unwrap();
         assert_eq!(info.precision, "b8");

@@ -13,6 +13,7 @@ use crate::baselines::conventional::ConventionalModel;
 use crate::encoder::Encoder;
 use crate::loghd::model::{DecodePrep, LogHdModel};
 use crate::loghd::qmodel::{QuantizedLogHdModel, QueryScratch};
+use crate::model::HdClassifier;
 use crate::quant::{self, Precision};
 use crate::runtime::PjrtRuntime;
 use crate::tensor::{Matrix, NtPrepared};
@@ -255,6 +256,52 @@ impl Engine for ConventionalEngine {
     }
 }
 
+/// The generic model-zoo engine: encoder + any [`HdClassifier`]
+/// instance (see `model::instances`). Families without a specialized
+/// serving engine (currently DecoHD) serve through this — the trait's
+/// `predict` is the same code path the fault sweeps evaluate, so a
+/// family registered in `model::zoo` is servable with zero extra
+/// wiring. LogHD keeps [`NativeEngine`] (prepared GEMM operands, query
+/// scratch) and the conventional baseline keeps [`ConventionalEngine`];
+/// both predate this engine and stay for their hot-path state.
+pub struct ZooEngine {
+    pub encoder: Encoder,
+    pub precision: Precision,
+    model: Box<dyn HdClassifier>,
+    label: String,
+}
+
+impl ZooEngine {
+    pub fn new(
+        encoder: Encoder,
+        model: Box<dyn HdClassifier>,
+        label: impl Into<String>,
+        precision: Precision,
+    ) -> Self {
+        Self { encoder, precision, model, label: label.into() }
+    }
+
+    /// The instance being served (inspection / tests).
+    pub fn model(&self) -> &dyn HdClassifier {
+        self.model.as_ref()
+    }
+}
+
+impl Engine for ZooEngine {
+    fn name(&self) -> String {
+        format!("{}:{}:{}", self.model.kind(), self.label, self.precision.label())
+    }
+
+    fn features(&self) -> usize {
+        self.encoder.features()
+    }
+
+    fn infer(&mut self, x: &Matrix) -> Result<Vec<i32>> {
+        let enc = self.encoder.encode(x);
+        Ok(self.model.predict(&enc))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,6 +379,38 @@ mod tests {
         let mut engine =
             ConventionalEngine::new(st.encoder.clone(), conv.clone(), "page", Precision::F32);
         assert_eq!(engine.infer(&xb).unwrap(), conv.predict(&enc));
+    }
+
+    #[test]
+    fn zoo_engine_serves_decohd_at_every_precision() {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 400, 50);
+        let opts = TrainOptions { epochs: 1, conv_epochs: 1, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 128, 1, &opts).unwrap();
+        let deco =
+            crate::baselines::DecoHdModel::from_prototypes(&st.prototypes, 3).unwrap();
+        for precision in [Precision::F32, Precision::B8, Precision::B1] {
+            let mut engine = ZooEngine::new(
+                st.encoder.clone(),
+                crate::model::instances::decohd(&deco, precision),
+                "page",
+                precision,
+            );
+            assert_eq!(engine.features(), 10);
+            let labels = engine.infer(&ds.x_test.rows_slice(0, 12)).unwrap();
+            assert_eq!(labels.len(), 12, "{precision:?}");
+            assert!(labels.iter().all(|l| (0..5).contains(l)), "{precision:?}");
+            assert!(engine.name().starts_with("decohd:page:"), "{}", engine.name());
+            assert_eq!(engine.model().kind(), "decohd");
+        }
+        // f32 serving must equal the model's own predict
+        let mut engine = ZooEngine::new(
+            st.encoder.clone(),
+            crate::model::instances::decohd(&deco, Precision::F32),
+            "page",
+            Precision::F32,
+        );
+        let xb = ds.x_test.rows_slice(0, 20);
+        assert_eq!(engine.infer(&xb).unwrap(), deco.predict(&st.encoder.encode(&xb)));
     }
 
     #[test]

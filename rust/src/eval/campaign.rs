@@ -37,6 +37,7 @@ use crate::eval::metrics::{mean_std, percentile, sustained_until};
 use crate::eval::sweep::{self, Method, Workbench};
 use crate::loghd::codebook::min_bundles;
 use crate::loghd::model::TrainOptions;
+use crate::model::HdClassifier;
 use crate::quant::Precision;
 use crate::testkit;
 use crate::util::json::{self, Value};
@@ -69,6 +70,10 @@ pub struct CampaignConfig {
     pub k: u32,
     /// Bootstrap resamples for the resilience CI.
     pub bootstrap: usize,
+    /// Also solve DecoHD (decomposed class-weight) cells. Off in the
+    /// stock profiles so committed golden artifacts are unchanged;
+    /// `loghd robustness --decohd true` turns it on.
+    pub decohd: bool,
 }
 
 impl CampaignConfig {
@@ -91,6 +96,7 @@ impl CampaignConfig {
             hybrid_extra: 2,
             k: 2,
             bootstrap: 200,
+            decohd: false,
         }
     }
 
@@ -113,6 +119,7 @@ impl CampaignConfig {
             hybrid_extra: 2,
             k: 2,
             bootstrap: 500,
+            decohd: false,
         }
     }
 
@@ -155,24 +162,33 @@ impl CampaignConfig {
 pub use crate::baselines::sparsehd::retained_dims;
 
 /// Stored model size in bits for one (method, precision) cell — counted
-/// over exactly the representation `eval::sweep` exposes to the fault
-/// injector (LogHD/Hybrid store bundles + per-column profile deviations
-/// + the n-vector profile mean; SparseHD stores only retained
-/// coordinates; the index bitmap is excluded, as in the paper).
+/// over exactly the representation the trait layer's
+/// [`FaultSurface`](crate::model::FaultSurface) exposes to the injector
+/// (LogHD/Hybrid store bundles + per-column profile deviations + the
+/// n-vector profile mean, via the shared
+/// [`model::loghd_stored_values`](crate::model::loghd_stored_values)
+/// rule; SparseHD stores only retained coordinates; DecoHD stores basis
+/// + coefficients; the index bitmap is excluded, as in the paper).
+///
+/// This closed form exists so the solver can enumerate cells *before*
+/// training anything; [`run`] re-verifies every solved cell against the
+/// trait-reported `stored_bits()` of its built instance, so the formula
+/// and the actual fault surface cannot silently diverge.
 pub fn stored_bits(method: &Method, precision: Precision, classes: usize, d: usize) -> usize {
     let b = precision.bits() as usize;
     match *method {
         Method::Conventional => classes * d * b,
         Method::SparseHd { sparsity } => retained_dims(d, sparsity) * classes * b,
-        Method::LogHd { n, .. } => (n * d + classes * n + n) * b,
+        Method::LogHd { n, .. } => crate::model::loghd_stored_values(n, d, classes) * b,
         Method::Hybrid { n, sparsity, .. } => {
-            (n * retained_dims(d, sparsity) + classes * n + n) * b
+            crate::model::loghd_stored_values(n, retained_dims(d, sparsity), classes) * b
         }
+        Method::DecoHd { rank } => (rank * d + classes * rank) * b,
     }
 }
 
 /// One solved equal-memory grid cell.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CampaignCell {
     pub method: Method,
     pub precision: Precision,
@@ -191,17 +207,18 @@ impl CampaignCell {
         match self.method {
             Method::Conventional => "reference",
             Method::SparseHd { .. } => "feature-axis",
-            Method::LogHd { .. } | Method::Hybrid { .. } => "class-axis",
+            Method::LogHd { .. } | Method::Hybrid { .. } | Method::DecoHd { .. } => "class-axis",
         }
     }
 }
 
 /// Solve the equal-memory grid: for each method family × precision,
-/// pick the free parameter (bundle count n, or sparsity S) that lands
-/// the stored size nearest `budget_bits`, and keep the cell if it is
-/// feasible and within `tolerance`. Enumeration order is fixed
-/// (conventional, LogHD, SparseHD, hybrid × f32, b8, b1) so campaign
-/// artifacts are stable.
+/// pick the free parameter (bundle count n, sparsity S, or rank r) that
+/// lands the stored size nearest `budget_bits`, and keep the cell if it
+/// is feasible and within `tolerance`. Enumeration order is fixed
+/// (conventional, LogHD, SparseHD, hybrid × f32, b8, b1 — then DecoHD
+/// when `decohd` is set, appended last so stock campaign artifacts are
+/// byte-identical with the flag off).
 pub fn solve_equal_memory(
     budget_bits: usize,
     classes: usize,
@@ -209,6 +226,7 @@ pub fn solve_equal_memory(
     k: u32,
     hybrid_n: usize,
     tolerance: f64,
+    decohd: bool,
 ) -> Vec<CampaignCell> {
     let precisions = [Precision::F32, Precision::B8, Precision::B1];
     let budget = budget_bits as f64;
@@ -248,6 +266,17 @@ pub fn solve_equal_memory(
                 Method::Hybrid { k, n: hybrid_n, sparsity: 1.0 - r as f64 / d as f64 },
                 precision,
             );
+        }
+    }
+    if decohd {
+        for precision in precisions {
+            let b = precision.bits() as usize;
+            // stored = r·(D + C)·b; the nearest feasible rank is the
+            // rounded budget ratio clamped into 1..=C (a budget above
+            // the full-rank size still offers rank C — the tolerance
+            // gate in `push` decides whether the cell qualifies).
+            let r = (budget / (b * (d + classes)) as f64).round() as usize;
+            push(Method::DecoHd { rank: r.clamp(1, classes) }, precision);
         }
     }
     out
@@ -296,7 +325,15 @@ pub fn run(cfg: &CampaignConfig) -> Result<CampaignResult> {
     let classes = ds.spec.classes;
     let budget_bits = cfg.budget_bits(classes, cfg.d);
     let hybrid_n = min_bundles(classes, cfg.k) + cfg.hybrid_extra;
-    let cells = solve_equal_memory(budget_bits, classes, cfg.d, cfg.k, hybrid_n, cfg.tolerance);
+    let cells = solve_equal_memory(
+        budget_bits,
+        classes,
+        cfg.d,
+        cfg.k,
+        hybrid_n,
+        cfg.tolerance,
+        cfg.decohd,
+    );
     if !cells.iter().any(|c| c.family() == "class-axis") {
         bail!("no class-axis cell fits budget {budget_bits} bits (tolerance {})", cfg.tolerance);
     }
@@ -320,6 +357,20 @@ pub fn run(cfg: &CampaignConfig) -> Result<CampaignResult> {
     let mut wb = Workbench::new(&ds, cfg.d, 0xE5C0DE, opts);
     for cell in &cells {
         wb.warm(cell.method)?;
+        // Equal-memory means equal *fault-surface* memory: the solver's
+        // closed-form bit count must equal what the built instance (the
+        // representation the injector actually flips) reports through
+        // the trait. A mismatch is a solver/model drift bug, not a
+        // recoverable condition.
+        let surface_bits = wb.instance(cell.method, cell.precision)?.stored_bits();
+        if surface_bits != cell.stored_bits {
+            bail!(
+                "stored-bits drift for {}: solver counted {} bits, fault surface holds {}",
+                cell.label(),
+                cell.stored_bits,
+                surface_bits
+            );
+        }
     }
     let clean_conventional = wb.conventional_clean();
     let target_accuracy = cfg.target_frac * clean_conventional;
@@ -607,7 +658,7 @@ mod tests {
     fn smoke_solver_table_is_the_committed_golden() {
         // The exact table rust/tests/golden/robustness_smoke.json pins:
         // page C=5 D=256, budget 0.15·C·D·32 = 6144 bits, tolerance 5%.
-        let cells = solve_equal_memory(6144, 5, 256, 2, 5, 0.05);
+        let cells = solve_equal_memory(6144, 5, 256, 2, 5, 0.05, false);
         let want: Vec<(&str, usize)> = vec![
             ("loghd(k=2,n=3)@b8", 6288),
             ("loghd(k=2,n=23)@b1", 6026),
@@ -682,8 +733,63 @@ mod tests {
     fn infeasible_budgets_yield_no_cells() {
         // A budget below every representable cell produces an empty grid
         // (and run() would bail with a config error).
-        let cells = solve_equal_memory(10, 5, 256, 2, 5, 0.05);
+        let cells = solve_equal_memory(10, 5, 256, 2, 5, 0.05, true);
         assert!(cells.is_empty());
+    }
+
+    #[test]
+    fn decohd_solves_into_the_smoke_grid_only_when_asked() {
+        // Flag off: the exact committed-golden table (no DecoHD rows).
+        let stock = solve_equal_memory(6144, 5, 256, 2, 5, 0.05, false);
+        assert!(stock.iter().all(|c| !matches!(c.method, Method::DecoHd { .. })));
+        // Flag on: same leading table, DecoHD appended. At 6144 bits /
+        // b8, rank 3 stores 3·(256+5)·8 = 6264 bits (within 5%); f32
+        // rounds to rank 1 (8352 bits, 36% over budget) and b1 clamps
+        // to the full rank C=5 (1305 bits, 79% under) — both outside
+        // the 5% tolerance.
+        let with = solve_equal_memory(6144, 5, 256, 2, 5, 0.05, true);
+        assert_eq!(&with[..stock.len()], &stock[..]);
+        let extra: Vec<&CampaignCell> = with[stock.len()..].iter().collect();
+        assert_eq!(extra.len(), 1, "{:?}", with.iter().map(|c| c.label()).collect::<Vec<_>>());
+        assert_eq!(extra[0].label(), "decohd(r=3)@b8");
+        assert_eq!(extra[0].stored_bits, 6264);
+        assert_eq!(extra[0].family(), "class-axis");
+    }
+
+    #[test]
+    fn micro_campaign_evaluates_a_decohd_cell() {
+        // The acceptance demo: a DecoHD cell registered through the
+        // model zoo is solvable, warmable, and Monte-Carlo-evaluable in
+        // a campaign with zero campaign-engine changes.
+        let mut cfg = micro();
+        cfg.decohd = true;
+        let res = run(&cfg).unwrap();
+        let deco: Vec<_> = res
+            .cells
+            .iter()
+            .filter(|r| matches!(r.cell.method, Method::DecoHd { .. }))
+            .collect();
+        assert_eq!(deco.len(), 1, "expected one decohd cell at the micro budget");
+        assert_eq!(deco[0].cell.family(), "class-axis");
+        assert!(deco[0].clean > 0.3, "decohd clean {}", deco[0].clean);
+        assert!(deco[0].acc_mean.iter().all(|a| (0.0..=1.0).contains(a)));
+    }
+
+    #[test]
+    fn decohd_flag_leaves_stock_campaign_artifacts_untouched() {
+        // Same config modulo the flag: the stock cells' numbers must be
+        // byte-identical (DecoHD rows append; nothing reorders, and the
+        // per-cell fault streams are cell-local).
+        let a = run(&micro()).unwrap();
+        let mut cfg = micro();
+        cfg.decohd = true;
+        let b = run(&cfg).unwrap();
+        assert_eq!(a.cells.len() + 1, b.cells.len());
+        for (ra, rb) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(ra.cell.label(), rb.cell.label());
+            assert_eq!(ra.acc_trials, rb.acc_trials, "{}", ra.cell.label());
+            assert_eq!(ra.resilience, rb.resilience, "{}", ra.cell.label());
+        }
     }
 
     #[test]

@@ -8,9 +8,22 @@
 //! flips hit only non-pruned coordinates; LogHD flips hit bundles AND
 //! stored profiles).
 //!
+//! **Dispatch is the model core**: [`Workbench::instance`] materializes
+//! the cell's family at its precision as a
+//! [`crate::model::HdClassifier`] trait object (`model::instances`),
+//! faults go through the shared [`crate::model::inject_value_faults`]
+//! bit-plane driver, and scoring is the trait's `predict` — one code
+//! path for every family, including ones registered after this engine
+//! was written (the DecoHD baseline arrived exactly that way). The
+//! pre-trait corruption helpers ([`corrupt`], [`corrupt_profiles`],
+//! [`corrupt_masked`]) remain below as the *scalar reference
+//! implementations*: `rust/tests/trait_parity.rs` pins the trait path
+//! bit-identical to them, stream and all.
+//!
 //! At 1 and 8 bits the LogHD/Hybrid cells run **flip → infer entirely in
 //! the packed domain**: the model is quantized once into a
-//! [`QuantizedLogHdModel`], faults flip its packed words, and scoring
+//! [`QuantizedLogHdModel`](crate::loghd::qmodel::QuantizedLogHdModel),
+//! faults flip its packed words, and scoring
 //! runs on the corrupted bit-planes (XNOR/popcount resp. i32 int8
 //! kernels) with no dequantize round-trip — the stored-state fault model
 //! the paper describes, and several times faster per cell. The other
@@ -41,7 +54,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::baselines::{ConventionalModel, HybridModel, SparseHdModel};
+use crate::baselines::{DecoHdModel, HybridModel, SparseHdModel};
 use crate::data::Dataset;
 use crate::encoder::Encoder;
 use crate::eval::metrics::accuracy;
@@ -49,10 +62,12 @@ use crate::faults;
 use crate::hd::prototype::{refine_conventional, train_prototypes};
 use crate::hd::similarity::activations;
 use crate::loghd::model::{LogHdModel, TrainOptions};
-use crate::loghd::qmodel::QuantizedLogHdModel;
+use crate::model::{self, instances, HdClassifier};
 use crate::quant::{self, Precision};
 use crate::tensor::{self, Matrix};
 use crate::util::rng::SplitMix64;
+
+pub use crate::model::instances::gather_cols;
 
 /// Which classifier variant a grid cell evaluates.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -64,6 +79,8 @@ pub enum Method {
     LogHd { k: u32, n: usize },
     /// LogHD(k, n) + dimension mask at sparsity S.
     Hybrid { k: u32, n: usize, sparsity: f64 },
+    /// DecoHD-style decomposition: shared rank-r basis + coefficients.
+    DecoHd { rank: usize },
 }
 
 impl Method {
@@ -75,6 +92,7 @@ impl Method {
             Method::Hybrid { k, n, sparsity } => {
                 format!("hybrid(k={k},n={n},S={sparsity:.2})")
             }
+            Method::DecoHd { rank } => format!("decohd(r={rank})"),
         }
     }
 }
@@ -101,6 +119,9 @@ pub struct Workbench {
     /// SparseHD variants keyed by sparsity bits (same rationale: the
     /// saliency sort over C·D prototype magnitudes is deterministic).
     sparse_cache: HashMap<u64, SparseHdModel>,
+    /// DecoHD variants keyed by rank (deterministic Gram-matrix
+    /// eigendecomposition of the shared prototypes).
+    decohd_cache: HashMap<usize, DecoHdModel>,
 }
 
 impl Workbench {
@@ -143,6 +164,7 @@ impl Workbench {
             loghd_cache: HashMap::new(),
             hybrid_cache: HashMap::new(),
             sparse_cache: HashMap::new(),
+            decohd_cache: HashMap::new(),
         }
     }
 
@@ -191,6 +213,12 @@ impl Workbench {
                     .entry(sparsity.to_bits())
                     .or_insert_with(|| SparseHdModel::from_prototypes(&self.prototypes, sparsity));
             }
+            Method::DecoHd { rank } => {
+                if !self.decohd_cache.contains_key(&rank) {
+                    let model = DecoHdModel::from_prototypes(&self.prototypes, rank)?;
+                    self.decohd_cache.insert(rank, model);
+                }
+            }
             Method::Conventional => {}
         }
         Ok(())
@@ -219,6 +247,13 @@ impl Workbench {
         })
     }
 
+    /// Cache-only DecoHD lookup for the `&self` evaluation path.
+    fn decohd_cached(&self, rank: usize) -> Result<&DecoHdModel> {
+        self.decohd_cache.get(&rank).ok_or_else(|| {
+            anyhow::anyhow!("DecoHD(r={rank}) not built — call Workbench::warm first")
+        })
+    }
+
     /// Evaluate one grid cell; returns test accuracy.
     ///
     /// Convenience wrapper: warms the model cache, derives the cell's
@@ -237,10 +272,42 @@ impl Workbench {
         self.evaluate_cell(method, precision, flip_p, &mut rng)
     }
 
+    /// Materialize the cell's classifier as a [`HdClassifier`] trait
+    /// object: the family model from the warm cache, snapshotted at
+    /// `precision` with its stored state in exactly the bit-plane form
+    /// the fault injector corrupts (packed-domain inference at the 1/8
+    /// bit LogHD widths — see `model::instances`). This is the one
+    /// dispatch point of the sweep engine; everything downstream is
+    /// trait calls.
+    pub fn instance(
+        &self,
+        method: Method,
+        precision: Precision,
+    ) -> Result<Box<dyn HdClassifier>> {
+        Ok(match method {
+            Method::Conventional => instances::conventional(&self.prototypes, precision),
+            Method::SparseHd { sparsity } => {
+                instances::sparsehd(self.sparse_cached(sparsity)?, precision)
+            }
+            Method::LogHd { k, n } => instances::loghd(self.loghd_cached(k, n)?, precision),
+            Method::Hybrid { k, n, sparsity } => {
+                instances::hybrid(self.hybrid_cached(k, n, sparsity)?, precision)
+            }
+            Method::DecoHd { rank } => instances::decohd(self.decohd_cached(rank)?, precision),
+        })
+    }
+
     /// Evaluate one grid cell against a caller-provided fault stream,
     /// without touching the model cache (shared-`&self`, so campaigns
     /// may fan cells out across the worker pool). Every model the cell
     /// needs must have been trained via [`Self::warm`] first.
+    ///
+    /// Uniform across families: build the cell [`instance`], drive its
+    /// stored bit-planes through [`model::inject_value_faults`] (one
+    /// flip-mask draw per plane, in surface order — byte-identical to
+    /// the pre-trait dispatch), score with the trait's `predict`.
+    ///
+    /// [`instance`]: Self::instance
     pub fn evaluate_cell(
         &self,
         method: Method,
@@ -248,92 +315,9 @@ impl Workbench {
         flip_p: f64,
         rng: &mut SplitMix64,
     ) -> Result<f64> {
-        let pred = match method {
-            Method::Conventional => {
-                let h = corrupt(&self.prototypes, precision, flip_p, rng);
-                ConventionalModel::new(h).predict(&self.enc_test)
-            }
-            Method::SparseHd { sparsity } => {
-                let model = self.sparse_cached(sparsity)?;
-                let h = corrupt_masked(&model.prototypes, &model.mask, precision, flip_p, rng);
-                // scores on the corrupted stored state
-                let s = activations(&self.enc_test, &h);
-                (0..s.rows()).map(|i| tensor::argmax(s.row(i)) as i32).collect()
-            }
-            Method::LogHd { k, n } => match precision {
-                // Packed-domain protocol: quantize once, flip the packed
-                // words, score on the corrupted bit-planes directly.
-                Precision::B1 | Precision::B8 => {
-                    let mut qm =
-                        QuantizedLogHdModel::from_model(self.loghd_cached(k, n)?, precision);
-                    qm.inject_value_faults(flip_p, rng);
-                    qm.predict(&self.enc_test)
-                }
-                _ => {
-                    let model = self.loghd_cached(k, n)?;
-                    let corrupted = LogHdModel {
-                        classes: model.classes,
-                        d: model.d,
-                        book: model.book.clone(),
-                        bundles: corrupt(&model.bundles, precision, flip_p, rng),
-                        profiles: corrupt_profiles(&model.profiles, precision, flip_p, rng),
-                    };
-                    corrupted.predict(&self.enc_test)
-                }
-            },
-            Method::Hybrid { k, n, sparsity } => {
-                let hybrid = self.hybrid_cached(k, n, sparsity)?;
-                match precision {
-                    // Only retained coordinates are stored: compact them
-                    // out, then run the packed flip → infer protocol on
-                    // the compacted model (queries gathered to match).
-                    Precision::B1 | Precision::B8 => {
-                        let kept: Vec<usize> = hybrid
-                            .mask
-                            .iter()
-                            .enumerate()
-                            .filter(|(_, keep)| **keep)
-                            .map(|(i, _)| i)
-                            .collect();
-                        let inner = LogHdModel {
-                            classes: hybrid.inner.classes,
-                            d: kept.len(),
-                            book: hybrid.inner.book.clone(),
-                            bundles: gather_cols(&hybrid.inner.bundles, &kept),
-                            profiles: hybrid.inner.profiles.clone(),
-                        };
-                        let mut qm = QuantizedLogHdModel::from_model(&inner, precision);
-                        // The hybrid profiles were trained against
-                        // full-width query normalization; restore that
-                        // scale on the compacted model.
-                        qm.set_activation_gain((kept.len() as f32 / self.d as f32).sqrt());
-                        qm.inject_value_faults(flip_p, rng);
-                        qm.predict(&gather_cols(&self.enc_test, &kept))
-                    }
-                    _ => {
-                        let corrupted = LogHdModel {
-                            classes: hybrid.inner.classes,
-                            d: hybrid.inner.d,
-                            book: hybrid.inner.book.clone(),
-                            bundles: corrupt_masked(
-                                &hybrid.inner.bundles,
-                                &hybrid.mask,
-                                precision,
-                                flip_p,
-                                rng,
-                            ),
-                            profiles: corrupt_profiles(
-                                &hybrid.inner.profiles,
-                                precision,
-                                flip_p,
-                                rng,
-                            ),
-                        };
-                        corrupted.predict(&self.enc_test)
-                    }
-                }
-            }
-        };
+        let mut inst = self.instance(method, precision)?;
+        model::inject_value_faults(inst.as_mut(), flip_p, rng);
+        let pred = inst.predict(&self.enc_test);
         Ok(accuracy(&pred, &self.y_test))
     }
 
@@ -367,6 +351,7 @@ pub fn cell_stream(
         Method::SparseHd { sparsity } => (1, sparsity.to_bits(), 0, 0),
         Method::LogHd { k, n } => (2, k as u64, n as u64, 0),
         Method::Hybrid { k, n, sparsity } => (3, k as u64, n as u64, sparsity.to_bits()),
+        Method::DecoHd { rank } => (4, rank as u64, 0, 0),
     };
     let mut s = SplitMix64::new(seed ^ 0xFA17);
     let mut s = s.fork(tag);
@@ -382,6 +367,13 @@ pub fn cell_stream(
 /// upsets with probability `flip_p` — see `faults` module docs for why
 /// this is the paper's protocol), dequantize. F32 upsets the raw
 /// IEEE-754 words instead.
+///
+/// **Reference path.** The sweep engine itself now corrupts through the
+/// trait layer's bit-plane driver (`model::inject_value_faults`), which
+/// consumes the identical fault stream; this helper (and its two
+/// variants below) is retained as the direct scalar reference that
+/// `rust/tests/trait_parity.rs` pins the trait dispatch against, and
+/// for ad-hoc single-tensor ablations.
 pub fn corrupt(m: &Matrix, precision: Precision, flip_p: f64, rng: &mut SplitMix64) -> Matrix {
     match precision {
         Precision::F32 => {
@@ -473,19 +465,6 @@ pub fn corrupt_masked(
     out
 }
 
-/// Gather a subset of columns (the stored coordinates of a masked
-/// model) into a dense matrix, in mask order.
-pub fn gather_cols(m: &Matrix, kept: &[usize]) -> Matrix {
-    let mut out = Matrix::zeros(m.rows(), kept.len());
-    for r in 0..m.rows() {
-        let src = m.row(r);
-        for (dst, &j) in out.row_mut(r).iter_mut().zip(kept) {
-            *dst = src[j];
-        }
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -567,6 +546,23 @@ mod tests {
     }
 
     #[test]
+    fn decohd_cells_run_clean_and_degrade() {
+        let mut wb = bench_small();
+        let method = Method::DecoHd { rank: 3 };
+        let clean = wb.evaluate(method, Precision::F32, 0.0, 1).unwrap();
+        assert!(clean > 0.5, "decohd clean {clean}");
+        // clean trait cell == the direct model on the same prototypes
+        let direct = {
+            let m = crate::baselines::DecoHdModel::from_prototypes(&wb.prototypes, 3).unwrap();
+            let pred = m.predict(&wb.enc_test);
+            accuracy(&pred, &wb.y_test)
+        };
+        assert_eq!(clean, direct);
+        let wrecked = wb.evaluate(method, Precision::B8, 0.6, 1).unwrap();
+        assert!(wrecked <= clean + 0.05, "flips should not help: {wrecked} vs {clean}");
+    }
+
+    #[test]
     fn gather_cols_selects_in_order() {
         let m = Matrix::from_vec(2, 4, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
         let g = gather_cols(&m, &[0, 2, 3]);
@@ -601,6 +597,7 @@ mod tests {
         // any coordinate change -> a different stream
         let base = draw(&a, Precision::B8, 0.3, 1);
         assert_ne!(base, draw(&Method::Conventional, Precision::B8, 0.3, 1));
+        assert_ne!(base, draw(&Method::DecoHd { rank: 4 }, Precision::B8, 0.3, 1));
         assert_ne!(base, draw(&a, Precision::B1, 0.3, 1));
         assert_ne!(base, draw(&a, Precision::B8, 0.4, 1));
         assert_ne!(base, draw(&a, Precision::B8, 0.3, 2));

@@ -90,23 +90,40 @@ pub fn value_flip_mask(
     victims.into_iter().map(|v| (v, rng.below(bits as u64) as u32)).collect()
 }
 
+/// Apply a sampled per-value flip mask to a packed tensor: flip `bit`
+/// of field `v` for every `(v, bit)` pair. The single mask-application
+/// rule every packed fault site shares — [`flip_values_packed`], the
+/// model core's plane driver (`model::inject_value_faults` →
+/// `apply_flips`), and the differential tests all route through it, so
+/// the bit addressing cannot drift between them.
+pub fn apply_value_mask_packed(t: &mut PackedTensor, mask: &[(usize, u32)]) {
+    let bits = t.bits() as usize;
+    for &(v, bit) in mask {
+        t.flip_bit(v * bits + bit as usize);
+    }
+}
+
+/// Apply a sampled per-value flip mask to raw f32 storage (the IEEE-754
+/// word of value `v` has `bit` xored). Twin of
+/// [`apply_value_mask_packed`] for the f32 planes.
+pub fn apply_value_mask_f32(data: &mut [f32], mask: &[(usize, u32)]) {
+    for &(v, bit) in mask {
+        data[v] = f32::from_bits(data[v].to_bits() ^ (1u32 << bit));
+    }
+}
+
 /// Per-VALUE fault model (the evaluation protocol): with probability `p`,
 /// flip one uniformly-chosen bit of each packed field. Returns flips.
 pub fn flip_values_packed(t: &mut PackedTensor, p: f64, rng: &mut SplitMix64) -> usize {
-    let bits = t.bits();
-    let mask = value_flip_mask(t.count(), bits, p, rng);
-    for &(v, bit) in &mask {
-        t.flip_bit(v * bits as usize + bit as usize);
-    }
+    let mask = value_flip_mask(t.count(), t.bits(), p, rng);
+    apply_value_mask_packed(t, &mask);
     mask.len()
 }
 
 /// Per-VALUE fault model on raw f32 storage.
 pub fn flip_values_f32(data: &mut [f32], p: f64, rng: &mut SplitMix64) -> usize {
     let mask = value_flip_mask(data.len(), 32, p, rng);
-    for &(v, bit) in &mask {
-        data[v] = f32::from_bits(data[v].to_bits() ^ (1u32 << bit));
-    }
+    apply_value_mask_f32(data, &mask);
     mask.len()
 }
 

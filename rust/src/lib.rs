@@ -21,12 +21,16 @@
 //! | [`encoder`] | φ(x) = cos(xW+b) random-projection encoder |
 //! | [`hd`] | prototypes + cosine similarity (§III-A) |
 //! | [`loghd`] | codebook/bundles/profiles/refinement (§III-C..F) |
-//! | [`baselines`] | conventional, SparseHD, hybrid (§II-B, §IV-D) |
+//! | [`baselines`] | conventional, SparseHD, hybrid (§II-B, §IV-D), DecoHD (follow-up work) |
+//! | [`model`] | the unified classifier core: the [`model::HdClassifier`] trait, the [`model::FaultSurface`] bit-plane contract, per-precision instances, and the string-keyed [`model::zoo`] registry behind eval, faults, persistence, and serving |
 //! | [`quant`], [`faults`] | PTQ + stored-state bit flips (§IV-A) |
 //! | [`eval`] | the (method × precision × p) sweep engine (Figs. 3–6) and the equal-memory robustness campaign (`eval::campaign`) |
 //! | [`hwmodel`] | Table II analytical ASIC/CPU/GPU model |
 //! | [`runtime`], [`coordinator`] | the serving system |
 //! | [`testkit`] | deterministic miniature datasets + golden-artifact conformance |
+//!
+//! `docs/ARCHITECTURE.md` maps the layering end-to-end, including the
+//! checklist for adding a new classifier family to the zoo.
 
 pub mod baselines;
 pub mod bench;
@@ -40,6 +44,7 @@ pub mod faults;
 pub mod hd;
 pub mod hwmodel;
 pub mod loghd;
+pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;

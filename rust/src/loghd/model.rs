@@ -134,9 +134,16 @@ impl LogHdModel {
         (0..d.rows()).map(|i| tensor::argmin(d.row(i)) as i32).collect()
     }
 
-    /// Stored model floats: n*D bundles + C*n profiles (paper §III-G).
+    /// Stored model values: n·D bundles + the (C, n) profiles in their
+    /// robust stored form (per-column deviations **plus** the n-vector
+    /// cross-class mean — paper §III-G plus the centering the fault
+    /// protocol stores). Shares [`crate::model::loghd_stored_values`]
+    /// with the equal-memory campaign solver and the packed twin's
+    /// `memory_bits`, so the model's own accounting and the budget
+    /// accounting cannot drift (they historically disagreed by the
+    /// `+ n` mean term).
     pub fn memory_floats(&self) -> usize {
-        self.bundles.rows() * self.bundles.cols() + self.profiles.rows() * self.profiles.cols()
+        crate::model::loghd_stored_values(self.n_bundles(), self.d, self.classes)
     }
 
     /// Memory budget as a fraction of the conventional C*D footprint.

@@ -3,18 +3,21 @@
 //! stack and a Python-trained bundle are interchangeable for the native
 //! engine.
 //!
-//! Two native kinds share the layout (`model.json` `kind` field):
-//! `native-loghd` (bundles + profiles + codebook) and
-//! `native-conventional` (the O(C·D) prototype baseline). [`load_any`]
-//! dispatches on the kind — and falls back to the Python AOT
-//! `manifest.json` layout — which is what lets the serving registry host
-//! a mixed fleet of artifacts behind one wire protocol.
+//! Three native kinds share the layout (`model.json` `kind` field):
+//! `native-loghd` (bundles + profiles + codebook), `native-conventional`
+//! (the O(C·D) prototype baseline), and `native-decohd` (the decomposed
+//! basis + coefficients classifier). [`load_any`] dispatches on the kind
+//! through the [`crate::model::zoo`] registry — and falls back to the
+//! Python AOT `manifest.json` layout — which is what lets the serving
+//! registry host a mixed fleet of artifacts behind one wire protocol
+//! and lets a new family register its loader in exactly one place.
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
 use crate::baselines::conventional::ConventionalModel;
+use crate::baselines::decohd::DecoHdModel;
 use crate::encoder::Encoder;
 use crate::loghd::codebook::Codebook;
 use crate::loghd::model::LogHdModel;
@@ -22,13 +25,27 @@ use crate::runtime::artifact::{read_lht, write_lht_f32};
 use crate::tensor::Matrix;
 use crate::util::json::{self, Value};
 
-/// Save encoder + LogHD model into `dir`.
-pub fn save(dir: &Path, encoder: &Encoder, model: &LogHdModel) -> Result<()> {
+/// Write the shared encoder tensors (projection, bias, centering mean).
+fn save_encoder(dir: &Path, encoder: &Encoder) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     let w = encoder.w();
     write_lht_f32(&dir.join("w.lht"), &[w.rows(), w.cols()], w.data())?;
     write_lht_f32(&dir.join("b.lht"), &[encoder.b.len()], &encoder.b)?;
     write_lht_f32(&dir.join("mu.lht"), &[encoder.mu.len()], &encoder.mu)?;
+    Ok(())
+}
+
+/// Read the shared encoder tensors written by [`save_encoder`].
+fn load_encoder(dir: &Path) -> Result<Encoder> {
+    let w = read_lht(&dir.join("w.lht"))?.to_matrix()?;
+    let b = read_lht(&dir.join("b.lht"))?.as_f32()?.to_vec();
+    let mu = read_lht(&dir.join("mu.lht"))?.as_f32()?.to_vec();
+    Ok(Encoder::from_parts(w, b, mu))
+}
+
+/// Save encoder + LogHD model into `dir`.
+pub fn save(dir: &Path, encoder: &Encoder, model: &LogHdModel) -> Result<()> {
+    save_encoder(dir, encoder)?;
     write_lht_f32(
         &dir.join("bundles.lht"),
         &[model.bundles.rows(), model.bundles.cols()],
@@ -67,11 +84,7 @@ pub fn load(dir: &Path) -> Result<(Encoder, LogHdModel)> {
     let k = get("k")? as u32;
     let n = get("n")?;
 
-    let w = read_lht(&dir.join("w.lht"))?.to_matrix()?;
-    let b = read_lht(&dir.join("b.lht"))?.as_f32()?.to_vec();
-    let mu = read_lht(&dir.join("mu.lht"))?.as_f32()?.to_vec();
-    let encoder = Encoder::from_parts(w, b, mu);
-
+    let encoder = load_encoder(dir)?;
     let bundles = read_lht(&dir.join("bundles.lht"))?.to_matrix()?;
     let profiles = read_lht(&dir.join("profiles.lht"))?.to_matrix()?;
     let book_vals: Vec<i32> =
@@ -86,11 +99,7 @@ pub fn load(dir: &Path) -> Result<(Encoder, LogHdModel)> {
 
 /// Save encoder + conventional baseline (prototype matrix) into `dir`.
 pub fn save_conventional(dir: &Path, encoder: &Encoder, model: &ConventionalModel) -> Result<()> {
-    std::fs::create_dir_all(dir)?;
-    let w = encoder.w();
-    write_lht_f32(&dir.join("w.lht"), &[w.rows(), w.cols()], w.data())?;
-    write_lht_f32(&dir.join("b.lht"), &[encoder.b.len()], &encoder.b)?;
-    write_lht_f32(&dir.join("mu.lht"), &[encoder.mu.len()], &encoder.mu)?;
+    save_encoder(dir, encoder)?;
     let h = &model.prototypes;
     write_lht_f32(&dir.join("prototypes.lht"), &[h.rows(), h.cols()], h.data())?;
     let manifest = json::obj(vec![
@@ -106,59 +115,105 @@ pub fn save_conventional(dir: &Path, encoder: &Encoder, model: &ConventionalMode
 
 /// Load a baseline saved by [`save_conventional`].
 pub fn load_conventional(dir: &Path) -> Result<(Encoder, ConventionalModel)> {
-    let w = read_lht(&dir.join("w.lht"))?.to_matrix()?;
-    let b = read_lht(&dir.join("b.lht"))?.as_f32()?.to_vec();
-    let mu = read_lht(&dir.join("mu.lht"))?.as_f32()?.to_vec();
-    let encoder = Encoder::from_parts(w, b, mu);
+    let encoder = load_encoder(dir)?;
     let prototypes = read_lht(&dir.join("prototypes.lht"))?.to_matrix()?;
     Ok((encoder, ConventionalModel::new(prototypes)))
+}
+
+/// Save encoder + DecoHD model (basis + coefficients) into `dir`.
+pub fn save_decohd(dir: &Path, encoder: &Encoder, model: &DecoHdModel) -> Result<()> {
+    save_encoder(dir, encoder)?;
+    let basis = &model.basis;
+    write_lht_f32(&dir.join("basis.lht"), &[basis.rows(), basis.cols()], basis.data())?;
+    let coeffs = &model.coeffs;
+    write_lht_f32(&dir.join("coeffs.lht"), &[coeffs.rows(), coeffs.cols()], coeffs.data())?;
+    let manifest = json::obj(vec![
+        ("format", json::num(1.0)),
+        ("kind", json::s("native-decohd")),
+        ("classes", json::num(model.classes() as f64)),
+        ("d", json::num(model.d() as f64)),
+        ("rank", json::num(model.rank() as f64)),
+        ("features", json::num(encoder.features() as f64)),
+    ]);
+    std::fs::write(dir.join("model.json"), json::to_string_pretty(&manifest))?;
+    Ok(())
+}
+
+/// Load a model saved by [`save_decohd`].
+pub fn load_decohd(dir: &Path) -> Result<(Encoder, DecoHdModel)> {
+    let encoder = load_encoder(dir)?;
+    let basis = read_lht(&dir.join("basis.lht"))?.to_matrix()?;
+    let coeffs = read_lht(&dir.join("coeffs.lht"))?.to_matrix()?;
+    anyhow::ensure!(
+        basis.rows() == coeffs.cols(),
+        "decohd rank mismatch: basis has {} rows, coeffs {} cols",
+        basis.rows(),
+        coeffs.cols()
+    );
+    Ok((encoder, DecoHdModel { basis, coeffs }))
 }
 
 /// A native artifact of any supported kind, as loaded by [`load_any`].
 pub enum LoadedModel {
     LogHd(Encoder, LogHdModel),
     Conventional(Encoder, ConventionalModel),
+    DecoHd(Encoder, DecoHdModel),
 }
 
 impl LoadedModel {
-    /// Short kind tag for logs and the `models` admin verb.
+    /// Short family tag for logs and the `models` admin verb — matches
+    /// the zoo registry's family keys and [`HdClassifier::kind`].
+    ///
+    /// [`HdClassifier::kind`]: crate::model::HdClassifier::kind
     pub fn kind(&self) -> &'static str {
         match self {
             LoadedModel::LogHd(..) => "loghd",
             LoadedModel::Conventional(..) => "conventional",
+            LoadedModel::DecoHd(..) => "decohd",
         }
     }
 
     /// Feature width the artifact's encoder admits.
     pub fn features(&self) -> usize {
+        self.encoder().features()
+    }
+
+    /// The artifact's encoder.
+    pub fn encoder(&self) -> &Encoder {
         match self {
-            LoadedModel::LogHd(e, _) | LoadedModel::Conventional(e, _) => e.features(),
+            LoadedModel::LogHd(e, _)
+            | LoadedModel::Conventional(e, _)
+            | LoadedModel::DecoHd(e, _) => e,
+        }
+    }
+
+    /// Build the loaded classifier's [`HdClassifier`] instance at a
+    /// serving precision — the same instance layer the sweep engine
+    /// evaluates (see `model::instances`), so `loghd inspect`, fault
+    /// tooling, and serving all report one accounting.
+    ///
+    /// [`HdClassifier`]: crate::model::HdClassifier
+    pub fn instance(
+        &self,
+        precision: crate::quant::Precision,
+    ) -> Box<dyn crate::model::HdClassifier> {
+        use crate::model::instances;
+        match self {
+            LoadedModel::LogHd(_, m) => instances::loghd(m, precision),
+            LoadedModel::Conventional(_, m) => instances::conventional(&m.prototypes, precision),
+            LoadedModel::DecoHd(_, m) => instances::decohd(m, precision),
         }
     }
 }
 
 /// Load any artifact directory the registry can serve: a native model
 /// or a Python AOT bundle (served through the native engine). The kind
-/// probe is [`crate::runtime::artifact::ModelCard::load`] — the single
-/// place that knows how artifact directories identify themselves — so
-/// the registry's admission check and this loader can never disagree.
+/// probe is [`crate::runtime::artifact::ModelCard::load`] and the
+/// per-kind loader table is [`crate::model::zoo`] — one registry entry
+/// per family — so the serving admission check, this loader, and
+/// `loghd inspect` can never disagree about what an artifact is.
 pub fn load_any(dir: &Path) -> Result<LoadedModel> {
-    let card = crate::runtime::artifact::ModelCard::load(dir)?;
-    match card.kind.as_str() {
-        "native-loghd" => {
-            let (e, m) = load(dir)?;
-            Ok(LoadedModel::LogHd(e, m))
-        }
-        "native-conventional" => {
-            let (e, m) = load_conventional(dir)?;
-            Ok(LoadedModel::Conventional(e, m))
-        }
-        "aot-bundle" => {
-            let (e, m) = load_from_aot_bundle(dir)?;
-            Ok(LoadedModel::LogHd(e, m))
-        }
-        other => anyhow::bail!("{}: unknown artifact kind '{other}'", dir.display()),
-    }
+    crate::model::zoo::load(dir)
 }
 
 /// Load a *Python-trained* artifact bundle (aot.py manifest layout) into a
@@ -216,7 +271,7 @@ mod tests {
         // load_any dispatches to the same model
         match load_any(&dir).unwrap() {
             LoadedModel::LogHd(_, m) => assert_eq!(m.bundles.data(), st.loghd.bundles.data()),
-            LoadedModel::Conventional(..) => panic!("wrong kind"),
+            _ => panic!("wrong kind"),
         }
         let _ = std::fs::remove_dir_all(dir);
     }
@@ -238,9 +293,33 @@ mod tests {
                 let e = st.encoder.encode(&ds.x_test);
                 assert_eq!(conv.predict(&e), conv2.predict(&enc2.encode(&ds.x_test)));
             }
-            LoadedModel::LogHd(..) => panic!("wrong kind"),
+            _ => panic!("wrong kind"),
         }
         let _ = std::fs::remove_dir_all(&dir);
         assert!(load_any(&dir).is_err(), "missing dir must error");
+    }
+
+    #[test]
+    fn decohd_roundtrip_and_kind_dispatch() {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 300, 60);
+        let opts = TrainOptions { epochs: 1, conv_epochs: 1, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 128, 3, &opts).unwrap();
+        let deco =
+            crate::baselines::DecoHdModel::from_prototypes(&st.prototypes, 3).unwrap();
+        let dir = std::env::temp_dir().join("loghd_persist_decohd_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        save_decohd(&dir, &st.encoder, &deco).unwrap();
+        let loaded = load_any(&dir).unwrap();
+        assert_eq!(loaded.kind(), "decohd");
+        assert_eq!(loaded.features(), 10);
+        match loaded {
+            LoadedModel::DecoHd(enc2, deco2) => {
+                assert_eq!(deco2.rank(), 3);
+                let e = st.encoder.encode(&ds.x_test);
+                assert_eq!(deco.predict(&e), deco2.predict(&enc2.encode(&ds.x_test)));
+            }
+            _ => panic!("wrong kind"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -25,8 +25,8 @@
 //! re-derives the kernel views from the (possibly corrupted) packed
 //! words — flip → infer, with no dequantize round-trip of the bundles.
 
-use crate::faults;
 use crate::loghd::model::LogHdModel;
+use crate::model::{FaultPlane, FaultSurface, HdClassifier};
 use crate::quant::{self, Precision, Quantized};
 use crate::tensor::{self, BitMatrix, I16Matrix, Matrix, NtPrepared};
 use crate::util::rng::SplitMix64;
@@ -80,15 +80,6 @@ impl StoredProfiles {
             }
         }
         out
-    }
-
-    /// Per-value single-bit upsets across every stored part.
-    fn inject(&mut self, p: f64, rng: &mut SplitMix64) -> usize {
-        let mut flips = 0;
-        for col_q in &mut self.cols {
-            flips += faults::flip_values_packed(&mut col_q.packed, p, rng);
-        }
-        flips + faults::flip_values_packed(&mut self.mean.packed, p, rng)
     }
 
     fn total_bits(&self) -> usize {
@@ -193,13 +184,16 @@ impl QuantizedLogHdModel {
     }
 
     /// Per-value single-random-bit upsets with probability `p` over the
-    /// whole stored state (bundles, then profiles — the order the f32
-    /// sweep path drew in), followed by a view refresh. Returns flips.
+    /// whole stored state (bundles, then profile columns, then the
+    /// profile mean — the order [`HdClassifier::fault_surface`]
+    /// enumerates, which is also the order the pre-trait f32 sweep path
+    /// drew in), followed by a view refresh. Returns flips.
+    ///
+    /// Thin wrapper over the shared [`crate::model::inject_value_faults`]
+    /// driver, so the packed model and every other family consume one
+    /// fault-stream discipline.
     pub fn inject_value_faults(&mut self, p: f64, rng: &mut SplitMix64) -> usize {
-        let mut flips = faults::flip_values_packed(&mut self.bundles.packed, p, rng);
-        flips += self.profiles.inject(p, rng);
-        self.refresh();
-        flips
+        crate::model::inject_value_faults(self, p, rng)
     }
 
     /// Bundle activations (B, n) in cosine scale, computed in the packed
@@ -282,6 +276,73 @@ impl QuantizedLogHdModel {
     /// packed kernels running on the very same corrupted words.
     pub fn dequantized_state(&self) -> (Matrix, Matrix) {
         (quant::dequantize(&self.bundles), self.profiles.dequantize())
+    }
+}
+
+/// The packed model IS its own [`HdClassifier`] instance: the stored
+/// bit-planes the trait enumerates are the very words inference runs on.
+/// Plane order (bundles, profile columns 0..n-1, profile mean) is
+/// contractual — see `crate::model` docs.
+impl HdClassifier for QuantizedLogHdModel {
+    fn kind(&self) -> &'static str {
+        "loghd"
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn decode_activations(&self, enc: &Matrix) -> Matrix {
+        let mut dists = self.decode_dists(enc);
+        for v in dists.data_mut() {
+            *v = -*v;
+        }
+        dists
+    }
+
+    fn predict(&self, enc: &Matrix) -> Vec<i32> {
+        QuantizedLogHdModel::predict(self, enc)
+    }
+
+    fn fault_surface(&self) -> FaultSurface {
+        let mut planes = vec![FaultPlane::new(
+            "bundles",
+            self.bundles.packed.count(),
+            self.bundles.packed.bits(),
+        )];
+        for (j, col) in self.profiles.cols.iter().enumerate() {
+            planes.push(FaultPlane::new(
+                format!("profiles[{j}]"),
+                col.packed.count(),
+                col.packed.bits(),
+            ));
+        }
+        planes.push(FaultPlane::new(
+            "profile_mean",
+            self.profiles.mean.packed.count(),
+            self.profiles.mean.packed.bits(),
+        ));
+        FaultSurface::new(planes)
+    }
+
+    fn apply_flips(&mut self, plane: usize, mask: &[(usize, u32)]) {
+        let n = self.profiles.cols.len();
+        let target = if plane == 0 {
+            &mut self.bundles.packed
+        } else if plane <= n {
+            &mut self.profiles.cols[plane - 1].packed
+        } else {
+            &mut self.profiles.mean.packed
+        };
+        crate::faults::apply_value_mask_packed(target, mask);
+    }
+
+    fn refresh(&mut self) {
+        QuantizedLogHdModel::refresh(self);
     }
 }
 
@@ -386,6 +447,25 @@ mod tests {
         let n = stack.loghd.n_bundles();
         let (c, d) = (stack.loghd.classes, stack.loghd.d);
         assert_eq!(qm.memory_bits(), 8 * (n * d + c * n + n));
+        assert_eq!(qm.memory_bits(), 8 * crate::model::loghd_stored_values(n, d, c));
         assert_eq!(qm.n_bundles(), n);
+    }
+
+    #[test]
+    fn trait_surface_matches_packed_accounting_and_order() {
+        let (_, stack) = small_stack();
+        for precision in [Precision::B8, Precision::B1] {
+            let qm = QuantizedLogHdModel::from_model(&stack.loghd, precision);
+            let surface = qm.fault_surface();
+            // bundles, n profile columns, mean — in that order
+            let n = qm.n_bundles();
+            assert_eq!(surface.planes.len(), n + 2);
+            assert_eq!(surface.planes[0].label, "bundles");
+            assert_eq!(surface.planes[0].values, n * qm.d);
+            assert_eq!(surface.planes[n + 1].label, "profile_mean");
+            assert_eq!(surface.planes[n + 1].values, n);
+            assert_eq!(surface.total_bits(), qm.memory_bits());
+            assert_eq!(HdClassifier::stored_bits(&qm), qm.memory_bits());
+        }
     }
 }

@@ -1,0 +1,619 @@
+//! Concrete [`HdClassifier`] instances: each model family materialized
+//! at a serving precision, with its stored state held in the exact
+//! bit-plane representation the fault injector corrupts.
+//!
+//! An *instance* is the precision-tagged snapshot of a trained family
+//! model: f32 planes hold the raw tensors, sub-f32 planes hold the
+//! packed quantizer output ([`Quantized`]), and `predict` scores the
+//! *current* plane contents (dequantizing on the fly where no packed
+//! kernel exists). The 1/8-bit LogHD widths are served by
+//! [`QuantizedLogHdModel`] itself (which implements the trait and runs
+//! fully in the packed domain); everything else lives here.
+//!
+//! **Plane-order contract** (see [`crate::model`] docs): surfaces
+//! enumerate planes in the order the pre-trait corruption helpers drew
+//! them — bundles first, then per-column profile deviations, then the
+//! profile mean — so campaign artifacts stay byte-identical across the
+//! trait migration.
+
+use crate::baselines::{DecoHdModel, HybridModel, SparseHdModel};
+use crate::hd::similarity::activations;
+use crate::loghd::codebook::Codebook;
+use crate::loghd::model::LogHdModel;
+use crate::loghd::qmodel::QuantizedLogHdModel;
+use crate::quant::{self, Precision, Quantized};
+use crate::tensor::{self, Matrix};
+
+use super::{FaultPlane, FaultSurface, HdClassifier};
+
+/// Gather a subset of columns (the stored coordinates of a masked
+/// model) into a dense matrix, in mask order.
+pub fn gather_cols(m: &Matrix, kept: &[usize]) -> Matrix {
+    let mut out = Matrix::zeros(m.rows(), kept.len());
+    for r in 0..m.rows() {
+        let src = m.row(r);
+        for (dst, &j) in out.row_mut(r).iter_mut().zip(kept) {
+            *dst = src[j];
+        }
+    }
+    out
+}
+
+fn kept_indices(mask: &[bool]) -> Vec<usize> {
+    mask.iter().enumerate().filter(|(_, keep)| **keep).map(|(i, _)| i).collect()
+}
+
+/// One stored tensor at the instance's precision: raw f32 words, or the
+/// packed quantizer output. Either way the plane IS the fault surface —
+/// flips land on exactly these bits.
+enum PlaneState {
+    F32(Matrix),
+    Q(Quantized),
+}
+
+impl PlaneState {
+    fn build(m: &Matrix, precision: Precision) -> Self {
+        match precision {
+            Precision::F32 => PlaneState::F32(m.clone()),
+            p => PlaneState::Q(quant::quantize(m, p)),
+        }
+    }
+
+    fn plane(&self, label: &str) -> FaultPlane {
+        match self {
+            PlaneState::F32(m) => FaultPlane::new(label, m.data().len(), 32),
+            PlaneState::Q(q) => FaultPlane::new(label, q.packed.count(), q.packed.bits()),
+        }
+    }
+
+    /// Apply a per-value flip mask through the shared `faults` appliers
+    /// (the same code `flip_values_f32` / `flip_values_packed` run).
+    fn apply(&mut self, mask: &[(usize, u32)]) {
+        match self {
+            PlaneState::F32(m) => crate::faults::apply_value_mask_f32(m.data_mut(), mask),
+            PlaneState::Q(q) => crate::faults::apply_value_mask_packed(&mut q.packed, mask),
+        }
+    }
+
+    /// Dense view of the current (possibly corrupted) plane contents.
+    fn dense(&self) -> Matrix {
+        match self {
+            PlaneState::F32(m) => m.clone(),
+            PlaneState::Q(q) => quant::dequantize(q),
+        }
+    }
+}
+
+/// The robust stored form of the (C, n) activation profiles: per-bundle
+/// column deviations from the cross-class mean, plus that mean — each a
+/// separately quantized plane, exactly as `eval::sweep::corrupt_profiles`
+/// corrupted them (and as the packed twin's `StoredProfiles` stores them).
+struct ProfilePlanes {
+    classes: usize,
+    n: usize,
+    cols: Vec<PlaneState>,
+    mean: PlaneState,
+}
+
+impl ProfilePlanes {
+    fn build(profiles: &Matrix, precision: Precision) -> Self {
+        let (classes, n) = (profiles.rows(), profiles.cols());
+        let mean = tensor::col_means(profiles);
+        let mut dev = profiles.clone();
+        tensor::sub_row_inplace(&mut dev, &mean);
+        let cols = (0..n)
+            .map(|j| {
+                let col: Vec<f32> = (0..classes).map(|r| dev.at(r, j)).collect();
+                PlaneState::build(&Matrix::from_vec(classes, 1, col), precision)
+            })
+            .collect();
+        let mean = PlaneState::build(&Matrix::from_vec(1, n, mean), precision);
+        Self { classes, n, cols, mean }
+    }
+
+    /// Surface planes in stream order: column 0..n-1, then the mean.
+    fn planes(&self) -> Vec<FaultPlane> {
+        let mut out: Vec<FaultPlane> = (0..self.n)
+            .map(|j| self.cols[j].plane(&format!("profiles[{j}]")))
+            .collect();
+        out.push(self.mean.plane("profile_mean"));
+        out
+    }
+
+    fn apply(&mut self, idx: usize, mask: &[(usize, u32)]) {
+        if idx < self.n {
+            self.cols[idx].apply(mask);
+        } else {
+            self.mean.apply(mask);
+        }
+    }
+
+    /// Reassemble the (C, n) profile matrix from the current planes.
+    fn assemble(&self) -> Matrix {
+        let mean = self.mean.dense();
+        let mut out = Matrix::zeros(self.classes, self.n);
+        for (j, col) in self.cols.iter().enumerate() {
+            let col = col.dense();
+            for r in 0..self.classes {
+                out.set(r, j, col.at(r, 0) + mean.at(0, j));
+            }
+        }
+        out
+    }
+}
+
+fn argmax_rows(scores: &Matrix) -> Vec<i32> {
+    (0..scores.rows()).map(|i| tensor::argmax(scores.row(i)) as i32).collect()
+}
+
+// ---------------------------------------------------------------------
+// Conventional
+// ---------------------------------------------------------------------
+
+/// The O(C·D) baseline at one precision: one prototype plane.
+struct ConventionalInstance {
+    classes: usize,
+    d: usize,
+    prototypes: PlaneState,
+}
+
+impl HdClassifier for ConventionalInstance {
+    fn kind(&self) -> &'static str {
+        "conventional"
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn d(&self) -> usize {
+        self.d
+    }
+    fn decode_activations(&self, enc: &Matrix) -> Matrix {
+        activations(enc, &self.prototypes.dense())
+    }
+    fn predict(&self, enc: &Matrix) -> Vec<i32> {
+        argmax_rows(&self.decode_activations(enc))
+    }
+    fn fault_surface(&self) -> FaultSurface {
+        FaultSurface::new(vec![self.prototypes.plane("prototypes")])
+    }
+    fn apply_flips(&mut self, plane: usize, mask: &[(usize, u32)]) {
+        debug_assert_eq!(plane, 0);
+        self.prototypes.apply(mask);
+    }
+}
+
+/// Build the conventional instance from a (C, D) prototype matrix.
+pub fn conventional(prototypes: &Matrix, precision: Precision) -> Box<dyn HdClassifier> {
+    Box::new(ConventionalInstance {
+        classes: prototypes.rows(),
+        d: prototypes.cols(),
+        prototypes: PlaneState::build(prototypes, precision),
+    })
+}
+
+// ---------------------------------------------------------------------
+// SparseHD
+// ---------------------------------------------------------------------
+
+/// SparseHD at one precision: only the retained coordinates are stored
+/// (one compact plane); pruned coordinates are identically zero and
+/// outside the fault surface.
+struct SparseInstance {
+    classes: usize,
+    d: usize,
+    kept: Vec<usize>,
+    compact: PlaneState,
+}
+
+impl SparseInstance {
+    fn scatter(&self) -> Matrix {
+        let compact = self.compact.dense();
+        let mut out = Matrix::zeros(self.classes, self.d);
+        for r in 0..self.classes {
+            let dst = out.row_mut(r);
+            for (cj, &j) in self.kept.iter().enumerate() {
+                dst[j] = compact.at(r, cj);
+            }
+        }
+        out
+    }
+}
+
+impl HdClassifier for SparseInstance {
+    fn kind(&self) -> &'static str {
+        "sparsehd"
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn d(&self) -> usize {
+        self.d
+    }
+    fn decode_activations(&self, enc: &Matrix) -> Matrix {
+        activations(enc, &self.scatter())
+    }
+    fn predict(&self, enc: &Matrix) -> Vec<i32> {
+        argmax_rows(&self.decode_activations(enc))
+    }
+    fn fault_surface(&self) -> FaultSurface {
+        FaultSurface::new(vec![self.compact.plane("prototypes_retained")])
+    }
+    fn apply_flips(&mut self, plane: usize, mask: &[(usize, u32)]) {
+        debug_assert_eq!(plane, 0);
+        self.compact.apply(mask);
+    }
+}
+
+/// Build the SparseHD instance from a trained [`SparseHdModel`].
+pub fn sparsehd(model: &SparseHdModel, precision: Precision) -> Box<dyn HdClassifier> {
+    let kept = kept_indices(&model.mask);
+    let compact = gather_cols(&model.prototypes, &kept);
+    Box::new(SparseInstance {
+        classes: model.classes(),
+        d: model.mask.len(),
+        kept,
+        compact: PlaneState::build(&compact, precision),
+    })
+}
+
+// ---------------------------------------------------------------------
+// LogHD (dense widths: f32, b2, b4)
+// ---------------------------------------------------------------------
+
+/// LogHD at a width with no packed kernel: bundle plane + profile
+/// deviation/mean planes, decoded through the dense f32 pipeline.
+struct LogHdDenseInstance {
+    classes: usize,
+    d: usize,
+    book: Codebook,
+    bundles: PlaneState,
+    profiles: ProfilePlanes,
+}
+
+impl LogHdDenseInstance {
+    fn model(&self) -> LogHdModel {
+        LogHdModel {
+            classes: self.classes,
+            d: self.d,
+            book: self.book.clone(),
+            bundles: self.bundles.dense(),
+            profiles: self.profiles.assemble(),
+        }
+    }
+}
+
+impl HdClassifier for LogHdDenseInstance {
+    fn kind(&self) -> &'static str {
+        "loghd"
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn d(&self) -> usize {
+        self.d
+    }
+    fn decode_activations(&self, enc: &Matrix) -> Matrix {
+        let mut dists = self.model().decode_dists(enc);
+        for v in dists.data_mut() {
+            *v = -*v;
+        }
+        dists
+    }
+    fn predict(&self, enc: &Matrix) -> Vec<i32> {
+        self.model().predict(enc)
+    }
+    fn fault_surface(&self) -> FaultSurface {
+        let mut planes = vec![self.bundles.plane("bundles")];
+        planes.extend(self.profiles.planes());
+        FaultSurface::new(planes)
+    }
+    fn apply_flips(&mut self, plane: usize, mask: &[(usize, u32)]) {
+        if plane == 0 {
+            self.bundles.apply(mask);
+        } else {
+            self.profiles.apply(plane - 1, mask);
+        }
+    }
+}
+
+/// Build the LogHD instance for `precision`: the packed twin at 1/8 bits
+/// (inference stays in the packed domain), the dense plane form elsewhere.
+pub fn loghd(model: &LogHdModel, precision: Precision) -> Box<dyn HdClassifier> {
+    match precision {
+        Precision::B1 | Precision::B8 => {
+            Box::new(QuantizedLogHdModel::from_model(model, precision))
+        }
+        p => Box::new(LogHdDenseInstance {
+            classes: model.classes,
+            d: model.d,
+            book: model.book.clone(),
+            bundles: PlaneState::build(&model.bundles, p),
+            profiles: ProfilePlanes::build(&model.profiles, p),
+        }),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hybrid (LogHD bundles + SparseHD dimension mask)
+// ---------------------------------------------------------------------
+
+/// Hybrid at a dense width: the compacted bundle columns are the stored
+/// plane (pruned dims are not stored), profiles as deviations + mean.
+struct HybridDenseInstance {
+    classes: usize,
+    full_d: usize,
+    book: Codebook,
+    kept: Vec<usize>,
+    bundles_compact: PlaneState,
+    profiles: ProfilePlanes,
+}
+
+impl HybridDenseInstance {
+    fn model(&self) -> LogHdModel {
+        let compact = self.bundles_compact.dense();
+        let mut bundles = Matrix::zeros(compact.rows(), self.full_d);
+        for r in 0..compact.rows() {
+            let dst = bundles.row_mut(r);
+            for (cj, &j) in self.kept.iter().enumerate() {
+                dst[j] = compact.at(r, cj);
+            }
+        }
+        LogHdModel {
+            classes: self.classes,
+            d: self.full_d,
+            book: self.book.clone(),
+            bundles,
+            profiles: self.profiles.assemble(),
+        }
+    }
+}
+
+impl HdClassifier for HybridDenseInstance {
+    fn kind(&self) -> &'static str {
+        "hybrid"
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn d(&self) -> usize {
+        self.full_d
+    }
+    fn decode_activations(&self, enc: &Matrix) -> Matrix {
+        let mut dists = self.model().decode_dists(enc);
+        for v in dists.data_mut() {
+            *v = -*v;
+        }
+        dists
+    }
+    fn predict(&self, enc: &Matrix) -> Vec<i32> {
+        self.model().predict(enc)
+    }
+    fn fault_surface(&self) -> FaultSurface {
+        let mut planes = vec![self.bundles_compact.plane("bundles_retained")];
+        planes.extend(self.profiles.planes());
+        FaultSurface::new(planes)
+    }
+    fn apply_flips(&mut self, plane: usize, mask: &[(usize, u32)]) {
+        if plane == 0 {
+            self.bundles_compact.apply(mask);
+        } else {
+            self.profiles.apply(plane - 1, mask);
+        }
+    }
+}
+
+/// Hybrid at a packed width: the column-compacted model quantized into a
+/// [`QuantizedLogHdModel`] (activation gain restores the full-width
+/// query-normalization scale its profiles were trained against);
+/// queries are gathered to the retained coordinates inside `predict`.
+struct HybridPackedInstance {
+    qm: QuantizedLogHdModel,
+    kept: Vec<usize>,
+    full_d: usize,
+}
+
+impl HdClassifier for HybridPackedInstance {
+    fn kind(&self) -> &'static str {
+        "hybrid"
+    }
+    fn classes(&self) -> usize {
+        self.qm.classes
+    }
+    fn d(&self) -> usize {
+        self.full_d
+    }
+    fn decode_activations(&self, enc: &Matrix) -> Matrix {
+        self.qm.decode_activations(&gather_cols(enc, &self.kept))
+    }
+    fn predict(&self, enc: &Matrix) -> Vec<i32> {
+        QuantizedLogHdModel::predict(&self.qm, &gather_cols(enc, &self.kept))
+    }
+    fn fault_surface(&self) -> FaultSurface {
+        self.qm.fault_surface()
+    }
+    fn apply_flips(&mut self, plane: usize, mask: &[(usize, u32)]) {
+        self.qm.apply_flips(plane, mask);
+    }
+    fn refresh(&mut self) {
+        self.qm.refresh();
+    }
+}
+
+/// Build the Hybrid instance for `precision`.
+pub fn hybrid(model: &HybridModel, precision: Precision) -> Box<dyn HdClassifier> {
+    match precision {
+        Precision::B1 | Precision::B8 => {
+            let kept = kept_indices(&model.mask);
+            let full_d = model.inner.d;
+            let inner = LogHdModel {
+                classes: model.inner.classes,
+                d: kept.len(),
+                book: model.inner.book.clone(),
+                bundles: gather_cols(&model.inner.bundles, &kept),
+                profiles: model.inner.profiles.clone(),
+            };
+            let mut qm = QuantizedLogHdModel::from_model(&inner, precision);
+            // The hybrid profiles were trained against full-width query
+            // normalization; restore that scale on the compacted model.
+            qm.set_activation_gain((kept.len() as f32 / full_d as f32).sqrt());
+            Box::new(HybridPackedInstance { qm, kept, full_d })
+        }
+        p => {
+            let kept = kept_indices(&model.mask);
+            Box::new(HybridDenseInstance {
+                classes: model.inner.classes,
+                full_d: model.inner.d,
+                book: model.inner.book.clone(),
+                bundles_compact: PlaneState::build(
+                    &gather_cols(&model.inner.bundles, &kept),
+                    p,
+                ),
+                kept,
+                profiles: ProfilePlanes::build(&model.inner.profiles, p),
+            })
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// DecoHD
+// ---------------------------------------------------------------------
+
+/// DecoHD at one precision: basis plane + coefficient plane, with the
+/// dense scoring twin of the *current* plane contents cached (rebuilt
+/// by `refresh` after fault injection) — the serving path (`ZooEngine`)
+/// calls `predict` per batch and must not re-dequantize per batch.
+struct DecoHdInstance {
+    classes: usize,
+    d: usize,
+    basis: PlaneState,
+    coeffs: PlaneState,
+    dense: DecoHdModel,
+}
+
+impl DecoHdInstance {
+    fn rebuild_dense(&mut self) {
+        self.dense = DecoHdModel { basis: self.basis.dense(), coeffs: self.coeffs.dense() };
+    }
+}
+
+impl HdClassifier for DecoHdInstance {
+    fn kind(&self) -> &'static str {
+        "decohd"
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn d(&self) -> usize {
+        self.d
+    }
+    fn decode_activations(&self, enc: &Matrix) -> Matrix {
+        self.dense.scores(enc)
+    }
+    fn predict(&self, enc: &Matrix) -> Vec<i32> {
+        self.dense.predict(enc)
+    }
+    fn fault_surface(&self) -> FaultSurface {
+        FaultSurface::new(vec![self.basis.plane("basis"), self.coeffs.plane("coeffs")])
+    }
+    fn apply_flips(&mut self, plane: usize, mask: &[(usize, u32)]) {
+        match plane {
+            0 => self.basis.apply(mask),
+            _ => self.coeffs.apply(mask),
+        }
+    }
+    fn refresh(&mut self) {
+        self.rebuild_dense();
+    }
+}
+
+/// Build the DecoHD instance from a trained [`DecoHdModel`].
+pub fn decohd(model: &DecoHdModel, precision: Precision) -> Box<dyn HdClassifier> {
+    let mut inst = DecoHdInstance {
+        classes: model.classes(),
+        d: model.d(),
+        basis: PlaneState::build(&model.basis, precision),
+        coeffs: PlaneState::build(&model.coeffs, precision),
+        dense: DecoHdModel { basis: Matrix::zeros(0, 0), coeffs: Matrix::zeros(0, 0) },
+    };
+    inst.rebuild_dense();
+    Box::new(inst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::inject_value_faults;
+    use crate::util::rng::SplitMix64;
+
+    fn prototypes() -> Matrix {
+        let mut rng = SplitMix64::new(3);
+        let mut h = Matrix::from_vec(4, 64, rng.normals_f32(256));
+        tensor::normalize_rows(&mut h);
+        h
+    }
+
+    #[test]
+    fn conventional_instance_matches_direct_model_when_clean() {
+        let h = prototypes();
+        let mut rng = SplitMix64::new(5);
+        let enc = Matrix::from_vec(6, 64, rng.normals_f32(6 * 64));
+        let inst = conventional(&h, Precision::F32);
+        let direct = crate::baselines::ConventionalModel::new(h.clone()).predict(&enc);
+        assert_eq!(inst.predict(&enc), direct);
+        assert_eq!(inst.stored_bits(), 4 * 64 * 32);
+        assert_eq!(inst.kind(), "conventional");
+        assert_eq!((inst.classes(), inst.d()), (4, 64));
+    }
+
+    #[test]
+    fn sparse_instance_keeps_pruned_dims_outside_the_surface() {
+        let h = prototypes();
+        let model = SparseHdModel::from_prototypes(&h, 0.5);
+        let mut inst = sparsehd(&model, Precision::B8);
+        assert_eq!(inst.stored_bits(), model.retained() * 4 * 8);
+        let mut rng = SplitMix64::new(9);
+        let flips = inject_value_faults(inst.as_mut(), 0.5, &mut rng);
+        assert!(flips > 0);
+        // pruned dims contribute nothing: corrupting them is impossible,
+        // so the activations of a pruned-only query are exactly zero
+        let mut pruned_query = vec![0.0f32; 64];
+        for (j, keep) in model.mask.iter().enumerate() {
+            if !keep {
+                pruned_query[j] = 1.0;
+            }
+        }
+        let a = inst.decode_activations(&Matrix::from_vec(1, 64, pruned_query));
+        assert!(a.data().iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn dense_planes_flip_like_the_reference_appliers() {
+        let h = prototypes();
+        let mut inst = conventional(&h, Precision::F32);
+        let mut rng = SplitMix64::new(21);
+        inject_value_faults(inst.as_mut(), 0.4, &mut rng);
+        // reference: the pre-trait corrupt() on the same stream
+        let mut rng2 = SplitMix64::new(21);
+        let want = crate::eval::corrupt(&h, Precision::F32, 0.4, &mut rng2);
+        let got = inst.decode_activations(&Matrix::from_vec(1, 64, vec![1.0; 64]));
+        let wref = activations(&Matrix::from_vec(1, 64, vec![1.0; 64]), &want);
+        assert_eq!(got.data(), wref.data());
+    }
+
+    #[test]
+    fn profile_planes_roundtrip_cleanly_at_f32() {
+        let mut rng = SplitMix64::new(11);
+        let p = Matrix::from_vec(5, 3, rng.normals_f32(15));
+        let planes = ProfilePlanes::build(&p, Precision::F32);
+        let back = planes.assemble();
+        for (a, b) in p.data().iter().zip(back.data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // n column planes + the mean plane, in stream order
+        let surface = planes.planes();
+        assert_eq!(surface.len(), 4);
+        assert_eq!(surface[0].label, "profiles[0]");
+        assert_eq!(surface[3].label, "profile_mean");
+    }
+}

@@ -1,0 +1,275 @@
+//! The unified classifier core: one trait behind every model family.
+//!
+//! Before this module existed, each classifier family (LogHD f32, the
+//! packed b1/b8 twin, the conventional baseline, SparseHD, Hybrid) was
+//! hand-wired separately into the sweep engine, the equal-memory
+//! campaign solver, the serving registry, and persistence — every new
+//! family or scenario cost five divergent match arms. The core
+//! collapses those surfaces onto three contracts:
+//!
+//! - [`HdClassifier`] — the behavioural trait: `predict` /
+//!   [`decode_activations`](HdClassifier::decode_activations), exact
+//!   stored-size accounting ([`stored_bits`](HdClassifier::stored_bits)),
+//!   and the fault contract below. Every family implements it at every
+//!   serving precision (see [`instances`]).
+//! - [`FaultSurface`] — the enumeration of *stored bit-planes* a model
+//!   exposes to memory upsets, with one uniform applier
+//!   ([`HdClassifier::apply_flips`]) and one shared injection driver
+//!   ([`inject_value_faults`]). Budget accounting and fault injection
+//!   read the **same** enumeration, so "equal memory" cells in
+//!   `eval::campaign` cannot drift from what the injector actually
+//!   corrupts: `stored_bits` *is* the surface size by construction.
+//! - [`zoo`] — the string-keyed [`ModelSpec`](zoo::ModelSpec) registry
+//!   mapping artifact kinds to loaders and serving-engine factories.
+//!   `persist::load_any`, the serving registry, and `loghd inspect`
+//!   all dispatch through it; registering a family once makes it
+//!   loadable, servable, and inspectable everywhere.
+//!
+//! # Fault-stream discipline (why plane order is part of the contract)
+//!
+//! The Monte-Carlo campaign derives one [`SplitMix64`] stream per grid
+//! cell and the golden conformance suite pins campaign artifacts
+//! byte-for-byte. [`inject_value_faults`] therefore draws one
+//! [`faults::value_flip_mask`] per plane, **in the order the surface
+//! enumerates them** — the same order the pre-trait corruption helpers
+//! (`eval::sweep::corrupt*`) consumed the stream in. A family's
+//! `fault_surface` must keep its plane order stable or its campaign
+//! numbers silently change; `rust/tests/trait_parity.rs` pins every
+//! migrated family against the direct pre-refactor call sequence.
+//!
+//! See `docs/ARCHITECTURE.md` for the layer map and the
+//! add-a-new-family checklist (worked example: `baselines::decohd`).
+
+pub mod instances;
+pub mod zoo;
+
+use crate::faults;
+use crate::tensor::Matrix;
+use crate::util::rng::SplitMix64;
+
+/// One stored bit-plane of a classifier: `values` fields of `bits` bits
+/// each, addressable by the per-value fault model (`faults` module).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlane {
+    /// Human-readable name (`loghd inspect` prints these).
+    pub label: String,
+    /// Number of stored values in the plane.
+    pub values: usize,
+    /// Bits per stored value (32 for raw f32 planes).
+    pub bits: u32,
+}
+
+impl FaultPlane {
+    pub fn new(label: impl Into<String>, values: usize, bits: u32) -> Self {
+        Self { label: label.into(), values, bits }
+    }
+
+    /// Total bits this plane stores.
+    pub fn total_bits(&self) -> usize {
+        self.values * self.bits as usize
+    }
+}
+
+/// The enumeration of every stored bit-plane a classifier exposes to
+/// memory upsets — the model's *entire* stored representation. Plane
+/// order is part of the contract (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSurface {
+    pub planes: Vec<FaultPlane>,
+}
+
+impl FaultSurface {
+    pub fn new(planes: Vec<FaultPlane>) -> Self {
+        Self { planes }
+    }
+
+    /// Total stored bits across every plane — the one number both the
+    /// equal-memory solver and the fault injector see.
+    pub fn total_bits(&self) -> usize {
+        self.planes.iter().map(FaultPlane::total_bits).sum()
+    }
+}
+
+/// A hyperdimensional classifier at a concrete serving precision: the
+/// uniform surface `eval`, `faults`, serving, and the CLI dispatch on.
+///
+/// Implementations must keep `predict` bit-identical to their family's
+/// reference path (pinned by `rust/tests/trait_parity.rs`) and must
+/// enumerate [`fault_surface`](Self::fault_surface) in a stable order.
+pub trait HdClassifier: Send {
+    /// Family tag (`"loghd"`, `"conventional"`, `"sparsehd"`,
+    /// `"hybrid"`, `"decohd"`) — matches the zoo registry's family keys.
+    fn kind(&self) -> &'static str;
+
+    /// Number of classes the classifier decides between.
+    fn classes(&self) -> usize;
+
+    /// Encoded query width `predict` expects (always the full
+    /// hypervector dimension D — masked families gather internally).
+    fn d(&self) -> usize;
+
+    /// Per-class decision scores (B, C), argmax = predicted label.
+    /// Distance-decoded families return negated distances.
+    fn decode_activations(&self, enc: &Matrix) -> Matrix;
+
+    /// Predicted labels for encoded queries.
+    fn predict(&self, enc: &Matrix) -> Vec<i32>;
+
+    /// Enumerate the stored bit-planes (order is contractual).
+    fn fault_surface(&self) -> FaultSurface;
+
+    /// Apply a sampled per-value flip mask (`(victim, bit)` pairs,
+    /// victims strictly increasing) to plane `plane` of the surface.
+    fn apply_flips(&mut self, plane: usize, mask: &[(usize, u32)]);
+
+    /// Re-derive any cached views after direct mutation of the stored
+    /// state. Called once by [`inject_value_faults`] after all planes.
+    fn refresh(&mut self) {}
+
+    /// Exact stored model size in bits — by default the fault-surface
+    /// total, so budget accounting and the corruption target are the
+    /// same bits by construction.
+    fn stored_bits(&self) -> usize {
+        self.fault_surface().total_bits()
+    }
+}
+
+/// The one fault-injection driver every family shares: walk the stored
+/// bit-planes in surface order, draw the per-value flip mask for each
+/// from `rng` (one [`faults::value_flip_mask`] call per plane — the
+/// exact stream discipline of the pre-trait `eval::sweep::corrupt*`
+/// helpers), apply, refresh. Returns the number of flipped values.
+pub fn inject_value_faults(
+    model: &mut dyn HdClassifier,
+    p: f64,
+    rng: &mut SplitMix64,
+) -> usize {
+    let surface = model.fault_surface();
+    let mut flips = 0;
+    for (i, plane) in surface.planes.iter().enumerate() {
+        let mask = faults::value_flip_mask(plane.values, plane.bits, p, rng);
+        if !mask.is_empty() {
+            model.apply_flips(i, &mask);
+        }
+        flips += mask.len();
+    }
+    model.refresh();
+    flips
+}
+
+/// Stored value count of a LogHD-shaped model: `n` bundles of width
+/// `d_kept` plus the (C, n) activation profiles stored as per-column
+/// deviations *and* their n-vector cross-class mean (every part a fault
+/// target — see `eval::sweep::corrupt_profiles`).
+///
+/// This is the **single** accounting rule shared by
+/// `LogHdModel::memory_floats`, `HybridModel::memory_floats`,
+/// `QuantizedLogHdModel::memory_bits`, and the equal-memory campaign
+/// solver (`eval::campaign::stored_bits`); before it existed the model
+/// methods dropped the `+ n` mean term and the two paths could drift.
+pub fn loghd_stored_values(n: usize, d_kept: usize, classes: usize) -> usize {
+    n * d_kept + classes * n + n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct TwoPlane {
+        f32s: Vec<f32>,
+        packed: crate::quant::PackedTensor,
+        refreshed: bool,
+    }
+
+    impl HdClassifier for TwoPlane {
+        fn kind(&self) -> &'static str {
+            "test"
+        }
+        fn classes(&self) -> usize {
+            2
+        }
+        fn d(&self) -> usize {
+            self.f32s.len()
+        }
+        fn decode_activations(&self, enc: &Matrix) -> Matrix {
+            Matrix::zeros(enc.rows(), 2)
+        }
+        fn predict(&self, enc: &Matrix) -> Vec<i32> {
+            vec![0; enc.rows()]
+        }
+        fn fault_surface(&self) -> FaultSurface {
+            FaultSurface::new(vec![
+                FaultPlane::new("dense", self.f32s.len(), 32),
+                FaultPlane::new("packed", self.packed.count(), self.packed.bits()),
+            ])
+        }
+        fn apply_flips(&mut self, plane: usize, mask: &[(usize, u32)]) {
+            match plane {
+                0 => {
+                    for &(v, bit) in mask {
+                        self.f32s[v] = f32::from_bits(self.f32s[v].to_bits() ^ (1 << bit));
+                    }
+                }
+                1 => {
+                    let bits = self.packed.bits() as usize;
+                    for &(v, bit) in mask {
+                        self.packed.flip_bit(v * bits + bit as usize);
+                    }
+                }
+                other => panic!("no plane {other}"),
+            }
+        }
+        fn refresh(&mut self) {
+            self.refreshed = true;
+        }
+    }
+
+    fn two_plane() -> TwoPlane {
+        TwoPlane {
+            f32s: vec![1.0; 40],
+            packed: crate::quant::PackedTensor::new(8, 100),
+            refreshed: false,
+        }
+    }
+
+    #[test]
+    fn driver_consumes_the_reference_stream() {
+        // The driver must draw exactly one value_flip_mask per plane, in
+        // surface order — the stream the direct appliers consume.
+        let mut m = two_plane();
+        let mut rng = SplitMix64::new(42);
+        let flips = inject_value_faults(&mut m, 0.3, &mut rng);
+
+        let mut reference = two_plane();
+        let mut rng2 = SplitMix64::new(42);
+        let n1 = faults::flip_values_f32(&mut reference.f32s, 0.3, &mut rng2);
+        let n2 = faults::flip_values_packed(&mut reference.packed, 0.3, &mut rng2);
+        assert_eq!(flips, n1 + n2);
+        assert_eq!(m.f32s, reference.f32s);
+        assert_eq!(m.packed, reference.packed);
+        assert!(m.refreshed);
+    }
+
+    #[test]
+    fn zero_probability_draws_and_flips_nothing() {
+        let mut m = two_plane();
+        let mut rng = SplitMix64::new(7);
+        let before = rng.clone();
+        assert_eq!(inject_value_faults(&mut m, 0.0, &mut rng), 0);
+        assert_eq!(rng.next_u64(), before.clone().next_u64(), "p=0 must not consume the stream");
+        assert!(m.f32s.iter().all(|v| *v == 1.0));
+    }
+
+    #[test]
+    fn stored_bits_is_surface_total() {
+        let m = two_plane();
+        assert_eq!(m.stored_bits(), 40 * 32 + 100 * 8);
+        assert_eq!(m.fault_surface().total_bits(), m.stored_bits());
+    }
+
+    #[test]
+    fn loghd_accounting_includes_the_profile_mean() {
+        // n bundles * d + C*n deviations + n mean values.
+        assert_eq!(loghd_stored_values(3, 256, 5), 3 * 256 + 5 * 3 + 3);
+    }
+}

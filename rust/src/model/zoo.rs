@@ -1,0 +1,210 @@
+//! The model zoo: a string-keyed [`ModelSpec`] registry mapping artifact
+//! kinds to loaders, family tags, and serving-engine construction.
+//!
+//! Registering a family here is the *one* wiring step that makes it:
+//!
+//! - loadable — `persist::load_any` resolves the artifact's
+//!   `ModelCard::kind` through [`lookup`] and calls the spec's loader;
+//! - servable — `coordinator::registry` builds its per-replica engine
+//!   factories via [`engine_factories`];
+//! - inspectable — `loghd inspect` prints the spec next to the
+//!   trait-reported [`stored_bits`](crate::model::HdClassifier::stored_bits)
+//!   of the loaded instance.
+//!
+//! The worked example is `native-decohd` (`baselines::decohd`): one
+//! table row below, zero changes in the serving or persistence layers.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::worker::{ConventionalEngine, EngineFactory, NativeEngine, ZooEngine};
+use crate::loghd::persist::{self, LoadedModel};
+use crate::model::instances;
+use crate::quant::Precision;
+use crate::runtime::artifact::ModelCard;
+
+/// One registered artifact kind: how it identifies on disk, which
+/// family it belongs to, and how to load it.
+pub struct ModelSpec {
+    /// Artifact kind key — the `model.json` / manifest `kind` value.
+    pub kind: &'static str,
+    /// Family tag (matches [`HdClassifier::kind`] and
+    /// [`LoadedModel::kind`]).
+    ///
+    /// [`HdClassifier::kind`]: crate::model::HdClassifier::kind
+    pub family: &'static str,
+    /// One-line description for `loghd inspect` / docs.
+    pub description: &'static str,
+    loader: fn(&Path) -> Result<LoadedModel>,
+}
+
+impl ModelSpec {
+    /// Load the artifact at `dir` as this kind.
+    pub fn load(&self, dir: &Path) -> Result<LoadedModel> {
+        (self.loader)(dir)
+    }
+}
+
+fn load_native_loghd(dir: &Path) -> Result<LoadedModel> {
+    let (e, m) = persist::load(dir)?;
+    Ok(LoadedModel::LogHd(e, m))
+}
+
+fn load_native_conventional(dir: &Path) -> Result<LoadedModel> {
+    let (e, m) = persist::load_conventional(dir)?;
+    Ok(LoadedModel::Conventional(e, m))
+}
+
+fn load_native_decohd(dir: &Path) -> Result<LoadedModel> {
+    let (e, m) = persist::load_decohd(dir)?;
+    Ok(LoadedModel::DecoHd(e, m))
+}
+
+fn load_aot_bundle(dir: &Path) -> Result<LoadedModel> {
+    let (e, m) = persist::load_from_aot_bundle(dir)?;
+    Ok(LoadedModel::LogHd(e, m))
+}
+
+/// Every artifact kind the stack can load and serve.
+pub const SPECS: &[ModelSpec] = &[
+    ModelSpec {
+        kind: "native-loghd",
+        family: "loghd",
+        description: "LogHD class-axis classifier: codebook bundles + activation profiles",
+        loader: load_native_loghd,
+    },
+    ModelSpec {
+        kind: "native-conventional",
+        family: "conventional",
+        description: "conventional HDC baseline: one prototype per class (O(C*D))",
+        loader: load_native_conventional,
+    },
+    ModelSpec {
+        kind: "native-decohd",
+        family: "decohd",
+        description: "DecoHD-style decomposed classifier: shared basis + per-class coefficients",
+        loader: load_native_decohd,
+    },
+    ModelSpec {
+        kind: "aot-bundle",
+        family: "loghd",
+        description: "Python AOT bundle (LogHD tensors + lowered HLO entries)",
+        loader: load_aot_bundle,
+    },
+];
+
+/// Find the spec for an artifact kind key.
+pub fn lookup(kind: &str) -> Option<&'static ModelSpec> {
+    SPECS.iter().find(|s| s.kind == kind)
+}
+
+/// Load any registered artifact directory. The kind probe is
+/// [`ModelCard::load`] — the same probe the serving admission check
+/// uses — and dispatch is the [`SPECS`] table.
+pub fn load(dir: &Path) -> Result<LoadedModel> {
+    let card = ModelCard::load(dir)?;
+    let spec = lookup(&card.kind).with_context(|| {
+        format!(
+            "{}: unknown artifact kind '{}' (registered: {})",
+            dir.display(),
+            card.kind,
+            kinds()
+        )
+    })?;
+    spec.load(dir)
+}
+
+/// Comma-separated registered kind keys (for error messages / inspect).
+pub fn kinds() -> String {
+    SPECS.iter().map(|s| s.kind).collect::<Vec<_>>().join(", ")
+}
+
+/// Load an artifact and build one serving-engine factory per replica —
+/// the single engine-dispatch point behind `coordinator::registry`.
+/// Each replica owns its own engine instance (dense tensors cloned per
+/// replica; packed precisions pack on the worker thread), which is what
+/// lets replicas serve batches fully in parallel. Returns
+/// `(family kind, feature width, factories)`.
+pub fn engine_factories(
+    path: &Path,
+    precision: Precision,
+    replicas: usize,
+    label: &str,
+) -> Result<(String, usize, Vec<EngineFactory>)> {
+    let loaded =
+        load(path).with_context(|| format!("loading artifact {}", path.display()))?;
+    let kind = loaded.kind().to_string();
+    let features = loaded.features();
+    let factories: Vec<EngineFactory> = match loaded {
+        LoadedModel::LogHd(encoder, model) => (0..replicas)
+            .map(|_| {
+                NativeEngine::factory_with_precision(
+                    encoder.clone(),
+                    model.clone(),
+                    label.to_string(),
+                    precision,
+                )
+            })
+            .collect(),
+        LoadedModel::Conventional(encoder, model) => (0..replicas)
+            .map(|_| {
+                ConventionalEngine::factory(
+                    encoder.clone(),
+                    model.clone(),
+                    label.to_string(),
+                    precision,
+                )
+            })
+            .collect(),
+        LoadedModel::DecoHd(encoder, model) => (0..replicas)
+            .map(|_| {
+                let encoder = encoder.clone();
+                let model = model.clone();
+                let label = label.to_string();
+                Box::new(move || {
+                    Ok(Box::new(ZooEngine::new(
+                        encoder,
+                        instances::decohd(&model, precision),
+                        label,
+                        precision,
+                    )) as Box<dyn crate::coordinator::Engine>)
+                }) as EngineFactory
+            })
+            .collect(),
+    };
+    Ok((kind, features, factories))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_loaded_kind_uniquely() {
+        let mut keys: Vec<&str> = SPECS.iter().map(|s| s.kind).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), SPECS.len(), "duplicate kind keys");
+        for key in ["native-loghd", "native-conventional", "native-decohd", "aot-bundle"] {
+            assert!(lookup(key).is_some(), "missing spec for {key}");
+        }
+        assert!(lookup("nope").is_none());
+        assert!(kinds().contains("native-decohd"));
+    }
+
+    #[test]
+    fn unknown_dir_errors_name_the_registry() {
+        let dir = std::env::temp_dir().join("loghd_zoo_unknown_kind");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("model.json"),
+            r#"{"format": 1, "kind": "martian", "classes": 2, "d": 8, "features": 4}"#,
+        )
+        .unwrap();
+        let err = load(&dir).unwrap_err();
+        assert!(err.to_string().contains("martian"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -122,6 +122,9 @@ fn budget_accounting_matches_method_construction() {
                     assert!(frac <= budget + 0.05, "hybrid over budget: {frac} vs {budget}");
                 }
                 Method::Conventional => {}
+                Method::DecoHd { rank } => {
+                    assert!(rank as f64 / wb.classes as f64 <= budget + 1e-9)
+                }
             }
         }
     }

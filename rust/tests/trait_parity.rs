@@ -1,0 +1,320 @@
+//! Trait-object parity: the unified model core's dispatched
+//! `predict` / `apply_flips` pipeline must be **bit-identical** to the
+//! pre-refactor direct call sequences, for every migrated family, at
+//! every precision the campaign grids use, clean and corrupted.
+//!
+//! The dense-width references below are verbatim transplants of the
+//! per-method match arms `eval::sweep::Workbench::evaluate_cell` carried
+//! before the trait migration (built on the retained scalar helpers
+//! `corrupt` / `corrupt_masked` / `corrupt_profiles`). The packed-width
+//! references re-specify the pre-refactor stream **from first
+//! principles** — one `value_flip_mask` per stored part, plane sizes
+//! computed from the model shape (n·D bundles, n columns of C, the
+//! n-vector mean), in that fixed order — rather than calling the shared
+//! driver, so a regression in the driver's stream discipline (plane
+//! reorder, batched draws) fails here instead of passing tautologically.
+//! Each cell draws its fault stream from `cell_stream`, exactly as
+//! campaigns do — so equality here means campaign artifacts are
+//! unchanged by the refactor, byte for byte.
+
+use loghd::baselines::{ConventionalModel, DecoHdModel, HybridModel, SparseHdModel};
+use loghd::eval::metrics::accuracy;
+use loghd::eval::sweep::{
+    cell_stream, corrupt, corrupt_masked, corrupt_profiles, gather_cols, Method, Workbench,
+};
+use loghd::faults::value_flip_mask;
+use loghd::loghd::model::{LogHdModel, TrainOptions};
+use loghd::loghd::qmodel::QuantizedLogHdModel;
+use loghd::model::HdClassifier;
+use loghd::quant::Precision;
+use loghd::testkit;
+use loghd::util::rng::SplitMix64;
+
+fn bench(d: usize) -> Workbench {
+    let ds = testkit::mini("page").unwrap();
+    let opts = TrainOptions { epochs: 3, conv_epochs: 1, ..Default::default() };
+    Workbench::new(&ds, d, 0xE5C0DE, opts)
+}
+
+/// The family models the reference path corrupts, built once with the
+/// same deterministic constructions the Workbench caches use.
+struct RefModels {
+    loghd: LogHdModel,
+    hybrid: HybridModel,
+    sparse: SparseHdModel,
+}
+
+impl RefModels {
+    fn build(wb: &mut Workbench, k: u32, n: usize, sparsity: f64) -> Self {
+        let loghd = wb.loghd(k, n).unwrap().clone();
+        let hybrid =
+            HybridModel::from_loghd(&loghd, &wb.enc_train, &wb.y_train, sparsity).unwrap();
+        let sparse = SparseHdModel::from_prototypes(&wb.prototypes, sparsity);
+        Self { loghd, hybrid, sparse }
+    }
+}
+
+/// The pre-refactor per-part fault stream for a packed LogHD-shaped
+/// model, drawn from first principles: one `value_flip_mask` for the
+/// (n·d)-value bundle plane, one per (C)-value profile column, one for
+/// the n-value profile mean — applied in that order, then a view
+/// refresh. This is the stream `QuantizedLogHdModel::inject_value_faults`
+/// consumed before the trait migration; spelling it out here (instead of
+/// calling the shared driver) keeps the packed parity legs
+/// non-tautological.
+fn packed_reference_flips(
+    qm: &mut QuantizedLogHdModel,
+    n: usize,
+    c: usize,
+    d: usize,
+    flip_p: f64,
+    rng: &mut SplitMix64,
+) {
+    let bits = qm.precision.bits();
+    let plane_values: Vec<usize> =
+        std::iter::once(n * d).chain(std::iter::repeat(c).take(n)).chain([n]).collect();
+    for (i, values) in plane_values.into_iter().enumerate() {
+        let mask = value_flip_mask(values, bits, flip_p, rng);
+        qm.apply_flips(i, &mask);
+    }
+    qm.refresh();
+}
+
+/// The pre-refactor direct evaluation of one (method, precision, p)
+/// cell: per-family corruption + per-family scoring, consuming `rng`
+/// exactly as the old `evaluate_cell` match did.
+fn reference_cell(
+    wb: &Workbench,
+    models: &RefModels,
+    method: Method,
+    precision: Precision,
+    flip_p: f64,
+    rng: &mut SplitMix64,
+) -> Vec<i32> {
+    match method {
+        Method::Conventional => {
+            let h = corrupt(&wb.prototypes, precision, flip_p, rng);
+            ConventionalModel::new(h).predict(&wb.enc_test)
+        }
+        Method::SparseHd { .. } => {
+            let model = &models.sparse;
+            let h = corrupt_masked(&model.prototypes, &model.mask, precision, flip_p, rng);
+            ConventionalModel::new(h).predict(&wb.enc_test)
+        }
+        Method::LogHd { .. } => {
+            let model = &models.loghd;
+            match precision {
+                Precision::B1 | Precision::B8 => {
+                    let mut qm = QuantizedLogHdModel::from_model(model, precision);
+                    let (n, c, d) = (model.n_bundles(), model.classes, model.d);
+                    packed_reference_flips(&mut qm, n, c, d, flip_p, rng);
+                    qm.predict(&wb.enc_test)
+                }
+                _ => {
+                    let corrupted = LogHdModel {
+                        classes: model.classes,
+                        d: model.d,
+                        book: model.book.clone(),
+                        bundles: corrupt(&model.bundles, precision, flip_p, rng),
+                        profiles: corrupt_profiles(&model.profiles, precision, flip_p, rng),
+                    };
+                    corrupted.predict(&wb.enc_test)
+                }
+            }
+        }
+        Method::Hybrid { .. } => {
+            let hybrid = &models.hybrid;
+            match precision {
+                Precision::B1 | Precision::B8 => {
+                    let kept: Vec<usize> = hybrid
+                        .mask
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, keep)| **keep)
+                        .map(|(i, _)| i)
+                        .collect();
+                    let inner = LogHdModel {
+                        classes: hybrid.inner.classes,
+                        d: kept.len(),
+                        book: hybrid.inner.book.clone(),
+                        bundles: gather_cols(&hybrid.inner.bundles, &kept),
+                        profiles: hybrid.inner.profiles.clone(),
+                    };
+                    let mut qm = QuantizedLogHdModel::from_model(&inner, precision);
+                    qm.set_activation_gain((kept.len() as f32 / wb.d as f32).sqrt());
+                    let (n, c, d) = (inner.n_bundles(), inner.classes, inner.d);
+                    packed_reference_flips(&mut qm, n, c, d, flip_p, rng);
+                    qm.predict(&gather_cols(&wb.enc_test, &kept))
+                }
+                _ => {
+                    let corrupted = LogHdModel {
+                        classes: hybrid.inner.classes,
+                        d: hybrid.inner.d,
+                        book: hybrid.inner.book.clone(),
+                        bundles: corrupt_masked(
+                            &hybrid.inner.bundles,
+                            &hybrid.mask,
+                            precision,
+                            flip_p,
+                            rng,
+                        ),
+                        profiles: corrupt_profiles(
+                            &hybrid.inner.profiles,
+                            precision,
+                            flip_p,
+                            rng,
+                        ),
+                    };
+                    corrupted.predict(&wb.enc_test)
+                }
+            }
+        }
+        Method::DecoHd { .. } => unreachable!("no pre-refactor reference for DecoHD"),
+    }
+}
+
+/// Trait-dispatched predictions for the same cell on the same stream.
+fn trait_cell(
+    wb: &Workbench,
+    method: Method,
+    precision: Precision,
+    flip_p: f64,
+    rng: &mut SplitMix64,
+) -> Vec<i32> {
+    let mut inst = wb.instance(method, precision).unwrap();
+    loghd::model::inject_value_faults(inst.as_mut(), flip_p, rng);
+    inst.predict(&wb.enc_test)
+}
+
+#[test]
+fn all_five_families_dispatch_bit_identically() {
+    let mut wb = bench(192);
+    let (k, n, sparsity) = (2u32, 4usize, 0.5f64);
+    let methods = [
+        Method::Conventional,
+        Method::SparseHd { sparsity },
+        Method::LogHd { k, n },
+        Method::Hybrid { k, n, sparsity },
+    ];
+    for method in methods {
+        wb.warm(method).unwrap();
+    }
+    let models = RefModels::build(&mut wb, k, n, sparsity);
+    for method in methods {
+        for precision in [Precision::F32, Precision::B8, Precision::B1] {
+            for (p, trial) in [(0.0, 0u64), (0.25, 1), (0.6, 2)] {
+                let mut r1 = cell_stream(7, &method, precision, p, trial);
+                let want = reference_cell(&wb, &models, method, precision, p, &mut r1);
+                let mut r2 = cell_stream(7, &method, precision, p, trial);
+                let got = trait_cell(&wb, method, precision, p, &mut r2);
+                assert_eq!(
+                    got,
+                    want,
+                    "{} @{} p={p} trial={trial}: trait dispatch diverged from direct calls",
+                    method.label(),
+                    precision.label()
+                );
+                // and the streams must end at the same position
+                assert_eq!(
+                    r1.next_u64(),
+                    r2.next_u64(),
+                    "{} @{} p={p}: stream positions diverged",
+                    method.label(),
+                    precision.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_quant_widths_also_match() {
+    // B2/B4 have no packed kernel; they take the quantize-flip-dequantize
+    // path in both worlds.
+    let mut wb = bench(128);
+    let (k, n, sparsity) = (2u32, 4usize, 0.5f64);
+    let method = Method::LogHd { k, n };
+    wb.warm(method).unwrap();
+    let models = RefModels::build(&mut wb, k, n, sparsity);
+    for precision in [Precision::B2, Precision::B4] {
+        for p in [0.0, 0.4] {
+            let mut r1 = cell_stream(3, &method, precision, p, 0);
+            let want = reference_cell(&wb, &models, method, precision, p, &mut r1);
+            let mut r2 = cell_stream(3, &method, precision, p, 0);
+            let got = trait_cell(&wb, method, precision, p, &mut r2);
+            assert_eq!(got, want, "{precision:?} p={p}");
+        }
+    }
+}
+
+#[test]
+fn evaluate_cell_accuracy_equals_trait_pipeline() {
+    // Workbench::evaluate_cell is the trait pipeline; pin the composed
+    // accuracy too so any future wrapper drift is caught at the API the
+    // campaign engine actually calls.
+    let mut wb = bench(128);
+    let method = Method::SparseHd { sparsity: 0.4 };
+    wb.warm(method).unwrap();
+    let mut r1 = cell_stream(11, &method, Precision::B8, 0.3, 0);
+    let via_wb = wb.evaluate_cell(method, Precision::B8, 0.3, &mut r1).unwrap();
+    let mut r2 = cell_stream(11, &method, Precision::B8, 0.3, 0);
+    let pred = trait_cell(&wb, method, Precision::B8, 0.3, &mut r2);
+    assert_eq!(via_wb, accuracy(&pred, &wb.y_test));
+}
+
+#[test]
+fn stored_bits_parity_between_solver_and_instances() {
+    // The campaign solver's closed-form accounting must equal the
+    // trait-reported fault-surface size for every family x precision —
+    // including the DecoHD newcomer.
+    let mut wb = bench(192);
+    let methods = [
+        Method::Conventional,
+        Method::SparseHd { sparsity: 0.5 },
+        Method::LogHd { k: 2, n: 4 },
+        Method::Hybrid { k: 2, n: 4, sparsity: 0.5 },
+        Method::DecoHd { rank: 3 },
+    ];
+    for method in methods {
+        wb.warm(method).unwrap();
+        for precision in [Precision::F32, Precision::B8, Precision::B1] {
+            let inst = wb.instance(method, precision).unwrap();
+            assert_eq!(
+                inst.stored_bits(),
+                loghd::eval::stored_bits(&method, precision, wb.classes, wb.d),
+                "{} @{}",
+                method.label(),
+                precision.label()
+            );
+            assert_eq!(inst.classes(), wb.classes);
+            assert_eq!(inst.d(), wb.d);
+        }
+    }
+}
+
+#[test]
+fn decohd_trait_cell_is_well_behaved() {
+    // No pre-refactor reference exists for DecoHD (it was born on the
+    // trait), so pin its contract directly: p=0 is the clean model,
+    // the surface is exactly its two declared planes, and heavy
+    // corruption does not help.
+    let mut wb = bench(192);
+    let method = Method::DecoHd { rank: 3 };
+    wb.warm(method).unwrap();
+    let deco = DecoHdModel::from_prototypes(&wb.prototypes, 3).unwrap();
+    for precision in [Precision::F32, Precision::B8, Precision::B1] {
+        let mut rng = cell_stream(5, &method, precision, 0.0, 0);
+        let clean = trait_cell(&wb, method, precision, 0.0, &mut rng);
+        if precision == Precision::F32 {
+            assert_eq!(clean, deco.predict(&wb.enc_test), "clean f32 must be the model itself");
+        }
+        let surface = wb.instance(method, precision).unwrap().fault_surface();
+        assert_eq!(surface.planes.len(), 2);
+        assert_eq!(surface.planes[0].label, "basis");
+        assert_eq!(surface.planes[1].label, "coeffs");
+        let mut rng = cell_stream(5, &method, precision, 0.7, 1);
+        let wrecked = trait_cell(&wb, method, precision, 0.7, &mut rng);
+        let (ca, wa) = (accuracy(&clean, &wb.y_test), accuracy(&wrecked, &wb.y_test));
+        assert!(wa <= ca + 0.05, "{precision:?}: flips helped? {wa} vs {ca}");
+    }
+}
