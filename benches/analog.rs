@@ -1,0 +1,27 @@
+//! Analog fault-surface campaign harness (EXPERIMENTS.md §Analog-resilience).
+//!
+//! Runs `eval::campaign::run_analog` — the equal-memory robustness grid
+//! swept once per analog fault model (bit flips, conductance drift,
+//! stuck-at cells, correlated line failures) — and writes
+//! `results/BENCH_analog.json` plus a repo-root snapshot. Smoke profile
+//! by default (CI-sized); `LOGHD_FULL=1` switches to the paper-scale
+//! ISOLET grid.
+//!
+//! The artifact is deterministic outside its `meta` section for a fixed
+//! profile, at any `LOGHD_THREADS` — same contract as the digital
+//! robustness bench, pinned by `rust/tests/golden/analog_smoke.json`.
+
+use loghd::eval::campaign::{self, AnalogConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = if std::env::var("LOGHD_FULL").as_deref() == Ok("1") {
+        AnalogConfig::full()
+    } else {
+        AnalogConfig::smoke()
+    };
+    let res = campaign::run_analog(&cfg)?;
+    print!("{}", res.summary());
+    res.write_default_artifacts()?;
+    println!("wrote results/BENCH_analog.json (+ repo-root snapshot)");
+    Ok(())
+}

@@ -10,6 +10,7 @@
 //!              [--replicas 2 --default page --addr 127.0.0.1:7878]
 //!              | --artifacts artifacts/page_smoke [--entry infer_loghd]
 //! loghd robustness [--profile smoke|full] [--decohd true] [--out path.json]
+//!                  [--fault-model bitflip,drift,stuckat,line|all [--span 2]]
 //! loghd table2 [--n 7]                    # hardware-efficiency ratios
 //! ```
 
@@ -27,6 +28,7 @@ use crate::coordinator::{
 use crate::data;
 use crate::eval::{accuracy, Workbench};
 use crate::eval::sweep::Method;
+use crate::faults::FaultModelKind;
 use crate::hwmodel;
 use crate::loghd::model::TrainedStack;
 use crate::loghd::persist;
@@ -123,6 +125,8 @@ USAGE:
   loghd robustness [--profile smoke|full] [--dataset <name>] [--d <dim>]
                [--budget <frac of C*D*32>] [--target <frac of clean acc>]
                [--trials T] [--seed S] [--decohd true] [--out <path.json>]
+               [--fault-model bitflip,drift,stuckat,line|all]
+               [--span <rows>] [--drift_sigma_max <sigma>]
   loghd table2 [--n <bundles>]
 
 eval loads ANY registered artifact kind (loghd, conventional, decohd,
@@ -131,7 +135,9 @@ through the shared fault-surface driver, and reports test accuracy.
 
 inspect prints an artifact's ModelCard, its model-zoo registration, the
 trait-reported stored_bits per serving precision, and the enumeration
-of stored bit-planes the fault injector targets.
+of stored bit-planes the fault injector targets — each with its
+(rows x cols x bits) geometry and value domain, cross-checked against
+the trait-reported total.
 
 serve hosts every named model behind one JSON-lines TCP endpoint (see
 docs/PROTOCOL.md): requests route by their \"model\" field (default: the
@@ -145,6 +151,13 @@ feature-axis resilience ratio (the paper's headline claim). --decohd
 true appends DecoHD cells to the solved grid. Output is bit-identical
 for any LOGHD_THREADS; default --out is results/BENCH_robustness.json
 plus a repo-root snapshot.
+
+--fault-model switches the campaign onto the analog fault surface: the
+same solved grid is swept under each listed model (digital bitflip,
+Gaussian conductance drift, stuck-at cells, correlated line failures)
+on a shared normalized severity grid, each annotated with its memory
+technology and modeled energy; default --out becomes
+results/BENCH_analog.json (+ repo-root snapshot).
 ";
 
 fn cmd_info() -> Result<()> {
@@ -308,15 +321,26 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     let inst = loaded.instance(Precision::F32);
     let surface = inst.fault_surface();
     println!("fault surface ({} planes at f32):", surface.planes.len());
+    let mut total = 0usize;
     for plane in &surface.planes {
+        total += plane.total_bits();
         println!(
-            "  {:<16} {:>10} values x {:>2} bits = {:>12} bits",
+            "  {:<16} {:>6} rows x {:<6} cols x {:>2} bits [{:<6}] = {:>12} bits",
             plane.label,
-            plane.values,
+            plane.rows,
+            plane.cols,
             plane.bits,
+            plane.domain(),
             plane.total_bits()
         );
     }
+    // The enumerated geometry must account for every stored bit the
+    // trait reports — anything else means injector/model drift.
+    let stored = inst.stored_bits();
+    if total != stored {
+        bail!("plane geometry totals {total} bits but the trait reports {stored}");
+    }
+    println!("  {:<16} plane total {total} bits == trait stored_bits", "(check)");
     Ok(())
 }
 
@@ -399,22 +423,65 @@ fn cmd_robustness(args: &Args) -> Result<()> {
     if let Some(v) = flag(args, "decohd") {
         cfg.decohd = v.parse().context("--decohd must be true|false")?;
     }
+
+    // --fault-model routes the same solved grid through the analog
+    // campaign (digital bitflip is the zero-salt member, so passing
+    // `--fault-model bitflip` reproduces the digital artifact exactly).
+    if let Some(list) = flag(args, "fault-model").or_else(|| flag(args, "fault_model")) {
+        let kinds: Vec<FaultModelKind> = if list.trim().eq_ignore_ascii_case("all") {
+            FaultModelKind::ALL.to_vec()
+        } else {
+            list.split(',')
+                .map(|tok| {
+                    FaultModelKind::parse(tok).with_context(|| {
+                        format!(
+                            "unknown fault model '{}' (bitflip|drift|stuckat|line|all)",
+                            tok.trim()
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        let mut acfg = crate::eval::AnalogConfig::smoke();
+        acfg.base = cfg;
+        acfg.kinds = kinds;
+        if let Some(s) = flag(args, "span") {
+            acfg.span = s.parse().context("--span")?;
+        }
+        if let Some(s) = flag(args, "drift_sigma_max") {
+            acfg.drift_sigma_max = s.parse().context("--drift_sigma_max")?;
+        }
+        let res = crate::eval::campaign::run_analog(&acfg)?;
+        print!("{}", res.summary());
+        match flag(args, "out") {
+            Some(path) => write_json_to(path, &res.to_json())?,
+            None => {
+                res.write_default_artifacts()?;
+                println!("wrote results/BENCH_analog.json (+ repo-root snapshot)");
+            }
+        }
+        return Ok(());
+    }
+
     let res = crate::eval::campaign::run(&cfg)?;
     print!("{}", res.summary());
     match flag(args, "out") {
-        Some(path) => {
-            let path = PathBuf::from(path);
-            if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
-                std::fs::create_dir_all(parent)?;
-            }
-            std::fs::write(&path, crate::util::json::to_string_pretty(&res.to_json()))?;
-            println!("wrote {}", path.display());
-        }
+        Some(path) => write_json_to(path, &res.to_json())?,
         None => {
             res.write_default_artifacts()?;
             println!("wrote results/BENCH_robustness.json (+ repo-root snapshot)");
         }
     }
+    Ok(())
+}
+
+fn write_json_to(path: &str, v: &crate::util::json::Value) -> Result<()> {
+    let path = PathBuf::from(path);
+    if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&path, crate::util::json::to_string_pretty(v))?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 
@@ -481,6 +548,17 @@ mod tests {
         let err =
             run(vec!["robustness".into(), "--profile".into(), "warp".into()]).unwrap_err();
         assert!(err.to_string().contains("unknown profile"), "{err}");
+    }
+
+    #[test]
+    fn robustness_rejects_unknown_fault_model() {
+        let err = run(vec![
+            "robustness".into(),
+            "--fault-model".into(),
+            "cosmic".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown fault model"), "{err}");
     }
 
     #[test]

@@ -27,6 +27,17 @@
 //! `loghd robustness` (CLI) and `benches/robustness.rs` drive it and
 //! emit `results/BENCH_robustness.json`; `testkit::golden` pins the
 //! solver table + schema as a conformance suite.
+//!
+//! The **analog axis** ([`run_analog`]) reruns the same solved grid
+//! under each [`FaultModelKind`] — digital bit flips, Gaussian
+//! conductance drift, stuck-at cells, correlated word-line failures —
+//! on a shared normalized severity grid (`cfg.ps` reinterpreted per
+//! model by [`FaultModelKind::at_severity`]). Each model is annotated
+//! with its memory technology ([`crate::hwmodel::technology`]) so the
+//! emitted `results/BENCH_analog.json` indexes resilience and modeled
+//! energy over one scenario grid. The bit-flip leg draws the *same*
+//! streams as the digital campaign (its stream salt is zero), so the
+//! committed digital golden stays byte-identical.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -35,6 +46,8 @@ use anyhow::{bail, Result};
 
 use crate::eval::metrics::{mean_std, percentile, sustained_until};
 use crate::eval::sweep::{self, Method, Workbench};
+use crate::faults::{FaultModel, FaultModelKind, StuckPolarity};
+use crate::hwmodel;
 use crate::loghd::codebook::min_bundles;
 use crate::loghd::model::TrainOptions;
 use crate::model::HdClassifier;
@@ -316,13 +329,32 @@ pub struct CampaignResult {
     pub elapsed_s: f64,
 }
 
-/// Run the campaign: solve cells, warm the model caches, fan the
-/// (cell × flip rate × trial) grid out over the worker pool, score.
-pub fn run(cfg: &CampaignConfig) -> Result<CampaignResult> {
+/// Default correlated-line span (rows taken down per failure event).
+pub const DEFAULT_LINE_SPAN: usize = 2;
+/// Default drift σ at severity 1.0, in plane-amplitude units.
+pub const DEFAULT_DRIFT_SIGMA_MAX: f64 = 2.0;
+
+/// Everything the digital and analog campaigns share before a single
+/// fault is drawn: the solved grid, the trained workbench, and the
+/// clean reference points. Built once, swept under any number of fault
+/// models.
+struct Prepared {
+    classes: usize,
+    features: usize,
+    budget_bits: usize,
+    cells: Vec<CampaignCell>,
+    wb: Workbench,
+    clean_conventional: f64,
+    target_accuracy: f64,
+}
+
+/// Solve the equal-memory grid, train + warm the workbench, and verify
+/// every solved cell against the trait-reported fault-surface size.
+fn prepare(cfg: &CampaignConfig) -> Result<Prepared> {
     cfg.validate()?;
-    let t0 = Instant::now();
     let ds = testkit::scaled_dataset(&cfg.dataset, cfg.train_cap, cfg.test_cap)?;
     let classes = ds.spec.classes;
+    let features = ds.spec.features;
     let budget_bits = cfg.budget_bits(classes, cfg.d);
     let hybrid_n = min_bundles(classes, cfg.k) + cfg.hybrid_extra;
     let cells = solve_equal_memory(
@@ -374,34 +406,80 @@ pub fn run(cfg: &CampaignConfig) -> Result<CampaignResult> {
     }
     let clean_conventional = wb.conventional_clean();
     let target_accuracy = cfg.target_frac * clean_conventional;
+    Ok(Prepared {
+        classes,
+        features,
+        budget_bits,
+        cells,
+        wb,
+        clean_conventional,
+        target_accuracy,
+    })
+}
 
+/// Run the campaign: solve cells, warm the model caches, fan the
+/// (cell × flip rate × trial) grid out over the worker pool, score.
+pub fn run(cfg: &CampaignConfig) -> Result<CampaignResult> {
+    let t0 = Instant::now();
+    let prep = prepare(cfg)?;
+    Ok(run_axis(
+        cfg,
+        &prep,
+        FaultModelKind::BitFlip,
+        DEFAULT_LINE_SPAN,
+        DEFAULT_DRIFT_SIGMA_MAX,
+        t0,
+    ))
+}
+
+/// One fault-model leg over a prepared grid: fan the (cell × severity ×
+/// trial) Monte-Carlo out over the worker pool and score it. The
+/// bit-flip kind has stream salt 0 and severity = flip rate, so this is
+/// *exactly* the historical digital campaign for
+/// `FaultModelKind::BitFlip` — byte-identical artifacts outside `meta`.
+fn run_axis(
+    cfg: &CampaignConfig,
+    prep: &Prepared,
+    kind: FaultModelKind,
+    span: usize,
+    drift_sigma_max: f64,
+    t0: Instant,
+) -> CampaignResult {
     // Monte-Carlo grid on the persistent pool. Each job owns its slot
     // and derives its own stream, so scheduling cannot shift a single
     // draw — output is bit-identical at any LOGHD_THREADS.
     let n_ps = cfg.ps.len();
-    let n_jobs = cells.len() * n_ps * cfg.trials;
+    let n_jobs = prep.cells.len() * n_ps * cfg.trials;
     let slots: Vec<AtomicU64> = (0..n_jobs).map(|_| AtomicU64::new(0)).collect();
-    let wb_ref = &wb;
-    let cells_ref = &cells;
+    let wb_ref = &prep.wb;
+    let cells_ref = &prep.cells;
+    let target_accuracy = prep.target_accuracy;
     threadpool::parallel_ranges(n_jobs, threadpool::available_threads(), |lo, hi| {
         for j in lo..hi {
             let ci = j / (n_ps * cfg.trials);
             let rem = j % (n_ps * cfg.trials);
             let (pi, trial) = (rem / cfg.trials, rem % cfg.trials);
             let cell = &cells_ref[ci];
-            let p = cfg.ps[pi];
-            let mut rng =
-                sweep::cell_stream(cfg.seed, &cell.method, cell.precision, p, trial as u64);
+            let t = cfg.ps[pi];
+            let fault = kind.at_severity(t, span, drift_sigma_max);
+            let mut rng = sweep::fault_cell_stream(
+                cfg.seed,
+                kind,
+                &cell.method,
+                cell.precision,
+                t,
+                trial as u64,
+            );
             let acc = wb_ref
-                .evaluate_cell(cell.method, cell.precision, p, &mut rng)
+                .evaluate_cell_fault(cell.method, cell.precision, &fault, &mut rng)
                 .expect("campaign cell evaluation");
             slots[j].store(acc.to_bits(), Ordering::Relaxed);
         }
     });
     let accs: Vec<f64> = slots.iter().map(|s| f64::from_bits(s.load(Ordering::Relaxed))).collect();
 
-    let mut results = Vec::with_capacity(cells.len());
-    for (ci, cell) in cells.iter().enumerate() {
+    let mut results = Vec::with_capacity(prep.cells.len());
+    for (ci, cell) in prep.cells.iter().enumerate() {
         let acc_trials: Vec<Vec<f64>> = (0..n_ps)
             .map(|pi| {
                 (0..cfg.trials)
@@ -417,7 +495,14 @@ pub fn run(cfg: &CampaignConfig) -> Result<CampaignResult> {
             &cfg.ps,
             target_accuracy,
             cfg.bootstrap,
-            &mut sweep::cell_stream(cfg.seed ^ 0xB007, &cell.method, cell.precision, 0.0, 0),
+            &mut sweep::fault_cell_stream(
+                cfg.seed ^ 0xB007,
+                kind,
+                &cell.method,
+                cell.precision,
+                0.0,
+                0,
+            ),
         );
         results.push(CellResult {
             cell: cell.clone(),
@@ -446,8 +531,9 @@ pub fn run(cfg: &CampaignConfig) -> Result<CampaignResult> {
         None
     };
     crate::log_info!(
-        "campaign[{}]: class-axis best {} p<={:.3}, feature-axis best {} p<={:.3}, ratio {:?}",
+        "campaign[{}/{}]: class-axis best {} p<={:.3}, feature-axis best {} p<={:.3}, ratio {:?}",
         cfg.profile,
+        kind.label(),
         class_axis_best.0,
         class_axis_best.1,
         feature_axis_best.0,
@@ -455,11 +541,11 @@ pub fn run(cfg: &CampaignConfig) -> Result<CampaignResult> {
         resilience_ratio
     );
 
-    Ok(CampaignResult {
+    CampaignResult {
         config: cfg.clone(),
-        classes,
-        budget_bits,
-        clean_conventional,
+        classes: prep.classes,
+        budget_bits: prep.budget_bits,
+        clean_conventional: prep.clean_conventional,
         target_accuracy,
         cells: results,
         class_axis_best,
@@ -467,7 +553,7 @@ pub fn run(cfg: &CampaignConfig) -> Result<CampaignResult> {
         resilience_ratio,
         threads: threadpool::available_threads(),
         elapsed_s: t0.elapsed().as_secs_f64(),
-    })
+    }
 }
 
 /// Percentile-bootstrap 95% CI on the resilience metric: resample the
@@ -626,6 +712,297 @@ impl CampaignResult {
             None => out.push_str(
                 "resilience ratio: undefined (feature-axis never reaches the target accuracy)\n",
             ),
+        }
+        out
+    }
+}
+
+/// Analog campaign scope: one digital base config swept under several
+/// fault-model families on their normalized severity grids.
+#[derive(Debug, Clone)]
+pub struct AnalogConfig {
+    pub base: CampaignConfig,
+    /// Fault-model families to sweep; artifact order follows this list.
+    pub kinds: Vec<FaultModelKind>,
+    /// Correlated-line failure span (rows taken down per event).
+    pub span: usize,
+    /// Drift σ at severity 1.0, in plane-amplitude units.
+    pub drift_sigma_max: f64,
+}
+
+impl AnalogConfig {
+    /// CI-sized profile: the digital smoke grid under all four models.
+    pub fn smoke() -> Self {
+        Self {
+            base: CampaignConfig::smoke(),
+            kinds: FaultModelKind::ALL.to_vec(),
+            span: DEFAULT_LINE_SPAN,
+            drift_sigma_max: DEFAULT_DRIFT_SIGMA_MAX,
+        }
+    }
+
+    /// Paper-scale profile (ISOLET, D=2000) under all four models.
+    pub fn full() -> Self {
+        Self { base: CampaignConfig::full(), ..Self::smoke() }
+    }
+
+    fn validate(&self) -> Result<()> {
+        self.base.validate()?;
+        if self.kinds.is_empty() {
+            bail!("analog campaign needs at least one fault model");
+        }
+        for (i, k) in self.kinds.iter().enumerate() {
+            if self.kinds[..i].contains(k) {
+                bail!("duplicate fault model '{}' in the sweep list", k.label());
+            }
+        }
+        if self.span == 0 {
+            bail!("line-failure span must be >= 1");
+        }
+        if !self.drift_sigma_max.is_finite() || self.drift_sigma_max <= 0.0 {
+            bail!("drift sigma max must be positive, got {}", self.drift_sigma_max);
+        }
+        Ok(())
+    }
+}
+
+/// One fault-model leg of an analog campaign.
+#[derive(Debug, Clone)]
+pub struct AnalogRun {
+    pub kind: FaultModelKind,
+    pub campaign: CampaignResult,
+}
+
+/// Whole analog-campaign outcome (serialize with
+/// [`AnalogResult::to_json`]).
+#[derive(Debug, Clone)]
+pub struct AnalogResult {
+    pub config: AnalogConfig,
+    pub classes: usize,
+    pub features: usize,
+    pub budget_bits: usize,
+    pub runs: Vec<AnalogRun>,
+    pub threads: usize,
+    pub elapsed_s: f64,
+}
+
+/// Run the equal-memory campaign under every configured fault model.
+/// The grid is solved and the workbench trained **once**; each model
+/// then sweeps the same cells with its own salted fault streams, so
+/// per-model results are independent and the bit-flip leg reproduces
+/// the digital campaign exactly.
+pub fn run_analog(cfg: &AnalogConfig) -> Result<AnalogResult> {
+    cfg.validate()?;
+    let t0 = Instant::now();
+    let prep = prepare(&cfg.base)?;
+    let mut runs = Vec::with_capacity(cfg.kinds.len());
+    for &kind in &cfg.kinds {
+        crate::log_info!(
+            "analog[{}]: sweeping {} ({})",
+            cfg.base.profile,
+            kind.label(),
+            hwmodel::technology(kind).name
+        );
+        let campaign =
+            run_axis(&cfg.base, &prep, kind, cfg.span, cfg.drift_sigma_max, Instant::now());
+        runs.push(AnalogRun { kind, campaign });
+    }
+    Ok(AnalogResult {
+        config: cfg.clone(),
+        classes: prep.classes,
+        features: prep.features,
+        budget_bits: prep.budget_bits,
+        runs,
+        threads: threadpool::available_threads(),
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Per-query op counts of one solved cell, for the technology-side
+/// energy/latency annotation of the analog artifact (Hybrid counts its
+/// retained dimensions; DecoHD's rank plays the bundle role).
+fn cell_ops(cell: &CampaignCell, features: usize, d: usize, classes: usize) -> hwmodel::OpCounts {
+    let bits = cell.precision.bits();
+    match cell.method {
+        Method::Conventional => hwmodel::ops::conventional(features, d, classes, bits),
+        Method::SparseHd { sparsity } => {
+            hwmodel::ops::sparsehd(features, d, classes, sparsity, bits)
+        }
+        Method::LogHd { n, .. } => hwmodel::ops::loghd(features, d, classes, n, bits),
+        Method::Hybrid { n, sparsity, .. } => {
+            hwmodel::ops::loghd(features, retained_dims(d, sparsity), classes, n, bits)
+        }
+        Method::DecoHd { rank } => hwmodel::ops::loghd(features, d, classes, rank, bits),
+    }
+}
+
+/// The per-model severity grid in physical parameter units — what the
+/// normalized `severities` axis means for each fault family. Derived
+/// from [`FaultModelKind::at_severity`] so artifact and engine cannot
+/// disagree.
+fn severity_params(kind: FaultModelKind, ps: &[f64], span: usize, drift_sigma_max: f64) -> Value {
+    let grid: Vec<Value> = ps
+        .iter()
+        .map(|&t| {
+            let v = match kind.at_severity(t, span, drift_sigma_max) {
+                FaultModel::BitFlip { p } => p,
+                FaultModel::GaussianDrift { sigma } => sigma,
+                FaultModel::StuckAt { frac, .. } => frac,
+                FaultModel::LineFailure { rate, .. } => rate,
+            };
+            json::num(v)
+        })
+        .collect();
+    match kind {
+        FaultModelKind::BitFlip => json::obj(vec![("p", json::arr(grid))]),
+        FaultModelKind::GaussianDrift => json::obj(vec![("sigma", json::arr(grid))]),
+        FaultModelKind::StuckAt => json::obj(vec![
+            ("frac", json::arr(grid)),
+            ("polarity", json::s(StuckPolarity::Mixed.label())),
+        ]),
+        FaultModelKind::LineFailure => json::obj(vec![
+            ("rate", json::arr(grid)),
+            ("span", json::num(span.max(1) as f64)),
+        ]),
+    }
+}
+
+impl AnalogResult {
+    /// Serialize to the `loghd-analog/v1` schema (the shape
+    /// `results/BENCH_analog.json` and the analog golden consume). Each
+    /// model leg embeds its full `loghd-robustness/v1` campaign doc
+    /// (nested `meta` stripped), so everything outside the top-level
+    /// `meta` is deterministic for a fixed config, at any thread count.
+    pub fn to_json(&self) -> Value {
+        let cfg = &self.config;
+        let base = &cfg.base;
+        let models: Vec<Value> = self
+            .runs
+            .iter()
+            .map(|run| {
+                let tech = hwmodel::technology(run.kind);
+                let eff = |label: &str| -> Value {
+                    match run.campaign.cells.iter().find(|r| r.cell.label() == label) {
+                        Some(r) => {
+                            let ops = cell_ops(&r.cell, self.features, base.d, self.classes);
+                            let est = hwmodel::estimate(&ops, &tech.platform);
+                            json::obj(vec![
+                                ("label", json::s(label)),
+                                ("energy_uj", json::num(est.energy_uj)),
+                                ("latency_us", json::num(est.latency_us)),
+                            ])
+                        }
+                        None => Value::Null,
+                    }
+                };
+                json::obj(vec![
+                    ("fault_model", json::s(run.kind.label())),
+                    (
+                        "params",
+                        severity_params(run.kind, &base.ps, cfg.span, cfg.drift_sigma_max),
+                    ),
+                    (
+                        "technology",
+                        json::obj(vec![
+                            ("name", json::s(tech.name)),
+                            ("cell", json::s(tech.cell)),
+                            ("fault_mode", json::s(tech.fault_mode)),
+                            ("platform", json::s(tech.platform.name)),
+                        ]),
+                    ),
+                    (
+                        "efficiency",
+                        json::obj(vec![
+                            ("class_axis_best", eff(&run.campaign.class_axis_best.0)),
+                            ("feature_axis_best", eff(&run.campaign.feature_axis_best.0)),
+                        ]),
+                    ),
+                    (
+                        "campaign",
+                        crate::testkit::golden::without_keys(run.campaign.to_json(), &["meta"]),
+                    ),
+                ])
+            })
+            .collect();
+        let ratios = json::obj(
+            self.runs
+                .iter()
+                .map(|run| {
+                    let v = match run.campaign.resilience_ratio {
+                        Some(r) => json::num(r),
+                        None => Value::Null,
+                    };
+                    (run.kind.label(), v)
+                })
+                .collect(),
+        );
+        json::obj(vec![
+            ("schema", json::s("loghd-analog/v1")),
+            ("profile", json::s(base.profile.as_str())),
+            ("dataset", json::s(base.dataset.as_str())),
+            ("d", json::num(base.d as f64)),
+            ("classes", json::num(self.classes as f64)),
+            ("features", json::num(self.features as f64)),
+            ("budget_bits", json::num(self.budget_bits as f64)),
+            ("seed", json::num(base.seed as f64)),
+            ("trials", json::num(base.trials as f64)),
+            ("severities", json::arr(base.ps.iter().map(|p| json::num(*p)).collect())),
+            ("span", json::num(cfg.span as f64)),
+            ("drift_sigma_max", json::num(cfg.drift_sigma_max)),
+            ("models", json::arr(models)),
+            ("resilience_ratios", ratios),
+            (
+                "meta",
+                json::obj(vec![
+                    ("threads", json::num(self.threads as f64)),
+                    ("elapsed_s", json::num(self.elapsed_s)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Write the default artifact pair — `results/BENCH_analog.json`
+    /// plus the repo-root snapshot (the robustness-campaign convention).
+    pub fn write_default_artifacts(&self) -> std::io::Result<()> {
+        let text = json::to_string_pretty(&self.to_json());
+        std::fs::create_dir_all("results")?;
+        std::fs::write("results/BENCH_analog.json", &text)?;
+        std::fs::write("BENCH_analog.json", &text)
+    }
+
+    /// Human summary for the CLI / bench stdout.
+    pub fn summary(&self) -> String {
+        let base = &self.config.base;
+        let mut out = format!(
+            "analog fault-surface campaign [{}]: {} D={} C={} budget={} bits, {} fault models\n",
+            base.profile,
+            base.dataset,
+            base.d,
+            self.classes,
+            self.budget_bits,
+            self.runs.len(),
+        );
+        out.push_str(&format!(
+            "{:<8} {:<34} {:<34} {:<34} {:>7}\n",
+            "model", "technology", "class-axis best", "feature-axis best", "ratio"
+        ));
+        for run in &self.runs {
+            let c = &run.campaign;
+            let ratio = match c.resilience_ratio {
+                Some(r) => format!("{r:.2}x"),
+                None => "n/a".into(),
+            };
+            let class_best = format!("{} t<={:.3}", c.class_axis_best.0, c.class_axis_best.1);
+            let feature_best =
+                format!("{} t<={:.3}", c.feature_axis_best.0, c.feature_axis_best.1);
+            out.push_str(&format!(
+                "{:<8} {:<34} {:<34} {:<34} {:>7}\n",
+                run.kind.label(),
+                hwmodel::technology(run.kind).name,
+                class_best,
+                feature_best,
+                ratio,
+            ));
         }
         out
     }
@@ -808,6 +1185,87 @@ mod tests {
         assert_eq!(v.get("schema").unwrap().as_str(), Some("loghd-robustness/v1"));
         assert_eq!(v.get("cells").unwrap().as_array().unwrap().len(), res.cells.len());
         assert!(res.summary().contains("equal-memory"));
+    }
+
+    #[test]
+    fn severity_params_report_physical_grids() {
+        let ps = [0.0, 0.5, 1.0];
+        let nums = |v: &Value, key: &str| -> Vec<f64> {
+            v.get(key)
+                .unwrap()
+                .as_array()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64().unwrap())
+                .collect()
+        };
+        let v = severity_params(FaultModelKind::BitFlip, &ps, 2, 2.0);
+        assert_eq!(nums(&v, "p"), ps.to_vec());
+        let v = severity_params(FaultModelKind::GaussianDrift, &ps, 2, 2.0);
+        assert_eq!(nums(&v, "sigma"), vec![0.0, 1.0, 2.0]);
+        let v = severity_params(FaultModelKind::StuckAt, &ps, 2, 2.0);
+        assert_eq!(nums(&v, "frac"), ps.to_vec());
+        assert_eq!(v.get("polarity").unwrap().as_str(), Some("mixed"));
+        // Line rates are chosen so span-expanded row coverage ~= t.
+        let v = severity_params(FaultModelKind::LineFailure, &ps, 2, 2.0);
+        let rates = nums(&v, "rate");
+        assert_eq!(v.get("span").unwrap().as_f64(), Some(2.0));
+        assert_eq!(rates[0], 0.0);
+        assert_eq!(rates[2], 1.0);
+        let coverage = 1.0 - (1.0 - rates[1]) * (1.0 - rates[1]);
+        assert!((coverage - 0.5).abs() < 1e-12, "coverage {coverage}");
+    }
+
+    #[test]
+    fn analog_validate_rejects_degenerate_configs() {
+        let bad = |f: fn(&mut AnalogConfig)| {
+            let mut cfg = AnalogConfig { base: micro(), ..AnalogConfig::smoke() };
+            f(&mut cfg);
+            run_analog(&cfg).unwrap_err()
+        };
+        assert!(bad(|c| c.kinds.clear()).to_string().contains("fault model"));
+        assert!(bad(|c| c.kinds = vec![FaultModelKind::StuckAt; 2])
+            .to_string()
+            .contains("duplicate"));
+        assert!(bad(|c| c.span = 0).to_string().contains("span"));
+        assert!(bad(|c| c.drift_sigma_max = f64::NAN).to_string().contains("sigma"));
+        assert!(bad(|c| c.base.trials = 0).to_string().contains("trials"));
+    }
+
+    #[test]
+    fn analog_micro_campaign_sweeps_all_kinds() {
+        let digital = run(&micro()).unwrap();
+        let cfg = AnalogConfig { base: micro(), ..AnalogConfig::smoke() };
+        let res = run_analog(&cfg).unwrap();
+        assert_eq!(res.runs.len(), 4);
+        let strip = |v: Value| golden::without_keys(v, &["meta"]);
+        // The bit-flip leg IS the digital campaign: stream salt 0,
+        // severity = flip rate, same draw-per-plane discipline.
+        assert_eq!(
+            json::to_string(&strip(res.runs[0].campaign.to_json())),
+            json::to_string(&strip(digital.to_json()))
+        );
+        for leg in &res.runs {
+            assert_eq!(leg.campaign.cells.len(), digital.cells.len());
+            for (ra, rd) in leg.campaign.cells.iter().zip(&digital.cells) {
+                assert_eq!(ra.cell.label(), rd.cell.label());
+                // Severity 0 is a no-op under every model, so the clean
+                // row of the grid is bit-identical across fault models.
+                assert_eq!(ra.acc_trials[0], rd.acc_trials[0], "{}", ra.cell.label());
+            }
+        }
+        let v = res.to_json();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("loghd-analog/v1"));
+        let models = v.get("models").unwrap().as_array().unwrap();
+        assert_eq!(models.len(), 4);
+        assert_eq!(models[0].get("fault_model").unwrap().as_str(), Some("bitflip"));
+        let energy = models[0]
+            .get_path(&["efficiency", "class_axis_best", "energy_uj"])
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(energy > 0.0, "energy {energy}");
+        assert!(res.summary().contains("analog fault-surface"));
     }
 
     #[test]

@@ -7,6 +7,9 @@ pub mod figures;
 pub mod metrics;
 pub mod sweep;
 
-pub use campaign::{solve_equal_memory, stored_bits, CampaignConfig, CampaignResult};
+pub use campaign::{
+    run_analog, solve_equal_memory, stored_bits, AnalogConfig, AnalogResult, CampaignConfig,
+    CampaignResult,
+};
 pub use metrics::{accuracy, confusion, mean_std, percentile, sustained_until};
-pub use sweep::{cell_stream, corrupt, corrupt_masked, Method, Workbench};
+pub use sweep::{cell_stream, corrupt, corrupt_masked, fault_cell_stream, Method, Workbench};

@@ -58,7 +58,7 @@ use crate::baselines::{DecoHdModel, HybridModel, SparseHdModel};
 use crate::data::Dataset;
 use crate::encoder::Encoder;
 use crate::eval::metrics::accuracy;
-use crate::faults;
+use crate::faults::{self, FaultModel, FaultModelKind};
 use crate::hd::prototype::{refine_conventional, train_prototypes};
 use crate::hd::similarity::activations;
 use crate::loghd::model::{LogHdModel, TrainOptions};
@@ -315,8 +315,26 @@ impl Workbench {
         flip_p: f64,
         rng: &mut SplitMix64,
     ) -> Result<f64> {
+        self.evaluate_cell_fault(method, precision, &FaultModel::BitFlip { p: flip_p }, rng)
+    }
+
+    /// [`Self::evaluate_cell`] generalized over the analog fault models:
+    /// build the cell [`instance`], drive its stored planes through
+    /// [`model::inject_faults`] (one sampled realization per plane, in
+    /// surface order), score with the trait's `predict`. At
+    /// [`FaultModel::BitFlip`] this IS `evaluate_cell` — same stream,
+    /// same flips, same accuracy.
+    ///
+    /// [`instance`]: Self::instance
+    pub fn evaluate_cell_fault(
+        &self,
+        method: Method,
+        precision: Precision,
+        fault: &FaultModel,
+        rng: &mut SplitMix64,
+    ) -> Result<f64> {
         let mut inst = self.instance(method, precision)?;
-        model::inject_value_faults(inst.as_mut(), flip_p, rng);
+        model::inject_faults(inst.as_mut(), fault, rng);
         let pred = inst.predict(&self.enc_test);
         Ok(accuracy(&pred, &self.y_test))
     }
@@ -361,6 +379,22 @@ pub fn cell_stream(
     let mut s = s.fork(precision.bits() as u64);
     let mut s = s.fork(flip_p.to_bits());
     s.fork(trial)
+}
+
+/// [`cell_stream`] extended with the fault-model axis: the kind's salt
+/// is folded into the campaign seed, so each fault model sweeps its own
+/// independent Monte-Carlo streams. [`FaultModelKind::BitFlip`] salts
+/// with 0 — its streams (and therefore the whole digital campaign) are
+/// byte-identical to [`cell_stream`]'s.
+pub fn fault_cell_stream(
+    seed: u64,
+    kind: FaultModelKind,
+    method: &Method,
+    precision: Precision,
+    severity: f64,
+    trial: u64,
+) -> SplitMix64 {
+    cell_stream(seed ^ kind.stream_salt(), method, precision, severity, trial)
 }
 
 /// Quantize to `precision`, inject faults (per-value single-random-bit

@@ -1,19 +1,43 @@
-//! Fault injection (paper §IV-A): random bit flips with probability `p`
-//! applied to the *stored model state* prior to evaluation. Test inputs
-//! are never corrupted.
+//! Fault injection (paper §IV-A plus analog extensions): perturbations
+//! of the *stored model state* prior to evaluation. Test inputs are
+//! never corrupted.
 //!
-//! Fault model: with probability `p`, each stored VALUE suffers one flip
-//! of a uniformly-chosen bit of its representation (`flip_values_*`).
-//! This is the standard memory-cell upset model and the only reading
-//! consistent with the paper's figures: its x-axis reaches p = 0.9 with
-//! non-trivial accuracy, which is impossible under independent per-bit
-//! flips (at per-bit p = 0.2, 1-0.8^8 = 83% of all 8-bit words are already
-//! corrupted — every method collapses). The per-bit i.i.d. variant is also
-//! provided (`flip_positions`/`flip_packed`) for ablations.
+//! Digital fault model: with probability `p`, each stored VALUE suffers
+//! one flip of a uniformly-chosen bit of its representation
+//! (`flip_values_*`). This is the standard memory-cell upset model and
+//! the only reading consistent with the paper's figures: its x-axis
+//! reaches p = 0.9 with non-trivial accuracy, which is impossible under
+//! independent per-bit flips (at per-bit p = 0.2, 1-0.8^8 = 83% of all
+//! 8-bit words are already corrupted — every method collapses). The
+//! per-bit i.i.d. variant is also provided (`flip_positions`/
+//! `flip_packed`) for ablations.
 //!
-//! For SparseHD the flips target only non-pruned coordinates (the pruned
-//! ones are not stored); for LogHD they target both the bundles and the
-//! stored activation profiles — exactly the paper's protocol.
+//! Analog fault models ([`FaultModel`]) extend the digital one with the
+//! dominant in-memory-compute fault surfaces (Karunaratne et al.,
+//! "In-memory hyperdimensional computing"):
+//!
+//! - [`FaultModel::GaussianDrift`] — conductance drift: every stored
+//!   value gains `sigma · A · z`, `z ~ N(0,1)`, where `A` is the
+//!   plane's full-scale amplitude (max |value| for f32 planes, the
+//!   quantizer rail for packed planes),
+//! - [`FaultModel::StuckAt`] — a Bernoulli(`frac`) subset of cells is
+//!   pinned to a conductance rail (`low` = −A, `high` = +A, `mixed` =
+//!   fair coin per victim),
+//! - [`FaultModel::LineFailure`] — correlated word-line failures: each
+//!   row starts failing with probability `rate` and takes the next
+//!   `span − 1` rows down with it; failed rows read as the low rail.
+//!
+//! Sampling ([`sample_plane_fault`]) is separated from application
+//! (`apply_analog_f32` here, `quant::apply_analog_packed` for packed
+//! planes) so every storage domain consumes the *same* rng stream for
+//! the same fault model — the discipline that keeps campaign artifacts
+//! bit-identical across thread counts. `FaultModel::BitFlip` draws
+//! exactly the stream of [`value_flip_mask`], so the digital golden is
+//! byte-identical through the analog entry point.
+//!
+//! For SparseHD the faults target only non-pruned coordinates (the
+//! pruned ones are not stored); for LogHD they target both the bundles
+//! and the stored activation profiles — exactly the paper's protocol.
 //!
 //! Implementation: geometric skip sampling over the value/bit stream —
 //! O(flips) instead of O(total), exact for i.i.d. Bernoulli at any p.
@@ -51,27 +75,91 @@ pub fn flip_positions(total_bits: usize, p: f64, rng: &mut SplitMix64) -> Vec<us
     out
 }
 
-/// Flip bits of a packed tensor in place with probability `p` per bit.
-/// Returns the number of flips.
-pub fn flip_packed(t: &mut PackedTensor, p: f64, rng: &mut SplitMix64) -> usize {
-    let positions = flip_positions(t.total_bits(), p, rng);
+/// Storage that exposes its value/bit layout to the shared
+/// draw-then-apply appliers. The one abstraction both storage domains
+/// (packed level codes, raw f32 words) implement, so the digital and
+/// analog paths share a single sampling entry point instead of the
+/// former per-domain wrapper pairs.
+pub trait FaultTarget {
+    /// Number of stored values.
+    fn value_count(&self) -> usize;
+    /// Bits per stored value (32 for f32 storage).
+    fn bits_per_value(&self) -> u32;
+    /// Flip one bit of the flat `value_count() * bits_per_value()`
+    /// storage-bit stream.
+    fn flip_storage_bit(&mut self, pos: usize);
+}
+
+impl FaultTarget for PackedTensor {
+    fn value_count(&self) -> usize {
+        self.count()
+    }
+
+    fn bits_per_value(&self) -> u32 {
+        self.bits()
+    }
+
+    fn flip_storage_bit(&mut self, pos: usize) {
+        self.flip_bit(pos);
+    }
+}
+
+impl FaultTarget for [f32] {
+    fn value_count(&self) -> usize {
+        self.len()
+    }
+
+    fn bits_per_value(&self) -> u32 {
+        32
+    }
+
+    fn flip_storage_bit(&mut self, pos: usize) {
+        let idx = pos / 32;
+        let bit = pos % 32;
+        self[idx] = f32::from_bits(self[idx].to_bits() ^ (1u32 << bit));
+    }
+}
+
+/// Per-bit i.i.d. fault model on any [`FaultTarget`]: flip each storage
+/// bit independently with probability `p`. Returns the number of flips.
+pub fn flip_bits<T: FaultTarget + ?Sized>(t: &mut T, p: f64, rng: &mut SplitMix64) -> usize {
+    let total = t.value_count() * t.bits_per_value() as usize;
+    let positions = flip_positions(total, p, rng);
     for &pos in &positions {
-        t.flip_bit(pos);
+        t.flip_storage_bit(pos);
     }
     positions.len()
 }
 
+/// Per-VALUE fault model on any [`FaultTarget`]: with probability `p`,
+/// flip one uniformly-chosen bit of each stored value. Returns flips.
+pub fn flip_values<T: FaultTarget + ?Sized>(t: &mut T, p: f64, rng: &mut SplitMix64) -> usize {
+    let mask = value_flip_mask(t.value_count(), t.bits_per_value(), p, rng);
+    apply_value_mask(t, &mask);
+    mask.len()
+}
+
+/// Apply a sampled per-value flip mask: flip `bit` of value `v` for
+/// every `(v, bit)` pair. The single mask-application rule every fault
+/// site shares — the model core's plane driver
+/// (`model::inject_faults` → `apply_flips`) and the differential tests
+/// all route through it, so the bit addressing cannot drift between
+/// storage domains.
+pub fn apply_value_mask<T: FaultTarget + ?Sized>(t: &mut T, mask: &[(usize, u32)]) {
+    let bits = t.bits_per_value() as usize;
+    for &(v, bit) in mask {
+        t.flip_storage_bit(v * bits + bit as usize);
+    }
+}
+
+/// Flip bits of a packed tensor in place with probability `p` per bit.
+pub fn flip_packed(t: &mut PackedTensor, p: f64, rng: &mut SplitMix64) -> usize {
+    flip_bits(t, p, rng)
+}
+
 /// Flip bits in raw f32 storage under the per-bit i.i.d. model.
 pub fn flip_f32(data: &mut [f32], p: f64, rng: &mut SplitMix64) -> usize {
-    let total = data.len() * 32;
-    let positions = flip_positions(total, p, rng);
-    for &pos in &positions {
-        let idx = pos / 32;
-        let bit = pos % 32;
-        let bits = data[idx].to_bits() ^ (1u32 << bit);
-        data[idx] = f32::from_bits(bits);
-    }
-    positions.len()
+    flip_bits(data, p, rng)
 }
 
 /// Sample the per-VALUE fault mask: each entry is a `(victim index,
@@ -90,41 +178,288 @@ pub fn value_flip_mask(
     victims.into_iter().map(|v| (v, rng.below(bits as u64) as u32)).collect()
 }
 
-/// Apply a sampled per-value flip mask to a packed tensor: flip `bit`
-/// of field `v` for every `(v, bit)` pair. The single mask-application
-/// rule every packed fault site shares — [`flip_values_packed`], the
-/// model core's plane driver (`model::inject_value_faults` →
-/// `apply_flips`), and the differential tests all route through it, so
-/// the bit addressing cannot drift between them.
+/// Apply a sampled per-value flip mask to a packed tensor.
 pub fn apply_value_mask_packed(t: &mut PackedTensor, mask: &[(usize, u32)]) {
-    let bits = t.bits() as usize;
-    for &(v, bit) in mask {
-        t.flip_bit(v * bits + bit as usize);
-    }
+    apply_value_mask(t, mask);
 }
 
 /// Apply a sampled per-value flip mask to raw f32 storage (the IEEE-754
-/// word of value `v` has `bit` xored). Twin of
-/// [`apply_value_mask_packed`] for the f32 planes.
+/// word of value `v` has `bit` xored).
 pub fn apply_value_mask_f32(data: &mut [f32], mask: &[(usize, u32)]) {
-    for &(v, bit) in mask {
-        data[v] = f32::from_bits(data[v].to_bits() ^ (1u32 << bit));
-    }
+    apply_value_mask(data, mask);
 }
 
-/// Per-VALUE fault model (the evaluation protocol): with probability `p`,
-/// flip one uniformly-chosen bit of each packed field. Returns flips.
+/// Per-VALUE fault model (the evaluation protocol) on a packed tensor.
 pub fn flip_values_packed(t: &mut PackedTensor, p: f64, rng: &mut SplitMix64) -> usize {
-    let mask = value_flip_mask(t.count(), t.bits(), p, rng);
-    apply_value_mask_packed(t, &mask);
-    mask.len()
+    flip_values(t, p, rng)
 }
 
 /// Per-VALUE fault model on raw f32 storage.
 pub fn flip_values_f32(data: &mut [f32], p: f64, rng: &mut SplitMix64) -> usize {
-    let mask = value_flip_mask(data.len(), 32, p, rng);
-    apply_value_mask_f32(data, &mask);
-    mask.len()
+    flip_values(data, p, rng)
+}
+
+/// Rail a stuck cell is pinned to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StuckPolarity {
+    /// Every victim reads the low rail (−A / minimum level code).
+    Low,
+    /// Every victim reads the high rail (+A / maximum level code).
+    High,
+    /// Fair coin per victim (one extra draw each, in victim order).
+    Mixed,
+}
+
+impl StuckPolarity {
+    pub fn label(self) -> &'static str {
+        match self {
+            StuckPolarity::Low => "low",
+            StuckPolarity::High => "high",
+            StuckPolarity::Mixed => "mixed",
+        }
+    }
+}
+
+/// A memory fault model, parameterized at one severity point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultModel {
+    /// Digital per-value upset: with probability `p` a stored value has
+    /// one uniformly-chosen bit of its representation flipped. Draws
+    /// exactly the [`value_flip_mask`] stream.
+    BitFlip { p: f64 },
+    /// Gaussian conductance drift: every stored value gains
+    /// `sigma · A · z` with `z ~ N(0,1)` and `A` the plane amplitude.
+    GaussianDrift { sigma: f64 },
+    /// A Bernoulli(`frac`) subset of cells pinned to a rail.
+    StuckAt { frac: f64, polarity: StuckPolarity },
+    /// Correlated row failures: each row starts failing with
+    /// probability `rate`; a failure takes the following `span − 1`
+    /// rows down too. Failed rows read as the low rail.
+    LineFailure { rate: f64, span: usize },
+}
+
+impl FaultModel {
+    pub fn kind(&self) -> FaultModelKind {
+        match self {
+            FaultModel::BitFlip { .. } => FaultModelKind::BitFlip,
+            FaultModel::GaussianDrift { .. } => FaultModelKind::GaussianDrift,
+            FaultModel::StuckAt { .. } => FaultModelKind::StuckAt,
+            FaultModel::LineFailure { .. } => FaultModelKind::LineFailure,
+        }
+    }
+}
+
+/// The four fault-model families, parameter-free (the campaign sweeps
+/// each over a normalized severity grid).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultModelKind {
+    BitFlip,
+    GaussianDrift,
+    StuckAt,
+    LineFailure,
+}
+
+impl FaultModelKind {
+    pub const ALL: [Self; 4] =
+        [Self::BitFlip, Self::GaussianDrift, Self::StuckAt, Self::LineFailure];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultModelKind::BitFlip => "bitflip",
+            FaultModelKind::GaussianDrift => "drift",
+            FaultModelKind::StuckAt => "stuckat",
+            FaultModelKind::LineFailure => "line",
+        }
+    }
+
+    /// Parse a CLI spelling (`--fault-model`), accepting the common
+    /// aliases. Returns `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "bitflip" | "flip" | "digital" => Some(FaultModelKind::BitFlip),
+            "drift" | "gaussian" => Some(FaultModelKind::GaussianDrift),
+            "stuckat" | "stuck" | "sa" => Some(FaultModelKind::StuckAt),
+            "line" | "lines" | "wordline" => Some(FaultModelKind::LineFailure),
+            _ => None,
+        }
+    }
+
+    /// Per-kind salt folded into the Monte-Carlo cell stream seed.
+    /// `BitFlip` salts with 0 so the analog entry point reproduces the
+    /// digital campaign stream byte-for-byte.
+    pub fn stream_salt(self) -> u64 {
+        match self {
+            FaultModelKind::BitFlip => 0,
+            FaultModelKind::GaussianDrift => 0xD21F_7A11,
+            FaultModelKind::StuckAt => 0x57C4_A7A7,
+            FaultModelKind::LineFailure => 0x11FE_FA11,
+        }
+    }
+
+    /// Instantiate this kind at normalized severity `t ∈ [0, 1]`-ish
+    /// (the shared campaign grid). The grids are normalized so each
+    /// model's curve is comparable at the same `t`:
+    ///
+    /// - bitflip: `p = t` (the paper's axis, unchanged),
+    /// - drift: `sigma = drift_sigma_max · t` (full-scale units),
+    /// - stuckat: `frac = t`, mixed polarity,
+    /// - line: `rate = 1 − (1 − t)^(1/span)`, so the *expected
+    ///   corrupted-row fraction* is ≈ `t` after span expansion.
+    ///
+    /// `t = 0` is a no-op under every kind (zero rng draws), keeping
+    /// the clean grid point exactly clean.
+    pub fn at_severity(self, t: f64, span: usize, drift_sigma_max: f64) -> FaultModel {
+        match self {
+            FaultModelKind::BitFlip => FaultModel::BitFlip { p: t },
+            FaultModelKind::GaussianDrift => {
+                FaultModel::GaussianDrift { sigma: drift_sigma_max * t }
+            }
+            FaultModelKind::StuckAt => {
+                FaultModel::StuckAt { frac: t, polarity: StuckPolarity::Mixed }
+            }
+            FaultModelKind::LineFailure => {
+                let span = span.max(1);
+                let rate = 1.0 - (1.0 - t).powf(1.0 / span as f64);
+                FaultModel::LineFailure { rate, span }
+            }
+        }
+    }
+}
+
+/// One sampled fault realization for one plane — storage-domain
+/// agnostic, so the same realization can be applied to an f32 plane
+/// ([`apply_analog_f32`]) or a packed one (`quant::apply_analog_packed`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlaneFault {
+    /// Digital per-value bit flips (`(victim, bit-within-value)`).
+    Flips(Vec<(usize, u32)>),
+    /// Per-value z-scores; value `i` gains `sigma · A · z[i]`.
+    Drift { sigma: f32, z: Vec<f32> },
+    /// `(victim, stuck-high)` pairs, victims strictly increasing.
+    Stuck(Vec<(usize, bool)>),
+    /// Failed row indices, strictly increasing.
+    Lines(Vec<usize>),
+}
+
+impl PlaneFault {
+    pub fn is_empty(&self) -> bool {
+        match self {
+            PlaneFault::Flips(m) => m.is_empty(),
+            PlaneFault::Drift { z, .. } => z.is_empty(),
+            PlaneFault::Stuck(c) => c.is_empty(),
+            PlaneFault::Lines(r) => r.is_empty(),
+        }
+    }
+
+    /// Number of stored values this realization touches (`cols` is the
+    /// plane's row width, needed for the row-granular line model).
+    pub fn touched(&self, cols: usize) -> usize {
+        match self {
+            PlaneFault::Flips(m) => m.len(),
+            PlaneFault::Drift { z, .. } => z.len(),
+            PlaneFault::Stuck(c) => c.len(),
+            PlaneFault::Lines(r) => r.len() * cols,
+        }
+    }
+}
+
+/// Sample one plane's fault realization from `model`. Draw discipline
+/// (per plane, in surface order — the contract the campaign streams
+/// rely on):
+///
+/// - `BitFlip{p}`: exactly the [`value_flip_mask`] stream (zero draws
+///   at `p = 0`),
+/// - `GaussianDrift{sigma}`: `rows·cols` normals (2 uniforms each);
+///   zero draws at `sigma ≤ 0`,
+/// - `StuckAt{frac, polarity}`: a [`flip_positions`] victim draw, plus
+///   one coin per victim iff polarity is `mixed`,
+/// - `LineFailure{rate, span}`: a [`flip_positions`] draw over rows;
+///   span expansion consumes no draws.
+pub fn sample_plane_fault(
+    model: &FaultModel,
+    rows: usize,
+    cols: usize,
+    bits: u32,
+    rng: &mut SplitMix64,
+) -> PlaneFault {
+    let values = rows * cols;
+    match *model {
+        FaultModel::BitFlip { p } => PlaneFault::Flips(value_flip_mask(values, bits, p, rng)),
+        FaultModel::GaussianDrift { sigma } => {
+            assert!(sigma.is_finite() && sigma >= 0.0, "drift sigma {sigma} out of range");
+            if sigma <= 0.0 || values == 0 {
+                PlaneFault::Drift { sigma: 0.0, z: Vec::new() }
+            } else {
+                PlaneFault::Drift { sigma: sigma as f32, z: rng.normals_f32(values) }
+            }
+        }
+        FaultModel::StuckAt { frac, polarity } => {
+            let victims = flip_positions(values, frac, rng);
+            let cells = victims
+                .into_iter()
+                .map(|v| {
+                    let high = match polarity {
+                        StuckPolarity::Low => false,
+                        StuckPolarity::High => true,
+                        StuckPolarity::Mixed => rng.below(2) == 1,
+                    };
+                    (v, high)
+                })
+                .collect();
+            PlaneFault::Stuck(cells)
+        }
+        FaultModel::LineFailure { rate, span } => {
+            let span = span.max(1);
+            let starts = flip_positions(rows, rate, rng);
+            let mut failed: Vec<usize> = Vec::new();
+            for s in starts {
+                let begin = failed.last().map_or(s, |&last| s.max(last + 1));
+                for r in begin..(s + span).min(rows) {
+                    failed.push(r);
+                }
+            }
+            PlaneFault::Lines(failed)
+        }
+    }
+}
+
+/// Full-scale amplitude of an f32 plane — the analog rail the drift /
+/// stuck-at / line models reference (the conductance range maps to
+/// ±max |value|; floor keeps all-zero planes well-defined).
+pub fn plane_amplitude(data: &[f32]) -> f32 {
+    data.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-12)
+}
+
+/// Apply a sampled plane fault to f32 storage. `cols` is the plane's
+/// row width (row `r` occupies `data[r*cols .. (r+1)*cols]`).
+pub fn apply_analog_f32(data: &mut [f32], cols: usize, fault: &PlaneFault) {
+    match fault {
+        PlaneFault::Flips(mask) => apply_value_mask(data, mask),
+        PlaneFault::Drift { sigma, z } => {
+            if z.is_empty() {
+                return;
+            }
+            assert_eq!(z.len(), data.len(), "drift field does not match plane size");
+            let amp = plane_amplitude(data);
+            for (v, zi) in data.iter_mut().zip(z) {
+                *v += sigma * amp * zi;
+            }
+        }
+        PlaneFault::Stuck(cells) => {
+            let amp = plane_amplitude(data);
+            for &(v, high) in cells {
+                data[v] = if high { amp } else { -amp };
+            }
+        }
+        PlaneFault::Lines(rows) => {
+            let amp = plane_amplitude(data);
+            for &r in rows {
+                for v in &mut data[r * cols..(r + 1) * cols] {
+                    *v = -amp;
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -227,5 +562,129 @@ mod tests {
             manual[v] = f32::from_bits(manual[v].to_bits() ^ (1u32 << bit));
         }
         assert_eq!(manual, direct);
+    }
+
+    #[test]
+    fn bitflip_model_draws_the_value_mask_stream() {
+        // The analog entry point must reproduce the digital sampler's
+        // stream exactly — the invariant the committed digital golden
+        // rides on.
+        let mut a = SplitMix64::new(77);
+        let mut b = SplitMix64::new(77);
+        let fault = sample_plane_fault(&FaultModel::BitFlip { p: 0.3 }, 20, 25, 8, &mut a);
+        let mask = value_flip_mask(500, 8, 0.3, &mut b);
+        assert_eq!(fault, PlaneFault::Flips(mask));
+        assert_eq!(a.next_u64(), b.next_u64(), "stream positions diverged");
+    }
+
+    #[test]
+    fn zero_severity_consumes_no_draws_for_every_kind() {
+        for kind in FaultModelKind::ALL {
+            let model = kind.at_severity(0.0, 2, 2.0);
+            let mut rng = SplitMix64::new(3);
+            let mut probe = rng.clone();
+            let fault = sample_plane_fault(&model, 8, 16, 8, &mut rng);
+            assert!(fault.is_empty(), "{}: non-empty fault at t=0", kind.label());
+            assert_eq!(
+                rng.next_u64(),
+                probe.next_u64(),
+                "{}: rng consumed at t=0",
+                kind.label()
+            );
+        }
+    }
+
+    #[test]
+    fn drift_perturbs_at_plane_scale() {
+        let mut rng = SplitMix64::new(21);
+        let fault = sample_plane_fault(
+            &FaultModel::GaussianDrift { sigma: 0.1 },
+            10,
+            10,
+            32,
+            &mut rng,
+        );
+        let mut data = vec![2.0f32; 100];
+        apply_analog_f32(&mut data, 10, &fault);
+        assert!(data.iter().any(|&v| v != 2.0));
+        // amplitude was 2.0, so perturbations are ~N(0, 0.2) around 2.0
+        let mean = data.iter().sum::<f32>() / 100.0;
+        assert!((mean - 2.0).abs() < 0.5, "mean {mean}");
+    }
+
+    #[test]
+    fn stuck_cells_sit_on_the_rails() {
+        let mut rng = SplitMix64::new(33);
+        let fault = sample_plane_fault(
+            &FaultModel::StuckAt { frac: 0.5, polarity: StuckPolarity::High },
+            1,
+            200,
+            32,
+            &mut rng,
+        );
+        let cells = match &fault {
+            PlaneFault::Stuck(c) => c.clone(),
+            other => panic!("expected Stuck, got {other:?}"),
+        };
+        assert!(cells.iter().all(|&(_, high)| high));
+        let mut data = vec![-0.5f32; 200];
+        apply_analog_f32(&mut data, 200, &fault);
+        for &(v, _) in &cells {
+            assert_eq!(data[v], 0.5, "victim {v} not pinned to +A");
+        }
+    }
+
+    #[test]
+    fn line_failures_cover_contiguous_spans() {
+        let mut rng = SplitMix64::new(55);
+        let fault = sample_plane_fault(
+            &FaultModel::LineFailure { rate: 0.2, span: 3 },
+            40,
+            8,
+            32,
+            &mut rng,
+        );
+        let rows = match &fault {
+            PlaneFault::Lines(r) => r.clone(),
+            other => panic!("expected Lines, got {other:?}"),
+        };
+        assert!(!rows.is_empty());
+        for w in rows.windows(2) {
+            assert!(w[0] < w[1], "rows not strictly increasing: {rows:?}");
+        }
+        assert!(rows.iter().all(|&r| r < 40));
+        let mut data = vec![1.0f32; 40 * 8];
+        apply_analog_f32(&mut data, 8, &fault);
+        for r in 0..40 {
+            let failed = rows.contains(&r);
+            for c in 0..8 {
+                let v = data[r * 8 + c];
+                if failed {
+                    assert_eq!(v, -1.0, "row {r} should read the low rail");
+                } else {
+                    assert_eq!(v, 1.0, "row {r} should be untouched");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parse_round_trips_labels() {
+        for kind in FaultModelKind::ALL {
+            assert_eq!(FaultModelKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(FaultModelKind::parse("no-such-model"), None);
+    }
+
+    #[test]
+    fn line_severity_normalization_hits_expected_row_fraction() {
+        // rate = 1 - (1-t)^(1/span) means P(row in some span) ≈ t.
+        let model = FaultModelKind::LineFailure.at_severity(0.3, 2, 2.0);
+        let FaultModel::LineFailure { rate, span } = model else {
+            panic!("wrong kind");
+        };
+        assert_eq!(span, 2);
+        let coverage = 1.0 - (1.0 - rate) * (1.0 - rate);
+        assert!((coverage - 0.3).abs() < 1e-12, "coverage {coverage}");
     }
 }

@@ -17,6 +17,8 @@
 //! which is exactly why the paper's dense class-axis reduction wins at
 //! matched memory.
 
+use crate::faults::FaultModelKind;
+
 /// Per-query operation counts for one model configuration.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OpCounts {
@@ -129,6 +131,82 @@ pub const GPU: Platform = Platform {
     sparse_util: 0.6,
 };
 
+/// Analog in-memory compute (AIMC) platforms for the analog fault
+/// campaign. The similarity stage runs *inside* the crossbar (Ohm's-law
+/// MACs, ~0.03–0.05 pJ each, system-amortized per Karunaratne et al.
+/// class-vector AIMC and ISAAC-class ReRAM numbers); the trade is
+/// exactly the fault surface `faults::FaultModel` injects — drifting,
+/// stuck, and line-correlated conductances. Sparse formats pay dearly
+/// here: a crossbar computes dense rows whether or not values are
+/// pruned, so gather-style access forfeits most of the array.
+pub const PCM_AIMC: Platform = Platform {
+    name: "PCM analog in-memory crossbar",
+    pj_per_mac: 0.03,
+    gmacs: 1200.0,
+    pj_per_byte: 0.1,
+    encode_cost_factor: 1.0 / 64.0,
+    sparse_energy_mult: 3.0,
+    sparse_byte_mult: 2.0,
+    sparse_util: 0.2,
+};
+
+pub const RERAM_AIMC: Platform = Platform {
+    name: "ReRAM analog in-memory crossbar",
+    pj_per_mac: 0.05,
+    gmacs: 900.0,
+    pj_per_byte: 0.12,
+    encode_cost_factor: 1.0 / 64.0,
+    sparse_energy_mult: 3.0,
+    sparse_byte_mult: 2.0,
+    sparse_util: 0.2,
+};
+
+/// The memory technology a fault-model family is characteristic of —
+/// the annotation that lets `results/BENCH_analog.json` index the
+/// resilience table and the energy table over one scenario grid.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryTechnology {
+    pub name: &'static str,
+    /// Storage cell the model's faults physically live in.
+    pub cell: &'static str,
+    /// Dominant physical failure mechanism the model abstracts.
+    pub fault_mode: &'static str,
+    /// Platform whose energy/latency constants price this technology.
+    pub platform: Platform,
+}
+
+/// Map each fault-model family to its characteristic memory technology.
+/// Bit flips are the digital (SRAM) reference; the three analog models
+/// are priced on the AIMC platforms whose physics they abstract.
+pub fn technology(kind: FaultModelKind) -> MemoryTechnology {
+    match kind {
+        FaultModelKind::BitFlip => MemoryTechnology {
+            name: "digital SRAM edge ASIC",
+            cell: "6T SRAM bit cell",
+            fault_mode: "particle-strike bit upsets",
+            platform: ASIC,
+        },
+        FaultModelKind::GaussianDrift => MemoryTechnology {
+            name: "PCM crossbar",
+            cell: "phase-change (GST) conductance",
+            fault_mode: "resistance drift over time/temperature",
+            platform: PCM_AIMC,
+        },
+        FaultModelKind::StuckAt => MemoryTechnology {
+            name: "ReRAM crossbar",
+            cell: "HfOx filamentary ReRAM",
+            fault_mode: "stuck-at forming/endurance defects",
+            platform: RERAM_AIMC,
+        },
+        FaultModelKind::LineFailure => MemoryTechnology {
+            name: "ReRAM crossbar periphery",
+            cell: "shared word-line driver",
+            fault_mode: "correlated word-line failures",
+            platform: RERAM_AIMC,
+        },
+    }
+}
+
 /// Modeled energy (µJ) and latency (µs) of one query.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Estimate {
@@ -215,6 +293,32 @@ mod tests {
         let log = estimate(&ops::loghd(617, 10_000, 26, 7, 8), &ASIC);
         assert!(log.energy_uj < conv.energy_uj);
         assert!(log.latency_us < conv.latency_us);
+    }
+
+    #[test]
+    fn every_fault_kind_maps_to_a_technology() {
+        // One scenario grid: each fault family prices on some platform,
+        // and the digital reference is the only SRAM entry.
+        for kind in FaultModelKind::ALL {
+            let tech = technology(kind);
+            assert!(!tech.name.is_empty() && !tech.fault_mode.is_empty());
+            assert!(tech.platform.pj_per_mac > 0.0 && tech.platform.gmacs > 0.0);
+            let is_digital = kind == FaultModelKind::BitFlip;
+            assert_eq!(tech.name.contains("SRAM"), is_digital, "{}", tech.name);
+        }
+    }
+
+    #[test]
+    fn aimc_similarity_stage_undercuts_the_digital_asic() {
+        // In-crossbar MACs are the whole point of tolerating analog
+        // faults: the same LogHD workload must be cheaper per query on
+        // PCM/ReRAM than on the digital edge ASIC.
+        let ops = ops::loghd(617, 10_000, 26, 7, 8);
+        let digital = estimate(&ops, &ASIC);
+        for p in [PCM_AIMC, RERAM_AIMC] {
+            let analog = estimate(&ops, &p);
+            assert!(analog.energy_uj < digital.energy_uj, "{}", p.name);
+        }
     }
 
     #[test]

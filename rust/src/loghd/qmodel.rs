@@ -309,21 +309,24 @@ impl HdClassifier for QuantizedLogHdModel {
     }
 
     fn fault_surface(&self) -> FaultSurface {
-        let mut planes = vec![FaultPlane::new(
+        let mut planes = vec![FaultPlane::with_shape(
             "bundles",
-            self.bundles.packed.count(),
+            self.bundles.rows,
+            self.bundles.cols,
             self.bundles.packed.bits(),
         )];
         for (j, col) in self.profiles.cols.iter().enumerate() {
-            planes.push(FaultPlane::new(
+            planes.push(FaultPlane::with_shape(
                 format!("profiles[{j}]"),
-                col.packed.count(),
+                col.rows,
+                col.cols,
                 col.packed.bits(),
             ));
         }
-        planes.push(FaultPlane::new(
+        planes.push(FaultPlane::with_shape(
             "profile_mean",
-            self.profiles.mean.packed.count(),
+            self.profiles.mean.rows,
+            self.profiles.mean.cols,
             self.profiles.mean.packed.bits(),
         ));
         FaultSurface::new(planes)
@@ -339,6 +342,19 @@ impl HdClassifier for QuantizedLogHdModel {
             &mut self.profiles.mean.packed
         };
         crate::faults::apply_value_mask_packed(target, mask);
+    }
+
+    fn apply_fault(&mut self, plane: usize, fault: &crate::faults::PlaneFault) {
+        let n = self.profiles.cols.len();
+        let (target, cols) = if plane == 0 {
+            (&mut self.bundles.packed, self.bundles.cols)
+        } else if plane <= n {
+            let col = &mut self.profiles.cols[plane - 1];
+            (&mut col.packed, col.cols)
+        } else {
+            (&mut self.profiles.mean.packed, self.profiles.mean.cols)
+        };
+        quant::apply_analog_packed(target, cols, fault);
     }
 
     fn refresh(&mut self) {
@@ -461,9 +477,10 @@ mod tests {
             let n = qm.n_bundles();
             assert_eq!(surface.planes.len(), n + 2);
             assert_eq!(surface.planes[0].label, "bundles");
-            assert_eq!(surface.planes[0].values, n * qm.d);
+            assert_eq!(surface.planes[0].values(), n * qm.d);
+            assert_eq!((surface.planes[0].rows, surface.planes[0].cols), (n, qm.d));
             assert_eq!(surface.planes[n + 1].label, "profile_mean");
-            assert_eq!(surface.planes[n + 1].values, n);
+            assert_eq!(surface.planes[n + 1].values(), n);
             assert_eq!(surface.total_bits(), qm.memory_bits());
             assert_eq!(HdClassifier::stored_bits(&qm), qm.memory_bits());
         }

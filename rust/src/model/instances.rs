@@ -17,6 +17,7 @@
 //! trait migration.
 
 use crate::baselines::{DecoHdModel, HybridModel, SparseHdModel};
+use crate::faults::PlaneFault;
 use crate::hd::similarity::activations;
 use crate::loghd::codebook::Codebook;
 use crate::loghd::model::LogHdModel;
@@ -61,8 +62,8 @@ impl PlaneState {
 
     fn plane(&self, label: &str) -> FaultPlane {
         match self {
-            PlaneState::F32(m) => FaultPlane::new(label, m.data().len(), 32),
-            PlaneState::Q(q) => FaultPlane::new(label, q.packed.count(), q.packed.bits()),
+            PlaneState::F32(m) => FaultPlane::with_shape(label, m.rows(), m.cols(), 32),
+            PlaneState::Q(q) => FaultPlane::with_shape(label, q.rows, q.cols, q.packed.bits()),
         }
     }
 
@@ -72,6 +73,19 @@ impl PlaneState {
         match self {
             PlaneState::F32(m) => crate::faults::apply_value_mask_f32(m.data_mut(), mask),
             PlaneState::Q(q) => crate::faults::apply_value_mask_packed(&mut q.packed, mask),
+        }
+    }
+
+    /// Apply a sampled plane fault in the value domain: f32 planes
+    /// through `faults::apply_analog_f32`, packed planes through their
+    /// conductance-level mapping (`quant::apply_analog_packed`).
+    fn apply_fault(&mut self, fault: &PlaneFault) {
+        match self {
+            PlaneState::F32(m) => {
+                let cols = m.cols();
+                crate::faults::apply_analog_f32(m.data_mut(), cols, fault);
+            }
+            PlaneState::Q(q) => quant::apply_analog_packed(&mut q.packed, q.cols, fault),
         }
     }
 
@@ -128,6 +142,14 @@ impl ProfilePlanes {
         }
     }
 
+    fn apply_fault(&mut self, idx: usize, fault: &PlaneFault) {
+        if idx < self.n {
+            self.cols[idx].apply_fault(fault);
+        } else {
+            self.mean.apply_fault(fault);
+        }
+    }
+
     /// Reassemble the (C, n) profile matrix from the current planes.
     fn assemble(&self) -> Matrix {
         let mean = self.mean.dense();
@@ -179,6 +201,10 @@ impl HdClassifier for ConventionalInstance {
     fn apply_flips(&mut self, plane: usize, mask: &[(usize, u32)]) {
         debug_assert_eq!(plane, 0);
         self.prototypes.apply(mask);
+    }
+    fn apply_fault(&mut self, plane: usize, fault: &PlaneFault) {
+        debug_assert_eq!(plane, 0);
+        self.prototypes.apply_fault(fault);
     }
 }
 
@@ -241,6 +267,10 @@ impl HdClassifier for SparseInstance {
     fn apply_flips(&mut self, plane: usize, mask: &[(usize, u32)]) {
         debug_assert_eq!(plane, 0);
         self.compact.apply(mask);
+    }
+    fn apply_fault(&mut self, plane: usize, fault: &PlaneFault) {
+        debug_assert_eq!(plane, 0);
+        self.compact.apply_fault(fault);
     }
 }
 
@@ -312,6 +342,13 @@ impl HdClassifier for LogHdDenseInstance {
             self.bundles.apply(mask);
         } else {
             self.profiles.apply(plane - 1, mask);
+        }
+    }
+    fn apply_fault(&mut self, plane: usize, fault: &PlaneFault) {
+        if plane == 0 {
+            self.bundles.apply_fault(fault);
+        } else {
+            self.profiles.apply_fault(plane - 1, fault);
         }
     }
 }
@@ -400,6 +437,13 @@ impl HdClassifier for HybridDenseInstance {
             self.profiles.apply(plane - 1, mask);
         }
     }
+    fn apply_fault(&mut self, plane: usize, fault: &PlaneFault) {
+        if plane == 0 {
+            self.bundles_compact.apply_fault(fault);
+        } else {
+            self.profiles.apply_fault(plane - 1, fault);
+        }
+    }
 }
 
 /// Hybrid at a packed width: the column-compacted model quantized into a
@@ -433,6 +477,9 @@ impl HdClassifier for HybridPackedInstance {
     }
     fn apply_flips(&mut self, plane: usize, mask: &[(usize, u32)]) {
         self.qm.apply_flips(plane, mask);
+    }
+    fn apply_fault(&mut self, plane: usize, fault: &PlaneFault) {
+        self.qm.apply_fault(plane, fault);
     }
     fn refresh(&mut self) {
         self.qm.refresh();
@@ -522,6 +569,12 @@ impl HdClassifier for DecoHdInstance {
             _ => self.coeffs.apply(mask),
         }
     }
+    fn apply_fault(&mut self, plane: usize, fault: &PlaneFault) {
+        match plane {
+            0 => self.basis.apply_fault(fault),
+            _ => self.coeffs.apply_fault(fault),
+        }
+    }
     fn refresh(&mut self) {
         self.rebuild_dense();
     }
@@ -599,6 +652,40 @@ mod tests {
         let got = inst.decode_activations(&Matrix::from_vec(1, 64, vec![1.0; 64]));
         let wref = activations(&Matrix::from_vec(1, 64, vec![1.0; 64]), &want);
         assert_eq!(got.data(), wref.data());
+    }
+
+    #[test]
+    fn surfaces_carry_matrix_geometry() {
+        let h = prototypes();
+        let f = conventional(&h, Precision::F32).fault_surface();
+        assert_eq!((f.planes[0].rows, f.planes[0].cols, f.planes[0].bits), (4, 64, 32));
+        let q = conventional(&h, Precision::B8).fault_surface();
+        assert_eq!((q.planes[0].rows, q.planes[0].cols, q.planes[0].bits), (4, 64, 8));
+        assert_eq!(f.planes[0].total_bits(), 4 * 64 * 32);
+    }
+
+    #[test]
+    fn analog_faults_perturb_dense_and_packed_planes() {
+        use crate::faults::FaultModel;
+        use crate::model::inject_faults;
+        let h = prototypes();
+        let models = [
+            FaultModel::GaussianDrift { sigma: 0.5 },
+            FaultModel::StuckAt { frac: 0.3, polarity: crate::faults::StuckPolarity::Mixed },
+            FaultModel::LineFailure { rate: 0.4, span: 2 },
+        ];
+        let probe = Matrix::from_vec(1, 64, vec![1.0; 64]);
+        for precision in [Precision::F32, Precision::B8, Precision::B1] {
+            for fm in &models {
+                let mut inst = conventional(&h, precision);
+                let clean = inst.decode_activations(&probe);
+                let mut rng = SplitMix64::new(31);
+                let touched = inject_faults(inst.as_mut(), fm, &mut rng);
+                assert!(touched > 0, "{precision:?}/{fm:?}: nothing touched");
+                let noisy = inst.decode_activations(&probe);
+                assert_ne!(clean.data(), noisy.data(), "{precision:?}/{fm:?}: plane unchanged");
+            }
+        }
     }
 
     #[test]

@@ -47,26 +47,54 @@ use crate::faults;
 use crate::tensor::Matrix;
 use crate::util::rng::SplitMix64;
 
-/// One stored bit-plane of a classifier: `values` fields of `bits` bits
-/// each, addressable by the per-value fault model (`faults` module).
+/// One stored bit-plane of a classifier: a `rows × cols` grid of
+/// `bits`-bit fields, addressable by the per-value fault model and —
+/// row-granularly — by the correlated line-failure model (`faults`
+/// module). Geometry is part of the surface contract: the analog
+/// samplers need to know where one stored row ends and the next
+/// begins.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FaultPlane {
     /// Human-readable name (`loghd inspect` prints these).
     pub label: String,
-    /// Number of stored values in the plane.
-    pub values: usize,
+    /// Stored rows (word lines) in the plane.
+    pub rows: usize,
+    /// Stored values per row.
+    pub cols: usize,
     /// Bits per stored value (32 for raw f32 planes).
     pub bits: u32,
 }
 
 impl FaultPlane {
+    /// A flat plane: one row of `values` fields. Kept for surfaces with
+    /// no meaningful row structure (vectors, means).
     pub fn new(label: impl Into<String>, values: usize, bits: u32) -> Self {
-        Self { label: label.into(), values, bits }
+        Self { label: label.into(), rows: 1, cols: values, bits }
+    }
+
+    /// A plane with explicit `rows × cols` geometry (matrices).
+    pub fn with_shape(label: impl Into<String>, rows: usize, cols: usize, bits: u32) -> Self {
+        Self { label: label.into(), rows, cols, bits }
+    }
+
+    /// Number of stored values in the plane.
+    pub fn values(&self) -> usize {
+        self.rows * self.cols
     }
 
     /// Total bits this plane stores.
     pub fn total_bits(&self) -> usize {
-        self.values * self.bits as usize
+        self.values() * self.bits as usize
+    }
+
+    /// Value-domain label (`loghd inspect` prints these): what one
+    /// stored field of this plane means to the analog rail mapping.
+    pub fn domain(&self) -> &'static str {
+        match self.bits {
+            32 => "f32",
+            1 => "sign",
+            _ => "levels",
+        }
     }
 }
 
@@ -122,8 +150,28 @@ pub trait HdClassifier: Send {
     /// victims strictly increasing) to plane `plane` of the surface.
     fn apply_flips(&mut self, plane: usize, mask: &[(usize, u32)]);
 
+    /// Apply a sampled plane fault in the *value domain*: digital flips
+    /// route through [`apply_flips`](Self::apply_flips); analog faults
+    /// (drift / stuck-at / line failures) perturb the stored values via
+    /// their storage domain's rail mapping (`faults::apply_analog_f32`
+    /// for f32 planes, `quant::apply_analog_packed` for packed ones).
+    ///
+    /// The default covers digital flips only, so legacy/mock
+    /// implementations keep working; every in-tree family overrides it
+    /// with its plane routing.
+    fn apply_fault(&mut self, plane: usize, fault: &faults::PlaneFault) {
+        match fault {
+            faults::PlaneFault::Flips(mask) => self.apply_flips(plane, mask),
+            other => panic!(
+                "{}: analog fault {:?} not supported by this classifier",
+                self.kind(),
+                other
+            ),
+        }
+    }
+
     /// Re-derive any cached views after direct mutation of the stored
-    /// state. Called once by [`inject_value_faults`] after all planes.
+    /// state. Called once by [`inject_faults`] after all planes.
     fn refresh(&mut self) {}
 
     /// Exact stored model size in bits — by default the fault-surface
@@ -134,27 +182,39 @@ pub trait HdClassifier: Send {
     }
 }
 
-/// The one fault-injection driver every family shares: walk the stored
-/// bit-planes in surface order, draw the per-value flip mask for each
-/// from `rng` (one [`faults::value_flip_mask`] call per plane — the
-/// exact stream discipline of the pre-trait `eval::sweep::corrupt*`
-/// helpers), apply, refresh. Returns the number of flipped values.
-pub fn inject_value_faults(
+/// The one fault-injection driver every family and fault model share:
+/// walk the stored bit-planes in surface order, sample one
+/// [`faults::sample_plane_fault`] realization per plane from `rng`,
+/// apply the non-empty ones, refresh. Returns the number of stored
+/// values touched.
+///
+/// For [`faults::FaultModel::BitFlip`] this draws exactly one
+/// [`faults::value_flip_mask`] per plane — the stream discipline of the
+/// pre-trait `eval::sweep::corrupt*` helpers — so the digital campaign
+/// goldens are byte-identical through this driver.
+pub fn inject_faults(
     model: &mut dyn HdClassifier,
-    p: f64,
+    fm: &faults::FaultModel,
     rng: &mut SplitMix64,
 ) -> usize {
     let surface = model.fault_surface();
-    let mut flips = 0;
+    let mut touched = 0;
     for (i, plane) in surface.planes.iter().enumerate() {
-        let mask = faults::value_flip_mask(plane.values, plane.bits, p, rng);
-        if !mask.is_empty() {
-            model.apply_flips(i, &mask);
+        let fault = faults::sample_plane_fault(fm, plane.rows, plane.cols, plane.bits, rng);
+        if !fault.is_empty() {
+            model.apply_fault(i, &fault);
         }
-        flips += mask.len();
+        touched += fault.touched(plane.cols);
     }
     model.refresh();
-    flips
+    touched
+}
+
+/// Digital bit-flip injection at per-value probability `p` — the
+/// original driver, now an alias for [`inject_faults`] at
+/// [`faults::FaultModel::BitFlip`] (same stream, same flips).
+pub fn inject_value_faults(model: &mut dyn HdClassifier, p: f64, rng: &mut SplitMix64) -> usize {
+    inject_faults(model, &faults::FaultModel::BitFlip { p }, rng)
 }
 
 /// Stored value count of a LogHD-shaped model: `n` bundles of width
@@ -265,6 +325,32 @@ mod tests {
         let m = two_plane();
         assert_eq!(m.stored_bits(), 40 * 32 + 100 * 8);
         assert_eq!(m.fault_surface().total_bits(), m.stored_bits());
+    }
+
+    #[test]
+    fn plane_geometry_accounting() {
+        let flat = FaultPlane::new("vec", 48, 8);
+        assert_eq!((flat.rows, flat.cols, flat.values()), (1, 48, 48));
+        let grid = FaultPlane::with_shape("mat", 6, 8, 32);
+        assert_eq!(grid.values(), 48);
+        assert_eq!(grid.total_bits(), 48 * 32);
+        assert_eq!(grid.domain(), "f32");
+        assert_eq!(FaultPlane::new("b", 4, 1).domain(), "sign");
+        assert_eq!(FaultPlane::new("q", 4, 8).domain(), "levels");
+    }
+
+    #[test]
+    fn analog_driver_matches_digital_for_bitflip() {
+        // inject_faults(BitFlip{p}) must be the digital driver exactly:
+        // same stream, same flips, same touched count.
+        let mut a = two_plane();
+        let mut b = two_plane();
+        let na = inject_value_faults(&mut a, 0.25, &mut SplitMix64::new(5));
+        let fm = faults::FaultModel::BitFlip { p: 0.25 };
+        let nb = inject_faults(&mut b, &fm, &mut SplitMix64::new(5));
+        assert_eq!(na, nb);
+        assert_eq!(a.f32s, b.f32s);
+        assert_eq!(a.packed, b.packed);
     }
 
     #[test]

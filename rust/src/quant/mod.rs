@@ -178,6 +178,81 @@ pub fn quantize_roundtrip(m: &Matrix, precision: Precision) -> Matrix {
     }
 }
 
+/// Apply a sampled analog plane fault to packed storage through its
+/// conductance-level mapping (`cols` is the plane's row width):
+///
+/// - drift moves each stored *level* by `round(sigma · qmax · z)`
+///   (for 1-bit sign storage the sign flips when `±1 + sigma·z`
+///   crosses zero), clamped to the level rails,
+/// - stuck-at pins a cell to a rail: low = minimum code (level −qmax /
+///   sign 0), high = maximum valid code (level +qmax / sign 1),
+/// - line failures read whole rows at the low rail.
+///
+/// Digital flips route through [`crate::faults::apply_value_mask`], so
+/// the packed digital path is unchanged. The all-ones fault code stays
+/// reachable only through bit flips: analog perturbations land on
+/// valid levels by construction.
+pub fn apply_analog_packed(t: &mut PackedTensor, cols: usize, fault: &crate::faults::PlaneFault) {
+    use crate::faults::PlaneFault;
+    let bits = t.bits();
+    if bits == 1 {
+        match fault {
+            PlaneFault::Flips(mask) => crate::faults::apply_value_mask(t, mask),
+            PlaneFault::Drift { sigma, z } => {
+                if z.is_empty() {
+                    return;
+                }
+                assert_eq!(z.len(), t.count(), "drift field does not match plane size");
+                for (i, zi) in z.iter().enumerate() {
+                    let sign = if t.get(i) == 1 { 1.0f32 } else { -1.0 };
+                    t.set(i, u64::from(sign + sigma * zi >= 0.0));
+                }
+            }
+            PlaneFault::Stuck(cells) => {
+                for &(v, high) in cells {
+                    t.set(v, u64::from(high));
+                }
+            }
+            PlaneFault::Lines(rows) => {
+                for &r in rows {
+                    for v in r * cols..(r + 1) * cols {
+                        t.set(v, 0);
+                    }
+                }
+            }
+        }
+        return;
+    }
+    let qmax = (1i64 << (bits - 1)) - 1;
+    match fault {
+        PlaneFault::Flips(mask) => crate::faults::apply_value_mask(t, mask),
+        PlaneFault::Drift { sigma, z } => {
+            if z.is_empty() {
+                return;
+            }
+            assert_eq!(z.len(), t.count(), "drift field does not match plane size");
+            for (i, zi) in z.iter().enumerate() {
+                let level = t.get(i) as i64 - qmax;
+                let step = (sigma * qmax as f32 * zi).round() as i64;
+                let drifted = (level + step).clamp(-qmax, qmax);
+                t.set(i, (drifted + qmax) as u64);
+            }
+        }
+        PlaneFault::Stuck(cells) => {
+            for &(v, high) in cells {
+                t.set(v, if high { (2 * qmax) as u64 } else { 0 });
+            }
+        }
+        PlaneFault::Lines(rows) => {
+            for &r in rows {
+                for v in r * cols..(r + 1) * cols {
+                    t.set(v, 0);
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -292,5 +367,65 @@ mod tests {
         assert_eq!(Precision::B8.bits(), 8);
         assert_eq!(Precision::from_bits(4), Some(Precision::B4));
         assert_eq!(Precision::from_bits(3), None);
+    }
+
+    #[test]
+    fn analog_stuck_pins_packed_levels_to_the_rails() {
+        use crate::faults::PlaneFault;
+        let m = Matrix::from_vec(1, 4, vec![0.5, -0.25, 1.0, -2.0]);
+        let mut q8 = quantize(&m, Precision::B8);
+        apply_analog_packed(&mut q8.packed, 4, &PlaneFault::Stuck(vec![(0, true), (2, false)]));
+        assert_eq!(q8.packed.get(0), 254, "high rail is the max valid code, not the fault code");
+        assert_eq!(q8.packed.get(2), 0, "low rail is code 0");
+        let back = dequantize(&q8);
+        assert!((back.at(0, 0) - 127.0 * q8.scale).abs() < 1e-6);
+        assert!((back.at(0, 2) + 127.0 * q8.scale).abs() < 1e-6);
+
+        let mut q1 = quantize(&m, Precision::B1);
+        apply_analog_packed(&mut q1.packed, 4, &PlaneFault::Stuck(vec![(1, true), (2, false)]));
+        assert_eq!(q1.packed.get(1), 1);
+        assert_eq!(q1.packed.get(2), 0);
+    }
+
+    #[test]
+    fn analog_drift_moves_levels_and_clamps_at_the_rails() {
+        use crate::faults::PlaneFault;
+        let m = Matrix::from_vec(1, 3, vec![1.0, 0.0, -1.0]);
+        let mut q = quantize(&m, Precision::B8);
+        let codes: Vec<u64> = (0..3).map(|i| q.packed.get(i)).collect();
+        // +1 full-scale z on every cell: level += 127, clamped at +127.
+        let fault = PlaneFault::Drift { sigma: 1.0, z: vec![1.0, 1.0, 1.0] };
+        apply_analog_packed(&mut q.packed, 3, &fault);
+        assert_eq!(q.packed.get(0), 254, "already at +qmax, clamped");
+        assert_eq!(q.packed.get(1), codes[1] + 127);
+        assert_eq!(q.packed.get(2), 127, "-qmax drifts up to level 0");
+        // 1-bit: a strong opposing drift flips the sign, a weak one can't.
+        let mut q1 = quantize(&m, Precision::B1);
+        let strong = PlaneFault::Drift { sigma: 2.0, z: vec![-1.0, 0.0, 1.0] };
+        apply_analog_packed(&mut q1.packed, 3, &strong);
+        assert_eq!(q1.packed.get(0), 0, "sign flipped by -2 full-scale drift");
+        assert_eq!(q1.packed.get(2), 1, "sign flipped by +2 full-scale drift");
+        let mut q1b = quantize(&m, Precision::B1);
+        let weak = PlaneFault::Drift { sigma: 0.5, z: vec![-1.0, 0.0, 1.0] };
+        apply_analog_packed(&mut q1b.packed, 3, &weak);
+        assert_eq!(q1b.packed.get(0), 1, "weak drift cannot cross zero");
+    }
+
+    #[test]
+    fn analog_lines_read_whole_rows_at_the_low_rail() {
+        use crate::faults::PlaneFault;
+        let mut rng = SplitMix64::new(29);
+        let m = Matrix::from_vec(4, 8, rng.normals_f32(32));
+        let mut q = quantize(&m, Precision::B4);
+        apply_analog_packed(&mut q.packed, 8, &PlaneFault::Lines(vec![1, 3]));
+        for c in 0..8 {
+            assert_eq!(q.packed.get(8 + c), 0, "row 1 col {c}");
+            assert_eq!(q.packed.get(24 + c), 0, "row 3 col {c}");
+        }
+        // untouched rows keep their codes
+        let back = dequantize(&q);
+        for c in 0..8 {
+            assert!((back.at(1, c) + 7.0 * q.scale).abs() < 1e-6);
+        }
     }
 }

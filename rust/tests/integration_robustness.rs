@@ -10,9 +10,14 @@
 //!   workload: the class-axis vs feature-axis resilience ratio is
 //!   finite and >= 1,
 //! - the artifact is bit-identical across `LOGHD_THREADS` settings
-//!   (pinned by running the actual binary twice).
+//!   (pinned by running the actual binary twice),
+//! - the analog campaign (`--fault-model`) sweeps all four fault
+//!   models, matches its own golden
+//!   (`rust/tests/golden/analog_smoke.json`), and its bit-flip leg
+//!   reproduces the digital artifact *exactly* — the analog layer adds
+//!   zero draws to the digital stream.
 
-use loghd::eval::campaign::{self, CampaignConfig};
+use loghd::eval::campaign::{self, AnalogConfig, CampaignConfig};
 use loghd::testkit::golden::{self, GoldenOptions};
 use loghd::util::json::{self, Value};
 
@@ -73,6 +78,62 @@ fn smoke_campaign_schema_golden_and_resilience_ratio() {
     assert!(res.class_axis_best.1 > 0.0);
 }
 
+#[test]
+fn analog_smoke_campaign_matches_golden_and_digital_bitflip() {
+    let res = campaign::run_analog(&AnalogConfig::smoke()).expect("analog smoke campaign");
+    let v = res.to_json();
+
+    // --- schema sanity: four models, six solved cells each ---
+    assert_eq!(v.get("schema").unwrap().as_str(), Some("loghd-analog/v1"));
+    let models = v.get("models").unwrap().as_array().unwrap();
+    assert_eq!(models.len(), 4, "smoke analog campaign must sweep all four fault models");
+    for m in models {
+        let label = m.get("fault_model").unwrap().as_str().unwrap();
+        let cells = m.get_path(&["campaign", "cells"]).unwrap().as_array().unwrap();
+        assert_eq!(cells.len(), 6, "{label}: per-model solver table");
+        assert!(m.get_path(&["technology", "name"]).unwrap().as_str().is_some(), "{label}");
+    }
+
+    // --- the committed golden pins schema, severity normalization,
+    // technology annotations, and the per-model solver tables ---
+    golden::check_file(
+        "rust/tests/golden/analog_smoke.json",
+        &v,
+        &GoldenOptions::exact(),
+    )
+    .unwrap();
+
+    // --- differential: the bit-flip leg IS the digital campaign
+    // (stream salt 0, severity = flip rate, one draw per plane) ---
+    let (_, digital) = smoke_result();
+    assert_eq!(
+        json::to_string(&golden::without_keys(res.runs[0].campaign.to_json(), &["meta"])),
+        json::to_string(&golden::without_keys(digital, &["meta"])),
+        "analog bitflip leg diverged from the digital campaign"
+    );
+    // ... so it must also pass the committed *digital* golden
+    // unchanged (skipped when blessing: the digital suite owns that
+    // file's re-bless).
+    if !golden::blessing() {
+        golden::check_file(
+            "rust/tests/golden/robustness_smoke.json",
+            &res.runs[0].campaign.to_json(),
+            &GoldenOptions::exact(),
+        )
+        .unwrap();
+    }
+
+    // every model resolves a resilience ratio on the smoke workload
+    for leg in &res.runs {
+        let ratio = leg.campaign.resilience_ratio;
+        assert!(
+            ratio.is_some_and(f64::is_finite),
+            "{}: resilience ratio {ratio:?}",
+            leg.kind.label()
+        );
+    }
+}
+
 /// `LOGHD_THREADS=1` and `=4` must produce byte-identical artifacts
 /// (outside `meta`, which records the thread count). The worker-pool
 /// size is latched per process, so this drives the real binary twice.
@@ -100,6 +161,46 @@ fn campaign_artifact_is_thread_count_invariant() {
         json::to_string(&docs[0]),
         json::to_string(&docs[1]),
         "campaign output depends on LOGHD_THREADS"
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Same contract for the analog campaign: every fault model's
+/// Monte-Carlo must be bit-identical at any `LOGHD_THREADS` (one trial
+/// keeps the doubled binary run CI-sized).
+#[test]
+fn analog_artifact_is_thread_count_invariant() {
+    let bin = env!("CARGO_BIN_EXE_loghd");
+    let dir = std::env::temp_dir().join("loghd_analog_threads");
+    let _ = std::fs::create_dir_all(&dir);
+
+    let mut docs = Vec::new();
+    for threads in ["1", "4"] {
+        let out = dir.join(format!("analog_t{threads}.json"));
+        let status = std::process::Command::new(bin)
+            .args([
+                "robustness",
+                "--profile",
+                "smoke",
+                "--trials",
+                "1",
+                "--fault-model",
+                "all",
+                "--out",
+            ])
+            .arg(&out)
+            .env("LOGHD_THREADS", threads)
+            .current_dir(&dir)
+            .status()
+            .expect("spawn loghd robustness --fault-model all");
+        assert!(status.success(), "analog robustness failed at LOGHD_THREADS={threads}");
+        let text = std::fs::read_to_string(&out).unwrap();
+        docs.push(golden::without_keys(json::parse(&text).unwrap(), &["meta"]));
+    }
+    assert_eq!(
+        json::to_string(&docs[0]),
+        json::to_string(&docs[1]),
+        "analog campaign output depends on LOGHD_THREADS"
     );
     let _ = std::fs::remove_dir_all(dir);
 }

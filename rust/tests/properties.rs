@@ -656,6 +656,199 @@ fn prop_seeded_flip_mask_packed_and_dense_twins_agree() {
 }
 
 #[test]
+fn prop_analog_drift_field_concentrates_and_applies_at_plane_scale() {
+    // The sampled drift field is standard normal (mean within 6σ/√n,
+    // second moment within 6σ of 1), and application shifts every f32
+    // value by exactly sigma·A·z_i at the plane amplitude A.
+    use loghd::faults::{self, FaultModel, PlaneFault};
+    forall("analog-drift", 10, |rng| {
+        let rows = 20 + rng.below(30) as usize;
+        let cols = 100 + rng.below(200) as usize;
+        let sigma = 0.1 + 1.5 * rng.uniform();
+        let fault = faults::sample_plane_fault(
+            &FaultModel::GaussianDrift { sigma },
+            rows,
+            cols,
+            32,
+            rng,
+        );
+        let PlaneFault::Drift { sigma: s32, z } = &fault else { panic!("wrong variant") };
+        assert_eq!(z.len(), rows * cols);
+        assert!((f64::from(*s32) - sigma).abs() < 1e-6);
+        let n = (rows * cols) as f64;
+        let mean = z.iter().map(|v| f64::from(*v)).sum::<f64>() / n;
+        let m2 = z.iter().map(|v| f64::from(*v).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() <= 6.0 / n.sqrt(), "mean {mean}");
+        assert!((m2 - 1.0).abs() <= 6.0 * (2.0 / n).sqrt(), "second moment {m2}");
+
+        let amp = (0.5 + 3.0 * rng.uniform()) as f32;
+        let mut data = vec![amp; rows * cols];
+        faults::apply_analog_f32(&mut data, cols, &fault);
+        for (v, zi) in data.iter().zip(z) {
+            assert_eq!(*v, amp + s32 * amp * zi);
+        }
+    });
+}
+
+#[test]
+fn prop_analog_stuckat_fraction_polarity_and_rails() {
+    // Victim count concentrates at frac·values (binomial 6σ), victims
+    // are strictly increasing, polarity semantics hold (Low/High pin
+    // one rail, Mixed flips a fair coin), and application pins exactly
+    // the victims to ±A leaving every other cell untouched.
+    use loghd::faults::{self, FaultModel, PlaneFault, StuckPolarity};
+    forall("analog-stuckat", 8, |rng| {
+        let rows = 40 + rng.below(40) as usize;
+        let cols = 100 + rng.below(100) as usize;
+        let total = rows * cols;
+        let frac = 0.05 + 0.6 * rng.uniform();
+        for polarity in [StuckPolarity::Low, StuckPolarity::High, StuckPolarity::Mixed] {
+            let fault = faults::sample_plane_fault(
+                &FaultModel::StuckAt { frac, polarity },
+                rows,
+                cols,
+                32,
+                rng,
+            );
+            let PlaneFault::Stuck(cells) = &fault else { panic!("wrong variant") };
+            let sigma = (frac * (1.0 - frac) * total as f64).sqrt();
+            assert!(
+                (cells.len() as f64 - frac * total as f64).abs() <= 6.0 * sigma + 1.0,
+                "frac={frac}: {} victims of {total}",
+                cells.len()
+            );
+            for w in cells.windows(2) {
+                assert!(w[0].0 < w[1].0, "victims not strictly increasing");
+            }
+            match polarity {
+                StuckPolarity::Low => assert!(cells.iter().all(|&(_, high)| !high)),
+                StuckPolarity::High => assert!(cells.iter().all(|&(_, high)| high)),
+                StuckPolarity::Mixed => {
+                    let highs = cells.iter().filter(|&&(_, high)| high).count() as f64;
+                    let m = cells.len() as f64;
+                    assert!(
+                        (highs - 0.5 * m).abs() <= 6.0 * (0.25 * m).sqrt() + 1.0,
+                        "coin bias: {highs} highs of {m}"
+                    );
+                }
+            }
+
+            let mut data: Vec<f32> =
+                (0..total).map(|i| 0.25 + (i % 7) as f32 * 0.05).collect();
+            let amp = faults::plane_amplitude(&data);
+            let before = data.clone();
+            faults::apply_analog_f32(&mut data, cols, &fault);
+            let mut vi = 0;
+            for (i, (b, a)) in before.iter().zip(&data).enumerate() {
+                if vi < cells.len() && cells[vi].0 == i {
+                    assert_eq!(*a, if cells[vi].1 { amp } else { -amp }, "victim {i}");
+                    vi += 1;
+                } else {
+                    assert_eq!(a, b, "untouched cell {i} changed");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_analog_line_spans_cover_and_stay_sorted() {
+    // Failed rows are strictly increasing unions of span-extended
+    // starts, clamped to the plane; coverage tracks the stationary
+    // 1 − (1 − rate)^span within a (loose) 6σ band; rate = 1 fails
+    // every row.
+    use loghd::faults::{self, FaultModel, PlaneFault};
+    forall("analog-lines", 10, |rng| {
+        let rows = 500 + rng.below(1500) as usize;
+        let cols = 4 + rng.below(16) as usize;
+        let span = 1 + rng.below(4) as usize;
+        let rate = 0.02 + 0.3 * rng.uniform();
+        let fault = faults::sample_plane_fault(
+            &FaultModel::LineFailure { rate, span },
+            rows,
+            cols,
+            32,
+            rng,
+        );
+        let PlaneFault::Lines(failed) = &fault else { panic!("wrong variant") };
+        for w in failed.windows(2) {
+            assert!(w[0] < w[1], "failed rows not strictly increasing");
+        }
+        if let Some(&last) = failed.last() {
+            assert!(last < rows);
+        }
+        assert_eq!(fault.touched(cols), failed.len() * cols);
+        let cov = 1.0 - (1.0 - rate).powi(span as i32);
+        let got = failed.len() as f64 / rows as f64;
+        let sigma = (rate * (1.0 - rate) / rows as f64).sqrt() * span as f64;
+        assert!(
+            (got - cov).abs() <= 6.0 * sigma + span as f64 / rows as f64,
+            "span={span} rate={rate}: coverage {got} vs {cov}"
+        );
+
+        let all = faults::sample_plane_fault(
+            &FaultModel::LineFailure { rate: 1.0, span },
+            50,
+            cols,
+            32,
+            rng,
+        );
+        let PlaneFault::Lines(f2) = &all else { panic!("wrong variant") };
+        assert_eq!(f2, &(0..50).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn prop_analog_zero_severity_is_a_no_op_with_zero_draws() {
+    // Severity 0 must sample an empty fault AND consume no rng draws
+    // under every model — the invariant that keeps the severity-0 grid
+    // column bit-identical across fault models in the campaign.
+    use loghd::faults::{self, FaultModel, StuckPolarity};
+    forall("analog-zero", 20, |rng| {
+        let rows = 1 + rng.below(40) as usize;
+        let cols = 1 + rng.below(60) as usize;
+        let span = 1 + rng.below(4) as usize;
+        let models = [
+            FaultModel::BitFlip { p: 0.0 },
+            FaultModel::GaussianDrift { sigma: 0.0 },
+            FaultModel::StuckAt { frac: 0.0, polarity: StuckPolarity::Mixed },
+            FaultModel::LineFailure { rate: 0.0, span },
+        ];
+        for m in &models {
+            let mut probe = rng.clone();
+            let fault = faults::sample_plane_fault(m, rows, cols, 32, rng);
+            assert!(fault.is_empty(), "{m:?}");
+            assert_eq!(fault.touched(cols), 0, "{m:?}");
+            assert_eq!(rng.next_u64(), probe.next_u64(), "{m:?} consumed draws");
+        }
+    });
+}
+
+#[test]
+fn prop_analog_sampling_replays_per_seed() {
+    // Same seed, same geometry -> bit-identical fault realization, for
+    // every model family (the determinism the campaign's per-cell
+    // streams rely on).
+    use loghd::faults::{self, FaultModel, StuckPolarity};
+    forall("analog-replay", 10, |rng| {
+        let rows = 10 + rng.below(50) as usize;
+        let cols = 10 + rng.below(50) as usize;
+        let models = [
+            FaultModel::BitFlip { p: 0.3 },
+            FaultModel::GaussianDrift { sigma: 0.7 },
+            FaultModel::StuckAt { frac: 0.2, polarity: StuckPolarity::Mixed },
+            FaultModel::LineFailure { rate: 0.1, span: 3 },
+        ];
+        for m in &models {
+            let seed = rng.next_u64();
+            let a = faults::sample_plane_fault(m, rows, cols, 8, &mut SplitMix64::new(seed));
+            let b = faults::sample_plane_fault(m, rows, cols, 8, &mut SplitMix64::new(seed));
+            assert_eq!(a, b, "{m:?}");
+        }
+    });
+}
+
+#[test]
 fn prop_dataset_generator_statistics() {
     // per-class sample means approach the class means as samples grow
     forall("datagen", 4, |rng| {
