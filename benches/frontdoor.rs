@@ -1,0 +1,264 @@
+//! Front-door event-loop bench: connection scale + saturation throughput.
+//!
+//! Two phases against one event-loop server (binary protocol, trivial
+//! echo engine, so the wire + reactor path dominates):
+//!
+//! 1. **Concurrency hold** — open ≥10,000 simultaneous connections
+//!    (both halves live in this process: 2 fds per connection) and keep
+//!    them all open while a probe client measures round-trip latency
+//!    through the crowd. Proves the reactor's per-connection cost is a
+//!    buffer pair, not a thread.
+//! 2. **Saturation** — a fixed pool of active connections runs windowed
+//!    pipelining (closed loop, window W) until a request budget drains;
+//!    reports aggregate throughput and client-measured p50/p99/p999.
+//!
+//! Output: results/BENCH_frontdoor.json (EXPERIMENTS.md §Front door).
+//! Environment knobs: LOGHD_FRONTDOOR_CONNS (default 10000),
+//! LOGHD_FRONTDOOR_REQS (per active connection, default 1000).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use loghd::coordinator::frame;
+use loghd::coordinator::{BatcherConfig, Engine, ModelRegistry, Server, ServerConfig};
+use loghd::eval::metrics::percentile;
+use loghd::tensor::Matrix;
+use loghd::util::json::{self, Value};
+
+const ACTIVE_CONNS: usize = 64;
+const WINDOW: usize = 16;
+
+struct Echo;
+impl Engine for Echo {
+    fn name(&self) -> String {
+        "echo".into()
+    }
+    fn features(&self) -> usize {
+        2
+    }
+    fn infer(&mut self, x: &Matrix) -> anyhow::Result<Vec<i32>> {
+        Ok((0..x.rows()).map(|i| x.at(i, 0) as i32).collect())
+    }
+}
+
+#[cfg(unix)]
+mod rlimit {
+    //! Raise RLIMIT_NOFILE so both halves of 10k loopback connections
+    //! fit in one process. Raw FFI — this crate vendors all deps.
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+
+    #[cfg(target_os = "linux")]
+    const RLIMIT_NOFILE: i32 = 7;
+    #[cfg(not(target_os = "linux"))]
+    const RLIMIT_NOFILE: i32 = 8;
+
+    /// Try to raise the fd soft limit to `want`; return the resulting
+    /// soft limit.
+    pub fn raise_nofile(want: u64) -> u64 {
+        let mut lim = RLimit { cur: 0, max: 0 };
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+            return 1024;
+        }
+        if lim.cur < want {
+            let new = RLimit { cur: want.min(lim.max), max: lim.max };
+            unsafe { setrlimit(RLIMIT_NOFILE, &new) };
+            if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+                return 1024;
+            }
+        }
+        lim.cur
+    }
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn read_reply(stream: &mut TcpStream, scratch: &mut Vec<u8>) -> Value {
+    let mut hdr = [0u8; frame::HEADER_LEN];
+    stream.read_exact(&mut hdr).expect("reply header");
+    let len = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+    scratch.clear();
+    scratch.extend_from_slice(&hdr);
+    scratch.resize(frame::HEADER_LEN + len, 0);
+    stream.read_exact(&mut scratch[frame::HEADER_LEN..]).expect("reply payload");
+    match frame::try_extract(scratch, frame::DEFAULT_MAX_FRAME) {
+        frame::Extract::Frame { header, payload } => {
+            frame::decode_reply_to_json(&header, &scratch[payload]).expect("reply decode")
+        }
+        other => panic!("expected a reply frame, got {other:?}"),
+    }
+}
+
+fn roundtrip(stream: &mut TcpStream, scratch: &mut Vec<u8>, features: &[f32]) -> Value {
+    let mut req = Vec::new();
+    frame::encode_infer_request(None, features, &mut req);
+    stream.write_all(&req).expect("write request");
+    read_reply(stream, scratch)
+}
+
+/// Closed-loop windowed pipelining on one connection; returns latency
+/// samples in microseconds.
+fn drive_conn(addr: std::net::SocketAddr, requests: usize) -> Vec<f64> {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).expect("nodelay");
+    let mut scratch = Vec::new();
+    let mut frame_bytes = Vec::new();
+    frame::encode_infer_request(None, &[1.0, 0.0], &mut frame_bytes);
+    let mut latencies = Vec::with_capacity(requests);
+    let mut sent_at = std::collections::VecDeque::with_capacity(WINDOW);
+    let mut sent = 0usize;
+    let mut received = 0usize;
+    while received < requests {
+        while sent < requests && sent - received < WINDOW {
+            stream.write_all(&frame_bytes).expect("write");
+            sent_at.push_back(Instant::now());
+            sent += 1;
+        }
+        let _ = read_reply(&mut stream, &mut scratch);
+        let t0 = sent_at.pop_front().expect("reply without request");
+        latencies.push(t0.elapsed().as_secs_f64() * 1e6);
+        received += 1;
+    }
+    latencies
+}
+
+fn main() -> anyhow::Result<()> {
+    let want_conns = env_usize("LOGHD_FRONTDOOR_CONNS", 10_000);
+    let reqs_per_conn = env_usize("LOGHD_FRONTDOOR_REQS", 1_000);
+
+    // Both connection halves live here: 2 fds each, plus server internals
+    // (epoll, wakers, listener) and stdio headroom.
+    let needed = (2 * want_conns + 512) as u64;
+    #[cfg(unix)]
+    let fd_limit = rlimit::raise_nofile(needed);
+    #[cfg(not(unix))]
+    let fd_limit = needed;
+    let usable = ((fd_limit.saturating_sub(512)) / 2) as usize;
+    let conns = want_conns.min(usable.max(64));
+    if conns < want_conns {
+        println!(
+            "fd limit {fd_limit} clamps the hold phase to {conns} connections \
+             (wanted {want_conns})"
+        );
+    }
+
+    let registry = Arc::new(ModelRegistry::single(
+        "echo",
+        "demo",
+        2,
+        &BatcherConfig { max_batch: 64, max_delay: Duration::from_micros(200), max_pending: 8192 },
+        vec![Box::new(|| Ok(Box::new(Echo) as Box<dyn Engine>))],
+    ));
+    let cfg = ServerConfig { reactors: 4, ..Default::default() };
+    let mut server = Server::start_with("127.0.0.1:0", Arc::clone(&registry), cfg)?;
+    let addr = server.addr;
+
+    // --- Phase 1: hold `conns` open connections -------------------------
+    println!("phase 1: opening {conns} connections…");
+    let t0 = Instant::now();
+    let mut held = Vec::with_capacity(conns);
+    for i in 0..conns {
+        match TcpStream::connect(addr) {
+            Ok(s) => held.push(s),
+            Err(e) => {
+                println!("connect {i} failed ({e}); holding {} connections", held.len());
+                break;
+            }
+        }
+    }
+    let accept_s = t0.elapsed().as_secs_f64();
+    // Wait until the reactors have adopted every accepted socket.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while (server.stats().open as usize) < held.len() {
+        assert!(Instant::now() < deadline, "reactors never adopted all connections");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let held_n = held.len();
+    println!(
+        "  {held_n} connections open in {accept_s:.2}s ({:.0} accepts/s)",
+        held_n as f64 / accept_s
+    );
+
+    // Probe latency through the crowd: every held connection stays open
+    // while one more client does serial round trips.
+    let mut probe = TcpStream::connect(addr)?;
+    probe.set_nodelay(true)?;
+    let mut scratch = Vec::new();
+    let mut probe_lat = Vec::with_capacity(200);
+    for _ in 0..200 {
+        let t = Instant::now();
+        let r = roundtrip(&mut probe, &mut scratch, &[7.0, 0.0]);
+        probe_lat.push(t.elapsed().as_secs_f64() * 1e6);
+        assert_eq!(r.get("label").and_then(Value::as_f64), Some(7.0), "{r:?}");
+    }
+    probe_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let probe_p50 = percentile(&probe_lat, 0.50);
+    let probe_p99 = percentile(&probe_lat, 0.99);
+    println!("  probe through {held_n} idle conns: p50 {probe_p50:.0}µs p99 {probe_p99:.0}µs");
+    assert_eq!(server.stats().open as usize, held_n + 1);
+    drop(probe);
+    drop(held);
+
+    // --- Phase 2: saturation throughput ---------------------------------
+    println!(
+        "phase 2: {ACTIVE_CONNS} active connections x {reqs_per_conn} requests (window {WINDOW})…"
+    );
+    let t1 = Instant::now();
+    let mut all_lat: Vec<f64> = Vec::with_capacity(ACTIVE_CONNS * reqs_per_conn);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..ACTIVE_CONNS)
+            .map(|_| scope.spawn(move || drive_conn(addr, reqs_per_conn)))
+            .collect();
+        for h in handles {
+            all_lat.extend(h.join().expect("load generator"));
+        }
+    });
+    let elapsed = t1.elapsed().as_secs_f64();
+    let total = ACTIVE_CONNS * reqs_per_conn;
+    let rps = total as f64 / elapsed;
+    all_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = percentile(&all_lat, 0.50);
+    let p99 = percentile(&all_lat, 0.99);
+    let p999 = percentile(&all_lat, 0.999);
+    println!(
+        "  {total} requests in {elapsed:.2}s: {rps:.0} req/s  p50 {p50:.0}µs  p99 {p99:.0}µs  p999 {p999:.0}µs"
+    );
+
+    let wakeups = server.stats().wakeups;
+    server.shutdown();
+
+    std::fs::create_dir_all("results")?;
+    let report = json::obj(vec![
+        ("connections_target", json::num(want_conns as f64)),
+        ("connections_held", json::num(held_n as f64)),
+        ("fd_limit", json::num(fd_limit as f64)),
+        ("accept_s", json::num(accept_s)),
+        ("accepts_per_s", json::num(held_n as f64 / accept_s)),
+        ("probe_p50_us", json::num(probe_p50)),
+        ("probe_p99_us", json::num(probe_p99)),
+        ("active_conns", json::num(ACTIVE_CONNS as f64)),
+        ("window", json::num(WINDOW as f64)),
+        ("requests", json::num(total as f64)),
+        ("elapsed_s", json::num(elapsed)),
+        ("throughput_rps", json::num(rps)),
+        ("p50_us", json::num(p50)),
+        ("p99_us", json::num(p99)),
+        ("p999_us", json::num(p999)),
+        ("reactor_wakeups", json::num(wakeups as f64)),
+    ]);
+    std::fs::write("results/BENCH_frontdoor.json", json::to_string_pretty(&report) + "\n")?;
+    println!("wrote results/BENCH_frontdoor.json");
+    Ok(())
+}

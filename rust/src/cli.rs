@@ -122,6 +122,7 @@ USAGE:
   loghd serve  (--model <name=dir[:bits],...> | --artifacts <bundle dir> [--entry infer_loghd])
                [--replicas R] [--default <name>] [--bits 1|2|4|8|32]
                [--addr 127.0.0.1:7878] [--max_batch 64] [--max_delay_ms 2]
+               [--reactors 2]          # event-loop reactor threads (unix)
   loghd robustness [--profile smoke|full] [--dataset <name>] [--d <dim>]
                [--budget <frac of C*D*32>] [--target <frac of clean acc>]
                [--trials T] [--seed S] [--decohd true] [--out <path.json>]
@@ -139,10 +140,13 @@ of stored bit-planes the fault injector targets — each with its
 (rows x cols x bits) geometry and value domain, cross-checked against
 the trait-reported total.
 
-serve hosts every named model behind one JSON-lines TCP endpoint (see
-docs/PROTOCOL.md): requests route by their \"model\" field (default: the
---default tenant), {\"cmd\":\"models\"} lists tenants, {\"cmd\":\"reload\"}
-hot-swaps one tenant's artifact without dropping in-flight requests.
+serve hosts every named model behind one TCP endpoint speaking both
+JSON-lines and length-prefixed binary frames (sniffed per connection by
+the first byte; see docs/PROTOCOL.md): requests route by their \"model\"
+field (default: the --default tenant), {\"cmd\":\"models\"} lists tenants,
+{\"cmd\":\"reload\"} hot-swaps one tenant's artifact without dropping
+in-flight requests. On unix the front door is --reactors nonblocking
+epoll/poll event-loop threads; connections cost buffers, not threads.
 
 robustness solves equal-memory (method, precision, n/sparsity) cells at
 one stored-size budget, runs Monte-Carlo bit-flip campaigns over them,
@@ -351,6 +355,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let replicas: usize =
         flag(args, "replicas").unwrap_or("1").parse().context("--replicas")?;
     let replicas = replicas.max(1);
+    let reactors: usize = flag(args, "reactors").unwrap_or("2").parse().context("--reactors")?;
+    let server_cfg =
+        crate::coordinator::ServerConfig { reactors: reactors.max(1), ..Default::default() };
     let cfg = BatcherConfig {
         max_batch,
         max_delay: std::time::Duration::from_millis(max_delay_ms),
@@ -377,7 +384,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
 
     let registry = Arc::new(registry);
-    let mut server = Server::start(&addr, Arc::clone(&registry))?;
+    let mut server = Server::start_with(&addr, Arc::clone(&registry), server_cfg)?;
     println!("serving on {} — tenants:", server.addr);
     for info in registry.describe() {
         println!(

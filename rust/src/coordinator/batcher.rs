@@ -106,10 +106,45 @@ impl std::fmt::Display for ReloadError {
 
 impl std::error::Error for ReloadError {}
 
+/// Non-blocking completion hook for [`Coordinator::submit_with`]: invoked
+/// exactly once, from a worker thread, with the response or the reason
+/// the admitted request went unanswered. Used by the event-loop front
+/// end, whose reactor threads must never block on a channel.
+pub type ResponseCallback = Box<dyn FnOnce(Result<Response, SubmitError>) + Send + 'static>;
+
+/// How a job's answer travels back to its submitter. The channel variant
+/// keeps the blocking API's exact semantics (an error drops the sender
+/// and the caller disambiguates via the shutdown flag); the callback
+/// variant reports every outcome explicitly.
+enum Completion {
+    Channel(mpsc::Sender<Response>),
+    Callback(ResponseCallback),
+}
+
+impl Completion {
+    fn ok(self, resp: Response) {
+        match self {
+            Completion::Channel(tx) => {
+                let _ = tx.send(resp);
+            }
+            Completion::Callback(cb) => cb(Ok(resp)),
+        }
+    }
+
+    fn fail(self, err: SubmitError) {
+        match self {
+            // Dropping the sender is the blocking protocol's failure
+            // signal (recv fails; the caller checks the shutdown flag).
+            Completion::Channel(_) => {}
+            Completion::Callback(cb) => cb(Err(err)),
+        }
+    }
+}
+
 struct Job {
     request: Request,
     enqueued: Instant,
-    tx: mpsc::Sender<Response>,
+    completion: Completion,
 }
 
 struct Shared {
@@ -228,36 +263,64 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Enqueue a request; returns the receiver for its response.
-    pub fn submit(&self, features: Vec<f32>) -> Result<mpsc::Receiver<Response>, SubmitError> {
+    /// Admission control + enqueue shared by [`submit`](Self::submit) and
+    /// [`submit_with`](Self::submit_with). On refusal the completion is
+    /// handed back so the caller decides how to deliver the error.
+    fn enqueue(
+        &self,
+        features: Vec<f32>,
+        completion: Completion,
+    ) -> Result<(), (SubmitError, Completion)> {
         if self.shared.shutdown.load(Ordering::Acquire) {
-            return Err(SubmitError::ShutDown);
+            return Err((SubmitError::ShutDown, completion));
         }
         if features.len() != self.shared.features {
-            return Err(SubmitError::BadWidth {
-                got: features.len(),
-                want: self.shared.features,
-            });
+            let err = SubmitError::BadWidth { got: features.len(), want: self.shared.features };
+            return Err((err, completion));
         }
-        let (tx, rx) = mpsc::channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
-            // Re-check under the lock: a dying pool clears the queue while
-            // holding it, so this load is ordered against that clear and a
+            // Re-check under the lock: a dying pool fails the queue while
+            // holding it, so this load is ordered against that drain and a
             // request can never be enqueued after it (it would hang).
             if self.shared.shutdown.load(Ordering::Acquire) {
-                return Err(SubmitError::ShutDown);
+                return Err((SubmitError::ShutDown, completion));
             }
             if q.len() >= self.shared.cfg.max_pending {
                 self.shared.stats.lock().unwrap().rejected += 1;
-                return Err(SubmitError::QueueFull(q.len()));
+                return Err((SubmitError::QueueFull(q.len()), completion));
             }
             let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
-            q.push_back(Job { request: Request { id, features }, enqueued: Instant::now(), tx });
+            q.push_back(Job {
+                request: Request { id, features },
+                enqueued: Instant::now(),
+                completion,
+            });
             self.shared.stats.lock().unwrap().requests += 1;
         }
         self.shared.not_empty.notify_one();
-        Ok(rx)
+        Ok(())
+    }
+
+    /// Enqueue a request; returns the receiver for its response.
+    pub fn submit(&self, features: Vec<f32>) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        match self.enqueue(features, Completion::Channel(tx)) {
+            Ok(()) => Ok(rx),
+            Err((err, _completion)) => Err(err),
+        }
+    }
+
+    /// Enqueue a request with a completion callback instead of a channel.
+    /// The callback fires exactly once — with the response, or with the
+    /// admission/engine/shutdown error — always from a worker thread
+    /// except for synchronous admission refusals, which invoke it inline.
+    /// This is the non-blocking path the event-loop front end uses:
+    /// reactor threads hand off and return immediately.
+    pub fn submit_with(&self, features: Vec<f32>, cb: ResponseCallback) {
+        if let Err((err, completion)) = self.enqueue(features, Completion::Callback(cb)) {
+            completion.fail(err);
+        }
     }
 
     /// Submit and wait for the answer. A dropped response channel means
@@ -306,8 +369,11 @@ fn worker_loop(shared: Arc<Shared>, replica: usize, factory: EngineFactory) {
             // blocked callers observe the failure instead of hanging.
             if shared.live_workers.fetch_sub(1, Ordering::AcqRel) == 1 {
                 shared.shutdown.store(true, Ordering::Release);
-                shared.queue.lock().unwrap().clear();
+                let orphans: Vec<Job> = shared.queue.lock().unwrap().drain(..).collect();
                 shared.not_empty.notify_all();
+                for job in orphans {
+                    job.completion.fail(SubmitError::ShutDown);
+                }
             }
             return;
         }
@@ -360,18 +426,30 @@ fn worker_loop(shared: Arc<Shared>, replica: usize, factory: EngineFactory) {
             Err(err) => {
                 crate::log_error!("inference failed for batch of {}: {err:#}", jobs.len());
                 shared.stats.lock().unwrap().failures += jobs.len() as u64;
-                continue; // senders drop -> callers see EngineFailure
+                // Channel senders drop -> blocking callers see
+                // EngineFailure; callbacks are told explicitly.
+                for job in jobs {
+                    job.completion.fail(SubmitError::EngineFailure);
+                }
+                continue;
             }
         };
         let now = Instant::now();
         let mut stats = shared.stats.lock().unwrap();
         stats.batches += 1;
         stats.batched_items += jobs.len() as u64;
+        let mut done = Vec::with_capacity(jobs.len());
         for (job, label) in jobs.into_iter().zip(labels) {
             let latency = now.duration_since(job.enqueued);
             stats.latency.record(latency);
             stats.responses += 1;
-            let _ = job.tx.send(Response { id: job.request.id, label, latency });
+            done.push((job, label, latency));
+        }
+        // Deliver outside the stats lock: callback completions may do
+        // real work (encode a reply, wake a reactor).
+        drop(stats);
+        for (job, label, latency) in done {
+            job.completion.ok(Response { id: job.request.id, label, latency });
         }
     }
     crate::log_info!("worker {replica} drained; shutting down");
@@ -659,6 +737,53 @@ mod tests {
             assert!(Instant::now() < deadline, "pool never reported shutdown");
             std::thread::sleep(Duration::from_millis(5));
         }
+    }
+
+    #[test]
+    fn submit_with_delivers_responses_and_admission_errors() {
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        let coord = start(sizes, BatcherConfig::default());
+        let (tx, rx) = mpsc::channel();
+        for i in 0..8 {
+            let tx = tx.clone();
+            coord.submit_with(
+                vec![i as f32, 0.0, 0.0],
+                Box::new(move |res| tx.send((i, res)).unwrap()),
+            );
+        }
+        for _ in 0..8 {
+            let (i, res) = rx.recv().unwrap();
+            assert_eq!(res.unwrap().label, i);
+        }
+        // Admission refusal invokes the callback synchronously with Err.
+        let (tx2, rx2) = mpsc::channel();
+        coord.submit_with(vec![1.0], Box::new(move |res| tx2.send(res).unwrap()));
+        assert_eq!(rx2.recv().unwrap().unwrap_err(), SubmitError::BadWidth { got: 1, want: 3 });
+    }
+
+    #[test]
+    fn submit_with_reports_engine_failure_and_shutdown() {
+        struct AlwaysFails;
+        impl Engine for AlwaysFails {
+            fn name(&self) -> String {
+                "always-fails".into()
+            }
+            fn features(&self) -> usize {
+                1
+            }
+            fn infer(&mut self, _x: &Matrix) -> AResult<Vec<i32>> {
+                anyhow::bail!("broken")
+            }
+        }
+        let mut coord =
+            Coordinator::start(1, BatcherConfig::default(), Box::new(|| Ok(Box::new(AlwaysFails))));
+        let (tx, rx) = mpsc::channel();
+        coord.submit_with(vec![0.0], Box::new(move |res| tx.send(res).unwrap()));
+        assert_eq!(rx.recv().unwrap().unwrap_err(), SubmitError::EngineFailure);
+        coord.shutdown();
+        let (tx, rx) = mpsc::channel();
+        coord.submit_with(vec![0.0], Box::new(move |res| tx.send(res).unwrap()));
+        assert_eq!(rx.recv().unwrap().unwrap_err(), SubmitError::ShutDown);
     }
 
     #[test]

@@ -1,0 +1,753 @@
+//! Per-connection protocol state machine, shared by every front end.
+//!
+//! A [`Conn`] owns one connection's read/write buffers and speaks BOTH
+//! wire protocols: JSON-lines (`docs/PROTOCOL.md`) and binary frames
+//! ([`super::frame`]), selected by the first byte of the stream (the
+//! sniffing rule: [`frame::MAGIC`] ⇒ binary, anything else ⇒
+//! JSON-lines). It is deliberately I/O-free — callers feed bytes in
+//! with [`Conn::ingest`], pull parsed inference submissions out of
+//! [`Conn::process`], and drain reply bytes from [`Conn::writable`] —
+//! so the epoll reactor ([`super::eventloop`]), the portable threaded
+//! fallback, and the torture tests all drive the exact same logic.
+//!
+//! Reply ordering: every request is assigned a connection-local
+//! sequence number in arrival order, and replies are written strictly
+//! in that order (a `BTreeMap` reorder buffer holds replies that
+//! complete early). Admin verbs are *deferred* until every earlier
+//! reply has been written, which preserves the old thread-per-connection
+//! server's serial semantics: a pipelined `stats` request observes the
+//! effects of every inference request that preceded it on the wire.
+//!
+//! Error-survival model (the torture suite pins all three):
+//! - a malformed payload inside a complete frame (or a bad JSON line)
+//!   ⇒ coded error reply, connection survives — length/newline
+//!   delimiting means the stream never desynchronizes;
+//! - an oversized declared length ⇒ coded error reply, then the payload
+//!   is discarded as it streams in, and the connection survives;
+//! - a bad magic byte at a binary frame boundary ⇒ the stream is
+//!   desynchronized: one final error reply, then close.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Value};
+
+use super::batcher::Response;
+use super::frame;
+use super::registry::{ModelRegistry, TenantInfo};
+use super::stats::StatsSnapshot;
+
+/// Wire-level error: (human message, stable machine code).
+pub type WireError = (String, &'static str);
+
+/// Which protocol a connection speaks (decided by its first byte).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protocol {
+    /// No bytes seen yet.
+    Unknown,
+    /// One JSON document per `\n`-terminated line.
+    JsonLines,
+    /// Length-prefixed binary frames ([`super::frame`]).
+    Binary,
+}
+
+/// An inference request parsed off the wire, awaiting dispatch to the
+/// registry. The caller routes it (blocking or via callback) and hands
+/// the encoded reply back through [`Conn::complete`] with the same
+/// `seq`.
+#[derive(Debug)]
+pub struct SubmitReq {
+    /// Connection-local reply slot (arrival order).
+    pub seq: u64,
+    /// Tenant to route to (`None` ⇒ the registry default).
+    pub model: Option<String>,
+    pub features: Vec<f32>,
+}
+
+/// A reply slot waiting its turn in the write order.
+enum Pending {
+    /// Encoded reply bytes, ready to write.
+    Bytes(Vec<u8>),
+    /// A deferred admin document, executed against the registry only
+    /// when every earlier reply has been written (serial semantics).
+    Admin(Value),
+}
+
+/// One connection's buffers, protocol state, and reply reordering.
+pub struct Conn {
+    protocol: Protocol,
+    max_frame: usize,
+    rbuf: Vec<u8>,
+    rpos: usize,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Next sequence number to assign to an arriving request.
+    next_seq: u64,
+    /// Next sequence number whose reply goes on the wire.
+    next_write: u64,
+    ready: BTreeMap<u64, Pending>,
+    in_flight: usize,
+    /// Remaining payload bytes of an oversized binary frame to discard.
+    skip: usize,
+    /// Discarding an over-long JSON line until its newline.
+    json_skip: bool,
+    closing: bool,
+    eof: bool,
+}
+
+impl Conn {
+    pub fn new(max_frame: usize) -> Self {
+        Self {
+            protocol: Protocol::Unknown,
+            max_frame,
+            rbuf: Vec::new(),
+            rpos: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            next_seq: 0,
+            next_write: 0,
+            ready: BTreeMap::new(),
+            in_flight: 0,
+            skip: 0,
+            json_skip: false,
+            closing: false,
+            eof: false,
+        }
+    }
+
+    pub fn protocol(&self) -> Protocol {
+        self.protocol
+    }
+
+    /// Inference requests dispatched but not yet completed.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// A fatal protocol error was hit: stop reading, close after the
+    /// final error reply flushes.
+    pub fn is_closing(&self) -> bool {
+        self.closing
+    }
+
+    pub fn at_eof(&self) -> bool {
+        self.eof
+    }
+
+    /// Unprocessed input is buffered (resume [`Conn::process`] once
+    /// write backpressure clears).
+    pub fn has_input(&self) -> bool {
+        self.rpos < self.rbuf.len()
+    }
+
+    /// Connection is finished: the peer half-closed (or a fatal error
+    /// was hit), every admitted request was answered, and every reply
+    /// byte was handed to the socket.
+    pub fn done(&self) -> bool {
+        (self.eof || self.closing) && self.quiesced()
+    }
+
+    /// No replies owed: nothing in flight, nothing buffered to write.
+    pub fn quiesced(&self) -> bool {
+        self.in_flight == 0 && self.ready.is_empty() && !self.wants_write()
+    }
+
+    pub fn wants_write(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+
+    /// Bytes queued for the socket (the write-backpressure gauge).
+    pub fn wbuf_len(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    pub fn writable(&self) -> &[u8] {
+        &self.wbuf[self.wpos..]
+    }
+
+    pub fn advance_write(&mut self, n: usize) {
+        self.wpos += n;
+        debug_assert!(self.wpos <= self.wbuf.len());
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > 64 * 1024 {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+    }
+
+    /// Append raw bytes read off the socket.
+    pub fn ingest(&mut self, data: &[u8]) {
+        self.rbuf.extend_from_slice(data);
+    }
+
+    /// Parse as many complete requests as the buffer holds, stopping
+    /// early if queued reply bytes reach `write_budget` (backpressure:
+    /// a slow reader must not buffer unbounded replies). Admin requests
+    /// and protocol errors are resolved internally (into the reply
+    /// order); inference requests are pushed to `out` for the caller to
+    /// route. Returns true if any input was consumed.
+    pub fn process(
+        &mut self,
+        registry: &ModelRegistry,
+        write_budget: usize,
+        out: &mut Vec<SubmitReq>,
+    ) -> bool {
+        let mut progressed = false;
+        loop {
+            if self.closing || self.wbuf_len() >= write_budget {
+                break;
+            }
+            if self.protocol == Protocol::Unknown {
+                match self.rbuf.get(self.rpos) {
+                    None => break,
+                    Some(&b) if b == frame::MAGIC => self.protocol = Protocol::Binary,
+                    Some(_) => self.protocol = Protocol::JsonLines,
+                }
+            }
+            let stepped = match self.protocol {
+                Protocol::JsonLines => self.step_json(registry, out),
+                Protocol::Binary => self.step_binary(registry, out),
+                Protocol::Unknown => unreachable!("protocol sniffed above"),
+            };
+            if !stepped {
+                break;
+            }
+            progressed = true;
+        }
+        self.compact_rbuf();
+        progressed
+    }
+
+    /// The peer half-closed its write side. A trailing JSON line with
+    /// no newline terminator is still processed (matching
+    /// `BufRead::lines`, which the old server was built on); a partial
+    /// binary frame is dropped.
+    pub fn on_eof(&mut self, registry: &ModelRegistry, out: &mut Vec<SubmitReq>) {
+        self.eof = true;
+        if self.protocol == Protocol::JsonLines
+            && !self.json_skip
+            && !self.closing
+            && self.rpos < self.rbuf.len()
+        {
+            let line = String::from_utf8_lossy(&self.rbuf[self.rpos..]).into_owned();
+            self.rpos = self.rbuf.len();
+            self.handle_json_line(registry, &line, out);
+        }
+        self.compact_rbuf();
+    }
+
+    /// Deliver the encoded reply for an inference request previously
+    /// returned by [`Conn::process`]. Replies may arrive in any order;
+    /// they are written in sequence order.
+    pub fn complete(&mut self, registry: &ModelRegistry, seq: u64, bytes: Vec<u8>) {
+        debug_assert!(self.in_flight > 0, "complete() without a dispatched request");
+        self.in_flight = self.in_flight.saturating_sub(1);
+        self.ready.insert(seq, Pending::Bytes(bytes));
+        self.drain_ready(registry);
+    }
+
+    fn alloc_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    fn insert(&mut self, registry: &ModelRegistry, seq: u64, pending: Pending) {
+        self.ready.insert(seq, pending);
+        self.drain_ready(registry);
+    }
+
+    /// Move every in-order ready reply into the write buffer, executing
+    /// deferred admin documents as their turn comes (so an admin verb
+    /// observes the effects of every request that preceded it).
+    fn drain_ready(&mut self, registry: &ModelRegistry) {
+        while let Some(pending) = self.ready.remove(&self.next_write) {
+            self.next_write += 1;
+            match pending {
+                Pending::Bytes(b) => self.wbuf.extend_from_slice(&b),
+                Pending::Admin(doc) => {
+                    let bytes = match admin_reply(&doc, registry) {
+                        Ok(v) => encode_admin_reply_bytes(self.protocol, &v),
+                        Err((msg, code)) => encode_error_bytes(self.protocol, &msg, code),
+                    };
+                    self.wbuf.extend_from_slice(&bytes);
+                }
+            }
+        }
+    }
+
+    fn compact_rbuf(&mut self) {
+        if self.rpos == self.rbuf.len() {
+            self.rbuf.clear();
+            self.rpos = 0;
+        } else if self.rpos > 16 * 1024 {
+            self.rbuf.drain(..self.rpos);
+            self.rpos = 0;
+        }
+    }
+
+    /// One JSON-lines step: consume a skip region or one line.
+    fn step_json(&mut self, registry: &ModelRegistry, out: &mut Vec<SubmitReq>) -> bool {
+        let avail = &self.rbuf[self.rpos..];
+        let newline = avail.iter().position(|&b| b == b'\n');
+        if self.json_skip {
+            return match newline {
+                Some(i) => {
+                    self.rpos += i + 1;
+                    self.json_skip = false;
+                    true
+                }
+                None => {
+                    self.rpos = self.rbuf.len();
+                    false
+                }
+            };
+        }
+        match newline {
+            None => {
+                if avail.len() > self.max_frame {
+                    let seq = self.alloc_seq();
+                    let msg = format!("line exceeds the {} byte limit", self.max_frame);
+                    let bytes = encode_error_bytes(self.protocol, &msg, "bad_request");
+                    self.insert(registry, seq, Pending::Bytes(bytes));
+                    self.json_skip = true;
+                    self.rpos = self.rbuf.len();
+                    true
+                } else {
+                    false
+                }
+            }
+            Some(i) => {
+                let mut end = self.rpos + i;
+                if end > self.rpos && self.rbuf[end - 1] == b'\r' {
+                    end -= 1;
+                }
+                let line = String::from_utf8_lossy(&self.rbuf[self.rpos..end]).into_owned();
+                self.rpos += i + 1;
+                self.handle_json_line(registry, &line, out);
+                true
+            }
+        }
+    }
+
+    fn handle_json_line(
+        &mut self,
+        registry: &ModelRegistry,
+        line: &str,
+        out: &mut Vec<SubmitReq>,
+    ) {
+        if line.trim().is_empty() {
+            return;
+        }
+        let seq = self.alloc_seq();
+        match parse_json_request(line) {
+            Err((msg, code)) => {
+                let bytes = encode_error_bytes(self.protocol, &msg, code);
+                self.insert(registry, seq, Pending::Bytes(bytes));
+            }
+            Ok(Parsed::Admin(doc)) => self.insert(registry, seq, Pending::Admin(doc)),
+            Ok(Parsed::Infer { model, features }) => {
+                self.in_flight += 1;
+                out.push(SubmitReq { seq, model, features });
+            }
+        }
+    }
+
+    /// One binary step: consume a skip region or one frame.
+    fn step_binary(&mut self, registry: &ModelRegistry, out: &mut Vec<SubmitReq>) -> bool {
+        if self.skip > 0 {
+            let avail = self.rbuf.len() - self.rpos;
+            let take = avail.min(self.skip);
+            self.rpos += take;
+            self.skip -= take;
+            return self.skip == 0 && self.rpos < self.rbuf.len();
+        }
+        match frame::try_extract(&self.rbuf[self.rpos..], self.max_frame) {
+            frame::Extract::NeedMore => false,
+            frame::Extract::BadMagic(b) => {
+                let seq = self.alloc_seq();
+                let msg = format!("bad frame magic {b:#04x}: stream desynchronized");
+                let bytes = encode_error_bytes(self.protocol, &msg, "bad_request");
+                self.insert(registry, seq, Pending::Bytes(bytes));
+                self.closing = true;
+                self.rpos = self.rbuf.len();
+                false
+            }
+            frame::Extract::Oversized { declared, .. } => {
+                let seq = self.alloc_seq();
+                let msg = format!(
+                    "frame payload of {declared} bytes exceeds the {} byte cap",
+                    self.max_frame
+                );
+                let bytes = encode_error_bytes(self.protocol, &msg, "bad_request");
+                self.insert(registry, seq, Pending::Bytes(bytes));
+                self.rpos += frame::HEADER_LEN;
+                self.skip = declared;
+                true
+            }
+            frame::Extract::Frame { header, payload } => {
+                let start = self.rpos;
+                let decoded = frame::decode_request(
+                    &header,
+                    &self.rbuf[start + payload.start..start + payload.end],
+                );
+                self.rpos += frame::HEADER_LEN + header.payload_len;
+                let seq = self.alloc_seq();
+                match decoded {
+                    Err((msg, code)) => {
+                        let bytes = encode_error_bytes(self.protocol, &msg, code);
+                        self.insert(registry, seq, Pending::Bytes(bytes));
+                    }
+                    Ok(frame::BinaryRequest::Admin(doc)) => {
+                        self.insert(registry, seq, Pending::Admin(doc))
+                    }
+                    Ok(frame::BinaryRequest::Infer { model, features }) => {
+                        self.in_flight += 1;
+                        out.push(SubmitReq { seq, model, features });
+                    }
+                }
+                true
+            }
+        }
+    }
+}
+
+/// A parsed JSON-lines request.
+enum Parsed {
+    Infer { model: Option<String>, features: Vec<f32> },
+    Admin(Value),
+}
+
+/// A field that must be a string when present — a non-string value is a
+/// protocol error, never silently treated as absent (a numeric "model"
+/// must not route to the default tenant).
+fn optional_str<'a>(v: &'a Value, key: &str) -> Result<Option<&'a str>, WireError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(Value::String(s)) => Ok(Some(s.as_str())),
+        Some(_) => Err((format!("'{key}' must be a string"), "bad_request")),
+    }
+}
+
+fn parse_json_request(line: &str) -> Result<Parsed, WireError> {
+    let v = json::parse(line).map_err(|e| (format!("bad json: {e}"), "bad_request"))?;
+    let model = optional_str(&v, "model")?.map(str::to_string);
+    match optional_str(&v, "cmd")? {
+        Some(_) => Ok(Parsed::Admin(v)),
+        None => {
+            let feats = v
+                .get("features")
+                .and_then(Value::as_array)
+                .ok_or_else(|| ("missing 'features' array".to_string(), "bad_request"))?;
+            let features: Vec<f32> = feats
+                .iter()
+                .map(|f| {
+                    f.as_f64()
+                        .map(|x| x as f32)
+                        .ok_or_else(|| ("non-numeric feature".to_string(), "bad_request"))
+                })
+                .collect::<Result<_, _>>()?;
+            Ok(Parsed::Infer { model, features })
+        }
+    }
+}
+
+fn stats_fields(s: &StatsSnapshot) -> Vec<(&'static str, Value)> {
+    vec![
+        ("requests", json::num(s.requests as f64)),
+        ("responses", json::num(s.responses as f64)),
+        ("rejected", json::num(s.rejected as f64)),
+        ("failures", json::num(s.failures as f64)),
+        ("reloads", json::num(s.reloads as f64)),
+        ("mean_batch", json::num(s.mean_batch_size)),
+        ("latency_p50_us", json::num(s.latency_p50_us)),
+        ("latency_p99_us", json::num(s.latency_p99_us)),
+        ("throughput_rps", json::num(s.throughput_rps)),
+    ]
+}
+
+fn tenant_json(info: &TenantInfo) -> Value {
+    let mut fields = vec![
+        ("model", json::s(info.name.clone())),
+        ("kind", json::s(info.kind.clone())),
+        ("precision", json::s(info.precision)),
+        ("replicas", json::num(info.replicas as f64)),
+        ("live_replicas", json::num(info.live_replicas as f64)),
+        ("features", json::num(info.features as f64)),
+        ("default", Value::Bool(info.is_default)),
+    ];
+    if let Some(path) = &info.path {
+        fields.push(("path", json::s(path.display().to_string())));
+    }
+    fields.extend(stats_fields(&info.stats));
+    json::obj(fields)
+}
+
+/// Execute one admin document (`stats` / `models` / `reload`) against
+/// the registry and build the reply document. Shared verbatim by both
+/// protocols — the conformance suite's equivalence claim rests on this
+/// being the single implementation.
+pub fn admin_reply(doc: &Value, registry: &ModelRegistry) -> Result<Value, WireError> {
+    let model = optional_str(doc, "model")?;
+    match optional_str(doc, "cmd")? {
+        Some("stats") => {
+            let (name, s) = registry.stats(model).map_err(|e| (e.to_string(), e.code()))?;
+            let mut fields = vec![("model", json::s(name))];
+            fields.extend(stats_fields(&s));
+            Ok(json::obj(fields))
+        }
+        Some("models") => {
+            let models: Vec<Value> = registry.describe().iter().map(tenant_json).collect();
+            Ok(json::obj(vec![
+                ("default", json::s(registry.default_model())),
+                ("models", json::arr(models)),
+            ]))
+        }
+        Some("reload") => {
+            let path = optional_str(doc, "path")?.map(std::path::Path::new);
+            let bits = match doc.get("bits") {
+                None => None,
+                Some(b) => match b.as_f64() {
+                    Some(x) if x.fract() == 0.0 && x >= 0.0 => Some(x as u32),
+                    _ => {
+                        return Err((
+                            "'bits' must be a non-negative integer".into(),
+                            "bad_request",
+                        ))
+                    }
+                },
+            };
+            let info =
+                registry.reload(model, path, bits).map_err(|e| (e.to_string(), e.code()))?;
+            Ok(json::obj(vec![
+                ("reloaded", json::s(info.name)),
+                ("kind", json::s(info.kind)),
+                ("precision", json::s(info.precision)),
+                ("replicas", json::num(info.replicas as f64)),
+            ]))
+        }
+        Some(other) => Err((format!("unknown cmd '{other}'"), "bad_request")),
+        None => Err(("admin document missing 'cmd'".into(), "bad_request")),
+    }
+}
+
+/// The JSON-lines inference reply document (field order is part of the
+/// protocol's observable surface and pinned by the golden transcript).
+pub fn infer_reply_json(model: &str, resp: &Response) -> Value {
+    json::obj(vec![
+        ("id", json::num(resp.id as f64)),
+        ("model", json::s(model)),
+        ("label", json::num(resp.label as f64)),
+        ("latency_us", json::num(resp.latency.as_secs_f64() * 1e6)),
+    ])
+}
+
+/// Encode an inference reply for `protocol`.
+pub fn encode_infer_reply_bytes(protocol: Protocol, model: &str, resp: &Response) -> Vec<u8> {
+    match protocol {
+        Protocol::JsonLines | Protocol::Unknown => {
+            let mut s = json::to_string(&infer_reply_json(model, resp));
+            s.push('\n');
+            s.into_bytes()
+        }
+        Protocol::Binary => {
+            let mut out = Vec::new();
+            frame::encode_infer_reply(
+                resp.id,
+                resp.label,
+                resp.latency.as_secs_f64() * 1e6,
+                model,
+                &mut out,
+            );
+            out
+        }
+    }
+}
+
+/// Encode an admin reply document for `protocol`.
+pub fn encode_admin_reply_bytes(protocol: Protocol, doc: &Value) -> Vec<u8> {
+    let text = json::to_string(doc);
+    match protocol {
+        Protocol::JsonLines | Protocol::Unknown => {
+            let mut s = text;
+            s.push('\n');
+            s.into_bytes()
+        }
+        Protocol::Binary => {
+            let mut out = Vec::new();
+            frame::encode_admin_reply(&text, &mut out);
+            out
+        }
+    }
+}
+
+/// Encode a coded error reply for `protocol`.
+pub fn encode_error_bytes(protocol: Protocol, msg: &str, code: &str) -> Vec<u8> {
+    match protocol {
+        Protocol::JsonLines | Protocol::Unknown => {
+            let mut s = json::to_string(&json::obj(vec![
+                ("error", json::s(msg)),
+                ("code", json::s(code)),
+            ]));
+            s.push('\n');
+            s.into_bytes()
+        }
+        Protocol::Binary => {
+            let mut out = Vec::new();
+            frame::encode_error_reply(msg, code, &mut out);
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::Engine;
+    use crate::tensor::Matrix;
+    use std::time::Duration;
+
+    struct Echo;
+    impl Engine for Echo {
+        fn name(&self) -> String {
+            "echo".into()
+        }
+        fn features(&self) -> usize {
+            2
+        }
+        fn infer(&mut self, x: &Matrix) -> anyhow::Result<Vec<i32>> {
+            Ok((0..x.rows()).map(|i| x.at(i, 0) as i32).collect())
+        }
+    }
+
+    fn echo_registry() -> ModelRegistry {
+        ModelRegistry::single(
+            "echo",
+            "demo",
+            2,
+            &BatcherConfig::default(),
+            vec![Box::new(|| Ok(Box::new(Echo) as Box<dyn Engine>))],
+        )
+    }
+
+    fn resp(id: u64, label: i32) -> Response {
+        Response { id, label, latency: Duration::from_micros(10) }
+    }
+
+    #[test]
+    fn replies_are_written_in_request_order() {
+        let registry = echo_registry();
+        let mut conn = Conn::new(frame::DEFAULT_MAX_FRAME);
+        let mut out = Vec::new();
+        conn.ingest(b"{\"features\": [1, 0]}\n{\"features\": [2, 0]}\n");
+        assert!(conn.process(&registry, usize::MAX, &mut out));
+        assert_eq!(conn.protocol(), Protocol::JsonLines);
+        assert_eq!(out.len(), 2);
+        assert_eq!(conn.in_flight(), 2);
+        // Complete the SECOND request first: nothing may be written yet.
+        let b1 = encode_infer_reply_bytes(conn.protocol(), "echo", &resp(1, 2));
+        conn.complete(&registry, out[1].seq, b1);
+        assert!(!conn.wants_write());
+        let b0 = encode_infer_reply_bytes(conn.protocol(), "echo", &resp(0, 1));
+        conn.complete(&registry, out[0].seq, b0);
+        let text = String::from_utf8(conn.writable().to_vec()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"id\": 0"), "{}", lines[0]);
+        assert!(lines[1].contains("\"id\": 1"), "{}", lines[1]);
+        assert_eq!(conn.in_flight(), 0);
+    }
+
+    #[test]
+    fn pipelined_admin_waits_for_earlier_inference() {
+        let registry = echo_registry();
+        let mut conn = Conn::new(frame::DEFAULT_MAX_FRAME);
+        let mut out = Vec::new();
+        conn.ingest(b"{\"features\": [3, 0]}\n{\"cmd\": \"stats\"}\n");
+        conn.process(&registry, usize::MAX, &mut out);
+        assert_eq!(out.len(), 1);
+        // The stats document must not execute yet — the inference reply
+        // (and its `responses` increment) comes first.
+        assert!(!conn.wants_write());
+        let (_, r) = registry.submit_blocking(None, vec![3.0, 0.0]).unwrap();
+        let bytes = encode_infer_reply_bytes(conn.protocol(), "echo", &r);
+        conn.complete(&registry, out[0].seq, bytes);
+        let text = String::from_utf8(conn.writable().to_vec()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let stats = json::parse(lines[1]).unwrap();
+        assert_eq!(stats.get("responses").and_then(Value::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn binary_oversized_frame_is_survivable() {
+        let registry = echo_registry();
+        let mut conn = Conn::new(64);
+        let mut out = Vec::new();
+        // An oversized header, its (streamed, discarded) payload, then a
+        // good frame — the connection must answer both.
+        let mut buf = Vec::new();
+        buf.push(frame::MAGIC);
+        buf.push(frame::VERSION);
+        buf.push(frame::TYPE_REQ_INFER);
+        buf.push(0);
+        buf.extend_from_slice(&(100u32).to_le_bytes());
+        buf.extend_from_slice(&[0xAA; 100]);
+        frame::encode_infer_request(None, &[4.0, 0.0], &mut buf);
+        conn.ingest(&buf);
+        conn.process(&registry, usize::MAX, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].features, vec![4.0, 0.0]);
+        assert!(!conn.is_closing());
+        // The error reply for the oversized frame is already queued.
+        let w = conn.writable().to_vec();
+        let (h, p) = match frame::try_extract(&w, frame::DEFAULT_MAX_FRAME) {
+            frame::Extract::Frame { header, payload } => (header, w[payload].to_vec()),
+            other => panic!("{other:?}"),
+        };
+        let doc = frame::decode_reply_to_json(&h, &p).unwrap();
+        assert_eq!(doc.get("code").and_then(Value::as_str), Some("bad_request"));
+    }
+
+    #[test]
+    fn bad_magic_mid_stream_closes_after_error() {
+        let registry = echo_registry();
+        let mut conn = Conn::new(frame::DEFAULT_MAX_FRAME);
+        let mut out = Vec::new();
+        let mut buf = Vec::new();
+        frame::encode_infer_request(None, &[1.0, 0.0], &mut buf);
+        buf.extend_from_slice(b"garbage");
+        conn.ingest(&buf);
+        conn.process(&registry, usize::MAX, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(conn.is_closing());
+        assert!(!conn.done(), "must still flush the in-flight reply + error");
+        let bytes = encode_infer_reply_bytes(conn.protocol(), "echo", &resp(0, 1));
+        conn.complete(&registry, out[0].seq, bytes);
+        let n = conn.writable().len();
+        conn.advance_write(n);
+        assert!(conn.done());
+    }
+
+    #[test]
+    fn write_budget_pauses_parsing() {
+        let registry = echo_registry();
+        let mut conn = Conn::new(frame::DEFAULT_MAX_FRAME);
+        let mut out = Vec::new();
+        // Two bad lines: each produces an immediate error reply. With a
+        // tiny write budget only the first is parsed.
+        conn.ingest(b"x\ny\n");
+        conn.process(&registry, 8, &mut out);
+        assert!(conn.has_input());
+        let one = conn.wbuf_len();
+        assert!(one > 8);
+        // Draining the write buffer resumes parsing.
+        let n = conn.writable().len();
+        conn.advance_write(n);
+        conn.process(&registry, 8, &mut out);
+        assert!(!conn.has_input());
+        assert!(conn.wbuf_len() > 0);
+    }
+}

@@ -1,0 +1,743 @@
+//! Readiness-driven event-loop front door (epoll, with a portable
+//! `poll(2)` fallback).
+//!
+//! A small fixed pool of reactor threads multiplexes every connection:
+//! reactor 0 owns the listener (accepted sockets are handed out
+//! round-robin), and each reactor runs a level-triggered readiness loop
+//! over its connections' [`super::conn::Conn`] state machines. Design
+//! points the tests pin:
+//!
+//! - **No busy-wait.** The loop blocks with an infinite timeout; an
+//!   idle server takes zero wakeups (`ServerStats::wakeups` is the
+//!   proof). Cross-thread work (accepted sockets, batcher completions)
+//!   arrives through a per-reactor waker.
+//! - **Non-blocking inference.** Requests are routed with
+//!   [`ModelRegistry::submit_with`]; the completion callback encodes
+//!   the reply bytes on the worker thread, pushes them to the owning
+//!   reactor's completion queue, and wakes it. Reactor threads never
+//!   park on a channel.
+//! - **Write-interest-driven backpressure.** A connection whose write
+//!   buffer passes the high-water mark stops being read (and parsed)
+//!   until the peer drains it; `EPOLLOUT` interest exists only while
+//!   reply bytes are queued.
+//! - **Graceful drain.** Shutdown closes the listener, stops reading,
+//!   then keeps the loop alive until every admitted request has been
+//!   answered and flushed (bounded by `drain_deadline`) — connections
+//!   are never abandoned mid-reply, and every reactor thread is joined.
+//!
+//! The poller is raw `epoll(7)` on Linux and `poll(2)` elsewhere on
+//! unix — hand-rolled FFI against the libc the process already links,
+//! because this crate vendors every dependency. The waker is a
+//! loopback socket pair built from `std` only.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::batcher::ResponseCallback;
+use super::conn::{self, Conn, SubmitReq};
+use super::registry::{ModelRegistry, RouteError};
+use super::server::{ServerConfig, ServerStats};
+
+/// A completed reply travelling back to a reactor: (connection token,
+/// reply sequence, encoded bytes).
+type CompletionMsg = (u64, u64, Vec<u8>);
+
+const TOKEN_WAKER: u64 = 0;
+const TOKEN_LISTENER: u64 = 1;
+const TOKEN_BASE: u64 = 2;
+
+/// One readiness event, normalized across the epoll and poll backends.
+struct Event {
+    token: u64,
+    readable: bool,
+    writable: bool,
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! Raw `epoll(7)` bindings — no libc crate, just the symbols the
+    //! process already links.
+    use super::Event;
+    use std::io;
+    use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+
+    // On x86 the kernel ABI packs epoll_event to 12 bytes.
+    #[repr(C)]
+    #[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    }
+
+    const EPOLL_CLOEXEC: i32 = 0x80000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+
+    const MAX_EVENTS: usize = 256;
+
+    pub struct Poller {
+        ep: OwnedFd,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Self> {
+            let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if fd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Self { ep: unsafe { OwnedFd::from_raw_fd(fd) } })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events: if read { EPOLLIN } else { 0 } | if write { EPOLLOUT } else { 0 },
+                data: token,
+            };
+            let rc = unsafe { epoll_ctl(self.ep.as_raw_fd(), op, fd, &mut ev) };
+            if rc < 0 {
+                Err(io::Error::last_os_error())
+            } else {
+                Ok(())
+            }
+        }
+
+        pub fn register(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, read, write)
+        }
+
+        pub fn reregister(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, read, write)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, false, false)
+        }
+
+        /// Block until readiness (timeout in ms; -1 = forever). A signal
+        /// interruption reports as an empty event set.
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+            out.clear();
+            let mut buf = [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+            let n = unsafe {
+                epoll_wait(self.ep.as_raw_fd(), buf.as_mut_ptr(), MAX_EVENTS as i32, timeout_ms)
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(err);
+            }
+            for ev in buf.iter().take(n as usize) {
+                let bits = ev.events;
+                out.push(Event {
+                    token: ev.data,
+                    readable: bits & (EPOLLIN | EPOLLERR | EPOLLHUP) != 0,
+                    writable: bits & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    //! Portable `poll(2)` fallback for the non-Linux unixes. The fd set
+    //! is rebuilt per wait — fine at this backend's scale, and it keeps
+    //! the registration model identical to the epoll arm.
+    use super::Event;
+    use std::collections::HashMap;
+    use std::io;
+    use std::os::fd::RawFd;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        // nfds_t is `unsigned int` on the BSDs and macOS this arm serves.
+        fn poll(fds: *mut PollFd, nfds: u32, timeout: i32) -> i32;
+    }
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+    const POLLNVAL: i16 = 0x020;
+
+    pub struct Poller {
+        regs: HashMap<RawFd, (u64, bool, bool)>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Self> {
+            Ok(Self { regs: HashMap::new() })
+        }
+
+        pub fn register(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.regs.insert(fd, (token, read, write));
+            Ok(())
+        }
+
+        pub fn reregister(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.register(fd, token, read, write)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.regs.remove(&fd);
+            Ok(())
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+            out.clear();
+            let mut fds: Vec<PollFd> = Vec::with_capacity(self.regs.len());
+            let mut tokens: Vec<u64> = Vec::with_capacity(self.regs.len());
+            for (&fd, &(token, read, write)) in &self.regs {
+                let events = if read { POLLIN } else { 0 } | if write { POLLOUT } else { 0 };
+                fds.push(PollFd { fd, events, revents: 0 });
+                tokens.push(token);
+            }
+            let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as u32, timeout_ms) };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(err);
+            }
+            for (pfd, &token) in fds.iter().zip(&tokens) {
+                let bits = pfd.revents;
+                if bits == 0 {
+                    continue;
+                }
+                out.push(Event {
+                    token,
+                    readable: bits & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0,
+                    writable: bits & (POLLOUT | POLLERR | POLLHUP | POLLNVAL) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+use sys::Poller;
+
+/// Cross-thread mailbox for one reactor: sockets to adopt, completed
+/// replies to deliver, and the waker that breaks its poll sleep.
+struct Handle {
+    incoming: Mutex<Vec<TcpStream>>,
+    completions: Mutex<Vec<CompletionMsg>>,
+    /// Write end of the reactor's loopback waker pair.
+    wake: TcpStream,
+}
+
+impl Handle {
+    fn wake(&self) {
+        // One byte is a level trigger, not a count: a short or failed
+        // write (WouldBlock = a wake byte is already pending) is fine.
+        #[allow(clippy::unused_io_amount)]
+        let _ = (&self.wake).write(&[1u8]);
+    }
+}
+
+struct Shared {
+    stop: AtomicBool,
+    wakeups: AtomicU64,
+    accepted: AtomicU64,
+    open: AtomicU64,
+    handles: Vec<Handle>,
+}
+
+/// The running event-loop server (behind the [`super::Server`] facade).
+pub struct EventLoop {
+    pub addr: SocketAddr,
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl EventLoop {
+    pub fn start(addr: &str, registry: Arc<ModelRegistry>, cfg: ServerConfig) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let reactors = cfg.reactors.max(1);
+        let mut handles = Vec::with_capacity(reactors);
+        let mut waker_rxs = Vec::with_capacity(reactors);
+        for _ in 0..reactors {
+            let (tx, rx) = waker_pair().context("creating reactor waker")?;
+            handles.push(Handle {
+                incoming: Mutex::new(Vec::new()),
+                completions: Mutex::new(Vec::new()),
+                wake: tx,
+            });
+            waker_rxs.push(rx);
+        }
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            wakeups: AtomicU64::new(0),
+            accepted: AtomicU64::new(0),
+            open: AtomicU64::new(0),
+            handles,
+        });
+        let mut threads = Vec::with_capacity(reactors);
+        let mut listener = Some(listener);
+        for idx in 0..reactors {
+            let mut reactor = Reactor {
+                idx,
+                reactors,
+                cfg: cfg.clone(),
+                registry: Arc::clone(&registry),
+                shared: Arc::clone(&shared),
+                poller: Poller::new().context("creating poller")?,
+                waker_rx: waker_rxs.remove(0),
+                listener: if idx == 0 { listener.take() } else { None },
+                conns: HashMap::new(),
+                next_token: TOKEN_BASE,
+                rr: 0,
+                stop_reading: false,
+            };
+            reactor
+                .poller
+                .register(reactor.waker_rx.as_raw_fd(), TOKEN_WAKER, true, false)
+                .context("registering waker")?;
+            if let Some(l) = &reactor.listener {
+                reactor
+                    .poller
+                    .register(l.as_raw_fd(), TOKEN_LISTENER, true, false)
+                    .context("registering listener")?;
+            }
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("loghd-reactor-{idx}"))
+                    .spawn(move || reactor.run())
+                    .context("spawning reactor")?,
+            );
+        }
+        Ok(Self { addr: local, shared, threads })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        for h in &self.shared.handles {
+            h.wake();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            wakeups: self.shared.wakeups.load(Ordering::Relaxed),
+            accepted: self.shared.accepted.load(Ordering::Relaxed),
+            open: self.shared.open.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for EventLoop {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// A loopback socket pair standing in for `pipe(2)` — pure std, no
+/// per-OS flag constants. Returns (write end, read end), both
+/// non-blocking.
+fn waker_pair() -> io::Result<(TcpStream, TcpStream)> {
+    let l = TcpListener::bind(("127.0.0.1", 0))?;
+    let tx = TcpStream::connect(l.local_addr()?)?;
+    // Guard against an unrelated connection racing onto the ephemeral
+    // port: accept until we see our own peer address.
+    let want = tx.local_addr()?;
+    let rx = loop {
+        let (s, peer) = l.accept()?;
+        if peer == want {
+            break s;
+        }
+    };
+    tx.set_nonblocking(true)?;
+    tx.set_nodelay(true)?;
+    rx.set_nonblocking(true)?;
+    Ok((tx, rx))
+}
+
+struct ConnEntry {
+    stream: TcpStream,
+    conn: Conn,
+    /// Currently registered (read, write) interest.
+    interest: (bool, bool),
+}
+
+struct Reactor {
+    idx: usize,
+    reactors: usize,
+    cfg: ServerConfig,
+    registry: Arc<ModelRegistry>,
+    shared: Arc<Shared>,
+    poller: Poller,
+    waker_rx: TcpStream,
+    listener: Option<TcpListener>,
+    conns: HashMap<u64, ConnEntry>,
+    next_token: u64,
+    /// Round-robin cursor for handing accepted sockets to reactors.
+    rr: usize,
+    /// Set during drain: no new bytes are read or parsed.
+    stop_reading: bool,
+}
+
+impl Reactor {
+    fn run(&mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        let mut drain_deadline: Option<Instant> = None;
+        loop {
+            let timeout_ms = if drain_deadline.is_some() { 20 } else { -1 };
+            if let Err(e) = self.poller.wait(&mut events, timeout_ms) {
+                crate::log_error!("reactor {}: poll failed: {e}", self.idx);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            self.shared.wakeups.fetch_add(1, Ordering::Relaxed);
+            let batch = std::mem::take(&mut events);
+            for ev in &batch {
+                match ev.token {
+                    TOKEN_WAKER => self.drain_waker(),
+                    TOKEN_LISTENER => self.accept_ready(),
+                    token => {
+                        if ev.readable {
+                            self.handle_readable(token);
+                        }
+                        if ev.writable {
+                            self.service(token);
+                        }
+                    }
+                }
+            }
+            events = batch;
+            self.drain_queues();
+            if drain_deadline.is_none() && self.shared.stop.load(Ordering::Acquire) {
+                drain_deadline = Some(Instant::now() + self.cfg.drain_deadline);
+                self.begin_drain();
+            }
+            if let Some(deadline) = drain_deadline {
+                self.reap_quiesced();
+                if self.conns.is_empty() || Instant::now() >= deadline {
+                    break;
+                }
+            }
+        }
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            self.close(t);
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut buf = [0u8; 256];
+        loop {
+            match self.waker_rx.read(&mut buf) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Adopt cross-thread work: completed replies, then handed-off
+    /// sockets.
+    fn drain_queues(&mut self) {
+        let completions =
+            std::mem::take(&mut *self.shared.handles[self.idx].completions.lock().unwrap());
+        for (token, seq, bytes) in completions {
+            if let Some(entry) = self.conns.get_mut(&token) {
+                entry.conn.complete(&self.registry, seq, bytes);
+                self.service(token);
+            }
+        }
+        let incoming =
+            std::mem::take(&mut *self.shared.handles[self.idx].incoming.lock().unwrap());
+        for stream in incoming {
+            self.adopt(stream);
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            let Some(listener) = &self.listener else { return };
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    self.shared.accepted.fetch_add(1, Ordering::Relaxed);
+                    self.shared.open.fetch_add(1, Ordering::Relaxed);
+                    let target = self.rr;
+                    self.rr = (self.rr + 1) % self.reactors;
+                    if target == self.idx {
+                        self.adopt(stream);
+                    } else {
+                        self.shared.handles[target].incoming.lock().unwrap().push(stream);
+                        self.shared.handles[target].wake();
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    crate::log_error!("accept failed: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    fn adopt(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            self.shared.open.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let token = self.next_token;
+        self.next_token += 1;
+        let read = !self.stop_reading;
+        if self.poller.register(stream.as_raw_fd(), token, read, false).is_err() {
+            self.shared.open.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        self.conns.insert(
+            token,
+            ConnEntry { stream, conn: Conn::new(self.cfg.max_frame), interest: (read, false) },
+        );
+    }
+
+    fn close(&mut self, token: u64) {
+        if let Some(entry) = self.conns.remove(&token) {
+            let _ = self.poller.deregister(entry.stream.as_raw_fd());
+            self.shared.open.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Read everything available (until WouldBlock, EOF, or write
+    /// backpressure), parsing as we go, then dispatch and flush.
+    fn handle_readable(&mut self, token: u64) {
+        let mut submits = Vec::new();
+        let mut dead = false;
+        {
+            let Some(entry) = self.conns.get_mut(&token) else { return };
+            if !self.stop_reading && !entry.conn.at_eof() && !entry.conn.is_closing() {
+                let mut chunk = [0u8; 16 * 1024];
+                loop {
+                    if entry.conn.wbuf_len() >= self.cfg.write_hwm {
+                        break;
+                    }
+                    match entry.stream.read(&mut chunk) {
+                        Ok(0) => {
+                            entry.conn.on_eof(&self.registry, &mut submits);
+                            break;
+                        }
+                        Ok(n) => {
+                            entry.conn.ingest(&chunk[..n]);
+                            entry.conn.process(&self.registry, self.cfg.write_hwm, &mut submits);
+                            if entry.conn.is_closing() {
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            dead = true;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        if dead {
+            self.close(token);
+            return;
+        }
+        self.dispatch(token, submits);
+        self.service(token);
+    }
+
+    /// Route parsed inference requests through the registry. The
+    /// completion callback encodes the reply OFF the reactor thread and
+    /// mails it back through the owning reactor's completion queue.
+    fn dispatch(&mut self, token: u64, submits: Vec<SubmitReq>) {
+        for s in submits {
+            let proto = match self.conns.get(&token) {
+                Some(e) => e.conn.protocol(),
+                None => return,
+            };
+            let name = s
+                .model
+                .clone()
+                .unwrap_or_else(|| self.registry.default_model().to_string());
+            let shared = Arc::clone(&self.shared);
+            let idx = self.idx;
+            let seq = s.seq;
+            let cb: ResponseCallback = Box::new(move |result| {
+                let bytes = match result {
+                    Ok(resp) => conn::encode_infer_reply_bytes(proto, &name, &resp),
+                    Err(err) => {
+                        let e = RouteError::Submit { model: name.clone(), err };
+                        conn::encode_error_bytes(proto, &e.to_string(), e.code())
+                    }
+                };
+                let handle = &shared.handles[idx];
+                handle.completions.lock().unwrap().push((token, seq, bytes));
+                handle.wake();
+            });
+            if let Err(e) = self.registry.submit_with(s.model.as_deref(), s.features, cb) {
+                // Routing failed synchronously (unknown tenant): the
+                // callback was dropped unused; answer here.
+                if let Some(entry) = self.conns.get_mut(&token) {
+                    let bytes =
+                        conn::encode_error_bytes(entry.conn.protocol(), &e.to_string(), e.code());
+                    entry.conn.complete(&self.registry, s.seq, bytes);
+                }
+            }
+        }
+    }
+
+    /// Flush queued reply bytes; when backpressure clears, resume
+    /// parsing buffered input; close the connection once it is done;
+    /// finally reconcile poller interest with the new state.
+    fn service(&mut self, token: u64) {
+        loop {
+            let mut dead = false;
+            let mut progressed = false;
+            let mut submits = Vec::new();
+            {
+                let Some(entry) = self.conns.get_mut(&token) else { return };
+                while entry.conn.wants_write() {
+                    match entry.stream.write(entry.conn.writable()) {
+                        Ok(0) => {
+                            dead = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            entry.conn.advance_write(n);
+                            progressed = true;
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            dead = true;
+                            break;
+                        }
+                    }
+                }
+                if !dead
+                    && !self.stop_reading
+                    && entry.conn.has_input()
+                    && entry.conn.wbuf_len() < self.cfg.write_hwm
+                    && entry.conn.process(&self.registry, self.cfg.write_hwm, &mut submits)
+                {
+                    progressed = true;
+                }
+            }
+            if dead {
+                self.close(token);
+                return;
+            }
+            self.dispatch(token, submits);
+            match self.conns.get(&token) {
+                Some(entry) if entry.conn.done() => {
+                    self.close(token);
+                    return;
+                }
+                Some(_) => {}
+                None => return,
+            }
+            if !progressed {
+                break;
+            }
+        }
+        self.update_interest(token);
+    }
+
+    fn update_interest(&mut self, token: u64) {
+        let Some(entry) = self.conns.get_mut(&token) else { return };
+        let read = !self.stop_reading
+            && !entry.conn.at_eof()
+            && !entry.conn.is_closing()
+            && entry.conn.wbuf_len() < self.cfg.write_hwm;
+        let write = entry.conn.wants_write();
+        if entry.interest != (read, write) {
+            let _ = self.poller.reregister(entry.stream.as_raw_fd(), token, read, write);
+            entry.interest = (read, write);
+        }
+    }
+
+    /// Enter drain: close the listener, stop reading everywhere, and
+    /// let the loop run until every owed reply has flushed.
+    fn begin_drain(&mut self) {
+        if let Some(listener) = self.listener.take() {
+            let _ = self.poller.deregister(listener.as_raw_fd());
+        }
+        self.stop_reading = true;
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            self.update_interest(t);
+        }
+    }
+
+    fn reap_quiesced(&mut self) {
+        let tokens: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, e)| e.conn.quiesced())
+            .map(|(t, _)| *t)
+            .collect();
+        for t in tokens {
+            self.close(t);
+        }
+    }
+}

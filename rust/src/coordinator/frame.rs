@@ -1,0 +1,516 @@
+//! Binary frame codec for the front door.
+//!
+//! The wire layout is specified in `docs/PROTOCOL.md` §Binary framing —
+//! that file is the source of truth for client authors; this module is
+//! the reference implementation, pure (no I/O) so the torture suite can
+//! drive it byte by byte. A connection speaks binary frames when its
+//! FIRST byte is [`MAGIC`]; anything else selects JSON-lines (see
+//! [`super::server`]). Both protocols carry the same request/reply/admin
+//! semantics and the same error codes.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! offset size  field
+//! 0      1     magic 0xB7
+//! 1      1     version (currently 0x01)
+//! 2      1     frame type (see the TYPE_* constants)
+//! 3      1     reserved, must be 0
+//! 4      4     payload length N (u32; bounded by the server's max_frame)
+//! 8      N     payload
+//! ```
+//!
+//! Because every frame is length-delimited, a malformed *payload* never
+//! desynchronizes the stream: the frame is consumed, a coded error reply
+//! is sent, and the connection survives. An oversized declared length is
+//! also survivable (the server discards the payload as it streams in).
+//! Only a bad magic byte at a frame boundary is unrecoverable — the
+//! stream has desynchronized and the connection is closed after a final
+//! error frame.
+
+use crate::util::json::{self, Value};
+
+/// First byte of every binary frame (and the protocol-sniffing byte:
+/// a connection whose first byte is not `MAGIC` speaks JSON-lines).
+/// Deliberately outside ASCII and invalid as UTF-8 lead byte, so no JSON
+/// document can start with it.
+pub const MAGIC: u8 = 0xB7;
+/// Current protocol version.
+pub const VERSION: u8 = 0x01;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 8;
+/// Default cap on declared payload length (16 MiB).
+pub const DEFAULT_MAX_FRAME: usize = 16 * 1024 * 1024;
+
+/// Inference request: `[u8 model_len][model utf8][u32 count][count × f32]`.
+pub const TYPE_REQ_INFER: u8 = 0x01;
+/// Inference reply: `[u64 id][i32 label][f64 latency_us][u8 model_len][model utf8]`.
+pub const TYPE_REP_INFER: u8 = 0x02;
+/// Admin request: a UTF-8 JSON document with a `"cmd"` field — exactly
+/// the JSON-lines admin request body.
+pub const TYPE_REQ_ADMIN: u8 = 0x03;
+/// Admin reply: the same UTF-8 JSON document the JSON-lines protocol
+/// would send for this request.
+pub const TYPE_REP_ADMIN: u8 = 0x04;
+/// Error reply: `[u8 code_len][code utf8][message utf8 …]`.
+pub const TYPE_REP_ERROR: u8 = 0x05;
+
+/// A parsed frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub version: u8,
+    pub frame_type: u8,
+    pub reserved: u8,
+    pub payload_len: usize,
+}
+
+/// Outcome of [`try_extract`] on a (possibly incomplete) byte buffer.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Extract {
+    /// Not enough bytes for a header + declared payload yet.
+    NeedMore,
+    /// One complete frame: header plus the payload's byte range within
+    /// the input buffer. Consume `HEADER_LEN + payload_len` bytes.
+    Frame { header: Header, payload: std::ops::Range<usize> },
+    /// The header declares a payload larger than `max_frame`. The caller
+    /// should reply with a coded error, consume the header, and discard
+    /// the next `declared` payload bytes as they arrive — the connection
+    /// survives.
+    Oversized { header: Header, declared: usize },
+    /// The byte at a frame boundary is not [`MAGIC`]: the stream is
+    /// desynchronized and the connection cannot be saved.
+    BadMagic(u8),
+}
+
+/// Try to extract one frame from the front of `buf`. Header-level
+/// problems other than bad magic (unknown version/type, nonzero
+/// reserved byte) are NOT rejected here — the frame boundary is still
+/// trustworthy, so they surface as per-frame coded errors from
+/// [`decode_request`].
+pub fn try_extract(buf: &[u8], max_frame: usize) -> Extract {
+    if buf.is_empty() {
+        return Extract::NeedMore;
+    }
+    if buf[0] != MAGIC {
+        return Extract::BadMagic(buf[0]);
+    }
+    if buf.len() < HEADER_LEN {
+        return Extract::NeedMore;
+    }
+    let header = Header {
+        version: buf[1],
+        frame_type: buf[2],
+        reserved: buf[3],
+        payload_len: u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize,
+    };
+    if header.payload_len > max_frame {
+        return Extract::Oversized { header, declared: header.payload_len };
+    }
+    if buf.len() < HEADER_LEN + header.payload_len {
+        return Extract::NeedMore;
+    }
+    Extract::Frame { header, payload: HEADER_LEN..HEADER_LEN + header.payload_len }
+}
+
+/// A decoded binary request (the codec's half of the shared
+/// [`super::server`] request model).
+#[derive(Debug, PartialEq)]
+pub enum BinaryRequest {
+    /// `model` is `None` for the default tenant (model_len 0).
+    Infer { model: Option<String>, features: Vec<f32> },
+    /// The admin JSON document, parsed.
+    Admin(Value),
+}
+
+/// Wire-level error: (human message, stable machine code). Matches the
+/// JSON-lines error vocabulary — see docs/PROTOCOL.md §Errors.
+pub type FrameError = (String, &'static str);
+
+fn bad(msg: impl Into<String>) -> FrameError {
+    (msg.into(), "bad_request")
+}
+
+/// Decode a complete frame's request payload. Every failure here is a
+/// survivable per-frame error: the frame boundary was sound, so the
+/// caller replies with the coded error and keeps the connection.
+pub fn decode_request(header: &Header, payload: &[u8]) -> Result<BinaryRequest, FrameError> {
+    if header.version != VERSION {
+        return Err(bad(format!(
+            "unsupported frame version {} (expected {VERSION})",
+            header.version
+        )));
+    }
+    if header.reserved != 0 {
+        return Err(bad(format!("reserved header byte must be 0, got {}", header.reserved)));
+    }
+    match header.frame_type {
+        TYPE_REQ_INFER => decode_infer(payload),
+        TYPE_REQ_ADMIN => {
+            let text = std::str::from_utf8(payload)
+                .map_err(|_| bad("admin frame payload is not valid utf-8"))?;
+            let doc = json::parse(text).map_err(|e| bad(format!("bad json: {e}")))?;
+            if doc.get("cmd").is_none() {
+                return Err(bad("admin frame missing 'cmd' (inference uses frame type 0x01)"));
+            }
+            Ok(BinaryRequest::Admin(doc))
+        }
+        TYPE_REP_INFER | TYPE_REP_ADMIN | TYPE_REP_ERROR => Err(bad(format!(
+            "frame type {:#04x} is a reply type, not a request",
+            header.frame_type
+        ))),
+        other => Err(bad(format!("unknown frame type {other:#04x}"))),
+    }
+}
+
+/// The truncated-payload torture target: every length field is checked
+/// against the actual payload extent before any slice is taken.
+fn decode_infer(payload: &[u8]) -> Result<BinaryRequest, FrameError> {
+    let Some((&model_len, rest)) = payload.split_first() else {
+        return Err(bad("truncated inference frame: missing model length"));
+    };
+    let model_len = model_len as usize;
+    if rest.len() < model_len {
+        return Err(bad(format!(
+            "truncated inference frame: model length {model_len} overruns payload"
+        )));
+    }
+    let (model_bytes, rest) = rest.split_at(model_len);
+    let model = if model_len == 0 {
+        None
+    } else {
+        Some(
+            std::str::from_utf8(model_bytes)
+                .map_err(|_| bad("model name is not valid utf-8"))?
+                .to_string(),
+        )
+    };
+    if rest.len() < 4 {
+        return Err(bad("truncated inference frame: missing feature count"));
+    }
+    let (count_bytes, feat_bytes) = rest.split_at(4);
+    let count = u32::from_le_bytes(count_bytes.try_into().unwrap()) as usize;
+    if feat_bytes.len() != count * 4 {
+        return Err(bad(format!(
+            "inference frame declares {count} features but carries {} payload bytes",
+            feat_bytes.len()
+        )));
+    }
+    let features = feat_bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(BinaryRequest::Infer { model, features })
+}
+
+fn push_header(out: &mut Vec<u8>, frame_type: u8, payload_len: usize) {
+    out.push(MAGIC);
+    out.push(VERSION);
+    out.push(frame_type);
+    out.push(0);
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+}
+
+/// Encode an inference request frame.
+pub fn encode_infer_request(model: Option<&str>, features: &[f32], out: &mut Vec<u8>) {
+    let model = model.unwrap_or("");
+    assert!(model.len() <= u8::MAX as usize, "model name longer than 255 bytes");
+    let payload_len = 1 + model.len() + 4 + features.len() * 4;
+    push_header(out, TYPE_REQ_INFER, payload_len);
+    out.push(model.len() as u8);
+    out.extend_from_slice(model.as_bytes());
+    out.extend_from_slice(&(features.len() as u32).to_le_bytes());
+    for f in features {
+        out.extend_from_slice(&f.to_le_bytes());
+    }
+}
+
+/// Encode an admin request frame carrying `doc` (must have a `"cmd"`).
+pub fn encode_admin_request(doc: &Value, out: &mut Vec<u8>) {
+    let text = json::to_string(doc);
+    push_header(out, TYPE_REQ_ADMIN, text.len());
+    out.extend_from_slice(text.as_bytes());
+}
+
+/// Encode an inference reply frame.
+pub fn encode_infer_reply(id: u64, label: i32, latency_us: f64, model: &str, out: &mut Vec<u8>) {
+    assert!(model.len() <= u8::MAX as usize, "model name longer than 255 bytes");
+    let payload_len = 8 + 4 + 8 + 1 + model.len();
+    push_header(out, TYPE_REP_INFER, payload_len);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&label.to_le_bytes());
+    out.extend_from_slice(&latency_us.to_le_bytes());
+    out.push(model.len() as u8);
+    out.extend_from_slice(model.as_bytes());
+}
+
+/// Encode an admin reply frame carrying a serialized JSON document.
+pub fn encode_admin_reply(json_text: &str, out: &mut Vec<u8>) {
+    push_header(out, TYPE_REP_ADMIN, json_text.len());
+    out.extend_from_slice(json_text.as_bytes());
+}
+
+/// Encode an error reply frame.
+pub fn encode_error_reply(message: &str, code: &str, out: &mut Vec<u8>) {
+    assert!(code.len() <= u8::MAX as usize, "error code longer than 255 bytes");
+    push_header(out, TYPE_REP_ERROR, 1 + code.len() + message.len());
+    out.push(code.len() as u8);
+    out.extend_from_slice(code.as_bytes());
+    out.extend_from_slice(message.as_bytes());
+}
+
+/// Decode a *reply* frame into the JSON document the JSON-lines protocol
+/// would have sent for the same request — the client-side half used by
+/// the conformance differential suite and the load-generator bench.
+pub fn decode_reply_to_json(header: &Header, payload: &[u8]) -> Result<Value, FrameError> {
+    if header.version != VERSION {
+        return Err(bad(format!("unsupported frame version {}", header.version)));
+    }
+    match header.frame_type {
+        TYPE_REP_INFER => {
+            if payload.len() < 8 + 4 + 8 + 1 {
+                return Err(bad("truncated inference reply"));
+            }
+            let id = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+            let label = i32::from_le_bytes(payload[8..12].try_into().unwrap());
+            let latency_us = f64::from_le_bytes(payload[12..20].try_into().unwrap());
+            let model_len = payload[20] as usize;
+            if payload.len() != 21 + model_len {
+                return Err(bad("inference reply model length overruns payload"));
+            }
+            let model = std::str::from_utf8(&payload[21..])
+                .map_err(|_| bad("inference reply model is not valid utf-8"))?;
+            Ok(json::obj(vec![
+                ("id", json::num(id as f64)),
+                ("model", json::s(model)),
+                ("label", json::num(label as f64)),
+                ("latency_us", json::num(latency_us)),
+            ]))
+        }
+        TYPE_REP_ADMIN => {
+            let text = std::str::from_utf8(payload)
+                .map_err(|_| bad("admin reply is not valid utf-8"))?;
+            json::parse(text).map_err(|e| bad(format!("bad json in admin reply: {e}")))
+        }
+        TYPE_REP_ERROR => {
+            let Some((&code_len, rest)) = payload.split_first() else {
+                return Err(bad("truncated error reply"));
+            };
+            let code_len = code_len as usize;
+            if rest.len() < code_len {
+                return Err(bad("error reply code length overruns payload"));
+            }
+            let code = std::str::from_utf8(&rest[..code_len])
+                .map_err(|_| bad("error code is not valid utf-8"))?;
+            let message = std::str::from_utf8(&rest[code_len..])
+                .map_err(|_| bad("error message is not valid utf-8"))?;
+            Ok(json::obj(vec![("error", json::s(message)), ("code", json::s(code))]))
+        }
+        other => Err(bad(format!("frame type {other:#04x} is not a reply"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn extract_one(buf: &[u8]) -> (Header, Vec<u8>) {
+        match try_extract(buf, DEFAULT_MAX_FRAME) {
+            Extract::Frame { header, payload } => (header, buf[payload].to_vec()),
+            other => panic!("expected a frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn infer_request_round_trip() {
+        let mut buf = Vec::new();
+        encode_infer_request(Some("page"), &[1.5, -2.0, 0.0], &mut buf);
+        let (header, payload) = extract_one(&buf);
+        assert_eq!(header.version, VERSION);
+        assert_eq!(header.frame_type, TYPE_REQ_INFER);
+        assert_eq!(buf.len(), HEADER_LEN + header.payload_len);
+        let req = decode_request(&header, &payload).unwrap();
+        assert_eq!(
+            req,
+            BinaryRequest::Infer {
+                model: Some("page".into()),
+                features: vec![1.5, -2.0, 0.0]
+            }
+        );
+    }
+
+    #[test]
+    fn default_tenant_is_model_len_zero() {
+        let mut buf = Vec::new();
+        encode_infer_request(None, &[0.25], &mut buf);
+        let (header, payload) = extract_one(&buf);
+        let req = decode_request(&header, &payload).unwrap();
+        assert_eq!(req, BinaryRequest::Infer { model: None, features: vec![0.25] });
+    }
+
+    #[test]
+    fn admin_round_trip_requires_cmd() {
+        let mut buf = Vec::new();
+        encode_admin_request(&json::obj(vec![("cmd", json::s("stats"))]), &mut buf);
+        let (header, payload) = extract_one(&buf);
+        match decode_request(&header, &payload).unwrap() {
+            BinaryRequest::Admin(doc) => {
+                assert_eq!(doc.get("cmd").and_then(Value::as_str), Some("stats"))
+            }
+            other => panic!("{other:?}"),
+        }
+        // a JSON payload without "cmd" is a coded error, not an inference
+        let header = Header {
+            version: VERSION,
+            frame_type: TYPE_REQ_ADMIN,
+            reserved: 0,
+            payload_len: 2,
+        };
+        let err = decode_request(&header, b"{}").unwrap_err();
+        assert_eq!(err.1, "bad_request");
+        assert!(err.0.contains("missing 'cmd'"), "{}", err.0);
+    }
+
+    #[test]
+    fn incremental_extraction_needs_every_byte() {
+        let mut buf = Vec::new();
+        encode_infer_request(Some("m"), &[1.0, 2.0], &mut buf);
+        for cut in 0..buf.len() {
+            assert_eq!(
+                try_extract(&buf[..cut], DEFAULT_MAX_FRAME),
+                Extract::NeedMore,
+                "cut at {cut}"
+            );
+        }
+        assert!(matches!(
+            try_extract(&buf, DEFAULT_MAX_FRAME),
+            Extract::Frame { .. }
+        ));
+    }
+
+    #[test]
+    fn bad_magic_is_detected_immediately() {
+        assert_eq!(try_extract(b"{\"a\": 1}", DEFAULT_MAX_FRAME), Extract::BadMagic(b'{'));
+        assert_eq!(try_extract(&[0x00], DEFAULT_MAX_FRAME), Extract::BadMagic(0x00));
+        assert_eq!(try_extract(&[], DEFAULT_MAX_FRAME), Extract::NeedMore);
+    }
+
+    #[test]
+    fn oversized_length_reports_before_payload_arrives() {
+        let mut buf = Vec::new();
+        push_header(&mut buf, TYPE_REQ_INFER, 1 << 30);
+        match try_extract(&buf, DEFAULT_MAX_FRAME) {
+            Extract::Oversized { declared, .. } => assert_eq!(declared, 1 << 30),
+            other => panic!("{other:?}"),
+        }
+        // exactly at the cap is allowed (NeedMore until the payload lands)
+        let mut buf = Vec::new();
+        push_header(&mut buf, TYPE_REQ_INFER, 64);
+        assert_eq!(try_extract(&buf, 64), Extract::NeedMore);
+        match try_extract(&buf, 63) {
+            Extract::Oversized { declared, .. } => assert_eq!(declared, 64),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_payload_structures_are_coded_errors() {
+        // feature count larger than the carried bytes
+        let mut payload = vec![0u8]; // model_len 0
+        payload.extend_from_slice(&10u32.to_le_bytes());
+        payload.extend_from_slice(&1.0f32.to_le_bytes()); // only one float
+        let header = Header {
+            version: VERSION,
+            frame_type: TYPE_REQ_INFER,
+            reserved: 0,
+            payload_len: payload.len(),
+        };
+        let err = decode_request(&header, &payload).unwrap_err();
+        assert_eq!(err.1, "bad_request");
+        assert!(err.0.contains("declares 10 features"), "{}", err.0);
+
+        // model_len overruns the payload
+        let header2 = Header { payload_len: 3, ..header };
+        let err = decode_request(&header2, &[200, b'a', b'b']).unwrap_err();
+        assert!(err.0.contains("model length 200 overruns"), "{}", err.0);
+
+        // empty payload
+        let header3 = Header { payload_len: 0, ..header };
+        let err = decode_request(&header3, &[]).unwrap_err();
+        assert!(err.0.contains("missing model length"), "{}", err.0);
+
+        // missing feature count
+        let header4 = Header { payload_len: 2, ..header };
+        let err = decode_request(&header4, &[1, b'x']).unwrap_err();
+        assert!(err.0.contains("missing feature count"), "{}", err.0);
+    }
+
+    #[test]
+    fn header_violations_are_per_frame_errors() {
+        let header = Header {
+            version: 9,
+            frame_type: TYPE_REQ_INFER,
+            reserved: 0,
+            payload_len: 0,
+        };
+        assert!(decode_request(&header, &[]).unwrap_err().0.contains("version 9"));
+        let header = Header { version: VERSION, frame_type: 0x7F, reserved: 0, payload_len: 0 };
+        assert!(decode_request(&header, &[]).unwrap_err().0.contains("unknown frame type"));
+        let header =
+            Header { version: VERSION, frame_type: TYPE_REQ_INFER, reserved: 3, payload_len: 0 };
+        assert!(decode_request(&header, &[]).unwrap_err().0.contains("reserved"));
+        let header =
+            Header { version: VERSION, frame_type: TYPE_REP_INFER, reserved: 0, payload_len: 0 };
+        assert!(decode_request(&header, &[]).unwrap_err().0.contains("reply type"));
+    }
+
+    #[test]
+    fn reply_frames_decode_to_the_json_lines_documents() {
+        let mut buf = Vec::new();
+        encode_infer_reply(41, 3, 812.5, "page", &mut buf);
+        let (header, payload) = extract_one(&buf);
+        let doc = decode_reply_to_json(&header, &payload).unwrap();
+        assert_eq!(doc.get("id").and_then(Value::as_f64), Some(41.0));
+        assert_eq!(doc.get("model").and_then(Value::as_str), Some("page"));
+        assert_eq!(doc.get("label").and_then(Value::as_f64), Some(3.0));
+        assert_eq!(doc.get("latency_us").and_then(Value::as_f64), Some(812.5));
+
+        let mut buf = Vec::new();
+        encode_error_reply("unknown model 'x'", "unknown_model", &mut buf);
+        let (header, payload) = extract_one(&buf);
+        let doc = decode_reply_to_json(&header, &payload).unwrap();
+        assert_eq!(doc.get("code").and_then(Value::as_str), Some("unknown_model"));
+        assert_eq!(doc.get("error").and_then(Value::as_str), Some("unknown model 'x'"));
+
+        let mut buf = Vec::new();
+        encode_admin_reply(r#"{"model": "page", "requests": 4}"#, &mut buf);
+        let (header, payload) = extract_one(&buf);
+        let doc = decode_reply_to_json(&header, &payload).unwrap();
+        assert_eq!(doc.get("requests").and_then(Value::as_f64), Some(4.0));
+    }
+
+    #[test]
+    fn pipelined_frames_extract_in_order() {
+        let mut buf = Vec::new();
+        encode_infer_request(Some("a"), &[1.0], &mut buf);
+        encode_infer_request(Some("b"), &[2.0], &mut buf);
+        encode_admin_request(&json::obj(vec![("cmd", json::s("models"))]), &mut buf);
+        let mut off = 0;
+        let mut models = Vec::new();
+        while off < buf.len() {
+            match try_extract(&buf[off..], DEFAULT_MAX_FRAME) {
+                Extract::Frame { header, payload } => {
+                    let payload = &buf[off..][payload];
+                    match decode_request(&header, payload).unwrap() {
+                        BinaryRequest::Infer { model, .. } => {
+                            models.push(model.unwrap_or_default())
+                        }
+                        BinaryRequest::Admin(_) => models.push("<admin>".into()),
+                    }
+                    off += HEADER_LEN + header.payload_len;
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(models, ["a", "b", "<admin>"]);
+    }
+}

@@ -10,6 +10,14 @@
 //! replicas, least-loaded under skew. Per-request response channels carry
 //! answers back; [`stats`] aggregates per-tenant metrics.
 //!
+//! The front door itself is layered: [`eventloop`] (unix) runs a small
+//! fixed pool of epoll/poll reactor threads; [`conn`] is the
+//! protocol-agnostic per-connection state machine (sniffing, framing,
+//! reply ordering, backpressure accounting) shared by the reactor, the
+//! portable blocking fallback, and the torture tests; [`frame`] is the
+//! pure length-prefixed binary codec. JSON-lines and binary clients get
+//! semantically identical replies — `docs/PROTOCOL.md` specifies both.
+//!
 //! Four engines implement [`Engine`]:
 //! - [`worker::PjrtEngine`] — the AOT path: compiled HLO via the PJRT C
 //!   API (Python never runs here).
@@ -57,14 +65,20 @@
 //! ```
 
 pub mod batcher;
+pub mod conn;
+#[cfg(unix)]
+pub mod eventloop;
+pub mod frame;
 pub mod registry;
 pub mod server;
 pub mod stats;
 pub mod worker;
 
-pub use batcher::{BatcherConfig, Coordinator, ReloadError, Request, Response, SubmitError};
+pub use batcher::{
+    BatcherConfig, Coordinator, ReloadError, Request, Response, ResponseCallback, SubmitError,
+};
 pub use registry::{ModelRegistry, RouteError, TenantInfo, TenantSpec};
-pub use server::Server;
+pub use server::{Server, ServerConfig, ServerStats};
 pub use stats::StatsSnapshot;
 pub use worker::{ConventionalEngine, EngineFactory, NativeEngine, PjrtEngine, ZooEngine};
 

@@ -23,7 +23,7 @@ use crate::model::zoo;
 use crate::quant::Precision;
 use crate::runtime::artifact::ModelCard;
 
-use super::batcher::{BatcherConfig, Coordinator, Response, SubmitError};
+use super::batcher::{BatcherConfig, Coordinator, Response, ResponseCallback, SubmitError};
 use super::stats::StatsSnapshot;
 use super::worker::EngineFactory;
 
@@ -209,6 +209,36 @@ impl ModelRegistry {
         Self::single_with(name, kind, coordinator)
     }
 
+    /// Multi-tenant registry over pre-built engine factories — the
+    /// conformance tests and benches use this to host several fully
+    /// deterministic synthetic tenants with no artifacts on disk. Each
+    /// tuple is `(name, kind, features, per-replica factories)`.
+    pub fn with_tenants(
+        tenants: Vec<(&str, &str, usize, Vec<EngineFactory>)>,
+        default: &str,
+        cfg: &BatcherConfig,
+    ) -> Self {
+        assert!(!tenants.is_empty(), "registry needs at least one tenant");
+        let mut map = HashMap::new();
+        for (name, kind, features, factories) in tenants {
+            let coordinator = Arc::new(Coordinator::start_pool(features, cfg.clone(), factories));
+            let prev = map.insert(
+                name.to_string(),
+                Tenant {
+                    coordinator,
+                    meta: Mutex::new(TenantMeta {
+                        kind: kind.to_string(),
+                        path: None,
+                        precision: Precision::F32,
+                    }),
+                },
+            );
+            assert!(prev.is_none(), "duplicate tenant name '{name}'");
+        }
+        assert!(map.contains_key(default), "default tenant '{default}' is not configured");
+        Self { tenants: map, default: default.to_string() }
+    }
+
     /// Wrap an already-running coordinator as the sole tenant.
     pub fn single_with(name: &str, kind: &str, coordinator: Arc<Coordinator>) -> Self {
         let mut tenants = HashMap::new();
@@ -260,6 +290,25 @@ impl ModelRegistry {
             .submit_blocking(features)
             .map_err(|err| RouteError::Submit { model: name.to_string(), err })?;
         Ok((name.to_string(), resp))
+    }
+
+    /// Route a request without blocking: resolve the tenant, then hand
+    /// the callback to its batcher. The only synchronous error is
+    /// `UnknownModel` (routing happens here); every later outcome —
+    /// admission refusal, engine failure, shutdown, or the response —
+    /// arrives through the callback as a [`SubmitError`], which the
+    /// caller wraps back into [`RouteError::Submit`] with the returned
+    /// tenant name to keep wire error strings identical to the blocking
+    /// path. Reactor threads use this so they never park on a channel.
+    pub fn submit_with(
+        &self,
+        model: Option<&str>,
+        features: Vec<f32>,
+        cb: ResponseCallback,
+    ) -> Result<String, RouteError> {
+        let (name, tenant) = self.tenant(model)?;
+        tenant.coordinator.submit_with(features, cb);
+        Ok(name.to_string())
     }
 
     /// Per-tenant stats snapshot.
@@ -441,6 +490,39 @@ mod tests {
         assert_eq!(infos.len(), 1);
         assert!(infos[0].is_default);
         assert_eq!(infos[0].stats.responses, 1);
+    }
+
+    #[test]
+    fn with_tenants_routes_callbacks_by_name() {
+        let registry = ModelRegistry::with_tenants(
+            vec![
+                ("echo", "demo", 2, vec![Box::new(|| Ok(Box::new(Echo) as Box<dyn Engine>))]),
+                ("echo2", "demo", 2, vec![Box::new(|| Ok(Box::new(Echo) as Box<dyn Engine>))]),
+            ],
+            "echo",
+            &BatcherConfig::default(),
+        );
+        assert_eq!(registry.default_model(), "echo");
+        assert_eq!(registry.names(), vec!["echo".to_string(), "echo2".to_string()]);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let name = registry
+            .submit_with(Some("echo2"), vec![7.0, 0.0], Box::new(move |r| tx.send(r).unwrap()))
+            .unwrap();
+        assert_eq!(name, "echo2");
+        assert_eq!(rx.recv().unwrap().unwrap().label, 7);
+        // Routing failures are synchronous; admission failures arrive
+        // through the callback with the same code mapping as blocking.
+        let err = registry
+            .submit_with(Some("nope"), vec![0.0, 0.0], Box::new(|_| {}))
+            .unwrap_err();
+        assert_eq!(err.code(), "unknown_model");
+        let (tx, rx) = std::sync::mpsc::channel();
+        let name = registry
+            .submit_with(None, vec![1.0], Box::new(move |r| tx.send(r).unwrap()))
+            .unwrap();
+        let err = RouteError::Submit { model: name, err: rx.recv().unwrap().unwrap_err() };
+        assert_eq!(err.code(), "bad_width");
+        assert_eq!(err.to_string(), "model 'echo': feature width 1 != expected 2");
     }
 
     #[test]

@@ -1,9 +1,11 @@
-//! TCP JSON-lines front-end over the model registry.
+//! TCP front door over the model registry.
 //!
-//! One JSON document per line; the full protocol (schemas, admin verbs,
-//! error codes, backpressure semantics) is specified in
-//! `docs/PROTOCOL.md` at the repo root — that file is the source of
-//! truth for client authors. In short:
+//! Two wire protocols share one listener, distinguished by the first
+//! byte a client sends (`0xB7` opens the length-prefixed binary
+//! protocol; anything else is JSON-lines). The full specification —
+//! schemas, admin verbs, error codes, framing, backpressure semantics —
+//! lives in `docs/PROTOCOL.md` at the repo root; that file is the
+//! source of truth for client authors. In short (JSON-lines form):
 //!
 //!   -> {"features": [f, ...], "model": "name"?}
 //!   <- {"id": N, "model": "name", "label": L, "latency_us": T}
@@ -13,64 +15,125 @@
 //!   <- {"error": "...", "code": "..."}        bad request / routing /
 //!                                             per-tenant backpressure
 //!
-//! Every error is a *reply*, not a disconnect: the connection survives
-//! malformed lines, unknown tenants, width mismatches, and queue-full
-//! rejections. Connections are handled on per-client threads; each
-//! tenant's coordinator serializes work through its own dynamic batcher.
+//! Every recoverable error is a *reply*, not a disconnect: the
+//! connection survives malformed lines, unknown tenants, width
+//! mismatches, queue-full rejections, and oversized frames.
+//!
+//! [`Server`] is a thin facade. On unix it runs the nonblocking
+//! event-loop reactor ([`super::eventloop`]): a small fixed thread pool,
+//! zero wakeups while idle, bounded write buffering, and a graceful
+//! drain on shutdown that answers every admitted request before the
+//! last thread is joined. On other targets a blocking
+//! thread-per-connection fallback drives the same
+//! [`super::conn::Conn`] protocol state machine, so wire behaviour is
+//! identical everywhere.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::util::json::{self, Value};
+use super::frame;
+use super::registry::ModelRegistry;
 
-use super::registry::{ModelRegistry, TenantInfo};
-use super::stats::StatsSnapshot;
+/// Tunables for the front door. `Default` is right for production use;
+/// tests shrink the limits to force edge cases (tiny `write_hwm` for
+/// backpressure, tiny `max_frame` for oversize rejection).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Reactor threads multiplexing connections (unix only; min 1).
+    pub reactors: usize,
+    /// Hard cap on one frame's payload / one JSON line, in bytes.
+    pub max_frame: usize,
+    /// Per-connection write high-water mark: past this many buffered
+    /// reply bytes the connection stops being read until the peer
+    /// drains (write-interest-driven backpressure).
+    pub write_hwm: usize,
+    /// Upper bound on the shutdown drain: connections still owing
+    /// replies after this long are closed anyway.
+    pub drain_deadline: Duration,
+}
 
-/// A running TCP server.
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            reactors: 2,
+            max_frame: frame::DEFAULT_MAX_FRAME,
+            write_hwm: 256 * 1024,
+            drain_deadline: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Counters exposed by the running server, for tests and monitoring.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerStats {
+    /// Times a reactor woke from its poll sleep. An idle server with no
+    /// clients holds at zero — the regression guard against busy-wait
+    /// accept loops.
+    pub wakeups: u64,
+    /// Connections accepted over the server's lifetime.
+    pub accepted: u64,
+    /// Connections currently open.
+    pub open: u64,
+}
+
+enum Imp {
+    #[cfg(unix)]
+    Reactor(super::eventloop::EventLoop),
+    #[cfg(not(unix))]
+    Threaded(threaded::ThreadedServer),
+}
+
+/// A running TCP server (see module docs for the two backends).
 pub struct Server {
     pub addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    imp: Imp,
 }
 
 impl Server {
-    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `registry`.
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `registry` with
+    /// default tunables.
     pub fn start(addr: &str, registry: Arc<ModelRegistry>) -> Result<Self> {
-        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        let local = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let accept_thread = std::thread::Builder::new()
-            .name("loghd-accept".into())
-            .spawn(move || {
-                while !stop2.load(Ordering::Acquire) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let reg = Arc::clone(&registry);
-                            std::thread::spawn(move || {
-                                let _ = handle_client(stream, reg);
-                            });
-                        }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(10));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })?;
-        crate::log_info!("serving on {local}");
-        Ok(Self { addr: local, stop, accept_thread: Some(accept_thread) })
+        Self::start_with(addr, registry, ServerConfig::default())
     }
 
+    /// Bind `addr` and serve `registry` with explicit tunables.
+    pub fn start_with(addr: &str, registry: Arc<ModelRegistry>, cfg: ServerConfig) -> Result<Self> {
+        #[cfg(unix)]
+        {
+            let ev = super::eventloop::EventLoop::start(addr, registry, cfg)?;
+            let local = ev.addr;
+            crate::log_info!("serving on {local}");
+            Ok(Self { addr: local, imp: Imp::Reactor(ev) })
+        }
+        #[cfg(not(unix))]
+        {
+            let srv = threaded::ThreadedServer::start(addr, registry, cfg)?;
+            let local = srv.addr;
+            crate::log_info!("serving on {local}");
+            Ok(Self { addr: local, imp: Imp::Threaded(srv) })
+        }
+    }
+
+    /// Stop accepting, drain owed replies (bounded by
+    /// [`ServerConfig::drain_deadline`]), and join every server thread.
+    /// Idempotent.
     pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::Release);
-        if let Some(h) = self.accept_thread.take() {
-            let _ = h.join();
+        match &mut self.imp {
+            #[cfg(unix)]
+            Imp::Reactor(ev) => ev.shutdown(),
+            #[cfg(not(unix))]
+            Imp::Threaded(srv) => srv.shutdown(),
+        }
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        match &self.imp {
+            #[cfg(unix)]
+            Imp::Reactor(ev) => ev.stats(),
+            #[cfg(not(unix))]
+            Imp::Threaded(srv) => srv.stats(),
         }
     }
 }
@@ -81,137 +144,136 @@ impl Drop for Server {
     }
 }
 
-fn error_line(msg: &str, code: &str) -> String {
-    json::to_string(&json::obj(vec![("error", json::s(msg)), ("code", json::s(code))]))
-}
+#[cfg(not(unix))]
+mod threaded {
+    //! Blocking thread-per-connection fallback for targets without a
+    //! poller backend. Drives the same [`Conn`] state machine as the
+    //! reactor, so the wire protocol (both framings, reply ordering,
+    //! error survival) is byte-identical; only the concurrency model
+    //! differs. Client threads are tracked and joined on shutdown.
 
-fn handle_client(stream: TcpStream, registry: Arc<ModelRegistry>) -> Result<()> {
-    let peer = stream.peer_addr().ok();
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = match handle_line(&line, &registry) {
-            Ok(v) => v,
-            Err((msg, code)) => error_line(&msg, code),
-        };
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::thread::JoinHandle;
+    use std::time::Duration;
+
+    use anyhow::{Context, Result};
+
+    use super::super::conn::{self, Conn};
+    use super::super::registry::ModelRegistry;
+    use super::{ServerConfig, ServerStats};
+
+    pub struct ThreadedServer {
+        pub addr: std::net::SocketAddr,
+        stop: Arc<AtomicBool>,
+        accept_thread: Option<JoinHandle<()>>,
+        clients: Arc<Mutex<Vec<JoinHandle<()>>>>,
     }
-    crate::log_debug!("client {peer:?} disconnected");
-    Ok(())
-}
 
-fn stats_fields(s: &StatsSnapshot) -> Vec<(&'static str, Value)> {
-    vec![
-        ("requests", json::num(s.requests as f64)),
-        ("responses", json::num(s.responses as f64)),
-        ("rejected", json::num(s.rejected as f64)),
-        ("failures", json::num(s.failures as f64)),
-        ("reloads", json::num(s.reloads as f64)),
-        ("mean_batch", json::num(s.mean_batch_size)),
-        ("latency_p50_us", json::num(s.latency_p50_us)),
-        ("latency_p99_us", json::num(s.latency_p99_us)),
-        ("throughput_rps", json::num(s.throughput_rps)),
-    ]
-}
-
-fn tenant_json(info: &TenantInfo) -> Value {
-    let mut fields = vec![
-        ("model", json::s(info.name.clone())),
-        ("kind", json::s(info.kind.clone())),
-        ("precision", json::s(info.precision)),
-        ("replicas", json::num(info.replicas as f64)),
-        ("live_replicas", json::num(info.live_replicas as f64)),
-        ("features", json::num(info.features as f64)),
-        ("default", Value::Bool(info.is_default)),
-    ];
-    if let Some(path) = &info.path {
-        fields.push(("path", json::s(path.display().to_string())));
-    }
-    fields.extend(stats_fields(&info.stats));
-    json::obj(fields)
-}
-
-type WireError = (String, &'static str);
-
-/// A field that must be a string when present — a non-string value is a
-/// protocol error, never silently treated as absent (a numeric "model"
-/// must not route to the default tenant).
-fn optional_str<'a>(v: &'a Value, key: &str) -> Result<Option<&'a str>, WireError> {
-    match v.get(key) {
-        None => Ok(None),
-        Some(Value::String(s)) => Ok(Some(s.as_str())),
-        Some(_) => Err((format!("'{key}' must be a string"), "bad_request")),
-    }
-}
-
-fn handle_line(line: &str, registry: &ModelRegistry) -> Result<String, WireError> {
-    let v = json::parse(line).map_err(|e| (format!("bad json: {e}"), "bad_request"))?;
-    let model = optional_str(&v, "model")?;
-    match optional_str(&v, "cmd")? {
-        Some("stats") => {
-            let (name, s) =
-                registry.stats(model).map_err(|e| (e.to_string(), e.code()))?;
-            let mut fields = vec![("model", json::s(name))];
-            fields.extend(stats_fields(&s));
-            Ok(json::to_string(&json::obj(fields)))
-        }
-        Some("models") => {
-            let models: Vec<Value> =
-                registry.describe().iter().map(tenant_json).collect();
-            Ok(json::to_string(&json::obj(vec![
-                ("default", json::s(registry.default_model())),
-                ("models", json::arr(models)),
-            ])))
-        }
-        Some("reload") => {
-            let path = optional_str(&v, "path")?.map(std::path::Path::new);
-            let bits = match v.get("bits") {
-                None => None,
-                Some(b) => match b.as_f64() {
-                    Some(x) if x.fract() == 0.0 && x >= 0.0 => Some(x as u32),
-                    _ => {
-                        return Err(("'bits' must be a non-negative integer".into(), "bad_request"))
+    impl ThreadedServer {
+        pub fn start(addr: &str, registry: Arc<ModelRegistry>, cfg: ServerConfig) -> Result<Self> {
+            let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+            let local = listener.local_addr()?;
+            listener.set_nonblocking(true)?;
+            let stop = Arc::new(AtomicBool::new(false));
+            let clients: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+            let stop2 = Arc::clone(&stop);
+            let clients2 = Arc::clone(&clients);
+            let accept_thread = std::thread::Builder::new()
+                .name("loghd-accept".into())
+                .spawn(move || {
+                    while !stop2.load(Ordering::Acquire) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                let reg = Arc::clone(&registry);
+                                let stop3 = Arc::clone(&stop2);
+                                let cfg = cfg.clone();
+                                let h = std::thread::spawn(move || {
+                                    let _ = serve_client(stream, reg, cfg, stop3);
+                                });
+                                clients2.lock().unwrap().push(h);
+                            }
+                            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(10));
+                            }
+                            Err(_) => break,
+                        }
                     }
-                },
-            };
-            let info = registry
-                .reload(model, path, bits)
-                .map_err(|e| (e.to_string(), e.code()))?;
-            Ok(json::to_string(&json::obj(vec![
-                ("reloaded", json::s(info.name)),
-                ("kind", json::s(info.kind)),
-                ("precision", json::s(info.precision)),
-                ("replicas", json::num(info.replicas as f64)),
-            ])))
+                })?;
+            Ok(Self { addr: local, stop, accept_thread: Some(accept_thread), clients })
         }
-        Some(other) => Err((format!("unknown cmd '{other}'"), "bad_request")),
-        None => {
-            let feats = v
-                .get("features")
-                .and_then(Value::as_array)
-                .ok_or_else(|| ("missing 'features' array".to_string(), "bad_request"))?;
-            let features: Vec<f32> = feats
-                .iter()
-                .map(|f| {
-                    f.as_f64()
-                        .map(|x| x as f32)
-                        .ok_or_else(|| ("non-numeric feature".to_string(), "bad_request"))
-                })
-                .collect::<Result<_, _>>()?;
-            let (name, resp) = registry
-                .submit_blocking(model, features)
-                .map_err(|e| (e.to_string(), e.code()))?;
-            Ok(json::to_string(&json::obj(vec![
-                ("id", json::num(resp.id as f64)),
-                ("model", json::s(name)),
-                ("label", json::num(resp.label as f64)),
-                ("latency_us", json::num(resp.latency.as_secs_f64() * 1e6)),
-            ])))
+
+        pub fn shutdown(&mut self) {
+            self.stop.store(true, Ordering::Release);
+            if let Some(h) = self.accept_thread.take() {
+                let _ = h.join();
+            }
+            let drained: Vec<JoinHandle<()>> =
+                std::mem::take(&mut *self.clients.lock().unwrap());
+            for h in drained {
+                let _ = h.join();
+            }
+        }
+
+        pub fn stats(&self) -> ServerStats {
+            ServerStats::default()
+        }
+    }
+
+    impl Drop for ThreadedServer {
+        fn drop(&mut self) {
+            self.shutdown();
+        }
+    }
+
+    fn serve_client(
+        mut stream: TcpStream,
+        registry: Arc<ModelRegistry>,
+        cfg: ServerConfig,
+        stop: Arc<AtomicBool>,
+    ) -> std::io::Result<()> {
+        // A finite read timeout lets the thread notice shutdown.
+        stream.set_read_timeout(Some(Duration::from_millis(50)))?;
+        let mut conn = Conn::new(cfg.max_frame);
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            let mut submits = Vec::new();
+            match stream.read(&mut chunk) {
+                Ok(0) => conn.on_eof(&registry, &mut submits),
+                Ok(n) => {
+                    conn.ingest(&chunk[..n]);
+                    conn.process(&registry, usize::MAX, &mut submits);
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut
+                        || e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+            for s in submits {
+                let bytes = match registry.submit_blocking(s.model.as_deref(), s.features) {
+                    Ok((name, resp)) => {
+                        conn::encode_infer_reply_bytes(conn.protocol(), &name, &resp)
+                    }
+                    Err(e) => conn::encode_error_bytes(conn.protocol(), &e.to_string(), e.code()),
+                };
+                conn.complete(&registry, s.seq, bytes);
+            }
+            while conn.wants_write() {
+                let n = stream.write(conn.writable())?;
+                if n == 0 {
+                    return Ok(());
+                }
+                conn.advance_write(n);
+            }
+            if conn.done() || (conn.at_eof() && conn.quiesced()) {
+                return Ok(());
+            }
+            if stop.load(Ordering::Acquire) {
+                return Ok(());
+            }
         }
     }
 }
@@ -222,6 +284,9 @@ mod tests {
     use crate::coordinator::batcher::BatcherConfig;
     use crate::coordinator::Engine;
     use crate::tensor::Matrix;
+    use crate::util::json::{self, Value};
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
 
     struct Echo;
     impl Engine for Echo {

@@ -1,0 +1,603 @@
+//! Front-door protocol conformance + torture suite (the PR-7
+//! acceptance path).
+//!
+//! - **Conformance differential**: every abstract protocol case from
+//!   `docs/PROTOCOL.md` (inference, routing, admin verbs, every coded
+//!   error) runs over BOTH wire protocols — JSON-lines and binary
+//!   frames — against fresh servers, and the decoded replies must be
+//!   semantically identical. The JSON transcript is pinned by a golden
+//!   (`rust/tests/golden/frontdoor_conformance.json`, re-bless with
+//!   `LOGHD_BLESS=1`).
+//! - **Torture**: byte-at-a-time delivery, splits at every byte
+//!   boundary (driving the [`Conn`] state machine directly, so every
+//!   cut is deterministic), seed-deterministic random chunking,
+//!   pipelined many-requests-per-read with serial admin semantics,
+//!   oversized / truncated / overlong inputs rejected with coded errors
+//!   while the connection survives, and a slow reader exercising
+//!   write-side backpressure.
+//! - **Event-loop regressions**: an idle server takes zero poller
+//!   wakeups (no busy-wait accept loop), and shutdown drains admitted
+//!   in-flight requests before the last thread joins (no detached
+//!   per-client threads).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use loghd::coordinator::conn::{self, Conn, SubmitReq};
+use loghd::coordinator::frame;
+use loghd::coordinator::{
+    BatcherConfig, Engine, EngineFactory, ModelRegistry, Server, ServerConfig,
+};
+use loghd::testkit::golden::{self, GoldenOptions};
+use loghd::tensor::Matrix;
+use loghd::util::json::{self, Value};
+use loghd::util::rng::SplitMix64;
+
+/// Label = first feature.
+struct Echo;
+impl Engine for Echo {
+    fn name(&self) -> String {
+        "echo".into()
+    }
+    fn features(&self) -> usize {
+        2
+    }
+    fn infer(&mut self, x: &Matrix) -> anyhow::Result<Vec<i32>> {
+        Ok((0..x.rows()).map(|i| x.at(i, 0) as i32).collect())
+    }
+}
+
+/// Label = 2 × first feature (so routing mistakes are visible).
+struct Double;
+impl Engine for Double {
+    fn name(&self) -> String {
+        "double".into()
+    }
+    fn features(&self) -> usize {
+        2
+    }
+    fn infer(&mut self, x: &Matrix) -> anyhow::Result<Vec<i32>> {
+        Ok((0..x.rows()).map(|i| 2 * x.at(i, 0) as i32).collect())
+    }
+}
+
+fn echo_factory() -> EngineFactory {
+    Box::new(|| Ok(Box::new(Echo) as Box<dyn Engine>))
+}
+
+fn double_factory() -> EngineFactory {
+    Box::new(|| Ok(Box::new(Double) as Box<dyn Engine>))
+}
+
+fn two_tenants() -> ModelRegistry {
+    ModelRegistry::with_tenants(
+        vec![
+            ("echo", "demo", 2, vec![echo_factory()]),
+            ("double", "demo", 2, vec![double_factory()]),
+        ],
+        "echo",
+        &BatcherConfig::default(),
+    )
+}
+
+fn echo_only() -> Arc<ModelRegistry> {
+    Arc::new(ModelRegistry::single(
+        "echo",
+        "demo",
+        2,
+        &BatcherConfig::default(),
+        vec![echo_factory()],
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Protocol-agnostic case encoding + reply decoding
+// ---------------------------------------------------------------------------
+
+/// One abstract protocol case, encodable on both wire protocols.
+enum Case {
+    Infer { model: Option<&'static str>, features: Vec<f32> },
+    Admin(Value),
+}
+
+fn admin(fields: Vec<(&str, Value)>) -> Case {
+    Case::Admin(json::obj(fields))
+}
+
+/// The full conformance script: routing, every admin verb, every
+/// recoverable error code — mirrored from `docs/PROTOCOL.md`.
+fn conformance_cases() -> Vec<Case> {
+    vec![
+        Case::Infer { model: None, features: vec![7.0, 0.0] },
+        Case::Infer { model: Some("double"), features: vec![3.0, 0.0] },
+        Case::Infer { model: None, features: vec![9.0, 9.0] },
+        Case::Infer { model: None, features: vec![1.0] }, // bad_width
+        Case::Infer { model: Some("ghost"), features: vec![1.0, 2.0] }, // unknown_model
+        admin(vec![("cmd", json::s("stats"))]),
+        admin(vec![("cmd", json::s("stats")), ("model", json::s("double"))]),
+        admin(vec![("cmd", json::s("models"))]),
+        admin(vec![("cmd", json::s("frobnicate"))]), // bad_request
+        admin(vec![("cmd", json::s("reload")), ("bits", json::num(-1.0))]), // bad_request
+    ]
+}
+
+fn case_json_line(case: &Case) -> Vec<u8> {
+    let text = match case {
+        Case::Infer { model, features } => {
+            let mut fields = Vec::new();
+            if let Some(m) = model {
+                fields.push(("model", json::s(*m)));
+            }
+            let feats: Vec<Value> = features.iter().map(|f| json::num(*f as f64)).collect();
+            fields.push(("features", json::arr(feats)));
+            json::to_string(&json::obj(fields))
+        }
+        Case::Admin(doc) => json::to_string(doc),
+    };
+    let mut bytes = text.into_bytes();
+    bytes.push(b'\n');
+    bytes
+}
+
+fn case_binary_frame(case: &Case) -> Vec<u8> {
+    let mut out = Vec::new();
+    match case {
+        Case::Infer { model, features } => frame::encode_infer_request(*model, features, &mut out),
+        Case::Admin(doc) => frame::encode_admin_request(doc, &mut out),
+    }
+    out
+}
+
+fn read_json_reply(reader: &mut BufReader<TcpStream>) -> Value {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).unwrap();
+    assert!(n > 0, "server closed before replying");
+    json::parse(line.trim()).unwrap_or_else(|e| panic!("bad reply '{line}': {e}"))
+}
+
+fn read_binary_reply(stream: &mut TcpStream) -> Value {
+    let mut hdr = [0u8; frame::HEADER_LEN];
+    stream.read_exact(&mut hdr).unwrap();
+    let len = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+    let mut whole = hdr.to_vec();
+    whole.resize(frame::HEADER_LEN + len, 0);
+    stream.read_exact(&mut whole[frame::HEADER_LEN..]).unwrap();
+    match frame::try_extract(&whole, frame::DEFAULT_MAX_FRAME) {
+        frame::Extract::Frame { header, payload } => {
+            frame::decode_reply_to_json(&header, &whole[payload]).unwrap()
+        }
+        other => panic!("expected a reply frame, got {other:?}"),
+    }
+}
+
+/// Timing-dependent reply fields, removed before any comparison.
+const VOLATILE: &[&str] = &["latency_us", "latency_p50_us", "latency_p99_us", "throughput_rps"];
+
+fn normalize(v: Value) -> Value {
+    match v {
+        Value::Object(fields) => Value::Object(
+            fields
+                .into_iter()
+                .filter(|(k, _)| !VOLATILE.contains(&k.as_str()))
+                .map(|(k, v)| (k, normalize(v)))
+                .collect(),
+        ),
+        Value::Array(items) => Value::Array(items.into_iter().map(normalize).collect()),
+        other => other,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Conformance differential + golden transcript
+// ---------------------------------------------------------------------------
+
+#[test]
+fn json_and_binary_protocols_are_semantically_identical() {
+    let run = |binary: bool| -> Vec<Value> {
+        let registry = Arc::new(two_tenants());
+        let mut server = Server::start("127.0.0.1:0", registry).unwrap();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let replies: Vec<Value> = conformance_cases()
+            .iter()
+            .map(|case| {
+                if binary {
+                    stream.write_all(&case_binary_frame(case)).unwrap();
+                    normalize(read_binary_reply(&mut stream))
+                } else {
+                    stream.write_all(&case_json_line(case)).unwrap();
+                    normalize(read_json_reply(&mut reader))
+                }
+            })
+            .collect();
+        server.shutdown();
+        replies
+    };
+    let json_replies = run(false);
+    let binary_replies = run(true);
+    assert_eq!(json_replies.len(), binary_replies.len());
+    for (i, (j, b)) in json_replies.iter().zip(&binary_replies).enumerate() {
+        assert_eq!(j, b, "case {i} diverged between protocols");
+    }
+    let transcript = json::obj(vec![("replies", json::arr(json_replies))]);
+    golden::check_file(
+        "rust/tests/golden/frontdoor_conformance.json",
+        &transcript,
+        &GoldenOptions::exact(),
+    )
+    .unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Split torture (Conn-level: deterministic cut placement)
+// ---------------------------------------------------------------------------
+
+/// Resolve parsed submissions serially (blocking), exactly like the
+/// portable fallback server does.
+fn resolve(conn: &mut Conn, registry: &ModelRegistry, submits: Vec<SubmitReq>) {
+    for s in submits {
+        let bytes = match registry.submit_blocking(s.model.as_deref(), s.features) {
+            Ok((name, resp)) => conn::encode_infer_reply_bytes(conn.protocol(), &name, &resp),
+            Err(e) => conn::encode_error_bytes(conn.protocol(), &e.to_string(), e.code()),
+        };
+        conn.complete(registry, s.seq, bytes);
+    }
+}
+
+fn decode_binary_stream(mut bytes: &[u8]) -> Vec<Value> {
+    let mut out = Vec::new();
+    while !bytes.is_empty() {
+        match frame::try_extract(bytes, frame::DEFAULT_MAX_FRAME) {
+            frame::Extract::Frame { header, payload } => {
+                out.push(frame::decode_reply_to_json(&header, &bytes[payload]).unwrap());
+                bytes = &bytes[frame::HEADER_LEN + header.payload_len..];
+            }
+            other => panic!("expected a reply frame, got {other:?}"),
+        }
+    }
+    out
+}
+
+fn decode_json_stream(bytes: &[u8]) -> Vec<Value> {
+    String::from_utf8(bytes.to_vec())
+        .unwrap()
+        .lines()
+        .map(|l| json::parse(l).unwrap())
+        .collect()
+}
+
+/// Feed `script` to a fresh Conn in chunks ending at `cuts` (ascending,
+/// last == script.len()) and return the normalized decoded transcript.
+fn run_chunked(script: &[u8], cuts: &[usize], binary: bool) -> Vec<Value> {
+    let registry = two_tenants();
+    let mut conn = Conn::new(frame::DEFAULT_MAX_FRAME);
+    let mut wire = Vec::new();
+    let mut pos = 0;
+    for &cut in cuts {
+        conn.ingest(&script[pos..cut]);
+        pos = cut;
+        let mut submits = Vec::new();
+        conn.process(&registry, usize::MAX, &mut submits);
+        resolve(&mut conn, &registry, submits);
+        let n = conn.writable().len();
+        wire.extend_from_slice(conn.writable());
+        conn.advance_write(n);
+    }
+    assert_eq!(pos, script.len());
+    let docs = if binary { decode_binary_stream(&wire) } else { decode_json_stream(&wire) };
+    docs.into_iter().map(normalize).collect()
+}
+
+fn torture_binary_script() -> Vec<u8> {
+    let mut s = Vec::new();
+    frame::encode_infer_request(None, &[5.0, 0.0], &mut s);
+    frame::encode_infer_request(None, &[1.0], &mut s); // bad_width
+    frame::encode_admin_request(&json::obj(vec![("cmd", json::s("stats"))]), &mut s);
+    frame::encode_infer_request(Some("double"), &[4.0, 0.0], &mut s);
+    s
+}
+
+const TORTURE_JSON_SCRIPT: &[u8] = b"{\"features\": [5, 0]}\nnot json\n{\"cmd\": \"stats\"}\n{\"model\": \"double\", \"features\": [4, 0]}\n";
+
+#[test]
+fn splits_at_every_byte_boundary_yield_identical_transcripts() {
+    let bin = torture_binary_script();
+    for (script, binary) in [(bin.as_slice(), true), (TORTURE_JSON_SCRIPT, false)] {
+        let reference = run_chunked(script, &[script.len()], binary);
+        assert_eq!(reference.len(), 4);
+        let proto = if binary { "binary" } else { "json" };
+        for cut in 1..script.len() {
+            let got = run_chunked(script, &[cut, script.len()], binary);
+            assert_eq!(got, reference, "{proto} split at byte {cut}");
+        }
+    }
+}
+
+#[test]
+fn random_chunking_is_seed_deterministic() {
+    let bin = torture_binary_script();
+    let mut rng = SplitMix64::new(0xF00D);
+    for (script, binary) in [(bin.as_slice(), true), (TORTURE_JSON_SCRIPT, false)] {
+        let reference = run_chunked(script, &[script.len()], binary);
+        for round in 0..20 {
+            let mut cuts: Vec<usize> = (0..(1 + rng.below(5)))
+                .map(|_| 1 + rng.below(script.len() as u64 - 1) as usize)
+                .collect();
+            cuts.push(script.len());
+            cuts.sort_unstable();
+            cuts.dedup();
+            let got = run_chunked(script, &cuts, binary);
+            assert_eq!(got, reference, "round {round} cuts {cuts:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Socket-level torture
+// ---------------------------------------------------------------------------
+
+#[test]
+fn byte_at_a_time_delivery_over_tcp_both_protocols() {
+    for binary in [false, true] {
+        let registry = Arc::new(two_tenants());
+        let mut server = Server::start("127.0.0.1:0", registry).unwrap();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        // Trailing stats keeps the transcript deterministic: it cannot
+        // execute until every earlier reply has been written.
+        let cases = vec![
+            Case::Infer { model: None, features: vec![5.0, 0.0] },
+            Case::Infer { model: None, features: vec![1.0] },
+            Case::Infer { model: Some("double"), features: vec![4.0, 0.0] },
+            admin(vec![("cmd", json::s("stats"))]),
+        ];
+        let script: Vec<u8> = cases
+            .iter()
+            .flat_map(|c| if binary { case_binary_frame(c) } else { case_json_line(c) })
+            .collect();
+        for b in &script {
+            stream.write_all(std::slice::from_ref(b)).unwrap();
+        }
+        let reply = |stream: &mut TcpStream, reader: &mut BufReader<TcpStream>| {
+            if binary {
+                read_binary_reply(stream)
+            } else {
+                read_json_reply(reader)
+            }
+        };
+        let r = reply(&mut stream, &mut reader);
+        assert_eq!(r.get("label").and_then(Value::as_f64), Some(5.0), "{r:?}");
+        let r = reply(&mut stream, &mut reader);
+        assert_eq!(r.get("code").and_then(Value::as_str), Some("bad_width"), "{r:?}");
+        let r = reply(&mut stream, &mut reader);
+        assert_eq!(r.get("label").and_then(Value::as_f64), Some(8.0), "{r:?}");
+        let r = reply(&mut stream, &mut reader);
+        assert_eq!(r.get("responses").and_then(Value::as_f64), Some(1.0), "{r:?}");
+        server.shutdown();
+    }
+}
+
+#[test]
+fn pipelined_binary_requests_reply_in_order_with_serial_admin() {
+    let registry = echo_only();
+    let mut server = Server::start("127.0.0.1:0", registry).unwrap();
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let n = 32;
+    let mut script = Vec::new();
+    for i in 0..n {
+        frame::encode_infer_request(None, &[i as f32, 0.0], &mut script);
+    }
+    frame::encode_admin_request(&json::obj(vec![("cmd", json::s("stats"))]), &mut script);
+    stream.write_all(&script).unwrap();
+    for i in 0..n {
+        let r = read_binary_reply(&mut stream);
+        assert_eq!(r.get("label").and_then(Value::as_f64), Some(i as f64), "{r:?}");
+        assert_eq!(r.get("id").and_then(Value::as_f64), Some(i as f64), "{r:?}");
+    }
+    // The pipelined stats observes every preceding inference (serial
+    // semantics preserved under batching and out-of-order completion).
+    let s = read_binary_reply(&mut stream);
+    assert_eq!(s.get("responses").and_then(Value::as_f64), Some(n as f64), "{s:?}");
+    assert_eq!(s.get("requests").and_then(Value::as_f64), Some(n as f64), "{s:?}");
+    server.shutdown();
+}
+
+#[test]
+fn oversized_frame_gets_coded_error_and_connection_survives() {
+    let registry = echo_only();
+    let cfg = ServerConfig { max_frame: 256, ..Default::default() };
+    let mut server = Server::start_with("127.0.0.1:0", registry, cfg).unwrap();
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let mut script = vec![frame::MAGIC, frame::VERSION, frame::TYPE_REQ_INFER, 0];
+    script.extend_from_slice(&(1000u32).to_le_bytes());
+    script.extend_from_slice(&[0u8; 1000]); // streamed, discarded
+    frame::encode_infer_request(None, &[6.0, 0.0], &mut script);
+    stream.write_all(&script).unwrap();
+    let e = read_binary_reply(&mut stream);
+    assert_eq!(e.get("code").and_then(Value::as_str), Some("bad_request"), "{e:?}");
+    assert!(
+        e.get("error").and_then(Value::as_str).unwrap().contains("exceeds"),
+        "{e:?}"
+    );
+    let ok = read_binary_reply(&mut stream);
+    assert_eq!(ok.get("label").and_then(Value::as_f64), Some(6.0), "{ok:?}");
+    server.shutdown();
+}
+
+#[test]
+fn truncated_frame_at_eof_closes_cleanly_without_reply() {
+    let registry = echo_only();
+    let mut server = Server::start("127.0.0.1:0", registry).unwrap();
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let mut script = vec![frame::MAGIC, frame::VERSION, frame::TYPE_REQ_INFER, 0];
+    script.extend_from_slice(&(64u32).to_le_bytes());
+    script.extend_from_slice(&[0u8; 10]); // 54 bytes short
+    stream.write_all(&script).unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "partial frame must be dropped, got {} bytes", rest.len());
+    server.shutdown();
+}
+
+#[test]
+fn bad_magic_mid_stream_replies_then_disconnects() {
+    let registry = echo_only();
+    let mut server = Server::start("127.0.0.1:0", registry).unwrap();
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let mut script = Vec::new();
+    frame::encode_infer_request(None, &[2.0, 0.0], &mut script);
+    script.extend_from_slice(b"garbage after a valid frame");
+    stream.write_all(&script).unwrap();
+    let ok = read_binary_reply(&mut stream);
+    assert_eq!(ok.get("label").and_then(Value::as_f64), Some(2.0), "{ok:?}");
+    let e = read_binary_reply(&mut stream);
+    assert_eq!(e.get("code").and_then(Value::as_str), Some("bad_request"), "{e:?}");
+    assert!(e.get("error").and_then(Value::as_str).unwrap().contains("magic"), "{e:?}");
+    // Desynchronized stream: the server closes after the error reply.
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+    server.shutdown();
+}
+
+#[test]
+fn overlong_json_line_is_rejected_and_skipped() {
+    let registry = echo_only();
+    let cfg = ServerConfig { max_frame: 64, ..Default::default() };
+    let mut server = Server::start_with("127.0.0.1:0", registry, cfg).unwrap();
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // 200 junk bytes, no newline: over the 64-byte line limit. The pause
+    // lets the server observe the overlong prefix before the newline.
+    stream.write_all(&[b'x'; 200]).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    stream.write_all(b"\n{\"features\": [3, 0]}\n").unwrap();
+    let e = read_json_reply(&mut reader);
+    assert_eq!(e.get("code").and_then(Value::as_str), Some("bad_request"), "{e:?}");
+    let ok = read_json_reply(&mut reader);
+    assert_eq!(ok.get("label").and_then(Value::as_f64), Some(3.0), "{ok:?}");
+    server.shutdown();
+}
+
+#[test]
+fn slow_reader_hits_write_backpressure_and_loses_nothing() {
+    let registry = echo_only();
+    let cfg = ServerConfig { write_hwm: 1024, ..Default::default() };
+    let mut server = Server::start_with("127.0.0.1:0", registry, cfg).unwrap();
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // ~300 pipelined `models` commands produce far more reply bytes than
+    // the 1 KiB high-water mark; the client reads nothing until every
+    // request is written, forcing the server to pause reads mid-stream.
+    let n = 300;
+    let mut script = Vec::new();
+    for _ in 0..n {
+        script.extend_from_slice(b"{\"cmd\": \"models\"}\n");
+    }
+    stream.write_all(&script).unwrap();
+    for i in 0..n {
+        let r = read_json_reply(&mut reader);
+        assert_eq!(r.get("default").and_then(Value::as_str), Some("echo"), "reply {i}: {r:?}");
+    }
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Event-loop regressions
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+#[test]
+fn idle_event_loop_takes_no_wakeups() {
+    let registry = echo_only();
+    let mut server = Server::start("127.0.0.1:0", registry).unwrap();
+    // No clients: the reactors must be parked in poll, not spinning.
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(server.stats().wakeups, 0, "idle server must not wake");
+    // Activity wakes it...
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+    let _ = read_json_reply(&mut reader);
+    assert!(server.stats().wakeups > 0);
+    drop(reader);
+    drop(stream);
+    // ...and once the connection is gone it parks again.
+    std::thread::sleep(Duration::from_millis(200));
+    let settled = server.stats().wakeups;
+    std::thread::sleep(Duration::from_millis(300));
+    assert_eq!(server.stats().wakeups, settled, "post-activity idle must not wake");
+    server.shutdown();
+}
+
+/// Engine that blocks inside `infer` until released — lets the test
+/// hold a request in flight across a shutdown.
+struct Gate {
+    release: Arc<(Mutex<bool>, Condvar)>,
+}
+impl Engine for Gate {
+    fn name(&self) -> String {
+        "gate".into()
+    }
+    fn features(&self) -> usize {
+        2
+    }
+    fn infer(&mut self, x: &Matrix) -> anyhow::Result<Vec<i32>> {
+        let (lock, cvar) = &*self.release;
+        let mut released = lock.lock().unwrap();
+        while !*released {
+            released = cvar.wait(released).unwrap();
+        }
+        Ok(vec![42; x.rows()])
+    }
+}
+
+#[test]
+fn shutdown_drains_admitted_requests_before_joining() {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let g2 = Arc::clone(&gate);
+    let registry = Arc::new(ModelRegistry::single(
+        "gate",
+        "demo",
+        2,
+        &BatcherConfig::default(),
+        vec![Box::new(move || Ok(Box::new(Gate { release: g2 }) as Box<dyn Engine>))],
+    ));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+    let addr = server.addr;
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"{\"features\": [1, 2]}\n").unwrap();
+    // Wait until the request is admitted into the batcher.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while registry.stats(None).unwrap().1.requests < 1 {
+        assert!(Instant::now() < deadline, "request never admitted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Shut down WHILE the request is still blocked inside the engine:
+    // the drain must wait for it rather than abandon the connection.
+    let shut = std::thread::spawn(move || {
+        let mut server = server;
+        server.shutdown();
+        server
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    {
+        let (lock, cvar) = &*gate;
+        *lock.lock().unwrap() = true;
+        cvar.notify_all();
+    }
+    let v = read_json_reply(&mut reader);
+    assert_eq!(v.get("label").and_then(Value::as_f64), Some(42.0), "{v:?}");
+    let server = shut.join().unwrap();
+    assert_eq!(server.stats().open, 0, "shutdown left connections open");
+    // The drained connection is closed...
+    let mut line = String::new();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+    // ...and the listener is gone: no thread is left accepting.
+    assert!(TcpStream::connect(addr).is_err(), "listener still accepting after shutdown");
+}
