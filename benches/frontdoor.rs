@@ -12,6 +12,14 @@
 //!    pipelining (closed loop, window W) until a request budget drains;
 //!    reports aggregate throughput and client-measured p50/p99/p999.
 //!
+//! A counting global allocator reports allocator traffic over the
+//! saturation phase as allocs/request and bytes/request. The counters
+//! are process-wide — they include the load generator's own bookkeeping
+//! (latency samples, thread spawns), so treat the numbers as an upper
+//! bound on the serving path; the measured loop itself reads replies
+//! without decoding them to keep the client's contribution near zero
+//! (the strict zero-allocation claim lives in tests/alloc_regression.rs).
+//!
 //! Output: results/BENCH_frontdoor.json (EXPERIMENTS.md §Front door).
 //! Environment knobs: LOGHD_FRONTDOOR_CONNS (default 10000),
 //! LOGHD_FRONTDOOR_REQS (per active connection, default 1000).
@@ -25,7 +33,11 @@ use loghd::coordinator::frame;
 use loghd::coordinator::{BatcherConfig, Engine, ModelRegistry, Server, ServerConfig};
 use loghd::eval::metrics::percentile;
 use loghd::tensor::Matrix;
+use loghd::testkit::alloc_counter::CountingAlloc;
 use loghd::util::json::{self, Value};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
 
 const ACTIVE_CONNS: usize = 64;
 const WINDOW: usize = 16;
@@ -101,6 +113,20 @@ fn read_reply(stream: &mut TcpStream, scratch: &mut Vec<u8>) -> Value {
     }
 }
 
+/// Read one reply frame into `scratch` without decoding it. The
+/// saturation loop uses this so the allocs/request metric measures the
+/// serving path, not a client-side JSON tree per reply.
+fn read_reply_raw(stream: &mut TcpStream, scratch: &mut Vec<u8>) {
+    let mut hdr = [0u8; frame::HEADER_LEN];
+    stream.read_exact(&mut hdr).expect("reply header");
+    assert_eq!(hdr[0], frame::MAGIC, "bad reply magic {:#04x}", hdr[0]);
+    assert_eq!(hdr[2], frame::TYPE_REP_INFER, "unexpected reply type {:#04x}", hdr[2]);
+    let len = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+    scratch.clear();
+    scratch.resize(len, 0);
+    stream.read_exact(scratch).expect("reply payload");
+}
+
 fn roundtrip(stream: &mut TcpStream, scratch: &mut Vec<u8>, features: &[f32]) -> Value {
     let mut req = Vec::new();
     frame::encode_infer_request(None, features, &mut req);
@@ -126,7 +152,7 @@ fn drive_conn(addr: std::net::SocketAddr, requests: usize) -> Vec<f64> {
             sent_at.push_back(Instant::now());
             sent += 1;
         }
-        let _ = read_reply(&mut stream, &mut scratch);
+        read_reply_raw(&mut stream, &mut scratch);
         let t0 = sent_at.pop_front().expect("reply without request");
         latencies.push(t0.elapsed().as_secs_f64() * 1e6);
         received += 1;
@@ -216,6 +242,8 @@ fn main() -> anyhow::Result<()> {
         "phase 2: {ACTIVE_CONNS} active connections x {reqs_per_conn} requests (window {WINDOW})…"
     );
     let t1 = Instant::now();
+    let allocs_before = ALLOC.allocs();
+    let alloc_bytes_before = ALLOC.bytes();
     let mut all_lat: Vec<f64> = Vec::with_capacity(ACTIVE_CONNS * reqs_per_conn);
     std::thread::scope(|scope| {
         let handles: Vec<_> = (0..ACTIVE_CONNS)
@@ -226,8 +254,12 @@ fn main() -> anyhow::Result<()> {
         }
     });
     let elapsed = t1.elapsed().as_secs_f64();
+    let allocs_delta = ALLOC.allocs() - allocs_before;
+    let alloc_bytes_delta = ALLOC.bytes() - alloc_bytes_before;
     let total = ACTIVE_CONNS * reqs_per_conn;
     let rps = total as f64 / elapsed;
+    let allocs_per_request = allocs_delta as f64 / total as f64;
+    let alloc_bytes_per_request = alloc_bytes_delta as f64 / total as f64;
     all_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let p50 = percentile(&all_lat, 0.50);
     let p99 = percentile(&all_lat, 0.99);
@@ -235,7 +267,16 @@ fn main() -> anyhow::Result<()> {
     println!(
         "  {total} requests in {elapsed:.2}s: {rps:.0} req/s  p50 {p50:.0}µs  p99 {p99:.0}µs  p999 {p999:.0}µs"
     );
+    println!(
+        "  allocator (process-wide, incl. load generator): \
+         {allocs_per_request:.2} allocs/req  {alloc_bytes_per_request:.0} bytes/req"
+    );
 
+    let tenant_stats = registry.stats(None).expect("tenant stats").1;
+    println!(
+        "  batching: fill {:.2} of max_batch, queue high-water {}",
+        tenant_stats.batch_fill_ratio, tenant_stats.queue_depth_hwm
+    );
     let wakeups = server.stats().wakeups;
     server.shutdown();
 
@@ -257,6 +298,10 @@ fn main() -> anyhow::Result<()> {
         ("p99_us", json::num(p99)),
         ("p999_us", json::num(p999)),
         ("reactor_wakeups", json::num(wakeups as f64)),
+        ("allocs_per_request", json::num(allocs_per_request)),
+        ("alloc_bytes_per_request", json::num(alloc_bytes_per_request)),
+        ("batch_fill_ratio", json::num(tenant_stats.batch_fill_ratio)),
+        ("queue_depth_hwm", json::num(tenant_stats.queue_depth_hwm as f64)),
     ]);
     std::fs::write("results/BENCH_frontdoor.json", json::to_string_pretty(&report) + "\n")?;
     println!("wrote results/BENCH_frontdoor.json");

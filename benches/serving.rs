@@ -6,21 +6,33 @@
 //!
 //! Output: results/serving.csv plus machine-readable
 //! results/BENCH_serving.json (per-precision median seconds + speedups
-//! over f32) so the perf trajectory is trackable across PRs
-//! (EXPERIMENTS.md §Perf).
+//! over f32, allocator traffic through the steady-state `infer_into`
+//! path, and the batcher's fill ratio / queue high-water mark) so the
+//! perf trajectory is trackable across PRs (EXPERIMENTS.md §Perf).
+//!
+//! The native-engine loop runs through [`Engine::infer_into`] — the
+//! form the coordinator serves — with a reused [`InferScratch`], and a
+//! counting global allocator reports allocs per batch over it. The
+//! number includes the thread pool's per-call dispatch (row-parallel
+//! encode hands closures to worker threads); the single-threaded
+//! zero-allocation claim is asserted in tests/alloc_regression.rs.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use loghd::bench::{bench, CsvWriter};
-use loghd::coordinator::{BatcherConfig, Coordinator, NativeEngine};
+use loghd::coordinator::{BatcherConfig, Coordinator, Engine, InferScratch, NativeEngine};
 use loghd::data;
 use loghd::loghd::model::{TrainOptions, TrainedStack};
 use loghd::loghd::qmodel::QuantizedLogHdModel;
 use loghd::quant::Precision;
 use loghd::runtime::PjrtRuntime;
 use loghd::tensor::Matrix;
+use loghd::testkit::alloc_counter::CountingAlloc;
 use loghd::util::json;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
 
 fn main() -> anyhow::Result<()> {
     let mut csv = CsvWriter::create("results/serving.csv", "path,metric,value")?;
@@ -57,26 +69,15 @@ fn main() -> anyhow::Result<()> {
         "speedup over f32: int8 {speedup_int8:.2}x (target >= 1.5x), 1-bit {speedup_bit1:.2}x (target >= 3x)"
     );
     for (path, stats) in
-        [("model_f32", f32_stats), ("model_int8", int8_stats), ("model_bit1", bit1_stats)]
+        [("model_f32", &f32_stats), ("model_int8", &int8_stats), ("model_bit1", &bit1_stats)]
     {
         csv.row(&[path.into(), "batch64_median_s".into(), format!("{:.9}", stats.median)])?;
     }
 
-    let report = json::obj(vec![
-        ("dispatch", json::s(loghd::tensor::simd::path_label())),
-        ("batch", json::num(64.0)),
-        ("d", json::num(2000.0)),
-        ("n_bundles", json::num(stack.loghd.n_bundles() as f64)),
-        ("f32_median_s", json::num(f32_stats.median)),
-        ("int8_median_s", json::num(int8_stats.median)),
-        ("bit1_median_s", json::num(bit1_stats.median)),
-        ("int8_speedup_vs_f32", json::num(speedup_int8)),
-        ("bit1_speedup_vs_f32", json::num(speedup_bit1)),
-    ]);
-    std::fs::write("results/BENCH_serving.json", json::to_string_pretty(&report))?;
-    println!("wrote results/BENCH_serving.json");
-
-    // --- End-to-end native engines (encode + model) ---
+    // --- End-to-end native engines (encode + model), through the
+    // steady-state `infer_into` serving form (reused scratch) ---
+    let mut native_f32_into_median = f64::NAN;
+    let mut native_f32_allocs_per_batch = f64::NAN;
     for precision in [Precision::F32, Precision::B8, Precision::B1] {
         let mut engine = NativeEngine::with_precision(
             stack.encoder.clone(),
@@ -84,11 +85,26 @@ fn main() -> anyhow::Result<()> {
             "page",
             precision,
         );
+        let mut scratch = InferScratch::new();
+        // Settle every scratch buffer at its high-water mark first, so
+        // the allocator delta measures the steady state.
+        let _ = engine.infer_into(&xb, &mut scratch)?;
+        let a0 = ALLOC.allocs();
+        const ALLOC_PROBE_ITERS: usize = 32;
+        for _ in 0..ALLOC_PROBE_ITERS {
+            let _ = engine.infer_into(&xb, &mut scratch).unwrap();
+        }
+        let allocs_per_batch = (ALLOC.allocs() - a0) as f64 / ALLOC_PROBE_ITERS as f64;
         let stats = bench(3, 30, || {
-            let _ = loghd::coordinator::Engine::infer(&mut engine, &xb).unwrap();
+            let _ = engine.infer_into(&xb, &mut scratch).unwrap();
         });
-        let label = format!("native infer {} batch=64 D=2000", precision.label());
+        let label = format!("native infer_into {} batch=64 D=2000", precision.label());
         println!("{}", stats.format_line(&label));
+        println!("  allocs/batch (incl. thread-pool dispatch): {allocs_per_batch:.1}");
+        if precision == Precision::F32 {
+            native_f32_into_median = stats.median;
+            native_f32_allocs_per_batch = allocs_per_batch;
+        }
         csv.row(&[
             format!("native_{}", precision.label()),
             "batch64_median_s".into(),
@@ -117,6 +133,8 @@ fn main() -> anyhow::Result<()> {
 
     // --- Batcher policy sweep (native engine, offered load) ---
     println!("\nbatcher policy sweep (native page model, 512 requests):");
+    let mut sweep_fill_ratio = f64::NAN;
+    let mut sweep_queue_hwm = f64::NAN;
     for (max_batch, delay_ms) in [(1usize, 0u64), (16, 1), (64, 2), (64, 8)] {
         let cfg = BatcherConfig {
             max_batch,
@@ -140,16 +158,42 @@ fn main() -> anyhow::Result<()> {
         let elapsed = t0.elapsed();
         let snap = coord.stats();
         println!(
-            "  max_batch={max_batch:<3} delay={delay_ms}ms: {:>8.0} req/s  mean_batch={:<5.1} p99={:.0}µs",
+            "  max_batch={max_batch:<3} delay={delay_ms}ms: {:>8.0} req/s  mean_batch={:<5.1} fill={:.2} queue_hwm={} p99={:.0}µs",
             512.0 / elapsed.as_secs_f64(),
             snap.mean_batch_size,
+            snap.batch_fill_ratio,
+            snap.queue_depth_hwm,
             snap.latency_p99_us
         );
+        // The acceptance-shaped point (max_batch=64, 2ms) feeds the
+        // snapshot-tracked report.
+        if (max_batch, delay_ms) == (64, 2) {
+            sweep_fill_ratio = snap.batch_fill_ratio;
+            sweep_queue_hwm = snap.queue_depth_hwm as f64;
+        }
         csv.row(&[
             format!("batcher_b{max_batch}_d{delay_ms}"),
             "req_per_s".into(),
             format!("{:.1}", 512.0 / elapsed.as_secs_f64()),
         ])?;
     }
+
+    let report = json::obj(vec![
+        ("dispatch", json::s(loghd::tensor::simd::path_label())),
+        ("batch", json::num(64.0)),
+        ("d", json::num(2000.0)),
+        ("n_bundles", json::num(stack.loghd.n_bundles() as f64)),
+        ("f32_median_s", json::num(f32_stats.median)),
+        ("int8_median_s", json::num(int8_stats.median)),
+        ("bit1_median_s", json::num(bit1_stats.median)),
+        ("int8_speedup_vs_f32", json::num(speedup_int8)),
+        ("bit1_speedup_vs_f32", json::num(speedup_bit1)),
+        ("native_f32_infer_into_median_s", json::num(native_f32_into_median)),
+        ("native_f32_allocs_per_batch", json::num(native_f32_allocs_per_batch)),
+        ("batch_fill_ratio", json::num(sweep_fill_ratio)),
+        ("queue_depth_hwm", json::num(sweep_queue_hwm)),
+    ]);
+    std::fs::write("results/BENCH_serving.json", json::to_string_pretty(&report))?;
+    println!("wrote results/BENCH_serving.json");
     Ok(())
 }

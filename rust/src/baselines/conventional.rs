@@ -49,6 +49,20 @@ impl ConventionalModel {
         (0..s.rows()).map(|i| tensor::argmax(s.row(i)) as i32).collect()
     }
 
+    /// [`Self::predict_prepared`] writing the score matrix and labels
+    /// into caller-owned scratch — the zero-allocation serving form.
+    pub fn predict_prepared_into(
+        &self,
+        enc: &Matrix,
+        prep: &NtPrepared,
+        scores: &mut Matrix,
+        labels: &mut Vec<i32>,
+    ) {
+        crate::hd::similarity::activations_with_into(enc, &self.prototypes, prep, scores);
+        labels.clear();
+        labels.extend((0..scores.rows()).map(|i| tensor::argmax(scores.row(i)) as i32));
+    }
+
     /// Stored floats: C*D.
     pub fn memory_floats(&self) -> usize {
         self.classes() * self.d()

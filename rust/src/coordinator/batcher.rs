@@ -23,8 +23,10 @@ use std::time::{Duration, Instant};
 
 use crate::tensor::Matrix;
 
+use super::conn::Protocol;
 use super::stats::{StatsCollector, StatsSnapshot};
 use super::worker::EngineFactory;
+use super::InferScratch;
 
 /// Batching configuration.
 #[derive(Debug, Clone)]
@@ -108,35 +110,56 @@ impl std::error::Error for ReloadError {}
 
 /// Non-blocking completion hook for [`Coordinator::submit_with`]: invoked
 /// exactly once, from a worker thread, with the response or the reason
-/// the admitted request went unanswered. Used by the event-loop front
-/// end, whose reactor threads must never block on a channel.
+/// the admitted request went unanswered. Used where per-request boxing is
+/// acceptable (the blocking API wraps its channel in one); the
+/// steady-state front door uses [`CompletionSink`] instead, which carries
+/// no per-request allocation.
 pub type ResponseCallback = Box<dyn FnOnce(Result<Response, SubmitError>) + Send + 'static>;
 
-/// How a job's answer travels back to its submitter. The channel variant
-/// keeps the blocking API's exact semantics (an error drops the sender
-/// and the caller disambiguates via the shutdown flag); the callback
-/// variant reports every outcome explicitly.
+/// The request-invariant completion channel of the zero-allocation
+/// serving path: ONE sink (an `Arc`, cloned refcount-only per request)
+/// receives every outcome, with the per-request identity riding in the
+/// [`Ticket`]. The feature vector is handed back so the front end can
+/// recycle it into its pool.
+pub trait CompletionSink: Send + Sync {
+    /// Called exactly once per submitted ticket — with the response, or
+    /// with the admission/engine/shutdown error.
+    fn complete(&self, ticket: Ticket, outcome: Result<Response, SubmitError>, features: Vec<f32>);
+}
+
+/// Per-request routing state threaded through [`Coordinator::submit_sink`]
+/// and handed back via [`CompletionSink::complete`]: the connection token
+/// and reply sequence (front-end bookkeeping, opaque to the batcher), the
+/// wire protocol, the resolved tenant name (an `Arc<str>` set by the
+/// registry — no per-request string copy), and a recycled buffer the sink
+/// encodes the reply into.
+#[derive(Debug)]
+pub struct Ticket {
+    /// Front-end connection identity (opaque to the batcher).
+    pub token: u64,
+    /// Connection-local reply slot.
+    pub seq: u64,
+    /// Wire protocol the reply must be encoded for.
+    pub protocol: Protocol,
+    /// Resolved tenant name (set by `ModelRegistry::submit_ticket`).
+    pub name: Arc<str>,
+    /// Reply encode buffer, recycled through the front end's pool.
+    pub buf: Vec<u8>,
+}
+
+/// How a job's answer travels back to its submitter.
 enum Completion {
-    Channel(mpsc::Sender<Response>),
     Callback(ResponseCallback),
+    Sink { sink: Arc<dyn CompletionSink>, ticket: Ticket },
 }
 
 impl Completion {
-    fn ok(self, resp: Response) {
+    /// Deliver the outcome, handing the feature vector back to sinks for
+    /// recycling (callbacks drop it — their callers never pool).
+    fn deliver(self, outcome: Result<Response, SubmitError>, features: Vec<f32>) {
         match self {
-            Completion::Channel(tx) => {
-                let _ = tx.send(resp);
-            }
-            Completion::Callback(cb) => cb(Ok(resp)),
-        }
-    }
-
-    fn fail(self, err: SubmitError) {
-        match self {
-            // Dropping the sender is the blocking protocol's failure
-            // signal (recv fails; the caller checks the shutdown flag).
-            Completion::Channel(_) => {}
-            Completion::Callback(cb) => cb(Err(err)),
+            Completion::Callback(cb) => cb(outcome),
+            Completion::Sink { sink, ticket } => sink.complete(ticket, outcome, features),
         }
     }
 }
@@ -145,6 +168,29 @@ struct Job {
     request: Request,
     enqueued: Instant,
     completion: Completion,
+}
+
+/// Per-replica reusable batch state, owned by the worker loop: the
+/// assembled feature matrix, the engine's [`InferScratch`], the job list
+/// the queue drains into, and the staging area for deliveries made after
+/// the stats lock drops. Every buffer settles at the batch high-water
+/// mark — at steady state a shard is served with zero allocations.
+struct BatchScratch {
+    x: Matrix,
+    infer: InferScratch,
+    jobs: Vec<Job>,
+    done: Vec<(Completion, Response, Vec<f32>)>,
+}
+
+impl BatchScratch {
+    fn new() -> Self {
+        Self {
+            x: Matrix::zeros(0, 0),
+            infer: InferScratch::new(),
+            jobs: Vec::new(),
+            done: Vec::new(),
+        }
+    }
 }
 
 struct Shared {
@@ -188,6 +234,7 @@ impl Coordinator {
     /// per factory, all draining the shared batcher queue.
     pub fn start_pool(features: usize, cfg: BatcherConfig, factories: Vec<EngineFactory>) -> Self {
         assert!(!factories.is_empty(), "coordinator needs at least one replica");
+        let max_batch = cfg.max_batch;
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             not_empty: Condvar::new(),
@@ -197,6 +244,7 @@ impl Coordinator {
             next_id: AtomicU64::new(0),
             stats: Mutex::new(StatsCollector {
                 started: Some(Instant::now()),
+                max_batch,
                 ..Default::default()
             }),
             reload_gen: AtomicU64::new(0),
@@ -263,20 +311,20 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Admission control + enqueue shared by [`submit`](Self::submit) and
-    /// [`submit_with`](Self::submit_with). On refusal the completion is
-    /// handed back so the caller decides how to deliver the error.
+    /// Admission control + enqueue shared by every submit flavor. On
+    /// refusal the completion and features are handed back so the caller
+    /// decides how to deliver the error (and can recycle the vector).
     fn enqueue(
         &self,
         features: Vec<f32>,
         completion: Completion,
-    ) -> Result<(), (SubmitError, Completion)> {
+    ) -> Result<(), (SubmitError, Completion, Vec<f32>)> {
         if self.shared.shutdown.load(Ordering::Acquire) {
-            return Err((SubmitError::ShutDown, completion));
+            return Err((SubmitError::ShutDown, completion, features));
         }
         if features.len() != self.shared.features {
             let err = SubmitError::BadWidth { got: features.len(), want: self.shared.features };
-            return Err((err, completion));
+            return Err((err, completion, features));
         }
         {
             let mut q = self.shared.queue.lock().unwrap();
@@ -284,11 +332,11 @@ impl Coordinator {
             // holding it, so this load is ordered against that drain and a
             // request can never be enqueued after it (it would hang).
             if self.shared.shutdown.load(Ordering::Acquire) {
-                return Err((SubmitError::ShutDown, completion));
+                return Err((SubmitError::ShutDown, completion, features));
             }
             if q.len() >= self.shared.cfg.max_pending {
                 self.shared.stats.lock().unwrap().rejected += 1;
-                return Err((SubmitError::QueueFull(q.len()), completion));
+                return Err((SubmitError::QueueFull(q.len()), completion, features));
             }
             let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
             q.push_back(Job {
@@ -296,18 +344,29 @@ impl Coordinator {
                 enqueued: Instant::now(),
                 completion,
             });
-            self.shared.stats.lock().unwrap().requests += 1;
+            let depth = q.len() as u64;
+            let mut stats = self.shared.stats.lock().unwrap();
+            stats.requests += 1;
+            stats.queue_depth_hwm = stats.queue_depth_hwm.max(depth);
         }
         self.shared.not_empty.notify_one();
         Ok(())
     }
 
-    /// Enqueue a request; returns the receiver for its response.
+    /// Enqueue a request; returns the receiver for its response. Sugar
+    /// over the callback machinery: on failure the sender drops unsent,
+    /// which is the blocking protocol's failure signal (recv fails; the
+    /// caller disambiguates via the shutdown flag).
     pub fn submit(&self, features: Vec<f32>) -> Result<mpsc::Receiver<Response>, SubmitError> {
         let (tx, rx) = mpsc::channel();
-        match self.enqueue(features, Completion::Channel(tx)) {
+        let cb: ResponseCallback = Box::new(move |result| {
+            if let Ok(resp) = result {
+                let _ = tx.send(resp);
+            }
+        });
+        match self.enqueue(features, Completion::Callback(cb)) {
             Ok(()) => Ok(rx),
-            Err((err, _completion)) => Err(err),
+            Err((err, _completion, _features)) => Err(err),
         }
     }
 
@@ -315,11 +374,21 @@ impl Coordinator {
     /// The callback fires exactly once — with the response, or with the
     /// admission/engine/shutdown error — always from a worker thread
     /// except for synchronous admission refusals, which invoke it inline.
-    /// This is the non-blocking path the event-loop front end uses:
-    /// reactor threads hand off and return immediately.
     pub fn submit_with(&self, features: Vec<f32>, cb: ResponseCallback) {
-        if let Err((err, completion)) = self.enqueue(features, Completion::Callback(cb)) {
-            completion.fail(err);
+        if let Err((err, completion, features)) = self.enqueue(features, Completion::Callback(cb)) {
+            completion.deliver(Err(err), features);
+        }
+    }
+
+    /// Enqueue a request on the zero-allocation path: ONE shared sink
+    /// (refcount-clone per request, no boxing) receives the outcome with
+    /// `ticket` identifying the request. Every outcome — including
+    /// synchronous admission refusals — is delivered through the sink, so
+    /// the ticket's buffers always come back for recycling.
+    pub fn submit_sink(&self, features: Vec<f32>, sink: &Arc<dyn CompletionSink>, ticket: Ticket) {
+        let completion = Completion::Sink { sink: Arc::clone(sink), ticket };
+        if let Err((err, completion, features)) = self.enqueue(features, completion) {
+            completion.deliver(Err(err), features);
         }
     }
 
@@ -372,7 +441,8 @@ fn worker_loop(shared: Arc<Shared>, replica: usize, factory: EngineFactory) {
                 let orphans: Vec<Job> = shared.queue.lock().unwrap().drain(..).collect();
                 shared.not_empty.notify_all();
                 for job in orphans {
-                    job.completion.fail(SubmitError::ShutDown);
+                    let Job { request, completion, .. } = job;
+                    completion.deliver(Err(SubmitError::ShutDown), request.features);
                 }
             }
             return;
@@ -387,6 +457,7 @@ fn worker_loop(shared: Arc<Shared>, replica: usize, factory: EngineFactory) {
     // this replica's slot and bumps the generation; adopting jumps
     // straight to the latest generation (intermediate reloads collapse).
     let mut seen_gen = 0u64;
+    let mut scratch = BatchScratch::new();
     loop {
         // Adopt a pending engine swap before pulling the next shard.
         let current_gen = shared.reload_gen.load(Ordering::Acquire);
@@ -412,55 +483,73 @@ fn worker_loop(shared: Arc<Shared>, replica: usize, factory: EngineFactory) {
                 }
             }
         }
-        let batch = collect_batch(&shared, seen_gen);
-        let Some(jobs) = batch else { break };
-        if jobs.is_empty() {
+        if !collect_batch(&shared, seen_gen, &mut scratch.jobs) {
+            break;
+        }
+        if scratch.jobs.is_empty() {
             continue;
         }
-        let mut x = Matrix::zeros(jobs.len(), shared.features);
-        for (i, job) in jobs.iter().enumerate() {
-            x.row_mut(i).copy_from_slice(&job.request.features);
+        let n = scratch.jobs.len();
+        // Assemble in place: resize never shrinks capacity, and every
+        // admitted row is width-checked, so each row is fully overwritten
+        // — no zero-fill, no fresh matrix.
+        scratch.x.resize(n, shared.features);
+        for (i, job) in scratch.jobs.iter().enumerate() {
+            scratch.x.row_mut(i).copy_from_slice(&job.request.features);
         }
-        let labels = match engine.infer(&x) {
+        let labels = match engine.infer_into(&scratch.x, &mut scratch.infer) {
             Ok(l) => l,
             Err(err) => {
-                crate::log_error!("inference failed for batch of {}: {err:#}", jobs.len());
-                shared.stats.lock().unwrap().failures += jobs.len() as u64;
-                // Channel senders drop -> blocking callers see
-                // EngineFailure; callbacks are told explicitly.
-                for job in jobs {
-                    job.completion.fail(SubmitError::EngineFailure);
+                crate::log_error!("inference failed for batch of {n}: {err:#}");
+                shared.stats.lock().unwrap().failures += n as u64;
+                for job in scratch.jobs.drain(..) {
+                    let Job { request, completion, .. } = job;
+                    completion.deliver(Err(SubmitError::EngineFailure), request.features);
                 }
                 continue;
             }
         };
         let now = Instant::now();
-        let mut stats = shared.stats.lock().unwrap();
-        stats.batches += 1;
-        stats.batched_items += jobs.len() as u64;
-        let mut done = Vec::with_capacity(jobs.len());
-        for (job, label) in jobs.into_iter().zip(labels) {
-            let latency = now.duration_since(job.enqueued);
-            stats.latency.record(latency);
-            stats.responses += 1;
-            done.push((job, label, latency));
+        {
+            // One stats-lock acquisition for the whole shard.
+            let mut stats = shared.stats.lock().unwrap();
+            stats.batches += 1;
+            stats.batched_items += n as u64;
+            for (job, &label) in scratch.jobs.drain(..).zip(labels) {
+                let latency = now.duration_since(job.enqueued);
+                stats.latency.record(latency);
+                stats.responses += 1;
+                let Job { request, completion, .. } = job;
+                scratch.done.push((
+                    completion,
+                    Response { id: request.id, label, latency },
+                    request.features,
+                ));
+            }
         }
-        // Deliver outside the stats lock: callback completions may do
+        // Deliver outside the stats lock: sink/callback completions do
         // real work (encode a reply, wake a reactor).
-        drop(stats);
-        for (job, label, latency) in done {
-            job.completion.ok(Response { id: job.request.id, label, latency });
+        for (completion, resp, features) in scratch.done.drain(..) {
+            completion.deliver(Ok(resp), features);
         }
     }
     crate::log_info!("worker {replica} drained; shutting down");
 }
 
-/// Wait for work, then apply the max-batch/max-delay policy.
-/// Returns None when shut down AND the queue is empty (drain semantics);
-/// returns an empty batch when a reload generation newer than `seen_gen`
-/// arrives, so the caller can adopt the new engine promptly even while
-/// idle.
-fn collect_batch(shared: &Shared, seen_gen: u64) -> Option<Vec<Job>> {
+/// Wait for work, then apply the max-batch/max-delay policy, draining the
+/// shard into `out` (the caller's reused buffer — must be empty).
+/// Returns false when shut down AND the queue is empty (drain semantics);
+/// returns true with `out` empty when a reload generation newer than
+/// `seen_gen` arrives, so the caller can adopt the new engine promptly
+/// even while idle.
+///
+/// The idle wait is an *untimed* condvar wait: every producer of work
+/// notifies (`enqueue` → `notify_one`, `reload`/`shutdown` →
+/// `notify_all`), so there is no poll interval and no wakeup-latency
+/// floor. The fill window waits precisely until `oldest + max_delay` —
+/// `max_delay` is honored as configured, not rounded up to a tick.
+fn collect_batch(shared: &Shared, seen_gen: u64, out: &mut Vec<Job>) -> bool {
+    debug_assert!(out.is_empty());
     let cfg = &shared.cfg;
     let mut q = shared.queue.lock().unwrap();
     loop {
@@ -468,14 +557,12 @@ fn collect_batch(shared: &Shared, seen_gen: u64) -> Option<Vec<Job>> {
             break;
         }
         if shared.shutdown.load(Ordering::Acquire) {
-            return None;
+            return false;
         }
         if shared.reload_gen.load(Ordering::Acquire) != seen_gen {
-            return Some(Vec::new());
+            return true;
         }
-        let (guard, _) =
-            shared.not_empty.wait_timeout(q, Duration::from_millis(50)).unwrap();
-        q = guard;
+        q = shared.not_empty.wait(q).unwrap();
     }
     let oldest = q.front().unwrap().enqueued;
     // Fill window: wait for more work until max_delay past the oldest.
@@ -491,18 +578,16 @@ fn collect_batch(shared: &Shared, seen_gen: u64) -> Option<Vec<Job>> {
         q = guard;
     }
     let take = q.len().min(cfg.max_batch);
-    let mut jobs = Vec::with_capacity(take);
     for _ in 0..take {
-        let job = q.pop_front().unwrap();
-        shared
-            .stats
-            .lock()
-            .unwrap()
-            .queue_wait
-            .record(job.enqueued.elapsed());
-        jobs.push(job);
+        out.push(q.pop_front().unwrap());
     }
-    Some(jobs)
+    drop(q);
+    // One stats-lock acquisition for the whole shard's queue waits.
+    let mut stats = shared.stats.lock().unwrap();
+    for job in out.iter() {
+        stats.queue_wait.record(job.enqueued.elapsed());
+    }
+    true
 }
 
 #[cfg(test)]
@@ -759,6 +844,46 @@ mod tests {
         let (tx2, rx2) = mpsc::channel();
         coord.submit_with(vec![1.0], Box::new(move |res| tx2.send(res).unwrap()));
         assert_eq!(rx2.recv().unwrap().unwrap_err(), SubmitError::BadWidth { got: 1, want: 3 });
+    }
+
+    #[test]
+    fn submit_sink_delivers_outcomes_and_returns_features() {
+        struct TestSink {
+            tx: Mutex<mpsc::Sender<(Ticket, Result<Response, SubmitError>, Vec<f32>)>>,
+        }
+        impl CompletionSink for TestSink {
+            fn complete(
+                &self,
+                ticket: Ticket,
+                outcome: Result<Response, SubmitError>,
+                features: Vec<f32>,
+            ) {
+                let _ = self.tx.lock().unwrap().send((ticket, outcome, features));
+            }
+        }
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        let coord = start(sizes, BatcherConfig::default());
+        let (tx, rx) = mpsc::channel();
+        let sink: Arc<dyn CompletionSink> = Arc::new(TestSink { tx: Mutex::new(tx) });
+        let ticket = |seq: u64| Ticket {
+            token: 3,
+            seq,
+            protocol: Protocol::Binary,
+            name: Arc::from("t"),
+            buf: Vec::new(),
+        };
+        coord.submit_sink(vec![4.0, 0.0, 0.0], &sink, ticket(0));
+        let (t, outcome, feats) = rx.recv().unwrap();
+        assert_eq!((t.token, t.seq), (3, 0));
+        assert_eq!(outcome.unwrap().label, 4);
+        assert_eq!(feats, vec![4.0, 0.0, 0.0]);
+        // Admission refusals arrive through the sink too, features intact
+        // (the front end recycles them into its pool).
+        coord.submit_sink(vec![1.0], &sink, ticket(1));
+        let (t, outcome, feats) = rx.recv().unwrap();
+        assert_eq!(t.seq, 1);
+        assert_eq!(outcome.unwrap_err(), SubmitError::BadWidth { got: 1, want: 3 });
+        assert_eq!(feats, vec![1.0]);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //!
 //! Reply ordering: every request is assigned a connection-local
 //! sequence number in arrival order, and replies are written strictly
-//! in that order (a `BTreeMap` reorder buffer holds replies that
+//! in that order (a ring-shaped reorder buffer holds replies that
 //! complete early). Admin verbs are *deferred* until every earlier
 //! reply has been written, which preserves the old thread-per-connection
 //! server's serial semantics: a pipelined `stats` request observes the
@@ -27,7 +27,7 @@
 //! - a bad magic byte at a binary frame boundary ⇒ the stream is
 //!   desynchronized: one final error reply, then close.
 
-use std::collections::BTreeMap;
+use std::collections::VecDeque;
 
 use crate::util::json::{self, Value};
 
@@ -72,6 +72,12 @@ enum Pending {
     Admin(Value),
 }
 
+/// Max recycled vectors held per pool (per connection).
+const POOL_SLOTS: usize = 64;
+/// Max capacity (in bytes) a vector may retain to be pooled — oversized
+/// one-off buffers are returned to the allocator instead of pinned.
+const POOL_BYTES: usize = 64 * 1024;
+
 /// One connection's buffers, protocol state, and reply reordering.
 pub struct Conn {
     protocol: Protocol,
@@ -84,7 +90,11 @@ pub struct Conn {
     next_seq: u64,
     /// Next sequence number whose reply goes on the wire.
     next_write: u64,
-    ready: BTreeMap<u64, Pending>,
+    /// Reply reorder ring: slot `i` holds the reply for sequence
+    /// `next_write + i` once it completes (`None` = still owed). A ring
+    /// instead of a map so the steady state allocates nothing — slots
+    /// settle at the pipelining high-water mark and are reused.
+    ready: VecDeque<Option<Pending>>,
     in_flight: usize,
     /// Remaining payload bytes of an oversized binary frame to discard.
     skip: usize,
@@ -92,6 +102,13 @@ pub struct Conn {
     json_skip: bool,
     closing: bool,
     eof: bool,
+    /// Recycled feature vectors for parsed inference requests (filled by
+    /// the front end as completions hand vectors back).
+    feat_pool: Vec<Vec<f32>>,
+    /// Recycled reply-encode buffers (dispatch takes one per request;
+    /// [`Conn::drain_ready`] returns each after its bytes are copied to
+    /// the write buffer).
+    buf_pool: Vec<Vec<u8>>,
 }
 
 impl Conn {
@@ -105,12 +122,40 @@ impl Conn {
             wpos: 0,
             next_seq: 0,
             next_write: 0,
-            ready: BTreeMap::new(),
+            ready: VecDeque::new(),
             in_flight: 0,
             skip: 0,
             json_skip: false,
             closing: false,
             eof: false,
+            feat_pool: Vec::new(),
+            buf_pool: Vec::new(),
+        }
+    }
+
+    /// A cleared feature vector from the pool (or a fresh one).
+    pub fn take_feat(&mut self) -> Vec<f32> {
+        self.feat_pool.pop().unwrap_or_default()
+    }
+
+    /// Return a spent feature vector to the pool.
+    pub fn recycle_feat(&mut self, mut v: Vec<f32>) {
+        if self.feat_pool.len() < POOL_SLOTS && v.capacity() * 4 <= POOL_BYTES {
+            v.clear();
+            self.feat_pool.push(v);
+        }
+    }
+
+    /// A cleared reply-encode buffer from the pool (or a fresh one).
+    pub fn take_buf(&mut self) -> Vec<u8> {
+        self.buf_pool.pop().unwrap_or_default()
+    }
+
+    /// Return a spent reply buffer to the pool.
+    pub fn recycle_buf(&mut self, mut v: Vec<u8>) {
+        if self.buf_pool.len() < POOL_SLOTS && v.capacity() <= POOL_BYTES {
+            v.clear();
+            self.buf_pool.push(v);
         }
     }
 
@@ -243,7 +288,7 @@ impl Conn {
     pub fn complete(&mut self, registry: &ModelRegistry, seq: u64, bytes: Vec<u8>) {
         debug_assert!(self.in_flight > 0, "complete() without a dispatched request");
         self.in_flight = self.in_flight.saturating_sub(1);
-        self.ready.insert(seq, Pending::Bytes(bytes));
+        self.park(seq, Pending::Bytes(bytes));
         self.drain_ready(registry);
     }
 
@@ -253,8 +298,20 @@ impl Conn {
         s
     }
 
+    /// Place a reply into its ring slot (`seq - next_write`), growing
+    /// the ring to cover it. Slots only grow to the pipelining
+    /// high-water mark, then are reused.
+    fn park(&mut self, seq: u64, pending: Pending) {
+        debug_assert!(seq >= self.next_write, "seq {seq} already written");
+        let idx = (seq - self.next_write) as usize;
+        if self.ready.len() <= idx {
+            self.ready.resize_with(idx + 1, || None);
+        }
+        self.ready[idx] = Some(pending);
+    }
+
     fn insert(&mut self, registry: &ModelRegistry, seq: u64, pending: Pending) {
-        self.ready.insert(seq, pending);
+        self.park(seq, pending);
         self.drain_ready(registry);
     }
 
@@ -262,10 +319,14 @@ impl Conn {
     /// deferred admin documents as their turn comes (so an admin verb
     /// observes the effects of every request that preceded it).
     fn drain_ready(&mut self, registry: &ModelRegistry) {
-        while let Some(pending) = self.ready.remove(&self.next_write) {
+        while matches!(self.ready.front(), Some(Some(_))) {
+            let pending = self.ready.pop_front().flatten().expect("front checked Some");
             self.next_write += 1;
             match pending {
-                Pending::Bytes(b) => self.wbuf.extend_from_slice(&b),
+                Pending::Bytes(b) => {
+                    self.wbuf.extend_from_slice(&b);
+                    self.recycle_buf(b);
+                }
                 Pending::Admin(doc) => {
                     let bytes = match admin_reply(&doc, registry) {
                         Ok(v) => encode_admin_reply_bytes(self.protocol, &v),
@@ -387,24 +448,52 @@ impl Conn {
                 true
             }
             frame::Extract::Frame { header, payload } => {
-                let start = self.rpos;
-                let decoded = frame::decode_request(
-                    &header,
-                    &self.rbuf[start + payload.start..start + payload.end],
-                );
+                let lo = self.rpos + payload.start;
+                let hi = self.rpos + payload.end;
                 self.rpos += frame::HEADER_LEN + header.payload_len;
                 let seq = self.alloc_seq();
-                match decoded {
-                    Err((msg, code)) => {
-                        let bytes = encode_error_bytes(self.protocol, &msg, code);
-                        self.insert(registry, seq, Pending::Bytes(bytes));
+                if header.version == frame::VERSION
+                    && header.reserved == 0
+                    && header.frame_type == frame::TYPE_REQ_INFER
+                {
+                    // Hot path: decode the f32 payload straight out of
+                    // the read buffer into a pooled feature vector — no
+                    // intermediate Vec, no per-request allocation for
+                    // default-tenant requests.
+                    let mut features = self.take_feat();
+                    match frame::decode_infer_into(&self.rbuf[lo..hi], &mut features) {
+                        Err((msg, code)) => {
+                            self.recycle_feat(features);
+                            let bytes = encode_error_bytes(self.protocol, &msg, code);
+                            self.insert(registry, seq, Pending::Bytes(bytes));
+                        }
+                        Ok(model_range) => {
+                            let model = if model_range.is_empty() {
+                                None
+                            } else {
+                                let m = &self.rbuf[lo + model_range.start..lo + model_range.end];
+                                // decode_infer_into validated the bytes.
+                                Some(std::str::from_utf8(m).expect("validated utf-8").to_string())
+                            };
+                            self.in_flight += 1;
+                            out.push(SubmitReq { seq, model, features });
+                        }
                     }
-                    Ok(frame::BinaryRequest::Admin(doc)) => {
-                        self.insert(registry, seq, Pending::Admin(doc))
-                    }
-                    Ok(frame::BinaryRequest::Infer { model, features }) => {
-                        self.in_flight += 1;
-                        out.push(SubmitReq { seq, model, features });
+                } else {
+                    // Admin frames and header-level violations go through
+                    // the reference decoder (identical error vocabulary).
+                    match frame::decode_request(&header, &self.rbuf[lo..hi]) {
+                        Err((msg, code)) => {
+                            let bytes = encode_error_bytes(self.protocol, &msg, code);
+                            self.insert(registry, seq, Pending::Bytes(bytes));
+                        }
+                        Ok(frame::BinaryRequest::Admin(doc)) => {
+                            self.insert(registry, seq, Pending::Admin(doc))
+                        }
+                        Ok(frame::BinaryRequest::Infer { model, features }) => {
+                            self.in_flight += 1;
+                            out.push(SubmitReq { seq, model, features });
+                        }
                     }
                 }
                 true
@@ -543,26 +632,38 @@ pub fn infer_reply_json(model: &str, resp: &Response) -> Value {
     ])
 }
 
-/// Encode an inference reply for `protocol`.
-pub fn encode_infer_reply_bytes(protocol: Protocol, model: &str, resp: &Response) -> Vec<u8> {
+/// Encode an inference reply for `protocol`, appending to `out` — the
+/// pooled-buffer form used by the reactor's completion sink. The binary
+/// arm is allocation-free once `out` has capacity; the JSON arm pays
+/// the documented small per-reply constant (`json::to_string` builds an
+/// intermediate `String`).
+pub fn encode_infer_reply_into(
+    protocol: Protocol,
+    model: &str,
+    resp: &Response,
+    out: &mut Vec<u8>,
+) {
     match protocol {
         Protocol::JsonLines | Protocol::Unknown => {
-            let mut s = json::to_string(&infer_reply_json(model, resp));
-            s.push('\n');
-            s.into_bytes()
+            let s = json::to_string(&infer_reply_json(model, resp));
+            out.extend_from_slice(s.as_bytes());
+            out.push(b'\n');
         }
-        Protocol::Binary => {
-            let mut out = Vec::new();
-            frame::encode_infer_reply(
-                resp.id,
-                resp.label,
-                resp.latency.as_secs_f64() * 1e6,
-                model,
-                &mut out,
-            );
-            out
-        }
+        Protocol::Binary => frame::encode_infer_reply(
+            resp.id,
+            resp.label,
+            resp.latency.as_secs_f64() * 1e6,
+            model,
+            out,
+        ),
     }
+}
+
+/// Encode an inference reply for `protocol`.
+pub fn encode_infer_reply_bytes(protocol: Protocol, model: &str, resp: &Response) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_infer_reply_into(protocol, model, resp, &mut out);
+    out
 }
 
 /// Encode an admin reply document for `protocol`.
@@ -582,23 +683,26 @@ pub fn encode_admin_reply_bytes(protocol: Protocol, doc: &Value) -> Vec<u8> {
     }
 }
 
-/// Encode a coded error reply for `protocol`.
-pub fn encode_error_bytes(protocol: Protocol, msg: &str, code: &str) -> Vec<u8> {
+/// Encode a coded error reply for `protocol`, appending to `out`.
+pub fn encode_error_into(protocol: Protocol, msg: &str, code: &str, out: &mut Vec<u8>) {
     match protocol {
         Protocol::JsonLines | Protocol::Unknown => {
-            let mut s = json::to_string(&json::obj(vec![
+            let s = json::to_string(&json::obj(vec![
                 ("error", json::s(msg)),
                 ("code", json::s(code)),
             ]));
-            s.push('\n');
-            s.into_bytes()
+            out.extend_from_slice(s.as_bytes());
+            out.push(b'\n');
         }
-        Protocol::Binary => {
-            let mut out = Vec::new();
-            frame::encode_error_reply(msg, code, &mut out);
-            out
-        }
+        Protocol::Binary => frame::encode_error_reply(msg, code, out),
     }
+}
+
+/// Encode a coded error reply for `protocol`.
+pub fn encode_error_bytes(protocol: Protocol, msg: &str, code: &str) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_error_into(protocol, msg, code, &mut out);
+    out
 }
 
 #[cfg(test)]

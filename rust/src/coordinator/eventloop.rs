@@ -12,10 +12,12 @@
 //!   proof). Cross-thread work (accepted sockets, batcher completions)
 //!   arrives through a per-reactor waker.
 //! - **Non-blocking inference.** Requests are routed with
-//!   [`ModelRegistry::submit_with`]; the completion callback encodes
-//!   the reply bytes on the worker thread, pushes them to the owning
-//!   reactor's completion queue, and wakes it. Reactor threads never
-//!   park on a channel.
+//!   [`ModelRegistry::submit_ticket`] through one shared per-reactor
+//!   [`CompletionSink`]: the worker thread encodes the reply into the
+//!   ticket's pooled buffer, mails the ticket (plus the request's
+//!   feature vector, for recycling) back to the owning reactor's
+//!   completion queue, and wakes it. Reactor threads never park on a
+//!   channel, and the steady state allocates nothing per request.
 //! - **Write-interest-driven backpressure.** A connection whose write
 //!   buffer passes the high-water mark stops being read (and parsed)
 //!   until the peer drains it; `EPOLLOUT` interest exists only while
@@ -41,14 +43,15 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::batcher::ResponseCallback;
+use super::batcher::{CompletionSink, Response, SubmitError, Ticket};
 use super::conn::{self, Conn, SubmitReq};
 use super::registry::{ModelRegistry, RouteError};
 use super::server::{ServerConfig, ServerStats};
 
-/// A completed reply travelling back to a reactor: (connection token,
-/// reply sequence, encoded bytes).
-type CompletionMsg = (u64, u64, Vec<u8>);
+/// A completed reply travelling back to a reactor: the ticket (now
+/// carrying the encoded reply bytes in its pooled buffer) plus the
+/// request's feature vector, returned for recycling.
+type CompletionMsg = (Ticket, Vec<f32>);
 
 const TOKEN_WAKER: u64 = 0;
 const TOKEN_LISTENER: u64 = 1;
@@ -297,6 +300,40 @@ struct Shared {
     handles: Vec<Handle>,
 }
 
+/// The reactor-side completion sink, shared by every request a reactor
+/// dispatches. The worker thread encodes the reply into the ticket's
+/// pooled buffer (off the reactor), then mails the ticket and the
+/// request's feature vector back for recycling and wakes the reactor.
+struct ReactorSink {
+    shared: Arc<Shared>,
+    idx: usize,
+}
+
+impl CompletionSink for ReactorSink {
+    fn complete(
+        &self,
+        mut ticket: Ticket,
+        outcome: Result<Response, SubmitError>,
+        features: Vec<f32>,
+    ) {
+        match outcome {
+            Ok(resp) => conn::encode_infer_reply_into(
+                ticket.protocol,
+                &ticket.name,
+                &resp,
+                &mut ticket.buf,
+            ),
+            Err(err) => {
+                let e = RouteError::Submit { model: ticket.name.to_string(), err };
+                conn::encode_error_into(ticket.protocol, &e.to_string(), e.code(), &mut ticket.buf);
+            }
+        }
+        let handle = &self.shared.handles[self.idx];
+        handle.completions.lock().unwrap().push((ticket, features));
+        handle.wake();
+    }
+}
+
 /// The running event-loop server (behind the [`super::Server`] facade).
 pub struct EventLoop {
     pub addr: SocketAddr,
@@ -331,6 +368,8 @@ impl EventLoop {
         let mut threads = Vec::with_capacity(reactors);
         let mut listener = Some(listener);
         for idx in 0..reactors {
+            let sink: Arc<dyn CompletionSink> =
+                Arc::new(ReactorSink { shared: Arc::clone(&shared), idx });
             let mut reactor = Reactor {
                 idx,
                 reactors,
@@ -344,6 +383,11 @@ impl EventLoop {
                 next_token: TOKEN_BASE,
                 rr: 0,
                 stop_reading: false,
+                sink,
+                empty_name: Arc::from(""),
+                submit_scratch: Vec::new(),
+                completion_scratch: Vec::new(),
+                incoming_scratch: Vec::new(),
             };
             reactor
                 .poller
@@ -433,6 +477,19 @@ struct Reactor {
     rr: usize,
     /// Set during drain: no new bytes are read or parsed.
     stop_reading: bool,
+    /// The one [`CompletionSink`] every request this reactor dispatches
+    /// completes through (no per-request callback box).
+    sink: Arc<dyn CompletionSink>,
+    /// Placeholder ticket name until the registry stamps the tenant's
+    /// shared `Arc<str>` at routing time.
+    empty_name: Arc<str>,
+    /// Reused across readiness events so parsing allocates nothing in
+    /// the steady state.
+    submit_scratch: Vec<SubmitReq>,
+    /// Swapped against the completion mailbox each drain, so the
+    /// mailbox itself also settles at its high-water capacity.
+    completion_scratch: Vec<CompletionMsg>,
+    incoming_scratch: Vec<TcpStream>,
 }
 
 impl Reactor {
@@ -494,21 +551,32 @@ impl Reactor {
     }
 
     /// Adopt cross-thread work: completed replies, then handed-off
-    /// sockets.
+    /// sockets. Both mailboxes are *swapped* against reactor-owned
+    /// scratch vectors, so neither side reallocates once warmed up.
     fn drain_queues(&mut self) {
-        let completions =
-            std::mem::take(&mut *self.shared.handles[self.idx].completions.lock().unwrap());
-        for (token, seq, bytes) in completions {
-            if let Some(entry) = self.conns.get_mut(&token) {
-                entry.conn.complete(&self.registry, seq, bytes);
+        let mut completions = std::mem::take(&mut self.completion_scratch);
+        std::mem::swap(
+            &mut *self.shared.handles[self.idx].completions.lock().unwrap(),
+            &mut completions,
+        );
+        for (ticket, features) in completions.drain(..) {
+            if let Some(entry) = self.conns.get_mut(&ticket.token) {
+                entry.conn.recycle_feat(features);
+                let token = ticket.token;
+                entry.conn.complete(&self.registry, ticket.seq, ticket.buf);
                 self.service(token);
             }
         }
-        let incoming =
-            std::mem::take(&mut *self.shared.handles[self.idx].incoming.lock().unwrap());
-        for stream in incoming {
+        self.completion_scratch = completions;
+        let mut incoming = std::mem::take(&mut self.incoming_scratch);
+        std::mem::swap(
+            &mut *self.shared.handles[self.idx].incoming.lock().unwrap(),
+            &mut incoming,
+        );
+        for stream in incoming.drain(..) {
             self.adopt(stream);
         }
+        self.incoming_scratch = incoming;
     }
 
     fn accept_ready(&mut self) {
@@ -566,10 +634,13 @@ impl Reactor {
     /// Read everything available (until WouldBlock, EOF, or write
     /// backpressure), parsing as we go, then dispatch and flush.
     fn handle_readable(&mut self, token: u64) {
-        let mut submits = Vec::new();
+        let mut submits = std::mem::take(&mut self.submit_scratch);
         let mut dead = false;
         {
-            let Some(entry) = self.conns.get_mut(&token) else { return };
+            let Some(entry) = self.conns.get_mut(&token) else {
+                self.submit_scratch = submits;
+                return;
+            };
             if !self.stop_reading && !entry.conn.at_eof() && !entry.conn.is_closing() {
                 let mut chunk = [0u8; 16 * 1024];
                 loop {
@@ -599,48 +670,42 @@ impl Reactor {
             }
         }
         if dead {
+            self.submit_scratch = submits;
             self.close(token);
             return;
         }
-        self.dispatch(token, submits);
+        self.dispatch(token, &mut submits);
+        self.submit_scratch = submits;
         self.service(token);
     }
 
-    /// Route parsed inference requests through the registry. The
-    /// completion callback encodes the reply OFF the reactor thread and
-    /// mails it back through the owning reactor's completion queue.
-    fn dispatch(&mut self, token: u64, submits: Vec<SubmitReq>) {
-        for s in submits {
-            let proto = match self.conns.get(&token) {
-                Some(e) => e.conn.protocol(),
-                None => return,
+    /// Route parsed inference requests through the registry's ticket
+    /// path: each request carries a pooled reply buffer out and back,
+    /// the shared [`ReactorSink`] encodes the reply OFF the reactor
+    /// thread, and the only synchronous failure is an unknown tenant
+    /// (answered inline, vectors recycled). Drains `submits`.
+    fn dispatch(&mut self, token: u64, submits: &mut Vec<SubmitReq>) {
+        for s in submits.drain(..) {
+            let Some(entry) = self.conns.get_mut(&token) else { return };
+            let ticket = Ticket {
+                token,
+                seq: s.seq,
+                protocol: entry.conn.protocol(),
+                name: Arc::clone(&self.empty_name),
+                buf: entry.conn.take_buf(),
             };
-            let name = s
-                .model
-                .clone()
-                .unwrap_or_else(|| self.registry.default_model().to_string());
-            let shared = Arc::clone(&self.shared);
-            let idx = self.idx;
-            let seq = s.seq;
-            let cb: ResponseCallback = Box::new(move |result| {
-                let bytes = match result {
-                    Ok(resp) => conn::encode_infer_reply_bytes(proto, &name, &resp),
-                    Err(err) => {
-                        let e = RouteError::Submit { model: name.clone(), err };
-                        conn::encode_error_bytes(proto, &e.to_string(), e.code())
-                    }
-                };
-                let handle = &shared.handles[idx];
-                handle.completions.lock().unwrap().push((token, seq, bytes));
-                handle.wake();
-            });
-            if let Err(e) = self.registry.submit_with(s.model.as_deref(), s.features, cb) {
-                // Routing failed synchronously (unknown tenant): the
-                // callback was dropped unused; answer here.
+            if let Err((e, mut ticket, features)) =
+                self.registry.submit_ticket(s.model.as_deref(), s.features, &self.sink, ticket)
+            {
                 if let Some(entry) = self.conns.get_mut(&token) {
-                    let bytes =
-                        conn::encode_error_bytes(entry.conn.protocol(), &e.to_string(), e.code());
-                    entry.conn.complete(&self.registry, s.seq, bytes);
+                    entry.conn.recycle_feat(features);
+                    conn::encode_error_into(
+                        ticket.protocol,
+                        &e.to_string(),
+                        e.code(),
+                        &mut ticket.buf,
+                    );
+                    entry.conn.complete(&self.registry, ticket.seq, ticket.buf);
                 }
             }
         }
@@ -653,9 +718,12 @@ impl Reactor {
         loop {
             let mut dead = false;
             let mut progressed = false;
-            let mut submits = Vec::new();
+            let mut submits = std::mem::take(&mut self.submit_scratch);
             {
-                let Some(entry) = self.conns.get_mut(&token) else { return };
+                let Some(entry) = self.conns.get_mut(&token) else {
+                    self.submit_scratch = submits;
+                    return;
+                };
                 while entry.conn.wants_write() {
                     match entry.stream.write(entry.conn.writable()) {
                         Ok(0) => {
@@ -684,10 +752,12 @@ impl Reactor {
                 }
             }
             if dead {
+                self.submit_scratch = submits;
                 self.close(token);
                 return;
             }
-            self.dispatch(token, submits);
+            self.dispatch(token, &mut submits);
+            self.submit_scratch = submits;
             match self.conns.get(&token) {
                 Some(entry) if entry.conn.done() => {
                     self.close(token);

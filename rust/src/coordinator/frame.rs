@@ -165,6 +165,29 @@ pub fn decode_request(header: &Header, payload: &[u8]) -> Result<BinaryRequest, 
 /// The truncated-payload torture target: every length field is checked
 /// against the actual payload extent before any slice is taken.
 fn decode_infer(payload: &[u8]) -> Result<BinaryRequest, FrameError> {
+    let mut features = Vec::new();
+    let model_range = decode_infer_into(payload, &mut features)?;
+    let model = if model_range.is_empty() {
+        None
+    } else {
+        // decode_infer_into already validated the bytes as UTF-8.
+        Some(std::str::from_utf8(&payload[model_range]).expect("validated utf-8").to_string())
+    };
+    Ok(BinaryRequest::Infer { model, features })
+}
+
+/// [`decode_infer`] through a caller-owned feature vector — the
+/// zero-allocation serving form. Decoded f32s land in `features`
+/// (cleared first); the model name is returned as its validated UTF-8
+/// byte range *within `payload`* (empty ⇒ the default tenant) so the
+/// caller can borrow it without a `String`. Validation is identical to
+/// [`decode_request`]'s infer arm — the torture suite covers it via the
+/// delegating path.
+pub fn decode_infer_into(
+    payload: &[u8],
+    features: &mut Vec<f32>,
+) -> Result<std::ops::Range<usize>, FrameError> {
+    features.clear();
     let Some((&model_len, rest)) = payload.split_first() else {
         return Err(bad("truncated inference frame: missing model length"));
     };
@@ -175,15 +198,9 @@ fn decode_infer(payload: &[u8]) -> Result<BinaryRequest, FrameError> {
         )));
     }
     let (model_bytes, rest) = rest.split_at(model_len);
-    let model = if model_len == 0 {
-        None
-    } else {
-        Some(
-            std::str::from_utf8(model_bytes)
-                .map_err(|_| bad("model name is not valid utf-8"))?
-                .to_string(),
-        )
-    };
+    if std::str::from_utf8(model_bytes).is_err() {
+        return Err(bad("model name is not valid utf-8"));
+    }
     if rest.len() < 4 {
         return Err(bad("truncated inference frame: missing feature count"));
     }
@@ -195,11 +212,10 @@ fn decode_infer(payload: &[u8]) -> Result<BinaryRequest, FrameError> {
             feat_bytes.len()
         )));
     }
-    let features = feat_bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect();
-    Ok(BinaryRequest::Infer { model, features })
+    features.extend(
+        feat_bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+    );
+    Ok(1..1 + model_len)
 }
 
 fn push_header(out: &mut Vec<u8>, frame_type: u8, payload_len: usize) {

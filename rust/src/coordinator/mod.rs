@@ -7,8 +7,10 @@
 //! replica owns its engine instance (PJRT executables are not `Sync`; the
 //! engine is *constructed on* the worker thread from a `Send` factory)
 //! and pulls ready batches off the shared queue — round-robin across idle
-//! replicas, least-loaded under skew. Per-request response channels carry
-//! answers back; [`stats`] aggregates per-tenant metrics.
+//! replicas, least-loaded under skew. Answers travel back through a
+//! per-request completion: a boxed callback (blocking/legacy paths) or a
+//! shared [`CompletionSink`] carrying a [`Ticket`] (the zero-allocation
+//! front-door path); [`stats`] aggregates per-tenant metrics.
 //!
 //! The front door itself is layered: [`eventloop`] (unix) runs a small
 //! fixed pool of epoll/poll reactor threads; [`conn`] is the
@@ -75,7 +77,8 @@ pub mod stats;
 pub mod worker;
 
 pub use batcher::{
-    BatcherConfig, Coordinator, ReloadError, Request, Response, ResponseCallback, SubmitError,
+    BatcherConfig, CompletionSink, Coordinator, ReloadError, Request, Response, ResponseCallback,
+    SubmitError, Ticket,
 };
 pub use registry::{ModelRegistry, RouteError, TenantInfo, TenantSpec};
 pub use server::{Server, ServerConfig, ServerStats};
@@ -94,4 +97,40 @@ pub trait Engine {
     fn features(&self) -> usize;
     /// Classify a batch.
     fn infer(&mut self, x: &Matrix) -> Result<Vec<i32>>;
+    /// [`Self::infer`] through caller-owned scratch — the steady-state
+    /// serving form. Engines with native `_into` pipelines override this
+    /// to reuse every intermediate across batches; the default delegates
+    /// to [`Self::infer`] (correct for any engine, but allocating). The
+    /// returned slice borrows `scratch.labels` and is bit-identical to
+    /// what `infer` returns — parity is pinned per engine in
+    /// `worker::tests`.
+    fn infer_into<'s>(&mut self, x: &Matrix, scratch: &'s mut InferScratch) -> Result<&'s [i32]> {
+        scratch.labels = self.infer(x)?;
+        Ok(&scratch.labels)
+    }
+}
+
+/// Reusable inference buffers owned by a worker replica and threaded
+/// through [`Engine::infer_into`]: the encoded batch, the activation and
+/// distance matrices, the per-query squared-norm terms, and the output
+/// labels. Buffers grow to the batch high-water mark and then stop
+/// allocating; engines use whichever fields their pipeline needs.
+#[derive(Debug, Default)]
+pub struct InferScratch {
+    /// Output labels — what [`Engine::infer_into`] returns a borrow of.
+    pub labels: Vec<i32>,
+    /// Encoded batch (B, D).
+    pub enc: Matrix,
+    /// Bundle activations (B, n) / conventional scores (B, C).
+    pub acts: Matrix,
+    /// Activation-space squared distances (B, C).
+    pub dists: Matrix,
+    /// Per-query `|A|²` terms of the fused squared-distance decode.
+    pub asq: Vec<f32>,
+}
+
+impl InferScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
 }

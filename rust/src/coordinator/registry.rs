@@ -23,7 +23,9 @@ use crate::model::zoo;
 use crate::quant::Precision;
 use crate::runtime::artifact::ModelCard;
 
-use super::batcher::{BatcherConfig, Coordinator, Response, ResponseCallback, SubmitError};
+use super::batcher::{
+    BatcherConfig, CompletionSink, Coordinator, Response, ResponseCallback, SubmitError, Ticket,
+};
 use super::stats::StatsSnapshot;
 use super::worker::EngineFactory;
 
@@ -139,6 +141,9 @@ struct TenantMeta {
 struct Tenant {
     coordinator: Arc<Coordinator>,
     meta: Mutex<TenantMeta>,
+    /// The tenant's name as a shared `Arc<str>` so the ticket path can
+    /// stamp replies with the model name without a per-request `String`.
+    name: Arc<str>,
 }
 
 /// A fixed set of named tenants, each served by its own sharded
@@ -181,6 +186,7 @@ impl ModelRegistry {
                         path: Some(spec.path.clone()),
                         precision: spec.precision,
                     }),
+                    name: Arc::from(spec.name.as_str()),
                 },
             );
         }
@@ -231,6 +237,7 @@ impl ModelRegistry {
                         path: None,
                         precision: Precision::F32,
                     }),
+                    name: Arc::from(name),
                 },
             );
             assert!(prev.is_none(), "duplicate tenant name '{name}'");
@@ -251,6 +258,7 @@ impl ModelRegistry {
                     path: None,
                     precision: Precision::F32,
                 }),
+                name: Arc::from(name),
             },
         );
         Self { tenants, default: name.to_string() }
@@ -309,6 +317,29 @@ impl ModelRegistry {
         let (name, tenant) = self.tenant(model)?;
         tenant.coordinator.submit_with(features, cb);
         Ok(name.to_string())
+    }
+
+    /// The zero-allocation routing form: resolve the tenant, stamp the
+    /// ticket's `name` with the tenant's shared `Arc<str>` (no `String`
+    /// per request), and enqueue through the shared [`CompletionSink`].
+    /// On an unknown model the ticket and features come straight back so
+    /// the caller can answer inline and recycle both.
+    #[allow(clippy::result_large_err)]
+    pub fn submit_ticket(
+        &self,
+        model: Option<&str>,
+        features: Vec<f32>,
+        sink: &Arc<dyn CompletionSink>,
+        mut ticket: Ticket,
+    ) -> Result<(), (RouteError, Ticket, Vec<f32>)> {
+        match self.tenant(model) {
+            Ok((_, tenant)) => {
+                ticket.name = Arc::clone(&tenant.name);
+                tenant.coordinator.submit_sink(features, sink, ticket);
+                Ok(())
+            }
+            Err(e) => Err((e, ticket, features)),
+        }
     }
 
     /// Per-tenant stats snapshot.

@@ -84,6 +84,13 @@ pub struct StatsCollector {
     /// Successful per-replica engine hot-swaps (a pool-wide reload of R
     /// replicas increments this R times as each worker adopts it).
     pub reloads: u64,
+    /// Deepest the pending queue has ever been (recorded at admission,
+    /// under the queue lock) — the high-water mark that tells an
+    /// operator how close the tenant came to backpressure.
+    pub queue_depth_hwm: u64,
+    /// The tenant's configured batch ceiling, recorded at pool start so
+    /// the snapshot can report fill ratio without reaching into config.
+    pub max_batch: usize,
     pub started: Option<std::time::Instant>,
 }
 
@@ -97,6 +104,10 @@ pub struct StatsSnapshot {
     pub batches: u64,
     pub reloads: u64,
     pub mean_batch_size: f64,
+    /// `mean_batch_size / max_batch` — how full the configured batch
+    /// window runs (0.0 when no batch ceiling was recorded).
+    pub batch_fill_ratio: f64,
+    pub queue_depth_hwm: u64,
     pub latency_p50_us: f64,
     pub latency_p95_us: f64,
     pub latency_p99_us: f64,
@@ -108,6 +119,11 @@ pub struct StatsSnapshot {
 impl StatsCollector {
     pub fn snapshot(&self) -> StatsSnapshot {
         let elapsed = self.started.map_or(0.0, |t| t.elapsed().as_secs_f64());
+        let mean_batch_size = if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_items as f64 / self.batches as f64
+        };
         StatsSnapshot {
             requests: self.requests,
             responses: self.responses,
@@ -115,11 +131,13 @@ impl StatsCollector {
             failures: self.failures,
             batches: self.batches,
             reloads: self.reloads,
-            mean_batch_size: if self.batches == 0 {
+            mean_batch_size,
+            batch_fill_ratio: if self.max_batch == 0 {
                 0.0
             } else {
-                self.batched_items as f64 / self.batches as f64
+                mean_batch_size / self.max_batch as f64
             },
+            queue_depth_hwm: self.queue_depth_hwm,
             latency_p50_us: self.latency.quantile_us(0.50),
             latency_p95_us: self.latency.quantile_us(0.95),
             latency_p99_us: self.latency.quantile_us(0.99),
@@ -133,7 +151,8 @@ impl StatsCollector {
 impl StatsSnapshot {
     pub fn format_report(&self) -> String {
         format!(
-            "requests={} responses={} rejected={} batches={} mean_batch={:.1}\n\
+            "requests={} responses={} rejected={} batches={} mean_batch={:.1} \
+             fill={:.2} queue_hwm={}\n\
              latency: mean {:.1}µs p50 {:.1}µs p95 {:.1}µs p99 {:.1}µs | queue p99 {:.1}µs\n\
              throughput: {:.1} req/s",
             self.requests,
@@ -141,6 +160,8 @@ impl StatsSnapshot {
             self.rejected,
             self.batches,
             self.mean_batch_size,
+            self.batch_fill_ratio,
+            self.queue_depth_hwm,
             self.latency_mean_us,
             self.latency_p50_us,
             self.latency_p95_us,
@@ -183,8 +204,20 @@ mod tests {
         let mut s = StatsCollector::default();
         s.batches = 4;
         s.batched_items = 10;
+        s.max_batch = 5;
+        s.queue_depth_hwm = 7;
         let snap = s.snapshot();
         assert!((snap.mean_batch_size - 2.5).abs() < 1e-12);
+        assert!((snap.batch_fill_ratio - 0.5).abs() < 1e-12);
+        assert_eq!(snap.queue_depth_hwm, 7);
         assert!(snap.format_report().contains("mean_batch=2.5"));
+        assert!(snap.format_report().contains("queue_hwm=7"));
+    }
+
+    #[test]
+    fn fill_ratio_without_recorded_ceiling_is_zero() {
+        let snap = StatsCollector::default().snapshot();
+        assert_eq!(snap.batch_fill_ratio, 0.0);
+        assert_eq!(snap.queue_depth_hwm, 0);
     }
 }

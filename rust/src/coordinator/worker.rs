@@ -18,7 +18,7 @@ use crate::quant::{self, Precision};
 use crate::runtime::PjrtRuntime;
 use crate::tensor::{Matrix, NtPrepared};
 
-use super::Engine;
+use super::{Engine, InferScratch};
 
 /// Engines are built on the worker thread (PJRT handles are not Send):
 /// the coordinator takes a factory, not an engine.
@@ -66,6 +66,13 @@ impl Engine for PjrtEngine {
 
     fn infer(&mut self, x: &Matrix) -> Result<Vec<i32>> {
         self.runtime.infer_labels(&self.entry, x)
+    }
+
+    fn infer_into<'s>(&mut self, x: &Matrix, scratch: &'s mut InferScratch) -> Result<&'s [i32]> {
+        // PJRT allocates device buffers at the FFI boundary regardless;
+        // the labels vec is the only host-side piece worth reusing.
+        scratch.labels = self.runtime.infer_labels(&self.entry, x)?;
+        Ok(&scratch.labels)
     }
 }
 
@@ -194,6 +201,29 @@ impl Engine for NativeEngine {
             ModelState::Packed { model, scratch } => model.predict_scratch(&enc, scratch),
         })
     }
+
+    fn infer_into<'s>(&mut self, x: &Matrix, s: &'s mut InferScratch) -> Result<&'s [i32]> {
+        self.encoder.encode_into(x, &mut s.enc);
+        match &mut self.state {
+            ModelState::Dense(dense) => dense.model.predict_prepared_into(
+                &s.enc,
+                &dense.prep,
+                &mut s.acts,
+                &mut s.dists,
+                &mut s.asq,
+                &mut s.labels,
+            ),
+            ModelState::Packed { model, scratch } => model.predict_into(
+                &s.enc,
+                scratch,
+                &mut s.acts,
+                &mut s.dists,
+                &mut s.asq,
+                &mut s.labels,
+            ),
+        }
+        Ok(&s.labels)
+    }
 }
 
 /// The conventional-HDC baseline served natively: encoder + one-prototype-
@@ -253,6 +283,12 @@ impl Engine for ConventionalEngine {
     fn infer(&mut self, x: &Matrix) -> Result<Vec<i32>> {
         let enc = self.encoder.encode(x);
         Ok(self.model.predict_prepared(&enc, &self.prototypes_prep))
+    }
+
+    fn infer_into<'s>(&mut self, x: &Matrix, s: &'s mut InferScratch) -> Result<&'s [i32]> {
+        self.encoder.encode_into(x, &mut s.enc);
+        self.model.predict_prepared_into(&s.enc, &self.prototypes_prep, &mut s.acts, &mut s.labels);
+        Ok(&s.labels)
     }
 }
 
@@ -379,6 +415,62 @@ mod tests {
         let mut engine =
             ConventionalEngine::new(st.encoder.clone(), conv.clone(), "page", Precision::F32);
         assert_eq!(engine.infer(&xb).unwrap(), conv.predict(&enc));
+    }
+
+    #[test]
+    fn infer_into_matches_infer_for_every_engine() {
+        // The scratch-reusing serving form must be bit-identical to the
+        // allocating `infer` for every engine kind — ONE InferScratch is
+        // deliberately shared across engines, precisions, and batch
+        // sizes (grow, shrink, regrow) to prove stale scratch contents
+        // never leak into a prediction.
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 400, 50);
+        let opts =
+            TrainOptions { epochs: 2, conv_epochs: 1, extra_bundles: 1, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 512, 9, &opts).unwrap();
+        let mut scratch = InferScratch::new();
+        let batches = [
+            ds.x_test.rows_slice(0, 24),
+            ds.x_test.rows_slice(24, 31),
+            ds.x_test.rows_slice(0, 24),
+        ];
+        for precision in [
+            Precision::F32,
+            Precision::B8,
+            Precision::B4,
+            Precision::B2,
+            Precision::B1,
+        ] {
+            let mut engine = NativeEngine::with_precision(
+                st.encoder.clone(),
+                st.loghd.clone(),
+                "page",
+                precision,
+            );
+            for xb in &batches {
+                let want = engine.infer(xb).unwrap();
+                let got = engine.infer_into(xb, &mut scratch).unwrap();
+                assert_eq!(got, want.as_slice(), "native {precision:?}");
+            }
+        }
+        let conv = ConventionalModel::new(st.prototypes.clone());
+        let mut engine = ConventionalEngine::new(st.encoder.clone(), conv, "page", Precision::F32);
+        for xb in &batches {
+            let want = engine.infer(xb).unwrap();
+            assert_eq!(engine.infer_into(xb, &mut scratch).unwrap(), want.as_slice(), "conv");
+        }
+        let deco = crate::baselines::DecoHdModel::from_prototypes(&st.prototypes, 3).unwrap();
+        let mut engine = ZooEngine::new(
+            st.encoder.clone(),
+            crate::model::instances::decohd(&deco, Precision::F32),
+            "page",
+            Precision::F32,
+        );
+        for xb in &batches {
+            // ZooEngine has no override: this pins the trait default.
+            let want = engine.infer(xb).unwrap();
+            assert_eq!(engine.infer_into(xb, &mut scratch).unwrap(), want.as_slice(), "zoo");
+        }
     }
 
     #[test]

@@ -82,17 +82,27 @@ impl Encoder {
     /// Encode a batch: (B, F) -> (B, D), centered by `mu`. One fused
     /// GEMM + cos + center pass per row, parallelized over rows.
     pub fn encode(&self, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(0, 0);
+        self.encode_into(x, &mut out);
+        out
+    }
+
+    /// [`Self::encode`] into a reused output matrix — the serving form:
+    /// each replica keeps one encode scratch that settles at the batch
+    /// high-water size and stops allocating. Every output element is
+    /// written by the fused kernel, so the recycled buffer needs no
+    /// clear.
+    pub fn encode_into(&self, x: &Matrix, out: &mut Matrix) {
         assert_eq!(x.cols(), self.features(), "feature width mismatch");
         let d = self.dim();
-        let mut out = Matrix::zeros(x.rows(), d);
+        out.resize(x.rows(), d);
         if x.rows() == 0 {
-            return out;
+            return;
         }
         let threads = threadpool::available_threads();
         threadpool::parallel_rows(out.data_mut(), d, threads, |i, row| {
             simd::encode_row(x.row(i), &self.wpack, &self.b, &self.mu, row);
         });
-        out
     }
 
     /// Fit the centering vector on (already encoded, uncentered) rows and

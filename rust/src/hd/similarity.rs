@@ -17,11 +17,31 @@ pub fn activations(enc: &Matrix, m: &Matrix) -> Matrix {
 /// once (model load) instead of re-transposing `m` every batch in the
 /// mid-width GEMM regime.
 pub fn activations_with(enc: &Matrix, m: &Matrix, prep: &tensor::NtPrepared) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    activations_with_into(enc, m, prep, &mut out);
+    out
+}
+
+/// [`activations_with`] into a reused output matrix — the zero-allocation
+/// serving form (both the prepared operand and the output scratch persist
+/// across batches).
+pub fn activations_with_into(
+    enc: &Matrix,
+    m: &Matrix,
+    prep: &tensor::NtPrepared,
+    out: &mut Matrix,
+) {
     assert_eq!(enc.cols(), m.cols(), "dimension mismatch");
-    scale_by_query_norm(tensor::matmul_nt_with(enc, m, prep), enc)
+    tensor::matmul_nt_with_into(enc, m, prep, out);
+    scale_rows_by_query_norm(out, enc);
 }
 
 fn scale_by_query_norm(mut dots: Matrix, enc: &Matrix) -> Matrix {
+    scale_rows_by_query_norm(&mut dots, enc);
+    dots
+}
+
+fn scale_rows_by_query_norm(dots: &mut Matrix, enc: &Matrix) {
     for i in 0..enc.rows() {
         let qn = tensor::norm(enc.row(i)).max(1e-12);
         let inv = 1.0 / qn;
@@ -29,7 +49,6 @@ fn scale_by_query_norm(mut dots: Matrix, enc: &Matrix) -> Matrix {
             *v *= inv;
         }
     }
-    dots
 }
 
 /// Cosine similarity between two raw vectors.

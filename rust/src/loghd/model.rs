@@ -134,6 +134,33 @@ impl LogHdModel {
         (0..d.rows()).map(|i| tensor::argmin(d.row(i)) as i32).collect()
     }
 
+    /// [`Self::predict_prepared`] writing every intermediate into
+    /// caller-owned scratch (`acts`: the (B, n) activations, `dists`: the
+    /// (B, C) distances, `asq`: the per-query `|A|²` terms, `labels`: the
+    /// output) — the zero-allocation serving form. Identical math to the
+    /// allocating path; parity is pinned by the engine tests.
+    pub fn predict_prepared_into(
+        &self,
+        enc: &Matrix,
+        prep: &DecodePrep,
+        acts: &mut Matrix,
+        dists: &mut Matrix,
+        asq: &mut Vec<f32>,
+        labels: &mut Vec<i32>,
+    ) {
+        crate::hd::similarity::activations_with_into(enc, &self.bundles, &prep.bundles_nt, acts);
+        tensor::pairwise_sqdists_prepared_into(
+            acts,
+            &self.profiles,
+            &prep.profile_sqnorms,
+            &prep.profiles_nt,
+            asq,
+            dists,
+        );
+        labels.clear();
+        labels.extend((0..dists.rows()).map(|i| tensor::argmin(dists.row(i)) as i32));
+    }
+
     /// Stored model values: n·D bundles + the (C, n) profiles in their
     /// robust stored form (per-column deviations **plus** the n-vector
     /// cross-class mean — paper §III-G plus the centering the fault

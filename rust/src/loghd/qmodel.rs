@@ -111,11 +111,13 @@ pub struct QuantizedLogHdModel {
 #[derive(Debug)]
 pub struct QueryScratch {
     q8: I16Matrix,
+    qbits: BitMatrix,
+    qnorms: Vec<f32>,
 }
 
 impl QueryScratch {
     pub fn new() -> Self {
-        Self { q8: I16Matrix::empty() }
+        Self { q8: I16Matrix::empty(), qbits: BitMatrix::zeros(0, 0), qnorms: Vec::new() }
     }
 }
 
@@ -206,29 +208,66 @@ impl QuantizedLogHdModel {
     /// B8 query batch is quantized into the reused buffer instead of a
     /// fresh allocation (serving engines keep one scratch per replica).
     pub fn activations_scratch(&self, enc: &Matrix, scratch: &mut QueryScratch) -> Matrix {
+        let mut out = Matrix::zeros(0, 0);
+        self.activations_into(enc, scratch, &mut out);
+        out
+    }
+
+    /// [`Self::activations_scratch`] into a reused output matrix — the
+    /// zero-allocation serving form: query-side packing lands in
+    /// `scratch`, the activation matrix in `out`, and at steady state
+    /// (stable batch shape) nothing allocates.
+    pub fn activations_into(&self, enc: &Matrix, scratch: &mut QueryScratch, out: &mut Matrix) {
         assert_eq!(enc.cols(), self.d, "encoded width mismatch");
         match &self.kernel {
             BundleKernel::Bits(bundles) => {
-                let q = BitMatrix::from_signs(enc);
-                let mut a = tensor::xnor_popcount_nt(&q, bundles);
+                BitMatrix::from_signs_into(enc, &mut scratch.qbits);
+                tensor::xnor_popcount_nt_into(&scratch.qbits, bundles, out);
                 let scale = self.activation_gain * SIGN_COS_CALIBRATION / self.d.max(1) as f32;
-                for v in a.data_mut() {
+                for v in out.data_mut() {
                     *v *= scale;
                 }
-                a
             }
             BundleKernel::I16(bundles) => {
                 I16Matrix::quantize_into(enc, &mut scratch.q8);
-                let mut a = tensor::i16_matmul_nt(&scratch.q8, bundles);
-                for (i, qn) in scratch.q8.row_norms().into_iter().enumerate() {
+                tensor::i16_matmul_nt_into(&scratch.q8, bundles, out);
+                scratch.q8.row_norms_into(&mut scratch.qnorms);
+                for (i, qn) in scratch.qnorms.iter().enumerate() {
                     let scale = self.activation_gain / qn.max(1e-12);
-                    for v in a.row_mut(i) {
+                    for v in out.row_mut(i) {
                         *v *= scale;
                     }
                 }
-                a
             }
         }
+    }
+
+    /// [`Self::predict_scratch`] writing every intermediate into
+    /// caller-owned scratch (`acts`: the (B, n) activations, `dists`: the
+    /// (B, C) distances, `asq`: the per-query `|A|²` terms, `labels`: the
+    /// output) — the packed twin of
+    /// [`LogHdModel::predict_prepared_into`]. Identical math to the
+    /// allocating path; parity is pinned by the engine tests.
+    pub fn predict_into(
+        &self,
+        enc: &Matrix,
+        scratch: &mut QueryScratch,
+        acts: &mut Matrix,
+        dists: &mut Matrix,
+        asq: &mut Vec<f32>,
+        labels: &mut Vec<i32>,
+    ) {
+        self.activations_into(enc, scratch, acts);
+        tensor::pairwise_sqdists_prepared_into(
+            acts,
+            &self.profiles_f32,
+            &self.profile_sqnorms,
+            &self.profiles_prep,
+            asq,
+            dists,
+        );
+        labels.clear();
+        labels.extend((0..dists.rows()).map(|i| tensor::argmin(dists.row(i)) as i32));
     }
 
     /// Fused activation-space decode: (B, C) squared distances to the

@@ -42,7 +42,36 @@ impl BitMatrix {
 
     /// Binarize a dense matrix by sign.
     pub fn from_signs(m: &Matrix) -> Self {
-        Self::from_fn(m.rows(), m.cols(), |r, c| m.at(r, c) >= 0.0)
+        let mut out = Self::zeros(0, 0);
+        Self::from_signs_into(m, &mut out);
+        out
+    }
+
+    /// [`Self::from_signs`] into a reused container (the B1 query side
+    /// re-binarizes every batch; engines keep one scratch so the steady
+    /// state allocates nothing). Each padded u64 word is rebuilt whole
+    /// from a 64-element slice of the row, so no clear of the recycled
+    /// word buffer is needed.
+    pub fn from_signs_into(m: &Matrix, out: &mut BitMatrix) {
+        let (rows, cols) = (m.rows(), m.cols());
+        let words_per_row = cols.div_ceil(64);
+        out.rows = rows;
+        out.cols = cols;
+        out.words_per_row = words_per_row;
+        out.words.resize(rows * words_per_row, 0);
+        for r in 0..rows {
+            let row = m.row(r);
+            let base = r * words_per_row;
+            for (w, chunk) in row.chunks(64).enumerate() {
+                let mut word = 0u64;
+                for (i, v) in chunk.iter().enumerate() {
+                    if *v >= 0.0 {
+                        word |= 1u64 << i;
+                    }
+                }
+                out.words[base + w] = word;
+            }
+        }
     }
 
     /// Build from a bit-valued closure (used to lift packed storage into
@@ -95,18 +124,25 @@ pub fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
 /// C[i][j] = <±1 row a_i, ±1 row b_j> = D − 2·hamming(a_i, b_j), as f32.
 /// The similarity shape (`A · Bᵀ`), computed entirely on packed words.
 pub fn xnor_popcount_nt(a: &BitMatrix, b: &BitMatrix) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    xnor_popcount_nt_into(a, b, &mut out);
+    out
+}
+
+/// [`xnor_popcount_nt`] into a reused output matrix (every element is
+/// written unconditionally, so the recycled buffer needs no clear).
+pub fn xnor_popcount_nt_into(a: &BitMatrix, b: &BitMatrix, out: &mut Matrix) {
     assert_eq!(a.cols(), b.cols(), "xnor_popcount_nt width mismatch");
     let (m, n, d) = (a.rows(), b.rows(), a.cols() as i64);
-    let mut out = Matrix::zeros(m, n);
+    out.resize(m, n);
     let threads = threadpool::available_threads();
-    threadpool::parallel_rows(out.data_mut(), n, threads, |i, crow| {
+    threadpool::parallel_rows(out.data_mut(), n.max(1), threads, |i, crow| {
         let qwords = a.row_words(i);
         for (j, cv) in crow.iter_mut().enumerate() {
             let ham = hamming_words(qwords, b.row_words(j)) as i64;
             *cv = (d - 2 * ham) as f32;
         }
     });
-    out
 }
 
 /// Int8-valued matrix in i16 storage with one per-tensor scale:
@@ -179,12 +215,18 @@ impl I16Matrix {
     /// Per-row L2 norms in real units (scale folded in), exact integer
     /// sum-of-squares before the square root.
     pub fn row_norms(&self) -> Vec<f32> {
-        (0..self.rows)
-            .map(|r| {
-                let ss: i64 = self.row(r).iter().map(|v| *v as i64 * *v as i64).sum();
-                self.scale * (ss as f64).sqrt() as f32
-            })
-            .collect()
+        let mut out = Vec::new();
+        self.row_norms_into(&mut out);
+        out
+    }
+
+    /// [`Self::row_norms`] into a reused buffer (cleared and refilled).
+    pub fn row_norms_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend((0..self.rows).map(|r| {
+            let ss: i64 = self.row(r).iter().map(|v| *v as i64 * *v as i64).sum();
+            self.scale * (ss as f64).sqrt() as f32
+        }));
     }
 }
 
@@ -193,12 +235,20 @@ impl I16Matrix {
 /// B rows (each query element loads once for 4 accumulator chains)
 /// through the dispatched [`simd::dot_i16_4`].
 pub fn i16_matmul_nt(a: &I16Matrix, b: &I16Matrix) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    i16_matmul_nt_into(a, b, &mut out);
+    out
+}
+
+/// [`i16_matmul_nt`] into a reused output matrix (every element is
+/// written unconditionally, so the recycled buffer needs no clear).
+pub fn i16_matmul_nt_into(a: &I16Matrix, b: &I16Matrix, out: &mut Matrix) {
     assert_eq!(a.cols(), b.cols(), "i16_matmul_nt width mismatch");
     let (m, n) = (a.rows(), b.rows());
     let fold = a.scale * b.scale;
-    let mut out = Matrix::zeros(m, n);
+    out.resize(m, n);
     let threads = threadpool::available_threads();
-    threadpool::parallel_rows(out.data_mut(), n, threads, |i, crow| {
+    threadpool::parallel_rows(out.data_mut(), n.max(1), threads, |i, crow| {
         let arow = a.row(i);
         let mut j = 0;
         while j + 4 <= n {
@@ -212,7 +262,6 @@ pub fn i16_matmul_nt(a: &I16Matrix, b: &I16Matrix) -> Matrix {
             *cv = simd::dot_i16(arow, b.row(jj)) as f32 * fold;
         }
     });
-    out
 }
 
 #[cfg(test)]

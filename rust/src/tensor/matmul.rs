@@ -19,12 +19,23 @@ use crate::util::threadpool;
 
 /// C = A (m×k) · B (k×n).
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    matmul_into(a, b, &mut out);
+    out
+}
+
+/// [`matmul`] writing into a caller-owned output (resized in place; no
+/// allocation once the scratch has reached the steady-state shape). The
+/// accumulating axpy inner loop requires a zeroed output, so the reused
+/// buffer is cleared first.
+pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
     assert_eq!(a.cols(), b.rows(), "matmul inner-dim mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let mut out = Matrix::zeros(m, n);
+    out.resize(m, n);
+    out.data_mut().fill(0.0);
     let threads = threadpool::available_threads();
     let b_data = b.data();
-    threadpool::parallel_rows(out.data_mut(), n, threads, |i, crow| {
+    threadpool::parallel_rows(out.data_mut(), n.max(1), threads, |i, crow| {
         let arow = a.row(i);
         for kk in 0..k {
             let aik = arow[kk];
@@ -36,7 +47,6 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
             simd::axpy(aik, brow, crow);
         }
     });
-    out
 }
 
 /// Does the `matmul_nt` mid-width regime apply to a right-hand operand
@@ -76,12 +86,23 @@ impl NtPrepared {
 /// [`matmul_nt`] against a fixed operand with its [`NtPrepared`] state
 /// (must have been built from this same `b`).
 pub fn matmul_nt_with(a: &Matrix, b: &Matrix, prep: &NtPrepared) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    matmul_nt_with_into(a, b, prep, &mut out);
+    out
+}
+
+/// [`matmul_nt_with`] writing into a caller-owned output (the serving
+/// engines' form: the right-hand operand AND the output buffer are both
+/// reused across batches, so the per-call GEMM allocates nothing at
+/// steady state).
+pub fn matmul_nt_with_into(a: &Matrix, b: &Matrix, prep: &NtPrepared, out: &mut Matrix) {
     assert_eq!(a.cols(), b.cols(), "matmul_nt inner-dim mismatch");
     if let Some(bt) = &prep.bt {
         debug_assert_eq!((bt.rows(), bt.cols()), (b.cols(), b.rows()), "stale NtPrepared");
-        return matmul(a, bt);
+        matmul_into(a, bt, out);
+        return;
     }
-    matmul_nt_blocked(a, b)
+    matmul_nt_blocked_into(a, b, out);
 }
 
 /// C = A (m×k) · Bᵀ where B is (n×k): similarity shape.
@@ -100,10 +121,19 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
 }
 
 fn matmul_nt_blocked(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    matmul_nt_blocked_into(a, b, &mut out);
+    out
+}
+
+/// Register-blocked A·Bᵀ into a reused output. Every output element is
+/// written unconditionally, so (unlike [`matmul_into`]) no clear of the
+/// recycled buffer is needed.
+fn matmul_nt_blocked_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
     let (m, n) = (a.rows(), b.rows());
-    let mut out = Matrix::zeros(m, n);
+    out.resize(m, n);
     let threads = threadpool::available_threads();
-    threadpool::parallel_rows(out.data_mut(), n, threads, |i, crow| {
+    threadpool::parallel_rows(out.data_mut(), n.max(1), threads, |i, crow| {
         let arow = a.row(i);
         let mut j = 0;
         while j + 4 <= n {
@@ -115,7 +145,6 @@ fn matmul_nt_blocked(a: &Matrix, b: &Matrix) -> Matrix {
             *cv = simd::dot(arow, b.row(jj));
         }
     });
-    out
 }
 
 /// C = Aᵀ (k×m)ᵀ·B ... i.e. A is (k×m), B is (k×n), C = AᵀB (m×n).

@@ -28,12 +28,18 @@ mod matmul;
 mod ops;
 pub mod simd;
 
-pub use bitops::{hamming_words, i16_matmul_nt, xnor_popcount_nt, BitMatrix, I16Matrix};
-pub use matmul::{dot_unrolled, matmul, matmul_nt, matmul_nt_with, matmul_tn, NtPrepared};
+pub use bitops::{
+    hamming_words, i16_matmul_nt, i16_matmul_nt_into, xnor_popcount_nt, xnor_popcount_nt_into,
+    BitMatrix, I16Matrix,
+};
+pub use matmul::{
+    dot_unrolled, matmul, matmul_into, matmul_nt, matmul_nt_with, matmul_nt_with_into, matmul_tn,
+    NtPrepared,
+};
 pub use ops::*;
 
 /// Dense row-major f32 matrix.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Matrix {
     rows: usize,
     cols: usize,
@@ -102,6 +108,18 @@ impl Matrix {
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         self.data[r * self.cols + c] = v;
+    }
+
+    /// Reshape in place to `rows × cols`, reusing the backing allocation.
+    /// Existing contents are NOT preserved meaningfully (rows shift with
+    /// the new width); newly exposed elements are zero. Shrinking never
+    /// releases capacity, so a scratch matrix resized per batch settles
+    /// at the high-water size and stops allocating — the serving hot
+    /// path's reuse primitive.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
     }
 
     /// Copy a contiguous block of rows.

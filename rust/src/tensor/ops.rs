@@ -92,6 +92,13 @@ pub fn row_sqnorms(m: &Matrix) -> Vec<f32> {
     (0..m.rows()).map(|r| m.row(r).iter().map(|v| v * v).sum()).collect()
 }
 
+/// [`row_sqnorms`] into a reused buffer (cleared and refilled; capacity
+/// persists across calls).
+pub fn row_sqnorms_into(m: &Matrix, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend((0..m.rows()).map(|r| m.row(r).iter().map(|v| v * v).sum::<f32>()));
+}
+
 /// All-pairs squared distances via the expansion
 /// `|a_i − p_c|² = |a_i|² − 2·a_i·p_c + |p_c|²`: one GEMM instead of a
 /// B·C·n scalar loop, with the tiny negative residues the expansion can
@@ -112,19 +119,43 @@ pub fn pairwise_sqdists_prepared(
     p_sqnorms: &[f32],
     prep: &super::NtPrepared,
 ) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    let mut a_sq = Vec::new();
+    pairwise_sqdists_prepared_into(a, p, p_sqnorms, prep, &mut a_sq, &mut out);
+    out
+}
+
+/// [`pairwise_sqdists_prepared`] writing into caller-owned scratch: `a_sq`
+/// holds the per-query `|a_i|²` terms and `out` the (B, C) distances,
+/// both reused across batches so the fused decode allocates nothing at
+/// steady state.
+pub fn pairwise_sqdists_prepared_into(
+    a: &Matrix,
+    p: &Matrix,
+    p_sqnorms: &[f32],
+    prep: &super::NtPrepared,
+    a_sq: &mut Vec<f32>,
+    out: &mut Matrix,
+) {
     assert_eq!(a.cols(), p.cols(), "pairwise_sqdists width mismatch");
     assert_eq!(p.rows(), p_sqnorms.len(), "p_sqnorms length mismatch");
-    sqdist_epilogue(super::matmul_nt_with(a, p, prep), a, p_sqnorms)
+    super::matmul_nt_with_into(a, p, prep, out);
+    sqdist_epilogue_into(out, a, p_sqnorms, a_sq);
 }
 
 fn sqdist_epilogue(mut out: Matrix, a: &Matrix, p_sqnorms: &[f32]) -> Matrix {
-    let a_sq = row_sqnorms(a);
+    let mut a_sq = Vec::new();
+    sqdist_epilogue_into(&mut out, a, p_sqnorms, &mut a_sq);
+    out
+}
+
+fn sqdist_epilogue_into(out: &mut Matrix, a: &Matrix, p_sqnorms: &[f32], a_sq: &mut Vec<f32>) {
+    row_sqnorms_into(a, a_sq);
     for (i, &asq) in a_sq.iter().enumerate() {
         for (v, &psq) in out.row_mut(i).iter_mut().zip(p_sqnorms) {
             *v = (asq - 2.0 * *v + psq).max(0.0);
         }
     }
-    out
 }
 
 /// [`pairwise_sqdists_pre`] with the `|p_c|²` terms computed on the fly.

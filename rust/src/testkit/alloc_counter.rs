@@ -1,0 +1,71 @@
+//! A counting global allocator for allocation-regression tests and the
+//! serving benches.
+//!
+//! Install it with `#[global_allocator]` in a test or bench binary,
+//! snapshot [`CountingAlloc::allocs`] / [`CountingAlloc::bytes`] around
+//! a measured region, and assert on (or report) the deltas. Counters
+//! are process-wide and monotonic — they count every allocation on
+//! every thread, including worker replicas, which is exactly what a
+//! "zero allocations per request in steady state" claim needs.
+//!
+//! Deallocations are deliberately not tracked: the regression gate is
+//! about allocator *traffic* on the hot path, not leaks.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Delegates to [`System`], counting calls and bytes.
+pub struct CountingAlloc {
+    allocs: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        Self { allocs: AtomicU64::new(0), bytes: AtomicU64::new(0) }
+    }
+
+    /// Total allocation calls (alloc + alloc_zeroed + realloc) so far.
+    pub fn allocs(&self) -> u64 {
+        self.allocs.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes requested so far.
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    fn count(&self, size: usize) {
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(size as u64, Ordering::Relaxed);
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// SAFETY: pure delegation to `System`; the counters are lock-free
+// atomics and never allocate.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.count(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        self.count(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        self.count(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+}

@@ -16,7 +16,12 @@
 //!   unconstrained — so goldens can pin the stable core of an artifact
 //!   (schema, solver tables, grids) without freezing measured values.
 //!   `LOGHD_BLESS=1` rewrites the golden from the produced document.
+//!
+//! Plus one perf-side tool: [`alloc_counter`], a counting global
+//! allocator the allocation-regression test and the serving benches
+//! install to measure allocator traffic per request.
 
+pub mod alloc_counter;
 pub mod golden;
 
 use anyhow::{Context, Result};

@@ -1,0 +1,183 @@
+//! Allocation-regression gate for the steady-state serving path.
+//!
+//! Installs a counting global allocator, drives a live TCP server
+//! through warmup round-trips until every pool and scratch buffer has
+//! settled at its high-water mark, then asserts the allocator sees
+//! **zero** calls across a measured window of binary-protocol requests
+//! (on Linux, where the epoll reactor runs; the portable `poll(2)`
+//! fallback rebuilds its fd set per wakeup and gets a small bound
+//! instead). The JSON-lines protocol is held to a small documented
+//! per-request constant — its request parse builds a `Value` tree and
+//! its reply goes through `json::to_string`.
+//!
+//! The client half of each round-trip is itself allocation-free: the
+//! request bytes are pre-encoded once and replies are read with
+//! `read_exact` into stack buffers, so a nonzero delta can only come
+//! from the serving path under test.
+//!
+//! `LOGHD_THREADS=1` is set before anything else so `parallel_rows`
+//! runs inline (the thread-pool path hands closures to worker threads,
+//! which allocates); the engine under test never encodes, but the guard
+//! keeps the test honest if the fixture grows.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use loghd::coordinator::{
+    frame, BatcherConfig, Engine, InferScratch, ModelRegistry, Server, ServerConfig,
+};
+use loghd::tensor::Matrix;
+use loghd::testkit::alloc_counter::CountingAlloc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+/// Round-trips to settle pools/rings/scratch at their high-water marks.
+const WARMUP: usize = 64;
+/// Measured round-trips per (protocol, reactor-count) configuration.
+const MEASURE: usize = 256;
+/// Documented JSON-lines ceiling: allocator calls per request admitted
+/// on the measured window (request `Value` tree + feature collect +
+/// reply document + `json::to_string`).
+const JSON_ALLOCS_PER_REQ: u64 = 64;
+
+/// Engine that echoes each row's first feature as its label, with a
+/// zero-allocation `infer_into` (labels land in the reused scratch).
+struct Echo;
+
+impl Engine for Echo {
+    fn name(&self) -> String {
+        "echo".into()
+    }
+    fn features(&self) -> usize {
+        2
+    }
+    fn infer(&mut self, x: &Matrix) -> anyhow::Result<Vec<i32>> {
+        Ok((0..x.rows()).map(|i| x.at(i, 0) as i32).collect())
+    }
+    fn infer_into<'s>(&mut self, x: &Matrix, s: &'s mut InferScratch) -> anyhow::Result<&'s [i32]> {
+        s.labels.clear();
+        s.labels.extend((0..x.rows()).map(|i| x.at(i, 0) as i32));
+        Ok(&s.labels)
+    }
+}
+
+fn echo_registry() -> Arc<ModelRegistry> {
+    // A short fill window keeps single-client round-trips fast without
+    // touching the allocation profile (the wait is a condvar timeout).
+    let cfg = BatcherConfig {
+        max_batch: 8,
+        max_delay: Duration::from_micros(200),
+        max_pending: 64,
+    };
+    Arc::new(ModelRegistry::single(
+        "echo",
+        "demo",
+        2,
+        &cfg,
+        vec![Box::new(|| Ok(Box::new(Echo) as Box<dyn Engine>))],
+    ))
+}
+
+/// One binary round-trip: write the pre-encoded request, `read_exact`
+/// the 8-byte header and the fixed-size reply payload into stack
+/// buffers, and check the label. No heap traffic on success.
+fn roundtrip_binary(stream: &mut TcpStream, req: &[u8]) {
+    stream.write_all(req).unwrap();
+    let mut hdr = [0u8; frame::HEADER_LEN];
+    stream.read_exact(&mut hdr).unwrap();
+    assert_eq!(hdr[0], frame::MAGIC);
+    assert_eq!(hdr[2], frame::TYPE_REP_INFER);
+    let len = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]) as usize;
+    // Reply payload: [u64 id][i32 label][f64 latency][u8 len]["echo"].
+    let mut payload = [0u8; 64];
+    assert!(len <= payload.len(), "unexpected reply payload of {len} bytes");
+    stream.read_exact(&mut payload[..len]).unwrap();
+    let label = i32::from_le_bytes([payload[8], payload[9], payload[10], payload[11]]);
+    assert_eq!(label, 7);
+}
+
+/// One JSON-lines round-trip: write the pre-encoded line, read into a
+/// stack buffer until the newline, substring-check the label (parsing
+/// the reply would allocate and pollute the JSON budget).
+fn roundtrip_json(stream: &mut TcpStream, req: &[u8]) {
+    stream.write_all(req).unwrap();
+    let mut buf = [0u8; 256];
+    let mut pos = 0;
+    while !buf[..pos].contains(&b'\n') {
+        assert!(pos < buf.len(), "reply line exceeds {} bytes", buf.len());
+        let n = stream.read(&mut buf[pos..]).unwrap();
+        assert!(n > 0, "server closed mid-reply");
+        pos += n;
+    }
+    let needle = b"\"label\": 7";
+    assert!(
+        buf[..pos].windows(needle.len()).any(|w| w == needle),
+        "unexpected reply: {}",
+        String::from_utf8_lossy(&buf[..pos])
+    );
+}
+
+fn measure(reactors: usize, req: &[u8], roundtrip: fn(&mut TcpStream, &[u8])) -> u64 {
+    let mut server = Server::start_with(
+        "127.0.0.1:0",
+        echo_registry(),
+        ServerConfig { reactors, ..Default::default() },
+    )
+    .unwrap();
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    for _ in 0..WARMUP {
+        roundtrip(&mut stream, req);
+    }
+    let before = ALLOC.allocs();
+    for _ in 0..MEASURE {
+        roundtrip(&mut stream, req);
+    }
+    let delta = ALLOC.allocs() - before;
+    drop(stream);
+    server.shutdown();
+    delta
+}
+
+/// The tentpole's acceptance gate, both protocols over 1 and 4
+/// reactors. One `#[test]` so configurations run sequentially — the
+/// counters are process-wide and concurrent servers would cross-talk.
+#[test]
+fn steady_state_requests_do_not_allocate() {
+    // Must precede any loghd call: the thread-count choice is latched in
+    // a OnceLock the first time the pool is consulted.
+    std::env::set_var("LOGHD_THREADS", "1");
+
+    let mut bin_req = Vec::new();
+    frame::encode_infer_request(None, &[7.0, 0.0], &mut bin_req);
+    let json_req = b"{\"features\": [7, 0]}\n".to_vec();
+
+    for reactors in [1usize, 4] {
+        let delta = measure(reactors, &bin_req, roundtrip_binary);
+        // The epoll reactor's steady state is allocation-free; the
+        // portable poll(2) fallback pays a per-wakeup fd-set rebuild.
+        if cfg!(target_os = "linux") {
+            assert_eq!(
+                delta, 0,
+                "binary path allocated {delta} times over {MEASURE} requests \
+                 ({reactors} reactors); the steady state must be allocation-free"
+            );
+        } else {
+            assert!(
+                delta <= 8 * MEASURE as u64,
+                "binary path allocated {delta} times over {MEASURE} requests \
+                 ({reactors} reactors)"
+            );
+        }
+
+        let delta = measure(reactors, &json_req, roundtrip_json);
+        assert!(
+            delta <= JSON_ALLOCS_PER_REQ * MEASURE as u64,
+            "json path allocated {delta} times over {MEASURE} requests \
+             ({reactors} reactors); budget is {JSON_ALLOCS_PER_REQ}/request"
+        );
+    }
+}

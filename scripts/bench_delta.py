@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Compare a fresh bench report against its committed snapshot.
+
+Usage:
+    bench_delta.py FRESH.json SNAPSHOT.json METRIC:DIRECTION [...]
+                   [--max-regress 0.15]
+
+Each METRIC:DIRECTION names a top-level numeric field in both JSON
+documents and which way is better: ``lower`` (latencies, allocs) or
+``higher`` (throughput). A metric regressing by more than
+``--max-regress`` (relative, default 15%) fails the run with exit 1.
+
+Snapshots are blessed by copying a CI artifact over the repo-root file;
+until then they hold ``null`` placeholders (see BENCH_encode.json for
+the convention) and every comparison is skipped, so wiring the gate
+into CI is safe before the first real numbers land. A metric is also
+skipped when either side is missing, non-numeric, or the snapshot value
+is zero (no relative delta exists).
+
+Stdlib only — CI runners and the authoring container both lack
+third-party Python packages.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import numbers
+import sys
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except OSError as e:
+        sys.exit(f"bench_delta: cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        sys.exit(f"bench_delta: {path} is not valid JSON: {e}")
+    if not isinstance(doc, dict):
+        sys.exit(f"bench_delta: {path} must hold a JSON object")
+    return doc
+
+
+def numeric(doc: dict, key: str):
+    v = doc.get(key)
+    if isinstance(v, numbers.Real) and not isinstance(v, bool):
+        return float(v)
+    return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="freshly produced bench report")
+    ap.add_argument("snapshot", help="committed snapshot to compare against")
+    ap.add_argument(
+        "metrics",
+        nargs="+",
+        metavar="METRIC:DIRECTION",
+        help="top-level field and its better direction (lower|higher)",
+    )
+    ap.add_argument(
+        "--max-regress",
+        type=float,
+        default=0.15,
+        help="relative regression that fails the gate (default 0.15)",
+    )
+    args = ap.parse_args()
+
+    fresh = load(args.fresh)
+    snap = load(args.snapshot)
+
+    failures = []
+    for spec in args.metrics:
+        name, sep, direction = spec.partition(":")
+        if not sep or direction not in ("lower", "higher"):
+            sys.exit(f"bench_delta: bad metric spec '{spec}' (want NAME:lower|higher)")
+        f = numeric(fresh, name)
+        s = numeric(snap, name)
+        if f is None or s is None:
+            print(f"  skip  {name}: unblessed or missing (fresh={f}, snapshot={s})")
+            continue
+        if s == 0.0:
+            print(f"  skip  {name}: snapshot is 0, no relative delta")
+            continue
+        # Positive regression = got worse in the metric's bad direction.
+        regress = (f - s) / s if direction == "lower" else (s - f) / s
+        verdict = "FAIL" if regress > args.max_regress else "ok"
+        print(
+            f"  {verdict:<5} {name}: snapshot {s:.6g} -> fresh {f:.6g} "
+            f"({regress:+.1%} vs {args.max_regress:.0%} budget, {direction} is better)"
+        )
+        if regress > args.max_regress:
+            failures.append(name)
+
+    if failures:
+        print(f"bench_delta: {len(failures)} metric(s) regressed: {', '.join(failures)}")
+        return 1
+    print("bench_delta: within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
