@@ -307,6 +307,11 @@ impl Coordinator {
             *slot.lock().unwrap() = Some(factory);
         }
         self.shared.reload_gen.fetch_add(1, Ordering::Release);
+        // Bridge the generation bump and the wakeup with the queue mutex:
+        // an idle worker checks reload_gen under this lock and then waits
+        // untimed, so notifying without synchronizing on the lock could
+        // land between its check and its wait() and be lost.
+        drop(self.shared.queue.lock().unwrap());
         self.shared.not_empty.notify_all();
         Ok(())
     }
@@ -414,6 +419,13 @@ impl Coordinator {
     /// Graceful shutdown: drain the queue, stop every worker.
     pub fn shutdown(&mut self) {
         self.shared.shutdown.store(true, Ordering::Release);
+        // Bridge the flag store and the wakeup with the queue mutex: an
+        // idle worker checks the flag under this lock and then waits
+        // untimed, so a notify that isn't ordered by the lock could fire
+        // between its check and its wait() — the worker would sleep
+        // forever (post-shutdown enqueues are refused and never notify)
+        // and join() below would deadlock.
+        drop(self.shared.queue.lock().unwrap());
         self.shared.not_empty.notify_all();
         for h in self.workers.drain(..) {
             let _ = h.join();
@@ -546,7 +558,11 @@ fn worker_loop(shared: Arc<Shared>, replica: usize, factory: EngineFactory) {
 /// The idle wait is an *untimed* condvar wait: every producer of work
 /// notifies (`enqueue` → `notify_one`, `reload`/`shutdown` →
 /// `notify_all`), so there is no poll interval and no wakeup-latency
-/// floor. The fill window waits precisely until `oldest + max_delay` —
+/// floor. Invariant: every producer makes its state change visible
+/// under the queue mutex (enqueue pushes under it; flag/generation
+/// writers lock-and-release it after the store) *before* notifying —
+/// otherwise the notify can land between this loop's checks and its
+/// `wait()` and be lost forever. The fill window waits precisely until `oldest + max_delay` —
 /// `max_delay` is honored as configured, not rounded up to a tick.
 fn collect_batch(shared: &Shared, seen_gen: u64, out: &mut Vec<Job>) -> bool {
     debug_assert!(out.is_empty());

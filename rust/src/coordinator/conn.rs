@@ -302,8 +302,13 @@ impl Conn {
     /// the ring to cover it. Slots only grow to the pipelining
     /// high-water mark, then are reused.
     fn park(&mut self, seq: u64, pending: Pending) {
-        debug_assert!(seq >= self.next_write, "seq {seq} already written");
-        let idx = (seq - self.next_write) as usize;
+        // Checked: a duplicate/late completion for an already-written seq
+        // must not wrap to a huge index and abort in resize_with.
+        let Some(offset) = seq.checked_sub(self.next_write) else {
+            debug_assert!(false, "seq {seq} already written");
+            return;
+        };
+        let idx = offset as usize;
         if self.ready.len() <= idx {
             self.ready.resize_with(idx + 1, || None);
         }
