@@ -11,6 +11,7 @@
 //!              | --artifacts artifacts/page_smoke [--entry infer_loghd]
 //! loghd robustness [--profile smoke|full] [--decohd true] [--out path.json]
 //!                  [--fault-model bitflip,drift,stuckat,line|all [--span 2]]
+//! loghd drift  [--profile smoke|full] [--out path.json]   # frozen-vs-online stream
 //! loghd table2 [--n 7]                    # hardware-efficiency ratios
 //! ```
 
@@ -104,6 +105,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "robustness" => cmd_robustness(&args),
+        "drift" => cmd_drift(&args),
         "table2" => cmd_table2(&args),
         other => bail!("unknown command '{other}' (try 'loghd help')"),
     }
@@ -128,6 +130,10 @@ USAGE:
                [--trials T] [--seed S] [--decohd true] [--out <path.json>]
                [--fault-model bitflip,drift,stuckat,line|all]
                [--span <rows>] [--drift_sigma_max <sigma>]
+  loghd drift  [--profile smoke|full] [--dataset <name>] [--d <dim>]
+               [--windows W] [--samples_per_window N] [--rotate_frac R]
+               [--shift_scale S] [--add_class_at W|none] [--replicas R]
+               [--publish_every N] [--seed S] [--out <path.json>]
   loghd table2 [--n <bundles>]
 
 eval loads ANY registered artifact kind (loghd, conventional, decohd,
@@ -155,6 +161,14 @@ feature-axis resilience ratio (the paper's headline claim). --decohd
 true appends DecoHD cells to the solved grid. Output is bit-identical
 for any LOGHD_THREADS; default --out is results/BENCH_robustness.json
 plus a repo-root snapshot.
+
+drift replays a non-stationary stream (rotating class means, covariate
+shift, a mid-stream class addition) against two tenants of one serving
+registry — a frozen one and one learning online through the feedback
+verb with live hot-publishes — and records accuracy-over-time for
+both, the publish history, and the zero-drop counters. Output is
+bit-identical for any LOGHD_THREADS outside meta; default --out is
+results/BENCH_drift.json plus a repo-root snapshot.
 
 --fault-model switches the campaign onto the analog fault surface: the
 same solved grid is swept under each listed model (digital bitflip,
@@ -482,6 +496,56 @@ fn cmd_robustness(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_drift(args: &Args) -> Result<()> {
+    let profile = flag(args, "profile").unwrap_or("smoke");
+    let mut cfg = crate::eval::DriftConfig::by_name(profile)
+        .with_context(|| format!("unknown profile '{profile}' (smoke|full)"))?;
+    if let Some(ds) = flag(args, "dataset") {
+        cfg.dataset = ds.to_string();
+    }
+    if let Some(d) = flag(args, "d") {
+        cfg.d = d.parse().context("--d")?;
+    }
+    if let Some(w) = flag(args, "windows") {
+        cfg.windows = w.parse().context("--windows")?;
+    }
+    if let Some(n) = flag(args, "samples_per_window") {
+        cfg.samples_per_window = n.parse().context("--samples_per_window")?;
+    }
+    if let Some(r) = flag(args, "rotate_frac") {
+        cfg.rotate_frac = r.parse().context("--rotate_frac")?;
+    }
+    if let Some(s) = flag(args, "shift_scale") {
+        cfg.shift_scale = s.parse().context("--shift_scale")?;
+    }
+    if let Some(a) = flag(args, "add_class_at") {
+        cfg.add_class_at = if a.eq_ignore_ascii_case("none") {
+            None
+        } else {
+            Some(a.parse().context("--add_class_at must be a window index or 'none'")?)
+        };
+    }
+    if let Some(r) = flag(args, "replicas") {
+        cfg.replicas = r.parse().context("--replicas")?;
+    }
+    if let Some(p) = flag(args, "publish_every") {
+        cfg.publish_every = p.parse().context("--publish_every")?;
+    }
+    if let Some(s) = flag(args, "seed") {
+        cfg.seed = s.parse().context("--seed")?;
+    }
+    let res = crate::eval::drift::run(&cfg)?;
+    print!("{}", res.summary());
+    match flag(args, "out") {
+        Some(path) => write_json_to(path, &res.to_json())?,
+        None => {
+            res.write_default_artifacts()?;
+            println!("wrote results/BENCH_drift.json (+ repo-root snapshot)");
+        }
+    }
+    Ok(())
+}
+
 fn write_json_to(path: &str, v: &crate::util::json::Value) -> Result<()> {
     let path = PathBuf::from(path);
     if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
@@ -555,6 +619,18 @@ mod tests {
         let err =
             run(vec!["robustness".into(), "--profile".into(), "warp".into()]).unwrap_err();
         assert!(err.to_string().contains("unknown profile"), "{err}");
+    }
+
+    #[test]
+    fn drift_rejects_unknown_profile_and_bad_flags() {
+        let err = run(vec!["drift".into(), "--profile".into(), "warp".into()]).unwrap_err();
+        assert!(err.to_string().contains("unknown profile"), "{err}");
+        let err = run(vec!["drift".into(), "--add_class_at".into(), "soon".into()]).unwrap_err();
+        assert!(err.to_string().contains("add_class_at"), "{err}");
+        // Override validation catches an uncrossable publish cadence.
+        let err =
+            run(vec!["drift".into(), "--publish_every".into(), "100000".into()]).unwrap_err();
+        assert!(err.to_string().contains("publish cadences"), "{err}");
     }
 
     #[test]

@@ -582,7 +582,15 @@ fn collect_batch(shared: &Shared, seen_gen: u64, out: &mut Vec<Job>) -> bool {
     }
     let oldest = q.front().unwrap().enqueued;
     // Fill window: wait for more work until max_delay past the oldest.
+    // A reload generation newer than `seen_gen` breaks the window — the
+    // partial batch ships immediately so the worker adopts the new
+    // engine after this shard instead of absorbing the reload's
+    // notify_all into `wait_timeout` and sitting out the rest of
+    // `max_delay` on the stale engine.
     while q.len() < cfg.max_batch && !shared.shutdown.load(Ordering::Acquire) {
+        if shared.reload_gen.load(Ordering::Acquire) != seen_gen {
+            break;
+        }
         let age = oldest.elapsed();
         if age >= cfg.max_delay {
             break;
@@ -780,6 +788,45 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
         }
         assert!(coord.stats().reloads >= 1);
+    }
+
+    /// Regression: a reload landing while a worker sits in the fill
+    /// window must break the window (ship the partial batch) instead of
+    /// being absorbed by `wait_timeout` — pre-fix, the in-flight request
+    /// below waited out the full 2s `max_delay` and engine adoption was
+    /// delayed behind it.
+    #[test]
+    fn reload_breaks_the_fill_window() {
+        let coord = Coordinator::start_pool(
+            1,
+            BatcherConfig {
+                max_batch: 64,
+                max_delay: Duration::from_secs(2),
+                max_pending: 16,
+            },
+            vec![tagged_factory(1)],
+        );
+        let t0 = Instant::now();
+        let rx = coord.submit(vec![0.0]).unwrap();
+        // Let the worker enter the fill window, then reload mid-fill.
+        std::thread::sleep(Duration::from_millis(100));
+        coord.reload(vec![tagged_factory(2)]).unwrap();
+        let resp = rx.recv().unwrap();
+        assert!(resp.label == 1 || resp.label == 2);
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_secs(1),
+            "reload did not break the fill window: first response took {elapsed:?} \
+             (max_delay is 2s)"
+        );
+        // And the new engine is adopted right after the partial batch.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if coord.submit_blocking(vec![0.0]).unwrap().label == 2 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "engine never swapped after mid-fill reload");
+        }
     }
 
     #[test]

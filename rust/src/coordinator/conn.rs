@@ -561,6 +561,19 @@ fn stats_fields(s: &StatsSnapshot) -> Vec<(&'static str, Value)> {
     ]
 }
 
+/// Extra `stats`/`models` fields for tenants with an online trainer.
+/// Conditional on attachment so frozen tenants keep the exact 9-field
+/// stats surface the conformance goldens pin.
+fn trainer_fields(t: &crate::loghd::online::TrainerStats) -> Vec<(&'static str, Value)> {
+    vec![
+        ("trainer_ingested", json::num(t.ingested as f64)),
+        ("trainer_rejected", json::num(t.rejected as f64)),
+        ("trainer_buffered", json::num(t.buffered as f64)),
+        ("trainer_generation", json::num(t.generation as f64)),
+        ("trainer_classes", json::num(t.classes as f64)),
+    ]
+}
+
 fn tenant_json(info: &TenantInfo) -> Value {
     let mut fields = vec![
         ("model", json::s(info.name.clone())),
@@ -575,6 +588,9 @@ fn tenant_json(info: &TenantInfo) -> Value {
         fields.push(("path", json::s(path.display().to_string())));
     }
     fields.extend(stats_fields(&info.stats));
+    if let Some(t) = &info.trainer {
+        fields.extend(trainer_fields(t));
+    }
     json::obj(fields)
 }
 
@@ -589,6 +605,9 @@ pub fn admin_reply(doc: &Value, registry: &ModelRegistry) -> Result<Value, WireE
             let (name, s) = registry.stats(model).map_err(|e| (e.to_string(), e.code()))?;
             let mut fields = vec![("model", json::s(name))];
             fields.extend(stats_fields(&s));
+            if let Ok(Some(t)) = registry.trainer_stats(model) {
+                fields.extend(trainer_fields(&t));
+            }
             Ok(json::obj(fields))
         }
         Some("models") => {
@@ -619,6 +638,43 @@ pub fn admin_reply(doc: &Value, registry: &ModelRegistry) -> Result<Value, WireE
                 ("kind", json::s(info.kind)),
                 ("precision", json::s(info.precision)),
                 ("replicas", json::num(info.replicas as f64)),
+            ]))
+        }
+        Some("feedback") => {
+            let feats = doc
+                .get("features")
+                .and_then(Value::as_array)
+                .ok_or_else(|| ("missing 'features' array".to_string(), "bad_request"))?;
+            let features: Vec<f32> = feats
+                .iter()
+                .map(|f| {
+                    f.as_f64()
+                        .map(|x| x as f32)
+                        .ok_or_else(|| ("non-numeric feature".to_string(), "bad_request"))
+                })
+                .collect::<Result<_, _>>()?;
+            // Integer-strict like `bits`: a fractional or non-numeric
+            // label is a protocol error; a well-formed but out-of-range
+            // one is the trainer's call (coded `bad_label`).
+            let label = match doc.get("label").and_then(Value::as_f64) {
+                Some(x)
+                    if x.fract() == 0.0
+                        && (i32::MIN as f64..=i32::MAX as f64).contains(&x) =>
+                {
+                    x as i32
+                }
+                _ => return Err(("'label' must be an integer".into(), "bad_request")),
+            };
+            let (name, ack) = registry
+                .feedback(model, &features, label)
+                .map_err(|e| (e.to_string(), e.code()))?;
+            Ok(json::obj(vec![
+                ("model", json::s(name)),
+                ("ingested", json::num(ack.ingested as f64)),
+                ("buffered", json::num(ack.buffered as f64)),
+                ("generation", json::num(ack.generation as f64)),
+                ("classes", json::num(ack.classes as f64)),
+                ("published", Value::Bool(ack.published)),
             ]))
         }
         Some(other) => Err((format!("unknown cmd '{other}'"), "bad_request")),
@@ -838,6 +894,73 @@ mod tests {
         let n = conn.writable().len();
         conn.advance_write(n);
         assert!(conn.done());
+    }
+
+    #[test]
+    fn feedback_verb_ingests_and_reports_trainer_stats() {
+        let registry = echo_registry();
+        let mut conn = Conn::new(frame::DEFAULT_MAX_FRAME);
+        let mut out = Vec::new();
+        // Without a trainer: coded refusal, and the stats reply keeps the
+        // bare 9-field surface (no trainer_* fields).
+        conn.ingest(b"{\"cmd\": \"feedback\", \"features\": [1, 0], \"label\": 0}\n");
+        conn.ingest(b"{\"cmd\": \"stats\"}\n");
+        conn.process(&registry, usize::MAX, &mut out);
+        assert!(out.is_empty(), "feedback is an admin verb, not an inference");
+        let text = String::from_utf8(conn.writable().to_vec()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let err = json::parse(lines[0]).unwrap();
+        assert_eq!(err.get("code").and_then(Value::as_str), Some("no_trainer"));
+        let stats = json::parse(lines[1]).unwrap();
+        assert!(stats.get("trainer_ingested").is_none());
+        let n = conn.writable().len();
+        conn.advance_write(n);
+
+        // Attach a (hand-built, width-2) trainer: acks flow, malformed
+        // documents stay bad_request, out-of-range labels are bad_label,
+        // and stats grows the trainer_* fields.
+        let encoder = crate::encoder::Encoder::new(2, 16, 1);
+        let book = crate::loghd::codebook::build(3, 2, 2, 1.0, 1).unwrap();
+        let mut bundles =
+            Matrix::from_vec(2, 16, crate::util::rng::SplitMix64::new(2).normals_f32(32));
+        crate::tensor::normalize_rows(&mut bundles);
+        let model = crate::loghd::LogHdModel {
+            classes: 3,
+            d: 16,
+            book,
+            bundles,
+            profiles: Matrix::zeros(3, 2),
+        };
+        let trainer = crate::loghd::OnlineTrainer::new(
+            encoder,
+            model,
+            crate::loghd::OnlineConfig { publish_every: 1000, ..Default::default() },
+        );
+        registry.attach_trainer(None, trainer).unwrap();
+        conn.ingest(b"{\"cmd\": \"feedback\", \"features\": [0.5, 1.5], \"label\": 1}\n");
+        conn.ingest(b"{\"cmd\": \"feedback\", \"features\": [0.5, 1.5], \"label\": 1.5}\n");
+        conn.ingest(b"{\"cmd\": \"feedback\", \"features\": [0.5, 1.5], \"label\": 9}\n");
+        conn.ingest(b"{\"cmd\": \"feedback\", \"features\": [0.5, \"x\"], \"label\": 1}\n");
+        conn.ingest(b"{\"cmd\": \"feedback\", \"features\": [0.5, 1.5]}\n");
+        conn.ingest(b"{\"cmd\": \"stats\"}\n");
+        conn.process(&registry, usize::MAX, &mut out);
+        let text = String::from_utf8(conn.writable().to_vec()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let ack = json::parse(lines[0]).unwrap();
+        assert_eq!(ack.get("model").and_then(Value::as_str), Some("echo"));
+        assert_eq!(ack.get("ingested").and_then(Value::as_f64), Some(1.0));
+        assert_eq!(ack.get("buffered").and_then(Value::as_f64), Some(1.0));
+        assert_eq!(ack.get("classes").and_then(Value::as_f64), Some(3.0));
+        assert!(matches!(ack.get("published"), Some(Value::Bool(false))));
+        let code = |l: &str| json::parse(l).unwrap().get("code").and_then(Value::as_str).map(str::to_string);
+        assert_eq!(code(lines[1]).as_deref(), Some("bad_request"), "fractional label");
+        assert_eq!(code(lines[2]).as_deref(), Some("bad_label"), "label gap");
+        assert_eq!(code(lines[3]).as_deref(), Some("bad_request"), "non-numeric feature");
+        assert_eq!(code(lines[4]).as_deref(), Some("bad_request"), "missing label");
+        let stats = json::parse(lines[5]).unwrap();
+        assert_eq!(stats.get("trainer_ingested").and_then(Value::as_f64), Some(1.0));
+        assert_eq!(stats.get("trainer_rejected").and_then(Value::as_f64), Some(1.0));
+        assert_eq!(stats.get("trainer_generation").and_then(Value::as_f64), Some(0.0));
     }
 
     #[test]

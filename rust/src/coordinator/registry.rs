@@ -19,6 +19,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
+use crate::loghd::online::{FeedbackError, OnlineTrainer, TrainerStats};
 use crate::model::zoo;
 use crate::quant::Precision;
 use crate::runtime::artifact::ModelCard;
@@ -27,7 +28,7 @@ use super::batcher::{
     BatcherConfig, CompletionSink, Coordinator, Response, ResponseCallback, SubmitError, Ticket,
 };
 use super::stats::StatsSnapshot;
-use super::worker::EngineFactory;
+use super::worker::{EngineFactory, NativeEngine};
 
 /// How one tenant is provisioned: artifact path, serving precision, and
 /// replica count.
@@ -86,6 +87,10 @@ pub enum RouteError {
     UnknownModel(String),
     Submit { model: String, err: SubmitError },
     Reload { model: String, message: String },
+    /// The `feedback` verb hit a tenant with no attached trainer.
+    NoTrainer(String),
+    /// The tenant's trainer rejected a feedback sample.
+    Feedback { model: String, err: FeedbackError },
 }
 
 impl RouteError {
@@ -98,6 +103,9 @@ impl RouteError {
             RouteError::Submit { err: SubmitError::ShutDown, .. } => "shutdown",
             RouteError::Submit { err: SubmitError::EngineFailure, .. } => "engine_error",
             RouteError::Reload { .. } => "reload_failed",
+            RouteError::NoTrainer(_) => "no_trainer",
+            RouteError::Feedback { err: FeedbackError::BadLabel { .. }, .. } => "bad_label",
+            RouteError::Feedback { err: FeedbackError::BadWidth { .. }, .. } => "bad_width",
         }
     }
 }
@@ -110,6 +118,10 @@ impl std::fmt::Display for RouteError {
             RouteError::Reload { model, message } => {
                 write!(f, "reload of '{model}' failed: {message}")
             }
+            RouteError::NoTrainer(m) => {
+                write!(f, "model '{m}' has no online trainer attached")
+            }
+            RouteError::Feedback { model, err } => write!(f, "model '{model}': {err}"),
         }
     }
 }
@@ -129,6 +141,8 @@ pub struct TenantInfo {
     pub features: usize,
     pub is_default: bool,
     pub stats: StatsSnapshot,
+    /// Online-trainer counters, for tenants with a trainer attached.
+    pub trainer: Option<TrainerStats>,
 }
 
 /// Mutable tenant metadata, swapped under lock on hot reload.
@@ -144,6 +158,34 @@ struct Tenant {
     /// The tenant's name as a shared `Arc<str>` so the ticket path can
     /// stamp replies with the model name without a per-request `String`.
     name: Arc<str>,
+    /// Streaming trainer, when the tenant learns online (`feedback`
+    /// verb). The mutex serializes ingest/refit/publish; inference
+    /// never takes it.
+    trainer: Mutex<Option<OnlineTrainer>>,
+}
+
+impl Tenant {
+    fn new(coordinator: Arc<Coordinator>, meta: TenantMeta, name: &str) -> Self {
+        Self {
+            coordinator,
+            meta: Mutex::new(meta),
+            name: Arc::from(name),
+            trainer: Mutex::new(None),
+        }
+    }
+}
+
+/// What the `feedback` verb acknowledges: the trainer's state right
+/// after this sample was absorbed (and after the publish, if this
+/// sample's cadence tick triggered one).
+#[derive(Debug, Clone, Copy)]
+pub struct FeedbackAck {
+    pub ingested: u64,
+    pub buffered: usize,
+    pub generation: u64,
+    pub classes: usize,
+    /// Whether THIS call refit + hot-swapped the serving engines.
+    pub published: bool,
 }
 
 /// A fixed set of named tenants, each served by its own sharded
@@ -179,15 +221,15 @@ impl ModelRegistry {
             let coordinator = Arc::new(Coordinator::start_pool(features, cfg.clone(), factories));
             tenants.insert(
                 spec.name.clone(),
-                Tenant {
+                Tenant::new(
                     coordinator,
-                    meta: Mutex::new(TenantMeta {
+                    TenantMeta {
                         kind,
                         path: Some(spec.path.clone()),
                         precision: spec.precision,
-                    }),
-                    name: Arc::from(spec.name.as_str()),
-                },
+                    },
+                    &spec.name,
+                ),
             );
         }
         let default = match default {
@@ -230,15 +272,11 @@ impl ModelRegistry {
             let coordinator = Arc::new(Coordinator::start_pool(features, cfg.clone(), factories));
             let prev = map.insert(
                 name.to_string(),
-                Tenant {
+                Tenant::new(
                     coordinator,
-                    meta: Mutex::new(TenantMeta {
-                        kind: kind.to_string(),
-                        path: None,
-                        precision: Precision::F32,
-                    }),
-                    name: Arc::from(name),
-                },
+                    TenantMeta { kind: kind.to_string(), path: None, precision: Precision::F32 },
+                    name,
+                ),
             );
             assert!(prev.is_none(), "duplicate tenant name '{name}'");
         }
@@ -251,15 +289,11 @@ impl ModelRegistry {
         let mut tenants = HashMap::new();
         tenants.insert(
             name.to_string(),
-            Tenant {
+            Tenant::new(
                 coordinator,
-                meta: Mutex::new(TenantMeta {
-                    kind: kind.to_string(),
-                    path: None,
-                    precision: Precision::F32,
-                }),
-                name: Arc::from(name),
-            },
+                TenantMeta { kind: kind.to_string(), path: None, precision: Precision::F32 },
+                name,
+            ),
         );
         Self { tenants, default: name.to_string() }
     }
@@ -374,6 +408,7 @@ impl ModelRegistry {
             features: t.coordinator.features(),
             is_default: name == self.default,
             stats: t.coordinator.stats(),
+            trainer: t.trainer.lock().unwrap().as_ref().map(|tr| tr.stats()),
         }
     }
 
@@ -433,6 +468,94 @@ impl ModelRegistry {
         }
         crate::log_info!("tenant '{name}' reloaded ({} replicas notified)", replicas);
         Ok(self.info(name, tenant))
+    }
+
+    /// Attach (or replace) a tenant's streaming trainer, enabling the
+    /// `feedback` verb for it. The trainer's encoder must admit the
+    /// tenant's serving feature width — queued requests were validated
+    /// against it, and a published engine must keep accepting them.
+    pub fn attach_trainer(
+        &self,
+        model: Option<&str>,
+        trainer: OnlineTrainer,
+    ) -> Result<(), RouteError> {
+        let (name, tenant) = self.tenant(model)?;
+        let want = tenant.coordinator.features();
+        let got = trainer.encoder().features();
+        if got != want {
+            return Err(RouteError::Feedback {
+                model: name.to_string(),
+                err: FeedbackError::BadWidth { got, want },
+            });
+        }
+        *tenant.trainer.lock().unwrap() = Some(trainer);
+        Ok(())
+    }
+
+    /// Ingest one labeled feedback sample into a tenant's trainer and,
+    /// when the cadence fires, refit + publish the refreshed model
+    /// through the coordinator's generation handoff (in-flight and
+    /// queued inferences all complete — same zero-drop guarantee as
+    /// [`Self::reload`]). Runs synchronously on the caller's thread;
+    /// the publish cost is bounded by the reservoir size.
+    pub fn feedback(
+        &self,
+        model: Option<&str>,
+        features: &[f32],
+        label: i32,
+    ) -> Result<(String, FeedbackAck), RouteError> {
+        let (name, tenant) = self.tenant(model)?;
+        let mut guard = tenant.trainer.lock().unwrap();
+        let trainer = guard.as_mut().ok_or_else(|| RouteError::NoTrainer(name.to_string()))?;
+        trainer
+            .ingest(features, label)
+            .map_err(|err| RouteError::Feedback { model: name.to_string(), err })?;
+        let mut published = false;
+        if trainer.publish_due() {
+            trainer.refit();
+            let (encoder, model_snap) = trainer.snapshot();
+            let precision = tenant.meta.lock().unwrap().precision;
+            let replicas = tenant.coordinator.replicas();
+            let factories: Vec<EngineFactory> = (0..replicas)
+                .map(|_| {
+                    NativeEngine::factory_with_precision(
+                        encoder.clone(),
+                        model_snap.clone(),
+                        name.to_string(),
+                        precision,
+                    )
+                })
+                .collect();
+            tenant
+                .coordinator
+                .reload(factories)
+                .map_err(|e| RouteError::Reload { model: name.to_string(), message: e.to_string() })?;
+            trainer.mark_published();
+            published = true;
+            crate::log_info!(
+                "tenant '{name}' published online generation {} ({} classes)",
+                trainer.generation(),
+                trainer.classes()
+            );
+        }
+        let s = trainer.stats();
+        Ok((
+            name.to_string(),
+            FeedbackAck {
+                ingested: s.ingested,
+                buffered: s.buffered,
+                generation: s.generation,
+                classes: s.classes,
+                published,
+            },
+        ))
+    }
+
+    /// Trainer counters for the `stats` verb; `None` for tenants that
+    /// serve frozen (no trainer attached).
+    pub fn trainer_stats(&self, model: Option<&str>) -> Result<Option<TrainerStats>, RouteError> {
+        let (_, tenant) = self.tenant(model)?;
+        Ok(tenant.trainer.lock().unwrap().as_ref().map(|t| t.stats()))
     }
 }
 
@@ -554,6 +677,57 @@ mod tests {
         let err = RouteError::Submit { model: name, err: rx.recv().unwrap().unwrap_err() };
         assert_eq!(err.code(), "bad_width");
         assert_eq!(err.to_string(), "model 'echo': feature width 1 != expected 2");
+    }
+
+    #[test]
+    fn feedback_routes_ingests_and_publishes() {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 400, 50);
+        let opts =
+            TrainOptions { epochs: 1, conv_epochs: 0, extra_bundles: 1, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 128, 1, &opts).unwrap();
+        let factory =
+            NativeEngine::factory(st.encoder.clone(), st.loghd.clone(), "page".into());
+        let registry =
+            ModelRegistry::single("page", "loghd", 10, &BatcherConfig::default(), vec![factory]);
+        // No trainer attached: the verb refuses with its own code.
+        let err = registry.feedback(None, ds.x_train.row(0), 0).unwrap_err();
+        assert_eq!(err.code(), "no_trainer");
+        assert!(registry.trainer_stats(None).unwrap().is_none());
+        // A width-mismatched trainer is refused at attach time.
+        let narrow = OnlineTrainer::new(
+            crate::encoder::Encoder::new(3, 64, 1),
+            st.loghd.clone(),
+            crate::loghd::online::OnlineConfig::default(),
+        );
+        assert_eq!(registry.attach_trainer(None, narrow).unwrap_err().code(), "bad_width");
+        let cfg = crate::loghd::online::OnlineConfig {
+            publish_every: 8,
+            min_samples: 8,
+            ..Default::default()
+        };
+        let trainer = OnlineTrainer::new(st.encoder.clone(), st.loghd.clone(), cfg);
+        registry.attach_trainer(None, trainer).unwrap();
+        // Coded rejections, counted but not fatal.
+        assert_eq!(registry.feedback(None, &[0.0; 3], 0).unwrap_err().code(), "bad_width");
+        assert_eq!(registry.feedback(None, ds.x_train.row(0), -2).unwrap_err().code(), "bad_label");
+        let mut published = 0;
+        for i in 0..16 {
+            let (m, ack) = registry.feedback(None, ds.x_train.row(i), ds.y_train[i]).unwrap();
+            assert_eq!(m, "page");
+            assert_eq!(ack.ingested, i as u64 + 1);
+            if ack.published {
+                published += 1;
+                assert_eq!(ack.generation, published as u64);
+            }
+        }
+        assert_eq!(published, 2, "publish cadence is every 8 accepted ingests");
+        let s = registry.trainer_stats(None).unwrap().unwrap();
+        assert_eq!((s.ingested, s.rejected, s.generation), (16, 2, 2));
+        // Serving still answers after two live publishes.
+        let (_, resp) = registry.submit_blocking(None, ds.x_test.row(0).to_vec()).unwrap();
+        assert!((0..5).contains(&resp.label));
+        let err = registry.feedback(Some("nope"), ds.x_train.row(0), 0).unwrap_err();
+        assert_eq!(err.code(), "unknown_model");
     }
 
     #[test]

@@ -144,13 +144,17 @@ impl Drop for Server {
     }
 }
 
-#[cfg(not(unix))]
 mod threaded {
     //! Blocking thread-per-connection fallback for targets without a
     //! poller backend. Drives the same [`Conn`] state machine as the
     //! reactor, so the wire protocol (both framings, reply ordering,
     //! error survival) is byte-identical; only the concurrency model
-    //! differs. Client threads are tracked and joined on shutdown.
+    //! differs. Client threads are tracked, reaped as they finish, and
+    //! joined on shutdown.
+    //!
+    //! Compiled on every target (only [`super::Imp`] selects a backend)
+    //! so the unix test suite can regression-test it directly.
+    #![cfg_attr(unix, allow(dead_code))]
 
     use std::io::{Read, Write};
     use std::net::{TcpListener, TcpStream};
@@ -193,7 +197,21 @@ mod threaded {
                                 let h = std::thread::spawn(move || {
                                     let _ = serve_client(stream, reg, cfg, stop3);
                                 });
-                                clients2.lock().unwrap().push(h);
+                                let mut clients = clients2.lock().unwrap();
+                                clients.push(h);
+                                // Reap finished client threads on every
+                                // accept: the old grow-forever Vec leaked
+                                // one JoinHandle per connection for the
+                                // process lifetime under churn.
+                                let mut i = 0;
+                                while i < clients.len() {
+                                    if clients[i].is_finished() {
+                                        let done = clients.swap_remove(i);
+                                        let _ = done.join();
+                                    } else {
+                                        i += 1;
+                                    }
+                                }
                             }
                             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                                 std::thread::sleep(Duration::from_millis(10));
@@ -219,6 +237,12 @@ mod threaded {
 
         pub fn stats(&self) -> ServerStats {
             ServerStats::default()
+        }
+
+        /// Client `JoinHandle`s currently tracked (live + not yet
+        /// reaped) — observability hook for the churn regression test.
+        pub fn tracked_clients(&self) -> usize {
+            self.clients.lock().unwrap().len()
         }
     }
 
@@ -378,6 +402,52 @@ mod tests {
         let last = json::parse(&lines[8]).unwrap();
         assert!(last.get("error").is_none(), "{}", lines[8]);
         assert_eq!(last.get("label").and_then(Value::as_f64), Some(4.0));
+        server.shutdown();
+    }
+
+    /// Regression for the fallback server's handle leak: pre-fix, every
+    /// client connection pushed a `JoinHandle` into a Vec that was only
+    /// reaped at shutdown, so connection churn grew it forever. The
+    /// accept loop now sweeps finished handles on each iteration; after
+    /// a burst of short-lived connections the tracked count must be a
+    /// small residue, not one handle per connection. Drives
+    /// `ThreadedServer` directly (on unix the `Server` facade runs the
+    /// event loop instead).
+    #[test]
+    fn threaded_fallback_reaps_finished_clients_under_churn() {
+        let registry = echo_registry();
+        let mut server =
+            threaded::ThreadedServer::start("127.0.0.1:0", registry, ServerConfig::default())
+                .unwrap();
+        const CHURN: usize = 24;
+        for _ in 0..CHURN {
+            let mut stream = TcpStream::connect(server.addr).unwrap();
+            stream.write_all(b"{\"features\": [5, 0]}\n").unwrap();
+            let mut reader = BufReader::new(&stream);
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let doc = json::parse(&line).unwrap();
+            assert_eq!(doc.get("label").and_then(Value::as_f64), Some(5.0));
+            drop(reader);
+            drop(stream);
+            // Give the client thread its EOF turn (50ms read timeout
+            // granularity) so later accept sweeps can observe it done.
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        // One more accepted connection triggers a final sweep pass.
+        let mut last = TcpStream::connect(server.addr).unwrap();
+        last.write_all(b"{\"features\": [1, 0]}\n").unwrap();
+        let mut reader = BufReader::new(&last);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let tracked = server.tracked_clients();
+        assert!(
+            tracked < CHURN / 2,
+            "finished client handles not reaped: {tracked} tracked after {CHURN} churned \
+             connections"
+        );
+        drop(reader);
+        drop(last);
         server.shutdown();
     }
 }

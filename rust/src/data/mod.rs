@@ -6,4 +6,6 @@ pub mod registry;
 pub mod synth;
 
 pub use registry::{spec, DatasetSpec, SPECS};
-pub use synth::{by_name, generate, generate_scaled, Dataset};
+pub use synth::{
+    by_name, generate, generate_scaled, Dataset, DriftSpec, DriftStream, DriftWindow,
+};

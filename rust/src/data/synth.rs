@@ -93,6 +93,152 @@ pub fn generate_scaled(spec: &DatasetSpec, n_train: usize, n_test: usize) -> Dat
     generate(&s)
 }
 
+/// Controlled non-stationarity layered on the [`generate`] geometry —
+/// the workload behind `loghd drift` (continual-learning campaigns).
+///
+/// The stream is a sequence of fixed-size windows over three drift
+/// mechanisms, each individually tunable:
+///
+/// - **rotating class means**: every class mean interpolates from the
+///   stationary [`generate`]-style geometry toward an independently
+///   drawn target set (the class structure genuinely rearranges —
+///   targets use permuted group centers, not a shared translation);
+/// - **covariate shift**: a fixed random direction is added to *every*
+///   sample, growing linearly to `shift_scale` by the last window;
+/// - **class addition**: from window `add_class_at` on, one extra
+///   class (label = `base.classes`) joins the label rotation.
+///
+/// Windows are deterministic in `(base.seed, window index)` alone:
+/// materializing window 5 never requires (and is never perturbed by)
+/// materializing windows 0–4.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftSpec {
+    pub base: DatasetSpec,
+    pub windows: usize,
+    pub samples_per_window: usize,
+    /// Per-window interpolation rate toward the target means; the
+    /// rotation progress at window `w` is `min(1, rotate_frac · w)`.
+    pub rotate_frac: f64,
+    /// Covariate-shift magnitude reached at the final window.
+    pub shift_scale: f64,
+    /// Window index from which the extra class emits samples.
+    pub add_class_at: Option<usize>,
+}
+
+/// One materialized stream window.
+#[derive(Debug, Clone)]
+pub struct DriftWindow {
+    pub index: usize,
+    pub x: Matrix,
+    pub y: Vec<i32>,
+    /// Classes live in THIS window (`base.classes`, +1 once the extra
+    /// class has joined).
+    pub classes: usize,
+    /// Rotation progress in [0, 1] applied to the class means.
+    pub progress: f64,
+}
+
+/// Frozen drift geometry: start/target means, per-class scales, and
+/// the covariate-shift direction, all drawn once from `base.seed`.
+#[derive(Debug, Clone)]
+pub struct DriftStream {
+    spec: DriftSpec,
+    means0: Matrix,
+    means1: Matrix,
+    scales: Matrix,
+    shift_dir: Vec<f32>,
+    window_seed: u64,
+}
+
+impl DriftStream {
+    pub fn new(spec: DriftSpec) -> Self {
+        assert!(spec.windows >= 2, "a drift stream needs at least 2 windows");
+        assert!(spec.samples_per_window > 0, "windows must be non-empty");
+        let (c, f, g) = (spec.base.classes, spec.base.features, spec.base.groups);
+        // One extra row everywhere: the geometry always carries the
+        // future class so enabling `add_class_at` never re-draws the
+        // base classes.
+        let total = c + 1;
+        let mut rng = SplitMix64::new(spec.base.seed ^ 0xD21F_75EA);
+
+        let mut centers = Matrix::zeros(g, f);
+        for v in centers.data_mut() {
+            *v = rng.normal() as f32;
+        }
+        let draw_means = |rng: &mut SplitMix64, rotate: usize| {
+            let mut offsets = Matrix::zeros(total, f);
+            for v in offsets.data_mut() {
+                *v = rng.normal() as f32;
+            }
+            let mut means = Matrix::zeros(total, f);
+            for cls in 0..total {
+                let ctr = centers.row((cls + rotate) % g).to_vec();
+                let off = offsets.row(cls);
+                let row = means.row_mut(cls);
+                for j in 0..f {
+                    row[j] = (ctr[j] as f64 + spec.base.sep_class * off[j] as f64) as f32;
+                }
+            }
+            means
+        };
+        let means0 = draw_means(&mut rng, 0);
+        // The target set hangs off *rotated* group centers, so full
+        // progress is a genuine rearrangement of the class layout.
+        let means1 = draw_means(&mut rng, 1);
+        let mut scales = Matrix::zeros(total, f);
+        for v in scales.data_mut() {
+            *v = (spec.base.sigma * (SCALE_LO + (SCALE_HI - SCALE_LO) * rng.uniform())) as f32;
+        }
+        let shift_dir: Vec<f32> = (0..f).map(|_| rng.normal() as f32).collect();
+        let window_seed = rng.next_u64();
+        Self { spec, means0, means1, scales, shift_dir, window_seed }
+    }
+
+    pub fn spec(&self) -> &DriftSpec {
+        &self.spec
+    }
+
+    /// Classes live in window `w`.
+    pub fn classes_at(&self, w: usize) -> usize {
+        let c = self.spec.base.classes;
+        match self.spec.add_class_at {
+            Some(at) if w >= at => c + 1,
+            _ => c,
+        }
+    }
+
+    /// Materialize window `w` — deterministic in `(base.seed, w)`.
+    pub fn window(&self, w: usize) -> DriftWindow {
+        assert!(w < self.spec.windows, "window {w} out of range 0..{}", self.spec.windows);
+        let f = self.spec.base.features;
+        let classes = self.classes_at(w);
+        let progress = (self.spec.rotate_frac * w as f64).min(1.0);
+        let mut means = Matrix::zeros(classes, f);
+        for cls in 0..classes {
+            let a = self.means0.row(cls);
+            let b = self.means1.row(cls);
+            let row = means.row_mut(cls);
+            for j in 0..f {
+                row[j] = ((1.0 - progress) * a[j] as f64 + progress * b[j] as f64) as f32;
+            }
+        }
+        let mut rng = SplitMix64::new(self.window_seed).fork(w as u64 + 1);
+        let (mut x, y) =
+            split(&mut rng, &means, &self.scales, self.spec.samples_per_window, classes, f);
+        // Covariate shift: one global direction, ramped over the stream.
+        let ramp = self.spec.shift_scale * w as f64 / (self.spec.windows - 1) as f64;
+        if ramp != 0.0 {
+            for i in 0..x.rows() {
+                let row = x.row_mut(i);
+                for j in 0..f {
+                    row[j] = (row[j] as f64 + ramp * self.shift_dir[j] as f64) as f32;
+                }
+            }
+        }
+        DriftWindow { index: w, x, y, classes, progress }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,6 +272,103 @@ mod tests {
         let ds = generate_scaled(registry::spec("ucihar").unwrap(), 120, 40);
         assert!(ds.y_train.iter().all(|y| (0..12).contains(y)));
         assert!(ds.y_test.iter().all(|y| (0..12).contains(y)));
+    }
+
+    fn drift_spec(rotate: f64, shift: f64, add_at: Option<usize>) -> DriftSpec {
+        DriftSpec {
+            base: *registry::spec("page").unwrap(),
+            windows: 6,
+            samples_per_window: 120,
+            rotate_frac: rotate,
+            shift_scale: shift,
+            add_class_at: add_at,
+        }
+    }
+
+    fn class_mean(w: &DriftWindow, cls: i32) -> Vec<f64> {
+        let f = w.x.cols();
+        let mut acc = vec![0f64; f];
+        let mut n = 0f64;
+        for i in 0..w.x.rows() {
+            if w.y[i] == cls {
+                n += 1.0;
+                for (a, v) in acc.iter_mut().zip(w.x.row(i)) {
+                    *a += *v as f64;
+                }
+            }
+        }
+        acc.iter().map(|a| a / n.max(1.0)).collect()
+    }
+
+    #[test]
+    fn drift_windows_are_deterministic_and_order_free() {
+        let s1 = DriftStream::new(drift_spec(0.3, 0.5, Some(3)));
+        let s2 = DriftStream::new(drift_spec(0.3, 0.5, Some(3)));
+        // Same window from two streams, and out-of-order access on one
+        // stream, all agree bit-for-bit.
+        let a = s1.window(4);
+        let _ = s1.window(0);
+        let b = s1.window(4);
+        let c = s2.window(4);
+        assert_eq!(a.x.data(), b.x.data());
+        assert_eq!(a.x.data(), c.x.data());
+        assert_eq!(a.y, c.y);
+        // ... and distinct windows differ.
+        assert_ne!(s1.window(1).x.data(), s1.window(2).x.data());
+    }
+
+    #[test]
+    fn drift_adds_exactly_one_class_at_the_configured_window() {
+        let s = DriftStream::new(drift_spec(0.2, 0.0, Some(3)));
+        for w in 0..6 {
+            let win = s.window(w);
+            let expect = if w >= 3 { 6 } else { 5 };
+            assert_eq!(win.classes, expect, "window {w}");
+            assert_eq!(s.classes_at(w), expect);
+            assert!(win.y.iter().all(|y| (0..expect as i32).contains(y)), "window {w}");
+            if w >= 3 {
+                assert!(win.y.contains(&5), "new class must actually emit samples");
+            }
+        }
+        // No add_class_at: the class count never moves.
+        let frozen = DriftStream::new(drift_spec(0.2, 0.0, None));
+        assert_eq!(frozen.window(5).classes, 5);
+    }
+
+    #[test]
+    fn rotation_moves_class_means_and_zero_drift_is_stationary() {
+        let s = DriftStream::new(drift_spec(0.5, 0.0, None));
+        let first = class_mean(&s.window(0), 0);
+        let last = class_mean(&s.window(5), 0);
+        let moved: f64 =
+            first.iter().zip(&last).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        assert!(moved > 0.5, "class-0 mean only moved {moved}");
+        // rotate_frac = 0 and shift = 0: every window shares the class
+        // geometry (empirical means stay close across the stream).
+        let flat = DriftStream::new(drift_spec(0.0, 0.0, None));
+        let a = class_mean(&flat.window(0), 0);
+        let b = class_mean(&flat.window(5), 0);
+        let still: f64 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt();
+        assert!(still < moved / 2.0, "stationary stream moved {still} vs drifted {moved}");
+    }
+
+    #[test]
+    fn covariate_shift_translates_every_class_the_same_way() {
+        let spec = drift_spec(0.0, 2.0, None);
+        let shifted = DriftStream::new(spec);
+        let deltas: Vec<Vec<f64>> = (0..2)
+            .map(|cls| {
+                let a = class_mean(&shifted.window(0), cls);
+                let b = class_mean(&shifted.window(5), cls);
+                a.iter().zip(&b).map(|(x, y)| y - x).collect()
+            })
+            .collect();
+        let norm: f64 = deltas[0].iter().map(|d| d * d).sum::<f64>().sqrt();
+        assert!(norm > 0.5, "shift barely moved the data: {norm}");
+        // Both classes translate along (approximately) the same vector.
+        let dot: f64 = deltas[0].iter().zip(&deltas[1]).map(|(a, b)| a * b).sum();
+        let n1: f64 = deltas[1].iter().map(|d| d * d).sum::<f64>().sqrt();
+        assert!(dot / (norm * n1) > 0.8, "classes shifted in different directions");
     }
 
     #[test]

@@ -1,0 +1,528 @@
+//! Continual-learning drift campaign (`loghd drift`): frozen vs online
+//! serving under a non-stationary stream, through the real serving
+//! stack.
+//!
+//! The campaign pretrains one LogHD stack on the stationary window-0
+//! distribution, then hosts it twice in a [`ModelRegistry`] — a
+//! `frozen` tenant that never learns, and an `online` tenant with an
+//! [`OnlineTrainer`] attached. A [`DriftStream`] (rotating class
+//! means, covariate shift, a mid-stream class addition) is replayed
+//! window by window, prequentially: every window is first scored
+//! through `submit_blocking` on BOTH tenants, and only then fed to the
+//! online tenant as labeled `feedback`, which refits + hot-publishes
+//! on its cadence. The artifact records accuracy-over-time for both
+//! tenants, the publish/generation history, and the zero-drop counters
+//! (every inference across every live publish must answer).
+//!
+//! Everything outside `meta` is deterministic for a fixed config at
+//! any `LOGHD_THREADS` (serial submission ⇒ batch-of-1 inference;
+//! kernels are bit-identical at any pool width), which the golden
+//! conformance suite pins.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{BatcherConfig, EngineFactory, ModelRegistry, NativeEngine};
+use crate::data::{self, DriftSpec, DriftStream};
+use crate::loghd::model::{TrainOptions, TrainedStack};
+use crate::loghd::online::{OnlineConfig, OnlineTrainer};
+use crate::util::json::{self, Value};
+use crate::util::threadpool;
+
+/// Campaign shape: pretraining, stream drift, and online cadence.
+#[derive(Debug, Clone)]
+pub struct DriftConfig {
+    pub profile: String,
+    pub dataset: String,
+    pub d: usize,
+    /// Stationary samples used to train the initial (frozen) stack.
+    pub pretrain: usize,
+    pub epochs: usize,
+    pub conv_epochs: usize,
+    pub windows: usize,
+    pub samples_per_window: usize,
+    pub rotate_frac: f64,
+    pub shift_scale: f64,
+    pub add_class_at: Option<usize>,
+    pub replicas: usize,
+    /// Online cadence: refit + hot-publish every this many accepted
+    /// feedback samples.
+    pub publish_every: usize,
+    pub capacity: usize,
+    pub min_samples: usize,
+    pub refine_epochs: usize,
+    pub eta: f32,
+    pub seed: u64,
+}
+
+impl DriftConfig {
+    /// CI-sized: page shapes, two drift mechanisms plus a class
+    /// addition, 18 live publishes.
+    pub fn smoke() -> Self {
+        Self {
+            profile: "smoke".into(),
+            dataset: "page".into(),
+            d: 256,
+            pretrain: 400,
+            epochs: 3,
+            conv_epochs: 1,
+            windows: 8,
+            samples_per_window: 150,
+            rotate_frac: 0.2,
+            shift_scale: 0.75,
+            add_class_at: Some(4),
+            replicas: 2,
+            publish_every: 64,
+            capacity: 512,
+            min_samples: 32,
+            refine_epochs: 2,
+            eta: 0.05,
+            seed: 1,
+        }
+    }
+
+    /// Paper-scale: ISOLET shapes, longer stream, slower rotation.
+    pub fn full() -> Self {
+        Self {
+            profile: "full".into(),
+            dataset: "isolet".into(),
+            d: 2000,
+            pretrain: 2000,
+            epochs: 5,
+            conv_epochs: 2,
+            windows: 12,
+            samples_per_window: 400,
+            rotate_frac: 0.12,
+            shift_scale: 1.0,
+            add_class_at: Some(6),
+            replicas: 2,
+            publish_every: 128,
+            capacity: 1024,
+            min_samples: 64,
+            refine_epochs: 2,
+            eta: 0.03,
+            seed: 1,
+        }
+    }
+
+    pub fn by_name(profile: &str) -> Option<Self> {
+        match profile {
+            "smoke" => Some(Self::smoke()),
+            "full" => Some(Self::full()),
+            _ => None,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.windows < 2 {
+            bail!("drift campaign needs >= 2 windows, got {}", self.windows);
+        }
+        if self.samples_per_window == 0 {
+            bail!("samples_per_window must be > 0");
+        }
+        if self.publish_every == 0 || self.min_samples == 0 {
+            bail!("publish_every and min_samples must be > 0");
+        }
+        if self.capacity < self.min_samples {
+            bail!(
+                "reservoir capacity {} below min_samples {}",
+                self.capacity,
+                self.min_samples
+            );
+        }
+        let total = self.windows * self.samples_per_window;
+        if total < 2 * self.publish_every {
+            bail!(
+                "stream of {total} samples cannot cross two publish cadences of {}",
+                self.publish_every
+            );
+        }
+        if let Some(at) = self.add_class_at {
+            if at >= self.windows {
+                bail!("add_class_at {at} outside the {}-window stream", self.windows);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One stream window's scorecard.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowReport {
+    pub index: usize,
+    /// Classes live in the stream this window.
+    pub classes: usize,
+    /// Mean-rotation progress in [0, 1].
+    pub progress: f64,
+    pub frozen_acc: f64,
+    pub online_acc: f64,
+    /// Live publishes triggered by this window's feedback.
+    pub publishes: u64,
+    /// Trainer generation after this window.
+    pub generation: u64,
+}
+
+/// The whole campaign: per-window curves plus zero-drop accounting.
+#[derive(Debug, Clone)]
+pub struct DriftResult {
+    pub config: DriftConfig,
+    /// Classes in the pretraining distribution.
+    pub classes: usize,
+    pub windows: Vec<WindowReport>,
+    /// Inference submissions (both tenants, all windows).
+    pub requests: u64,
+    /// Inference submissions that errored or were refused — the
+    /// zero-drop guarantee says this stays 0 across every publish.
+    pub dropped: u64,
+    pub feedback_accepted: u64,
+    pub feedback_rejected: u64,
+    /// Total live publishes (refit + engine hot-swap) over the stream.
+    pub publishes: u64,
+    /// Trainer class count at end of stream.
+    pub final_classes: usize,
+    /// Mean accuracy over the last two windows, per tenant.
+    pub frozen_last2: f64,
+    pub online_last2: f64,
+    pub threads: usize,
+    pub elapsed_s: f64,
+}
+
+/// Run the frozen-vs-online drift campaign.
+pub fn run(cfg: &DriftConfig) -> Result<DriftResult> {
+    cfg.validate()?;
+    let t0 = Instant::now();
+    let spec = data::spec(&cfg.dataset)
+        .with_context(|| format!("unknown dataset '{}'", cfg.dataset))?;
+
+    // Pretrain on the stationary window-0 distribution.
+    let ds = data::generate_scaled(spec, cfg.pretrain, 1);
+    let opts = TrainOptions {
+        epochs: cfg.epochs,
+        conv_epochs: cfg.conv_epochs,
+        ..Default::default()
+    };
+    let st = TrainedStack::train(&ds.x_train, &ds.y_train, spec.classes, cfg.d, 1, &opts)?;
+
+    // Two tenants off the same artifact: one frozen, one learning.
+    let replicas = cfg.replicas.max(1);
+    let factories = |label: &str| -> Vec<EngineFactory> {
+        (0..replicas)
+            .map(|_| NativeEngine::factory(st.encoder.clone(), st.loghd.clone(), label.to_string()))
+            .collect()
+    };
+    let registry = ModelRegistry::with_tenants(
+        vec![
+            ("frozen", "loghd", spec.features, factories("frozen")),
+            ("online", "loghd", spec.features, factories("online")),
+        ],
+        "online",
+        &BatcherConfig::default(),
+    );
+    let online_cfg = OnlineConfig {
+        capacity: cfg.capacity,
+        min_samples: cfg.min_samples,
+        refine_epochs: cfg.refine_epochs,
+        eta: cfg.eta,
+        publish_every: cfg.publish_every,
+        seed: cfg.seed,
+        allow_new_classes: true,
+        ..OnlineConfig::default()
+    };
+    let trainer = OnlineTrainer::new(st.encoder.clone(), st.loghd.clone(), online_cfg);
+    registry
+        .attach_trainer(Some("online"), trainer)
+        .map_err(|e| anyhow::anyhow!("attaching trainer: {e}"))?;
+
+    let stream = DriftStream::new(DriftSpec {
+        base: *spec,
+        windows: cfg.windows,
+        samples_per_window: cfg.samples_per_window,
+        rotate_frac: cfg.rotate_frac,
+        shift_scale: cfg.shift_scale,
+        add_class_at: cfg.add_class_at,
+    });
+
+    let mut windows = Vec::with_capacity(cfg.windows);
+    let (mut requests, mut dropped) = (0u64, 0u64);
+    let (mut feedback_accepted, mut feedback_rejected) = (0u64, 0u64);
+    let mut publishes = 0u64;
+    let mut final_classes = spec.classes;
+    for w in 0..cfg.windows {
+        let win = stream.window(w);
+        // Prequential split: score the window on both tenants BEFORE
+        // its labels reach the trainer — the online curve only ever
+        // reflects generations published from earlier windows.
+        let mut hits = [0usize; 2];
+        for i in 0..win.x.rows() {
+            for (t, name) in ["frozen", "online"].into_iter().enumerate() {
+                requests += 1;
+                match registry.submit_blocking(Some(name), win.x.row(i).to_vec()) {
+                    Ok((_, resp)) if resp.label == win.y[i] => hits[t] += 1,
+                    Ok(_) => {}
+                    Err(_) => dropped += 1,
+                }
+            }
+        }
+        let mut window_publishes = 0u64;
+        let mut generation = 0u64;
+        for i in 0..win.x.rows() {
+            match registry.feedback(Some("online"), win.x.row(i), win.y[i]) {
+                Ok((_, ack)) => {
+                    feedback_accepted += 1;
+                    generation = ack.generation;
+                    final_classes = ack.classes;
+                    if ack.published {
+                        window_publishes += 1;
+                    }
+                }
+                Err(_) => feedback_rejected += 1,
+            }
+        }
+        publishes += window_publishes;
+        let n = win.x.rows() as f64;
+        windows.push(WindowReport {
+            index: w,
+            classes: win.classes,
+            progress: win.progress,
+            frozen_acc: hits[0] as f64 / n,
+            online_acc: hits[1] as f64 / n,
+            publishes: window_publishes,
+            generation,
+        });
+    }
+
+    let last2 = |pick: fn(&WindowReport) -> f64| -> f64 {
+        let tail = &windows[windows.len().saturating_sub(2)..];
+        tail.iter().map(pick).sum::<f64>() / tail.len() as f64
+    };
+    Ok(DriftResult {
+        config: cfg.clone(),
+        classes: spec.classes,
+        frozen_last2: last2(|w| w.frozen_acc),
+        online_last2: last2(|w| w.online_acc),
+        windows,
+        requests,
+        dropped,
+        feedback_accepted,
+        feedback_rejected,
+        publishes,
+        final_classes,
+        threads: threadpool::available_threads(),
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+impl DriftResult {
+    /// Serialize to the `loghd-drift/v1` schema (the shape
+    /// `results/BENCH_drift.json` and the golden conformance suite
+    /// consume). Everything outside `meta` is deterministic for a
+    /// fixed config, at any thread count.
+    pub fn to_json(&self) -> Value {
+        let cfg = &self.config;
+        let curve: Vec<Value> = self
+            .windows
+            .iter()
+            .map(|w| {
+                json::obj(vec![
+                    ("w", json::num(w.index as f64)),
+                    ("classes", json::num(w.classes as f64)),
+                    ("progress", json::num(w.progress)),
+                    ("frozen_acc", json::num(w.frozen_acc)),
+                    ("online_acc", json::num(w.online_acc)),
+                    ("publishes", json::num(w.publishes as f64)),
+                    ("generation", json::num(w.generation as f64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("schema", json::s("loghd-drift/v1")),
+            ("profile", json::s(cfg.profile.as_str())),
+            ("dataset", json::s(cfg.dataset.as_str())),
+            ("d", json::num(cfg.d as f64)),
+            ("classes", json::num(self.classes as f64)),
+            ("pretrain", json::num(cfg.pretrain as f64)),
+            ("windows", json::num(cfg.windows as f64)),
+            ("samples_per_window", json::num(cfg.samples_per_window as f64)),
+            ("rotate_frac", json::num(cfg.rotate_frac)),
+            ("shift_scale", json::num(cfg.shift_scale)),
+            (
+                "add_class_at",
+                match cfg.add_class_at {
+                    Some(at) => json::num(at as f64),
+                    None => Value::Null,
+                },
+            ),
+            ("replicas", json::num(cfg.replicas as f64)),
+            ("publish_every", json::num(cfg.publish_every as f64)),
+            ("capacity", json::num(cfg.capacity as f64)),
+            ("min_samples", json::num(cfg.min_samples as f64)),
+            ("refine_epochs", json::num(cfg.refine_epochs as f64)),
+            ("eta", json::num(cfg.eta as f64)),
+            ("seed", json::num(cfg.seed as f64)),
+            ("curve", json::arr(curve)),
+            (
+                "totals",
+                json::obj(vec![
+                    ("requests", json::num(self.requests as f64)),
+                    ("dropped", json::num(self.dropped as f64)),
+                    ("feedback_accepted", json::num(self.feedback_accepted as f64)),
+                    ("feedback_rejected", json::num(self.feedback_rejected as f64)),
+                    ("publishes", json::num(self.publishes as f64)),
+                    ("final_classes", json::num(self.final_classes as f64)),
+                ]),
+            ),
+            (
+                "verdict",
+                json::obj(vec![
+                    ("frozen_last2", json::num(self.frozen_last2)),
+                    ("online_last2", json::num(self.online_last2)),
+                    (
+                        "online_minus_frozen",
+                        json::num(self.online_last2 - self.frozen_last2),
+                    ),
+                ]),
+            ),
+            (
+                "meta",
+                json::obj(vec![
+                    ("threads", json::num(self.threads as f64)),
+                    ("elapsed_s", json::num(self.elapsed_s)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Write the default artifact pair — `results/BENCH_drift.json`
+    /// plus the repo-root snapshot (same convention as the robustness
+    /// campaign).
+    pub fn write_default_artifacts(&self) -> std::io::Result<()> {
+        let text = json::to_string_pretty(&self.to_json());
+        std::fs::create_dir_all("results")?;
+        std::fs::write("results/BENCH_drift.json", &text)?;
+        std::fs::write("BENCH_drift.json", &text)
+    }
+
+    /// Human summary for the CLI / bench stdout.
+    pub fn summary(&self) -> String {
+        let cfg = &self.config;
+        let mut out = format!(
+            "continual-learning drift campaign [{}]: {} D={} C={} — {} windows x {} samples, \
+             rotate {:.2}/win, shift {:.2}, class add at {:?}\n",
+            cfg.profile,
+            cfg.dataset,
+            cfg.d,
+            self.classes,
+            cfg.windows,
+            cfg.samples_per_window,
+            cfg.rotate_frac,
+            cfg.shift_scale,
+            cfg.add_class_at,
+        );
+        out.push_str(&format!(
+            "{:<4} {:>8} {:>9} {:>11} {:>11} {:>10} {:>11}\n",
+            "win", "classes", "progress", "frozen_acc", "online_acc", "publishes", "generation"
+        ));
+        for w in &self.windows {
+            out.push_str(&format!(
+                "{:<4} {:>8} {:>9.2} {:>11.4} {:>11.4} {:>10} {:>11}\n",
+                w.index, w.classes, w.progress, w.frozen_acc, w.online_acc, w.publishes,
+                w.generation
+            ));
+        }
+        out.push_str(&format!(
+            "last-2-window accuracy: frozen {:.4} vs online {:.4} (delta {:+.4}); \
+             {} publishes, {}/{} inferences dropped\n",
+            self.frozen_last2,
+            self.online_last2,
+            self.online_last2 - self.frozen_last2,
+            self.publishes,
+            self.dropped,
+            self.requests,
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::golden;
+
+    /// Unit-test sized: one replica, 8 publishes, a class add at the
+    /// midpoint.
+    fn micro() -> DriftConfig {
+        DriftConfig {
+            profile: "micro".into(),
+            dataset: "page".into(),
+            d: 64,
+            pretrain: 150,
+            epochs: 1,
+            conv_epochs: 0,
+            windows: 4,
+            samples_per_window: 48,
+            rotate_frac: 0.4,
+            shift_scale: 0.5,
+            add_class_at: Some(2),
+            replicas: 1,
+            publish_every: 24,
+            capacity: 256,
+            min_samples: 16,
+            refine_epochs: 1,
+            eta: 0.05,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn micro_campaign_counts_publishes_and_drops_nothing() {
+        let res = run(&micro()).unwrap();
+        assert_eq!(res.windows.len(), 4);
+        assert_eq!(res.requests, 4 * 48 * 2);
+        assert_eq!(res.dropped, 0, "inference dropped across live publishes");
+        assert_eq!(res.feedback_rejected, 0);
+        assert_eq!(res.feedback_accepted, 4 * 48);
+        // Cadence of 24 over 192 accepted samples: exactly 8 publishes.
+        assert_eq!(res.publishes, 8);
+        assert!(res.windows.last().unwrap().generation >= 2, "crossed two publish cycles");
+        // One codeword bought one new class mid-stream.
+        assert_eq!(res.final_classes, 6);
+        assert_eq!(res.windows[1].classes, 5);
+        assert_eq!(res.windows[2].classes, 6);
+        let mut last_gen = 0;
+        for w in &res.windows {
+            assert!((0.0..=1.0).contains(&w.frozen_acc), "window {}", w.index);
+            assert!((0.0..=1.0).contains(&w.online_acc), "window {}", w.index);
+            assert!(w.generation >= last_gen, "generations must be monotone");
+            last_gen = w.generation;
+        }
+    }
+
+    #[test]
+    fn micro_campaign_is_deterministic() {
+        let a = golden::without_keys(run(&micro()).unwrap().to_json(), &["meta"]);
+        let b = golden::without_keys(run(&micro()).unwrap().to_json(), &["meta"]);
+        assert_eq!(json::to_string(&a), json::to_string(&b));
+    }
+
+    #[test]
+    fn profiles_and_validation() {
+        assert_eq!(DriftConfig::by_name("smoke").unwrap().profile, "smoke");
+        assert_eq!(DriftConfig::by_name("full").unwrap().profile, "full");
+        assert!(DriftConfig::by_name("warp").is_none());
+        DriftConfig::smoke().validate().unwrap();
+        DriftConfig::full().validate().unwrap();
+        let mut c = micro();
+        c.windows = 1;
+        assert!(c.validate().is_err());
+        let mut c = micro();
+        c.publish_every = 10_000;
+        assert!(c.validate().is_err(), "stream must cross two cadences");
+        let mut c = micro();
+        c.add_class_at = Some(99);
+        assert!(c.validate().is_err());
+        let mut c = micro();
+        c.capacity = 4;
+        assert!(c.validate().is_err());
+    }
+}

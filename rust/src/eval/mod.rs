@@ -1,8 +1,10 @@
 //! Experiment engine: metrics, the (method × precision × fault-rate)
-//! sweep machinery that regenerates the paper's figures, and the
-//! equal-memory robustness campaign engine behind `loghd robustness`.
+//! sweep machinery that regenerates the paper's figures, the
+//! equal-memory robustness campaign engine behind `loghd robustness`,
+//! and the continual-learning drift campaign behind `loghd drift`.
 
 pub mod campaign;
+pub mod drift;
 pub mod figures;
 pub mod metrics;
 pub mod sweep;
@@ -11,5 +13,6 @@ pub use campaign::{
     run_analog, solve_equal_memory, stored_bits, AnalogConfig, AnalogResult, CampaignConfig,
     CampaignResult,
 };
+pub use drift::{DriftConfig, DriftResult};
 pub use metrics::{accuracy, confusion, mean_std, percentile, sustained_until};
 pub use sweep::{cell_stream, corrupt, corrupt_masked, fault_cell_stream, Method, Workbench};

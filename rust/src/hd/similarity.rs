@@ -12,6 +12,16 @@ pub fn activations(enc: &Matrix, m: &Matrix) -> Matrix {
     scale_by_query_norm(tensor::matmul_nt(enc, m), enc)
 }
 
+/// [`activations`] into a reused output matrix, for model-side operands
+/// that *change* between calls (mid-refinement bundles — a fixed operand
+/// should use [`activations_with_into`] instead). Same regime selection
+/// and float behavior as [`activations`].
+pub fn activations_into(enc: &Matrix, m: &Matrix, out: &mut Matrix) {
+    assert_eq!(enc.cols(), m.cols(), "dimension mismatch");
+    tensor::matmul_nt_into(enc, m, out);
+    scale_rows_by_query_norm(out, enc);
+}
+
 /// [`activations`] against a *fixed* model-side operand with its
 /// [`tensor::NtPrepared`] state: serving engines build the prepared form
 /// once (model load) instead of re-transposing `m` every batch in the

@@ -154,6 +154,59 @@ impl Codebook {
         self.rows.iter().map(|row| row.iter().map(|&s| target(s, self.k)).collect()).collect()
     }
 
+    /// Append one codeword for a newly observed class — the class-axis
+    /// payoff of the paper's design: a new class costs one length-n
+    /// code (plus one profile row), not a D-wide prototype. Continues
+    /// the greedy minimax-load criterion of [`build`] from the current
+    /// cumulative [`Self::bundle_loads`], with the same stream
+    /// discipline (one tie-break xi per candidate, drawn before the
+    /// used-skip), so the choice is deterministic in `seed`. Errors
+    /// when the k^n code space (or the sampled pool) is exhausted.
+    pub fn extend_one(&mut self, alpha: f64, seed: u64) -> Result<()> {
+        let n = self.n();
+        if n == 0 {
+            bail!("cannot extend an empty codebook");
+        }
+        let k = self.k;
+        let kn = (k as u128).checked_pow(n as u32).unwrap_or(u128::MAX);
+        if kn <= self.rows.len() as u128 {
+            bail!("k^n = {k}^{n} code space exhausted at {} classes", self.rows.len());
+        }
+        let mut rng = SplitMix64::new(seed);
+        let candidates: Vec<Vec<u8>> = if kn <= MAX_ENUM as u128 {
+            enumerate_codes(k, n)
+        } else {
+            (0..POOL_SIZE)
+                .map(|_| (0..n).map(|_| (rng.next_u64() % k as u64) as u8).collect())
+                .collect()
+        };
+        let existing: std::collections::HashSet<&Vec<u8>> = self.rows.iter().collect();
+        let loads = self.bundle_loads(alpha);
+        let mut best: Option<(f64, usize)> = None;
+        for (q, code) in candidates.iter().enumerate() {
+            let xi = rng.uniform();
+            if existing.contains(code) {
+                continue;
+            }
+            let mut worst = f64::NEG_INFINITY;
+            for (j, &s) in code.iter().enumerate() {
+                let v = loads[j] + capacity(g(s, k), alpha);
+                if v > worst {
+                    worst = v;
+                }
+            }
+            let score = worst + EPS_TIEBREAK * xi;
+            if best.map_or(true, |(bs, _)| score < bs) {
+                best = Some((score, q));
+            }
+        }
+        let Some((_, q)) = best else {
+            bail!("candidate pool exhausted: no unused code among {} samples", candidates.len());
+        };
+        self.rows.push(candidates[q].clone());
+        Ok(())
+    }
+
     /// Flatten to i32 row-major (artifact interchange form).
     pub fn to_i32(&self) -> Vec<i32> {
         self.rows.iter().flatten().map(|&s| s as i32).collect()
@@ -252,6 +305,23 @@ mod tests {
         assert_eq!(cb.classes(), 50);
         let set: HashSet<&Vec<u8>> = cb.rows.iter().collect();
         assert_eq!(set.len(), 50);
+    }
+
+    #[test]
+    fn extend_one_adds_a_fresh_code_deterministically() {
+        let base = build(5, 2, 4, 1.0, 3).unwrap();
+        let mut a = base.clone();
+        let mut b = base.clone();
+        a.extend_one(1.0, 11).unwrap();
+        b.extend_one(1.0, 11).unwrap();
+        assert_eq!(a, b, "extension must be deterministic in seed");
+        assert_eq!(a.classes(), 6);
+        assert_eq!(a.n(), 4);
+        let set: HashSet<&Vec<u8>> = a.rows.iter().collect();
+        assert_eq!(set.len(), 6, "extended code must be unused");
+        // Exhaustion is an error, not a panic: k=2, n=1 holds 2 codes.
+        let mut tiny = build(2, 2, 1, 1.0, 0).unwrap();
+        assert!(tiny.extend_one(1.0, 0).is_err());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! - [`bundling`]: weighted prototype superposition (Eq. 4)
 //! - [`profiles`]: per-class expected activation profiles (Eq. 5/6)
 //! - [`refine`]: perceptron-style bundle refinement (Eq. 8/9)
+//! - [`online`]: streaming continual learning (reservoir + live refits)
 //! - [`model`]: the assembled classifier (train / predict / memory math)
 //! - [`qmodel`]: the bit-packed serving twin (XNOR/popcount + int8 path)
 //! - [`persist`]: artifact save/load (the format the serving registry hosts)
@@ -29,6 +30,7 @@
 pub mod bundling;
 pub mod codebook;
 pub mod model;
+pub mod online;
 pub mod profiles;
 pub mod qmodel;
 pub mod refine;
@@ -37,4 +39,5 @@ pub mod persist;
 
 pub use codebook::{min_bundles, Codebook};
 pub use model::{LogHdModel, TrainOptions, TrainedStack};
+pub use online::{FeedbackError, OnlineConfig, OnlineTrainer, Reservoir, TrainerStats};
 pub use qmodel::QuantizedLogHdModel;

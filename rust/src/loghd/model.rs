@@ -91,7 +91,7 @@ impl LogHdModel {
                 opts.eta,
                 opts.shuffle_seed,
                 opts.batch,
-            );
+            )?;
         }
         let profiles = compute_profiles(enc_train, y_train, &bundles, classes);
         Ok(Self { classes, d: h.cols(), book, bundles, profiles })

@@ -1,0 +1,512 @@
+//! Streaming continual learning: a per-tenant online trainer.
+//!
+//! The serving front door ([`crate::coordinator`]) accepts labeled
+//! feedback (`feedback` wire verb); this module is what that feedback
+//! feeds. An [`OnlineTrainer`] buffers `(features, label)` pairs in a
+//! seeded reservoir ([`Reservoir`], Algorithm R — a uniform sample of
+//! the stream so old regimes decay instead of dominating), runs
+//! incremental minibatch [`refine_step_into`] passes against the *live*
+//! bundle matrix on a publish cadence, recomputes the activation
+//! profiles, and hands refreshed engine state back to the registry.
+//! Re-quantization happens at publish: the registry rebuilds
+//! [`crate::coordinator::worker::NativeEngine`] factories at the
+//! tenant's serving precision, so B1/B8 tenants repack their stored
+//! state from the refreshed f32 tensors on every publish.
+//!
+//! Class addition is the paper's selling point exercised live: a label
+//! equal to the current class count (with
+//! [`OnlineConfig::allow_new_classes`]) extends the codebook by ONE
+//! codeword ([`crate::loghd::codebook::Codebook::extend_one`]) and one
+//! profile row — O(n) new state, not a new O(D) prototype.
+//!
+//! Everything is deterministic in the config seed plus the ingest
+//! sequence: the reservoir RNG, the refit shuffles, and the codeword
+//! draws are all forked SplitMix64 streams, so two trainers fed the
+//! same stream produce bit-identical models (pinned by tests here and
+//! the drift campaign golden).
+
+use crate::encoder::Encoder;
+use crate::hd::prototype::gather_rows;
+use crate::loghd::model::LogHdModel;
+use crate::loghd::profiles::compute_profiles;
+use crate::loghd::refine::{refine_step_into, RefineScratch};
+use crate::tensor::Matrix;
+use crate::util::rng::SplitMix64;
+
+/// Online-training hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct OnlineConfig {
+    /// Reservoir capacity (samples kept for refits).
+    pub capacity: usize,
+    /// Refits are skipped until the reservoir holds this many samples.
+    pub min_samples: usize,
+    /// Shuffled passes over the reservoir per refit.
+    pub refine_epochs: usize,
+    /// Refinement learning rate. Larger than the offline default
+    /// (`TrainOptions::eta`): an online refit gets one or two passes per
+    /// publish, not twenty epochs, and must track a moving distribution.
+    pub eta: f32,
+    /// Minibatch size for refit passes.
+    pub batch: usize,
+    /// Accepted ingests between publishes (the cadence).
+    pub publish_every: usize,
+    /// Root seed for the reservoir / shuffle / codeword streams.
+    pub seed: u64,
+    /// Accept `label == classes` by growing the codebook one codeword.
+    pub allow_new_classes: bool,
+    /// Capacity exponent for new-codeword selection (paper Eq. 2/3).
+    pub alpha: f64,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        Self {
+            capacity: 512,
+            min_samples: 32,
+            refine_epochs: 1,
+            eta: 0.02,
+            batch: 64,
+            publish_every: 64,
+            seed: 0x0F_EEDBAC,
+            allow_new_classes: true,
+            alpha: 1.0,
+        }
+    }
+}
+
+/// Why a feedback sample was rejected (maps onto the wire protocol's
+/// coded errors — see `RouteError::code` in `coordinator::registry`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FeedbackError {
+    /// Label outside `0..classes` (or `0..=classes` when new classes are
+    /// allowed), or the codebook's code space is exhausted.
+    BadLabel { label: i32, classes: usize },
+    /// Feature vector width does not match the tenant's encoder.
+    BadWidth { got: usize, want: usize },
+}
+
+impl std::fmt::Display for FeedbackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FeedbackError::BadLabel { label, classes } => {
+                write!(f, "label {label} outside class range 0..{classes}")
+            }
+            FeedbackError::BadWidth { got, want } => {
+                write!(f, "feature width {got} != expected {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FeedbackError {}
+
+/// Seeded Algorithm-R reservoir over `(features, label)` pairs: after
+/// `seen` pushes every sample survived with probability
+/// `capacity / seen`. Deterministic in `(seed, push sequence)`.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    capacity: usize,
+    rng: SplitMix64,
+    seen: u64,
+    rows: Vec<Vec<f32>>,
+    labels: Vec<i32>,
+}
+
+impl Reservoir {
+    pub fn new(capacity: usize, seed: u64) -> Self {
+        assert!(capacity > 0, "reservoir capacity must be > 0");
+        Self {
+            capacity,
+            rng: SplitMix64::new(seed),
+            seen: 0,
+            rows: Vec::new(),
+            labels: Vec::new(),
+        }
+    }
+
+    /// Offer one sample. While under capacity it is always kept; past
+    /// capacity it replaces a uniformly random slot with probability
+    /// `capacity / seen` (classic Algorithm R).
+    pub fn push(&mut self, x: Vec<f32>, y: i32) {
+        self.seen += 1;
+        if self.rows.len() < self.capacity {
+            self.rows.push(x);
+            self.labels.push(y);
+            return;
+        }
+        let j = self.rng.below(self.seen);
+        if (j as usize) < self.capacity {
+            self.rows[j as usize] = x;
+            self.labels[j as usize] = y;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Total samples ever offered (≥ [`Self::len`]).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn labels(&self) -> &[i32] {
+        &self.labels
+    }
+
+    /// The buffered feature rows as a `(len, features)` matrix.
+    pub fn to_matrix(&self, features: usize) -> Matrix {
+        let mut m = Matrix::zeros(self.rows.len(), features);
+        for (i, row) in self.rows.iter().enumerate() {
+            m.row_mut(i).copy_from_slice(row);
+        }
+        m
+    }
+}
+
+/// Counters for the `stats` admin verb (trainer-attached tenants only).
+#[derive(Debug, Clone, Copy)]
+pub struct TrainerStats {
+    /// Accepted feedback samples.
+    pub ingested: u64,
+    /// Rejected feedback samples (bad label / bad width).
+    pub rejected: u64,
+    /// Samples currently buffered in the reservoir.
+    pub buffered: usize,
+    /// Monotone publish generation (0 until the first publish).
+    pub generation: u64,
+    /// Classes the live model currently decodes.
+    pub classes: usize,
+}
+
+/// Per-tenant streaming trainer. The registry owns one behind the
+/// tenant's trainer mutex; the `feedback` verb drives [`Self::ingest`]
+/// and, when [`Self::publish_due`] fires, [`Self::refit`] +
+/// engine-factory rebuild + `Coordinator::reload` +
+/// [`Self::mark_published`]. Refits mutate the live `model` in place
+/// (the whole point of [`refine_step_into`]); serving replicas only see
+/// a *published* snapshot, so mid-refit state never leaks onto the wire.
+#[derive(Debug, Clone)]
+pub struct OnlineTrainer {
+    cfg: OnlineConfig,
+    encoder: Encoder,
+    model: LogHdModel,
+    reservoir: Reservoir,
+    shuffle_rng: SplitMix64,
+    scratch: RefineScratch,
+    enc_scratch: Matrix,
+    tau: Matrix,
+    ingested: u64,
+    rejected: u64,
+    since_publish: usize,
+    generation: u64,
+}
+
+impl OnlineTrainer {
+    /// Wrap a trained `(encoder, model)` pair — typically the tenant's
+    /// just-loaded artifact, so the first refit starts from the served
+    /// weights rather than from scratch.
+    pub fn new(encoder: Encoder, model: LogHdModel, cfg: OnlineConfig) -> Self {
+        let mut root = SplitMix64::new(cfg.seed);
+        let reservoir = Reservoir::new(cfg.capacity, root.fork(1).next_u64());
+        let shuffle_rng = root.fork(2);
+        Self {
+            cfg,
+            encoder,
+            model,
+            reservoir,
+            shuffle_rng,
+            scratch: RefineScratch::default(),
+            enc_scratch: Matrix::zeros(0, 0),
+            tau: Matrix::zeros(0, 0),
+            ingested: 0,
+            rejected: 0,
+            since_publish: 0,
+            generation: 0,
+        }
+    }
+
+    /// Validate and buffer one feedback sample. `label == classes` with
+    /// [`OnlineConfig::allow_new_classes`] grows the model by one
+    /// codeword and one (zero) profile row before buffering; the new
+    /// class becomes decodable after its first refit.
+    pub fn ingest(&mut self, features: &[f32], label: i32) -> Result<(), FeedbackError> {
+        let want = self.encoder.features();
+        if features.len() != want {
+            self.rejected += 1;
+            return Err(FeedbackError::BadWidth { got: features.len(), want });
+        }
+        let classes = self.model.classes;
+        let in_range = label >= 0 && (label as usize) < classes;
+        let is_new = self.cfg.allow_new_classes && label >= 0 && label as usize == classes;
+        if !in_range && !is_new {
+            self.rejected += 1;
+            return Err(FeedbackError::BadLabel { label, classes });
+        }
+        if is_new && self.add_class().is_err() {
+            // Code space exhausted: the label stays unservable, so it is
+            // rejected with the same code as any other out-of-range label.
+            self.rejected += 1;
+            return Err(FeedbackError::BadLabel { label, classes });
+        }
+        self.reservoir.push(features.to_vec(), label);
+        self.ingested += 1;
+        self.since_publish += 1;
+        Ok(())
+    }
+
+    /// Grow the codebook by one codeword (deterministic in the config
+    /// seed and the class count) and append a zero profile row.
+    fn add_class(&mut self) -> anyhow::Result<()> {
+        let classes = self.model.classes;
+        self.model.book.extend_one(self.cfg.alpha, self.cfg.seed.wrapping_add(classes as u64))?;
+        let n = self.model.book.n();
+        let mut profiles = Matrix::zeros(classes + 1, n);
+        for c in 0..classes {
+            profiles.row_mut(c).copy_from_slice(self.model.profiles.row(c));
+        }
+        self.model.profiles = profiles;
+        self.model.classes = classes + 1;
+        Ok(())
+    }
+
+    /// Whether the cadence says it is time to refit + publish.
+    pub fn publish_due(&self) -> bool {
+        self.since_publish >= self.cfg.publish_every.max(1)
+            && self.reservoir.len() >= self.cfg.min_samples
+    }
+
+    /// One incremental refit over the reservoir: encode the buffered
+    /// rows, run `refine_epochs` shuffled minibatch passes of
+    /// [`refine_step_into`] directly on the live bundle matrix (no
+    /// clones — the scratch and tau buffers persist across refits), then
+    /// recompute the per-class activation profiles. No-op on an empty
+    /// reservoir.
+    pub fn refit(&mut self) {
+        let count = self.reservoir.len();
+        if count == 0 {
+            return;
+        }
+        let x = self.reservoir.to_matrix(self.encoder.features());
+        self.encoder.encode_into(&x, &mut self.enc_scratch);
+        let targets = self.model.book.targets();
+        let n = self.model.book.n();
+        let mut idx: Vec<usize> = (0..count).collect();
+        for _ in 0..self.cfg.refine_epochs.max(1) {
+            self.shuffle_rng.shuffle(&mut idx);
+            for chunk in idx.chunks(self.cfg.batch.max(1)) {
+                let enc_b = gather_rows(&self.enc_scratch, chunk);
+                self.tau.resize(chunk.len(), n);
+                for (bi, &si) in chunk.iter().enumerate() {
+                    let y = self.reservoir.labels[si] as usize;
+                    self.tau.row_mut(bi).copy_from_slice(&targets[y]);
+                }
+                refine_step_into(
+                    &mut self.model.bundles,
+                    &enc_b,
+                    &self.tau,
+                    self.cfg.eta,
+                    &mut self.scratch,
+                );
+            }
+        }
+        self.model.profiles = compute_profiles(
+            &self.enc_scratch,
+            &self.reservoir.labels,
+            &self.model.bundles,
+            self.model.classes,
+        );
+    }
+
+    /// Record a successful publish: bump the monotone generation and
+    /// restart the cadence counter. Called by the registry only after
+    /// the coordinator adopted the new engines.
+    pub fn mark_published(&mut self) {
+        self.generation += 1;
+        self.since_publish = 0;
+    }
+
+    /// Snapshot of the live `(encoder, model)` pair for engine-factory
+    /// construction (one clone per replica happens at the factory layer).
+    pub fn snapshot(&self) -> (Encoder, LogHdModel) {
+        (self.encoder.clone(), self.model.clone())
+    }
+
+    pub fn stats(&self) -> TrainerStats {
+        TrainerStats {
+            ingested: self.ingested,
+            rejected: self.rejected,
+            buffered: self.reservoir.len(),
+            generation: self.generation,
+            classes: self.model.classes,
+        }
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn classes(&self) -> usize {
+        self.model.classes
+    }
+
+    pub fn model(&self) -> &LogHdModel {
+        &self.model
+    }
+
+    pub fn encoder(&self) -> &Encoder {
+        &self.encoder
+    }
+
+    pub fn config(&self) -> &OnlineConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::loghd::model::{TrainOptions, TrainedStack};
+
+    fn small_trainer(cfg: OnlineConfig) -> (data::Dataset, OnlineTrainer) {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 400, 100);
+        let opts =
+            TrainOptions { epochs: 2, conv_epochs: 0, extra_bundles: 1, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 128, 0xE5C0DE, &opts).unwrap();
+        let trainer = OnlineTrainer::new(st.encoder, st.loghd, cfg);
+        (ds, trainer)
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_in_seed() {
+        let mut a = Reservoir::new(16, 7);
+        let mut b = Reservoir::new(16, 7);
+        let mut c = Reservoir::new(16, 8);
+        let mut rng = SplitMix64::new(1);
+        for i in 0..500 {
+            let x = vec![rng.uniform() as f32, i as f32];
+            a.push(x.clone(), i % 3);
+            b.push(x.clone(), i % 3);
+            c.push(x, i % 3);
+        }
+        assert_eq!(a.len(), 16);
+        assert_eq!(a.seen(), 500);
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.labels, b.labels);
+        // A different seed keeps a different subset (overwhelmingly).
+        assert_ne!(a.rows, c.rows);
+    }
+
+    #[test]
+    fn reservoir_keeps_everything_under_capacity() {
+        let mut r = Reservoir::new(8, 1);
+        for i in 0..5 {
+            r.push(vec![i as f32], i);
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.labels(), &[0, 1, 2, 3, 4]);
+        assert_eq!(r.to_matrix(1).at(3, 0), 3.0);
+    }
+
+    #[test]
+    fn reservoir_sampling_is_roughly_uniform() {
+        // Each of 1000 offers should land with p = 50/1000; check the
+        // retained index mean sits near the stream midpoint.
+        let mut r = Reservoir::new(50, 42);
+        for i in 0..1000 {
+            r.push(vec![i as f32], 0);
+        }
+        let mean: f64 =
+            (0..50).map(|i| r.to_matrix(1).at(i, 0) as f64).sum::<f64>() / 50.0;
+        assert!((300.0..700.0).contains(&mean), "retained-index mean {mean}");
+    }
+
+    #[test]
+    fn ingest_validates_width_and_label() {
+        let (_, mut tr) =
+            small_trainer(OnlineConfig { allow_new_classes: false, ..Default::default() });
+        let err = tr.ingest(&[0.0; 3], 0).unwrap_err();
+        assert_eq!(err, FeedbackError::BadWidth { got: 3, want: 10 });
+        let err = tr.ingest(&[0.0; 10], -1).unwrap_err();
+        assert_eq!(err, FeedbackError::BadLabel { label: -1, classes: 5 });
+        let err = tr.ingest(&[0.0; 10], 5).unwrap_err();
+        assert_eq!(err, FeedbackError::BadLabel { label: 5, classes: 5 });
+        tr.ingest(&[0.0; 10], 4).unwrap();
+        let s = tr.stats();
+        assert_eq!((s.ingested, s.rejected, s.buffered), (1, 3, 1));
+    }
+
+    #[test]
+    fn new_class_costs_one_codeword_and_one_profile_row() {
+        let (_, mut tr) = small_trainer(OnlineConfig::default());
+        let n_before = tr.model().bundles.rows();
+        let codes_before = tr.model().book.classes();
+        tr.ingest(&[0.5; 10], 5).unwrap();
+        assert_eq!(tr.classes(), 6);
+        assert_eq!(tr.model().book.classes(), codes_before + 1);
+        assert_eq!(tr.model().bundles.rows(), n_before, "no new bundles");
+        assert_eq!(tr.model().profiles.rows(), 6);
+        assert!(tr.model().profiles.row(5).iter().all(|v| *v == 0.0));
+        // A gap is still rejected: label 99 is not "the next class".
+        let err = tr.ingest(&[0.5; 10], 99).unwrap_err();
+        assert_eq!(err, FeedbackError::BadLabel { label: 99, classes: 6 });
+    }
+
+    #[test]
+    fn refit_is_deterministic_in_seed_and_stream() {
+        let cfg = OnlineConfig { publish_every: 32, min_samples: 16, ..Default::default() };
+        let (ds, mut a) = small_trainer(cfg.clone());
+        let (_, mut b) = small_trainer(cfg);
+        for i in 0..40 {
+            let row = ds.x_train.row(i).to_vec();
+            a.ingest(&row, ds.y_train[i]).unwrap();
+            b.ingest(&row, ds.y_train[i]).unwrap();
+        }
+        assert!(a.publish_due());
+        a.refit();
+        b.refit();
+        assert_eq!(a.model().bundles.data(), b.model().bundles.data());
+        assert_eq!(a.model().profiles.data(), b.model().profiles.data());
+        a.mark_published();
+        assert_eq!(a.generation(), 1);
+        assert!(!a.publish_due(), "cadence counter must reset");
+    }
+
+    #[test]
+    fn refit_keeps_model_predictive() {
+        let cfg = OnlineConfig { publish_every: 64, min_samples: 32, ..Default::default() };
+        let (ds, mut tr) = small_trainer(cfg);
+        let enc_test = tr.encoder().encode(&ds.x_test);
+        let acc = |m: &LogHdModel| {
+            let preds = m.predict(&enc_test);
+            preds.iter().zip(&ds.y_test).filter(|(p, y)| p == y).count() as f64
+                / ds.y_test.len() as f64
+        };
+        let before = acc(tr.model());
+        for i in 0..200 {
+            tr.ingest(&ds.x_train.row(i).to_vec(), ds.y_train[i]).unwrap();
+        }
+        tr.refit();
+        let after = acc(tr.model());
+        // In-distribution feedback must not wreck the model.
+        assert!(after > before - 0.10, "refit degraded accuracy {before} -> {after}");
+        for j in 0..tr.model().bundles.rows() {
+            let norm = crate::tensor::norm(tr.model().bundles.row(j));
+            assert!((norm - 1.0).abs() < 1e-4, "bundle {j} not unit: {norm}");
+        }
+    }
+
+    #[test]
+    fn refit_on_empty_reservoir_is_a_noop() {
+        let (_, mut tr) = small_trainer(OnlineConfig::default());
+        let before = tr.model().bundles.data().to_vec();
+        tr.refit();
+        assert_eq!(tr.model().bundles.data(), before.as_slice());
+        assert!(!tr.publish_due());
+    }
+}

@@ -2,39 +2,74 @@
 //! variant, mirroring `python/compile/trainer.py::refine_bundles` and the
 //! L2 `refine_step` graph: per minibatch, A = activations(enc_b, M),
 //! coef = eta (tau - A), M <- normalize(M + coefᵀ·enc_b).
+//!
+//! Two entry points: [`refine_step`] (allocating, the reference) and
+//! [`refine_step_into`] (in-place over caller [`RefineScratch`] — the
+//! steady-state form the online trainer loops on, no per-minibatch clone
+//! of the bundle matrix). [`refine_bundles`] validates its inputs and
+//! returns `Result` because labels may arrive from an untrusted feedback
+//! stream (see `coordinator::conn`'s `feedback` verb).
+
+use anyhow::{bail, ensure, Result};
 
 use crate::hd::prototype::gather_rows;
-use crate::hd::similarity::activations;
+use crate::hd::similarity::{activations, activations_into};
 use crate::loghd::codebook::Codebook;
 use crate::tensor::{self, Matrix};
 use crate::util::rng::SplitMix64;
 
+/// Reused intermediates for [`refine_step_into`]: the (B, n) activations,
+/// the (n, B) update coefficients, and the (n, D) delta. All settle at
+/// their high-water shapes after the first minibatch.
+#[derive(Debug, Clone, Default)]
+pub struct RefineScratch {
+    acts: Matrix,
+    coef: Matrix,
+    delta: Matrix,
+}
+
 /// One batched refinement step; returns re-normalized bundles.
 pub fn refine_step(m: &Matrix, enc_b: &Matrix, tau: &Matrix, eta: f32) -> Matrix {
-    let n = m.rows();
-    let d = m.cols();
-    let bsz = enc_b.rows();
-    assert_eq!(tau.rows(), bsz);
-    assert_eq!(tau.cols(), n);
-    let a = activations(enc_b, m); // (B, n)
-    // coef (n, B) = eta * (tau - A)^T; delta = coef @ enc_b  (n, D)
-    let mut coef = Matrix::zeros(n, bsz);
-    for i in 0..bsz {
-        for j in 0..n {
-            coef.set(j, i, eta * (tau.at(i, j) - a.at(i, j)));
-        }
-    }
-    let delta = tensor::matmul(&coef, enc_b);
     let mut out = m.clone();
-    for j in 0..n {
-        tensor::axpy(1.0, delta.row(j), out.row_mut(j));
-    }
-    let _ = d;
-    tensor::normalize_rows(&mut out);
+    refine_step_into(&mut out, enc_b, tau, eta, &mut RefineScratch::default());
     out
 }
 
+/// [`refine_step`] updating `m` in place through caller-owned scratch —
+/// the minibatch loop stops cloning the bundle matrix twice per step
+/// (the `m.clone()` plus the returned matrix). Identical math and float
+/// behavior to [`refine_step`], which now delegates here.
+pub fn refine_step_into(
+    m: &mut Matrix,
+    enc_b: &Matrix,
+    tau: &Matrix,
+    eta: f32,
+    scratch: &mut RefineScratch,
+) {
+    let n = m.rows();
+    let bsz = enc_b.rows();
+    assert_eq!(tau.rows(), bsz);
+    assert_eq!(tau.cols(), n);
+    activations_into(enc_b, m, &mut scratch.acts); // (B, n)
+    // coef (n, B) = eta * (tau - A)^T; delta = coef @ enc_b  (n, D)
+    scratch.coef.resize(n, bsz);
+    for i in 0..bsz {
+        for j in 0..n {
+            scratch.coef.set(j, i, eta * (tau.at(i, j) - scratch.acts.at(i, j)));
+        }
+    }
+    tensor::matmul_into(&scratch.coef, enc_b, &mut scratch.delta);
+    for j in 0..n {
+        tensor::axpy(1.0, scratch.delta.row(j), m.row_mut(j));
+    }
+    tensor::normalize_rows(m);
+}
+
 /// Full refinement: `epochs` shuffled passes of minibatch steps.
+///
+/// Errors (rather than panicking) on `batch == 0` and on any label
+/// outside `0..book.classes()` — both reachable from wire-fed feedback.
+#[allow(clippy::too_many_arguments)]
 pub fn refine_bundles(
     m: &Matrix,
     enc: &Matrix,
@@ -44,24 +79,31 @@ pub fn refine_bundles(
     eta: f32,
     seed: u64,
     batch: usize,
-) -> Matrix {
+) -> Result<Matrix> {
+    ensure!(batch > 0, "refinement batch size must be > 0");
+    let classes = book.classes();
+    if let Some(&bad) = y.iter().find(|&&l| l < 0 || l as usize >= classes) {
+        bail!("label {bad} outside codebook class range 0..{classes}");
+    }
     let targets = book.targets(); // (C, n)
     let n = book.n();
     let mut rng = SplitMix64::new(seed);
     let mut idx: Vec<usize> = (0..y.len()).collect();
     let mut mwork = m.clone();
+    let mut scratch = RefineScratch::default();
+    let mut tau = Matrix::zeros(0, 0);
     for _ in 0..epochs {
         rng.shuffle(&mut idx);
         for chunk in idx.chunks(batch) {
             let enc_b = gather_rows(enc, chunk);
-            let mut tau = Matrix::zeros(chunk.len(), n);
+            tau.resize(chunk.len(), n);
             for (bi, &si) in chunk.iter().enumerate() {
                 tau.row_mut(bi).copy_from_slice(&targets[y[si] as usize]);
             }
-            mwork = refine_step(&mwork, &enc_b, &tau, eta);
+            refine_step_into(&mut mwork, &enc_b, &tau, eta, &mut scratch);
         }
     }
-    mwork
+    Ok(mwork)
 }
 
 #[cfg(test)]
@@ -102,6 +144,24 @@ mod tests {
     }
 
     #[test]
+    fn step_into_matches_step_with_reused_scratch() {
+        let mut rng = SplitMix64::new(7);
+        let enc = Matrix::from_vec(6, 24, rng.normals_f32(144));
+        let mut m = Matrix::from_vec(3, 24, rng.normals_f32(72));
+        normalize_rows(&mut m);
+        let tau = Matrix::from_vec(6, 3, rng.normals_f32(18));
+        let mut scratch = RefineScratch::default();
+        // run twice through the same scratch: reuse must not change math
+        for _ in 0..2 {
+            let want = refine_step(&m, &enc, &tau, 0.02);
+            let mut got = m.clone();
+            refine_step_into(&mut got, &enc, &tau, 0.02, &mut scratch);
+            assert_eq!(got.data(), want.data());
+            m = want;
+        }
+    }
+
+    #[test]
     fn refinement_deterministic_in_seed() {
         let mut rng = SplitMix64::new(5);
         let enc = Matrix::from_vec(20, 16, rng.normals_f32(320));
@@ -109,8 +169,37 @@ mod tests {
         let book = crate::loghd::codebook::build(4, 2, 3, 1.0, 1).unwrap();
         let mut m = Matrix::from_vec(3, 16, rng.normals_f32(48));
         normalize_rows(&mut m);
-        let a = refine_bundles(&m, &enc, &y, &book, 3, 0.01, 42, 8);
-        let b = refine_bundles(&m, &enc, &y, &book, 3, 0.01, 42, 8);
+        let a = refine_bundles(&m, &enc, &y, &book, 3, 0.01, 42, 8).unwrap();
+        let b = refine_bundles(&m, &enc, &y, &book, 3, 0.01, 42, 8).unwrap();
         assert_eq!(a.data(), b.data());
+    }
+
+    /// Regression (pre-fix code panicked): `batch == 0` is an error, not
+    /// a `chunks(0)` panic.
+    #[test]
+    fn zero_batch_is_an_error_not_a_panic() {
+        let mut rng = SplitMix64::new(6);
+        let enc = Matrix::from_vec(8, 16, rng.normals_f32(128));
+        let y: Vec<i32> = (0..8).map(|i| i % 4).collect();
+        let book = crate::loghd::codebook::build(4, 2, 3, 1.0, 1).unwrap();
+        let m = Matrix::from_vec(3, 16, rng.normals_f32(48));
+        let err = refine_bundles(&m, &enc, &y, &book, 1, 0.01, 42, 0).unwrap_err();
+        assert!(err.to_string().contains("batch size"), "{err}");
+    }
+
+    /// Regression (pre-fix code index-panicked on `targets[y[si]]`):
+    /// labels outside the codebook class range are an error.
+    #[test]
+    fn out_of_range_label_is_an_error_not_a_panic() {
+        let mut rng = SplitMix64::new(8);
+        let enc = Matrix::from_vec(8, 16, rng.normals_f32(128));
+        let book = crate::loghd::codebook::build(4, 2, 3, 1.0, 1).unwrap();
+        let m = Matrix::from_vec(3, 16, rng.normals_f32(48));
+        for bad in [4i32, 99, -1] {
+            let mut y: Vec<i32> = (0..8).map(|i| i % 4).collect();
+            y[5] = bad;
+            let err = refine_bundles(&m, &enc, &y, &book, 1, 0.01, 42, 8).unwrap_err();
+            assert!(err.to_string().contains("class range"), "{bad}: {err}");
+        }
     }
 }

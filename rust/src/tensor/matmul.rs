@@ -120,6 +120,21 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     matmul_nt_blocked(a, b)
 }
 
+/// [`matmul_nt`] writing into a caller-owned output, for right-hand
+/// operands that change between calls (so [`NtPrepared`] cannot be
+/// hoisted — e.g. the bundle matrix mid-refinement). Picks the same
+/// regime as [`matmul_nt`]; the mid-width regime still pays the per-call
+/// transposed copy, outside it the call is allocation-free once `out`
+/// has reached its steady-state shape.
+pub fn matmul_nt_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt inner-dim mismatch");
+    if nt_prefers_transposed(b.rows(), a.cols()) {
+        matmul_into(a, &b.transposed(), out);
+        return;
+    }
+    matmul_nt_blocked_into(a, b, out);
+}
+
 fn matmul_nt_blocked(a: &Matrix, b: &Matrix) -> Matrix {
     let mut out = Matrix::zeros(0, 0);
     matmul_nt_blocked_into(a, b, &mut out);

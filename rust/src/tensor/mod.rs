@@ -33,8 +33,8 @@ pub use bitops::{
     BitMatrix, I16Matrix,
 };
 pub use matmul::{
-    dot_unrolled, matmul, matmul_into, matmul_nt, matmul_nt_with, matmul_nt_with_into, matmul_tn,
-    NtPrepared,
+    dot_unrolled, matmul, matmul_into, matmul_nt, matmul_nt_into, matmul_nt_with,
+    matmul_nt_with_into, matmul_tn, NtPrepared,
 };
 pub use ops::*;
 

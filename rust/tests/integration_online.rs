@@ -1,0 +1,331 @@
+//! End-to-end suite for streaming continual learning (the PR-9
+//! acceptance path):
+//!
+//! - the smoke drift campaign runs frozen-vs-online through the real
+//!   registry, drops zero inferences across its 18 live publishes,
+//!   matches the committed structural golden
+//!   (`rust/tests/golden/drift_smoke.json`, re-bless with
+//!   `LOGHD_BLESS=1`), and shows the online tenant sustaining accuracy
+//!   where the frozen tenant degrades;
+//! - feedback and inference run *concurrently* through the TCP front
+//!   door across several live publishes — every inference answers,
+//!   trainer generations are monotone, and the same verb works on the
+//!   binary framing;
+//! - reservoir sampling and the drift stream are deterministic in
+//!   their seeds (property-style, several seeds);
+//! - the drift artifact is bit-identical across `LOGHD_THREADS`
+//!   settings (pinned by running the actual binary twice).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use loghd::coordinator::{frame, BatcherConfig, EngineFactory, ModelRegistry, NativeEngine, Server};
+use loghd::data;
+use loghd::eval::drift::{self, DriftConfig};
+use loghd::loghd::model::{TrainOptions, TrainedStack};
+use loghd::loghd::online::{OnlineConfig, OnlineTrainer, Reservoir};
+use loghd::testkit::golden::{self, GoldenOptions};
+use loghd::util::json::{self, Value};
+use loghd::util::rng::SplitMix64;
+
+// ---------------------------------------------------------------------------
+// Drift campaign: golden + zero-drop + the continual-learning payoff
+// ---------------------------------------------------------------------------
+
+#[test]
+fn drift_smoke_campaign_matches_golden_and_online_sustains() {
+    let res = drift::run(&DriftConfig::smoke()).expect("smoke drift campaign");
+    let v = res.to_json();
+
+    // --- schema sanity ---
+    assert_eq!(v.get("schema").unwrap().as_str(), Some("loghd-drift/v1"));
+    let curve = v.get("curve").unwrap().as_array().unwrap();
+    assert_eq!(curve.len(), 8, "one report per stream window");
+    for w in curve {
+        for key in ["frozen_acc", "online_acc"] {
+            let a = w.get(key).unwrap().as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&a), "{key} {a} out of range");
+        }
+    }
+
+    // --- zero-drop accounting across every live publish ---
+    assert_eq!(res.dropped, 0, "inferences dropped during live publishes");
+    assert_eq!(res.feedback_rejected, 0);
+    assert_eq!(res.publishes, 18, "cadence of 64 over 1200 accepted samples");
+    assert!(res.publishes >= 2, "campaign must cross at least two publish cycles");
+    assert_eq!(res.final_classes, 6, "mid-stream class addition cost one codeword");
+
+    // --- the committed golden pins the structural core ---
+    golden::check_file("rust/tests/golden/drift_smoke.json", &v, &GoldenOptions::exact())
+        .unwrap();
+
+    // --- the continual-learning payoff: the frozen tenant degrades
+    // under rotation + covariate shift + the unseen class, the online
+    // tenant tracks the stream ---
+    let first_frozen = res.windows[0].frozen_acc;
+    assert!(
+        res.frozen_last2 < first_frozen - 0.05,
+        "frozen tenant should degrade under drift: {:.4} -> {:.4}",
+        first_frozen,
+        res.frozen_last2
+    );
+    assert!(
+        res.online_last2 > res.frozen_last2 + 0.02,
+        "online tenant must sustain accuracy where frozen degrades \
+         (online {:.4} vs frozen {:.4})",
+        res.online_last2,
+        res.frozen_last2
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Concurrent feedback + inference through the TCP front door
+// ---------------------------------------------------------------------------
+
+fn infer_line(features: &[f32]) -> Vec<u8> {
+    let feats: Vec<Value> = features.iter().map(|f| json::num(*f as f64)).collect();
+    let mut bytes = json::to_string(&json::obj(vec![("features", json::arr(feats))])).into_bytes();
+    bytes.push(b'\n');
+    bytes
+}
+
+fn feedback_doc(features: &[f32], label: i32) -> Value {
+    let feats: Vec<Value> = features.iter().map(|f| json::num(*f as f64)).collect();
+    json::obj(vec![
+        ("cmd", json::s("feedback")),
+        ("features", json::arr(feats)),
+        ("label", json::num(label as f64)),
+    ])
+}
+
+fn read_json_reply(reader: &mut BufReader<TcpStream>) -> Value {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).unwrap();
+    assert!(n > 0, "server closed before replying");
+    json::parse(line.trim()).unwrap_or_else(|e| panic!("bad reply '{line}': {e}"))
+}
+
+fn read_binary_reply(stream: &mut TcpStream) -> Value {
+    let mut hdr = [0u8; frame::HEADER_LEN];
+    stream.read_exact(&mut hdr).unwrap();
+    let len = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+    let mut whole = hdr.to_vec();
+    whole.resize(frame::HEADER_LEN + len, 0);
+    stream.read_exact(&mut whole[frame::HEADER_LEN..]).unwrap();
+    match frame::try_extract(&whole, frame::DEFAULT_MAX_FRAME) {
+        frame::Extract::Frame { header, payload } => {
+            frame::decode_reply_to_json(&header, &whole[payload]).unwrap()
+        }
+        other => panic!("expected a reply frame, got {other:?}"),
+    }
+}
+
+#[test]
+fn concurrent_feedback_and_inference_survive_live_publishes() {
+    let ds = data::generate_scaled(data::spec("page").unwrap(), 300, 60);
+    let opts = TrainOptions { epochs: 1, conv_epochs: 0, extra_bundles: 1, ..Default::default() };
+    let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 128, 1, &opts).unwrap();
+    let factories: Vec<EngineFactory> = (0..2)
+        .map(|_| NativeEngine::factory(st.encoder.clone(), st.loghd.clone(), "page".into()))
+        .collect();
+    let registry = Arc::new(ModelRegistry::single(
+        "page",
+        "loghd",
+        10,
+        &BatcherConfig::default(),
+        factories,
+    ));
+    let cfg = OnlineConfig { publish_every: 25, min_samples: 20, ..Default::default() };
+    registry
+        .attach_trainer(None, OnlineTrainer::new(st.encoder.clone(), st.loghd.clone(), cfg))
+        .unwrap();
+    let mut server = Server::start("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+    let addr = server.addr;
+
+    // Two inference clients hammer the tenant for the whole feedback
+    // stream; every reply must be a label, never an error.
+    let stop = Arc::new(AtomicBool::new(false));
+    let rows: Arc<Vec<Vec<f32>>> =
+        Arc::new((0..ds.x_test.rows()).map(|i| ds.x_test.row(i).to_vec()).collect());
+    let mut clients = Vec::new();
+    for c in 0..2usize {
+        let stop = Arc::clone(&stop);
+        let rows = Arc::clone(&rows);
+        clients.push(thread::spawn(move || -> (u64, u64) {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let (mut ok, mut bad) = (0u64, 0u64);
+            let mut i = c;
+            while !stop.load(Ordering::Relaxed) {
+                stream.write_all(&infer_line(&rows[i % rows.len()])).unwrap();
+                let reply = read_json_reply(&mut reader);
+                match reply.get("label").and_then(Value::as_f64) {
+                    Some(l) if (0.0..5.0).contains(&l) => ok += 1,
+                    _ => bad += 1,
+                }
+                i += 1;
+            }
+            (ok, bad)
+        }));
+    }
+
+    // 150 labeled samples at a cadence of 25: six live publishes while
+    // the inference clients run.
+    let fb = TcpStream::connect(addr).unwrap();
+    let mut fb_writer = fb.try_clone().unwrap();
+    let mut fb_reader = BufReader::new(fb);
+    let (mut publishes, mut last_gen) = (0u64, 0u64);
+    for i in 0..150usize {
+        let row = ds.x_train.row(i % ds.x_train.rows());
+        let doc = feedback_doc(row, ds.y_train[i % ds.y_train.len()]);
+        let mut line = json::to_string(&doc).into_bytes();
+        line.push(b'\n');
+        fb_writer.write_all(&line).unwrap();
+        let reply = read_json_reply(&mut fb_reader);
+        assert!(reply.get("error").is_none(), "feedback {i} failed: {}", json::to_string(&reply));
+        let generation = reply.get("generation").unwrap().as_f64().unwrap() as u64;
+        assert!(generation >= last_gen, "trainer generation went backwards at sample {i}");
+        last_gen = generation;
+        if reply.get("published").and_then(Value::as_bool) == Some(true) {
+            publishes += 1;
+        }
+    }
+    assert!(publishes >= 2, "need >= 2 live publishes under load, got {publishes}");
+    assert_eq!(last_gen, publishes, "every publish bumps the generation exactly once");
+
+    // The same verb works on the binary framing (admin JSON-over-frames).
+    let mut bin = TcpStream::connect(addr).unwrap();
+    let mut out = Vec::new();
+    frame::encode_admin_request(&feedback_doc(ds.x_train.row(0), ds.y_train[0]), &mut out);
+    bin.write_all(&out).unwrap();
+    let reply = read_binary_reply(&mut bin);
+    assert!(reply.get("error").is_none(), "{}", json::to_string(&reply));
+    assert_eq!(reply.get("ingested").unwrap().as_f64(), Some(151.0));
+
+    // Wire-visible trainer counters on the stats verb.
+    fb_writer.write_all(b"{\"cmd\":\"stats\"}\n").unwrap();
+    let stats = read_json_reply(&mut fb_reader);
+    assert_eq!(stats.get("trainer_ingested").unwrap().as_f64(), Some(151.0));
+    assert_eq!(stats.get("trainer_generation").unwrap().as_f64(), Some(publishes as f64));
+
+    stop.store(true, Ordering::Relaxed);
+    let mut total_ok = 0u64;
+    for client in clients {
+        let (ok, bad) = client.join().unwrap();
+        assert_eq!(bad, 0, "inferences errored/dropped during live publishes");
+        total_ok += ok;
+    }
+    assert!(total_ok > 0, "inference clients never got a reply in");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Determinism properties: reservoir + drift stream
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reservoir_sampling_is_deterministic_in_its_seed() {
+    for seed in [1u64, 7, 42, 0xDEAD_BEEF] {
+        let mut a = Reservoir::new(32, seed);
+        let mut b = Reservoir::new(32, seed);
+        let mut data_rng = SplitMix64::new(seed ^ 0x5151);
+        for i in 0..500 {
+            let row: Vec<f32> = (0..4).map(|_| data_rng.normal() as f32).collect();
+            let label = (i % 5) as i32;
+            a.push(row.clone(), label);
+            b.push(row, label);
+        }
+        assert_eq!(a.labels(), b.labels(), "seed {seed}: retained sets diverged");
+        assert_eq!(a.len(), 32);
+        assert_eq!(a.seen(), 500);
+        assert_eq!(
+            a.to_matrix(4).data(),
+            b.to_matrix(4).data(),
+            "seed {seed}: retained rows diverged"
+        );
+    }
+    // ... and different seeds retain different subsets of a long stream.
+    let mut a = Reservoir::new(16, 1);
+    let mut b = Reservoir::new(16, 2);
+    for i in 0..2000 {
+        a.push(vec![i as f32], 0);
+        b.push(vec![i as f32], 0);
+    }
+    assert_ne!(a.to_matrix(1).data(), b.to_matrix(1).data());
+}
+
+#[test]
+fn drift_stream_windows_are_deterministic_across_instances() {
+    for seed_tweak in [0u64, 3, 11] {
+        let mut base = *data::spec("page").unwrap();
+        base.seed ^= seed_tweak;
+        let spec = data::DriftSpec {
+            base,
+            windows: 5,
+            samples_per_window: 40,
+            rotate_frac: 0.3,
+            shift_scale: 0.4,
+            add_class_at: Some(2),
+        };
+        let s1 = data::DriftStream::new(spec);
+        let s2 = data::DriftStream::new(spec);
+        for w in [4, 0, 2] {
+            // out-of-order access on purpose
+            let a = s1.window(w);
+            let b = s2.window(w);
+            assert_eq!(a.x.data(), b.x.data(), "tweak {seed_tweak} window {w}");
+            assert_eq!(a.y, b.y);
+            assert_eq!(a.classes, b.classes);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-count invariance of the artifact (real binary, twice)
+// ---------------------------------------------------------------------------
+
+/// `LOGHD_THREADS=1` and `=4` must produce byte-identical drift
+/// artifacts (outside `meta`, which records the thread count). A
+/// reduced stream keeps the doubled binary run CI-sized; the golden
+/// above pins the full smoke profile once.
+#[test]
+fn drift_artifact_is_thread_count_invariant() {
+    let bin = env!("CARGO_BIN_EXE_loghd");
+    let dir = std::env::temp_dir().join("loghd_drift_threads");
+    let _ = std::fs::create_dir_all(&dir);
+
+    let mut docs = Vec::new();
+    for threads in ["1", "4"] {
+        let out = dir.join(format!("drift_t{threads}.json"));
+        let status = std::process::Command::new(bin)
+            .args([
+                "drift",
+                "--profile",
+                "smoke",
+                "--windows",
+                "5",
+                "--samples_per_window",
+                "64",
+                "--publish_every",
+                "32",
+                "--out",
+            ])
+            .arg(&out)
+            .env("LOGHD_THREADS", threads)
+            .current_dir(&dir)
+            .status()
+            .expect("spawn loghd drift");
+        assert!(status.success(), "loghd drift failed at LOGHD_THREADS={threads}");
+        let text = std::fs::read_to_string(&out).unwrap();
+        docs.push(golden::without_keys(json::parse(&text).unwrap(), &["meta"]));
+    }
+    assert_eq!(
+        json::to_string(&docs[0]),
+        json::to_string(&docs[1]),
+        "drift artifact depends on LOGHD_THREADS"
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}

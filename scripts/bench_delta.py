@@ -3,7 +3,7 @@
 
 Usage:
     bench_delta.py FRESH.json SNAPSHOT.json METRIC:DIRECTION [...]
-                   [--max-regress 0.15]
+                   [--max-regress 0.15] [--require]
 
 Each METRIC:DIRECTION names a top-level numeric field in both JSON
 documents and which way is better: ``lower`` (latencies, allocs) or
@@ -12,10 +12,13 @@ documents and which way is better: ``lower`` (latencies, allocs) or
 
 Snapshots are blessed by copying a CI artifact over the repo-root file;
 until then they hold ``null`` placeholders (see BENCH_encode.json for
-the convention) and every comparison is skipped, so wiring the gate
-into CI is safe before the first real numbers land. A metric is also
-skipped when either side is missing, non-numeric, or the snapshot value
-is zero (no relative delta exists).
+the convention) and every comparison is reported as an explicit
+``SKIPPED (unblessed)`` line, so wiring the gate into CI is safe before
+the first real numbers land. A metric is also skipped when either side
+is missing, non-numeric, or the snapshot value is zero (no relative
+delta exists). Pass ``--require`` once a snapshot has been blessed:
+skips then fail the run with exit 1, so a silently-renamed or dropped
+metric can never turn the gate into a no-op.
 
 Stdlib only — CI runners and the authoring container both lack
 third-party Python packages.
@@ -65,12 +68,19 @@ def main() -> int:
         default=0.15,
         help="relative regression that fails the gate (default 0.15)",
     )
+    ap.add_argument(
+        "--require",
+        action="store_true",
+        help="fail (exit 1) when any metric is skipped — for gates whose "
+        "snapshot has been blessed and must stay comparable",
+    )
     args = ap.parse_args()
 
     fresh = load(args.fresh)
     snap = load(args.snapshot)
 
     failures = []
+    skipped = []
     for spec in args.metrics:
         name, sep, direction = spec.partition(":")
         if not sep or direction not in ("lower", "higher"):
@@ -78,10 +88,12 @@ def main() -> int:
         f = numeric(fresh, name)
         s = numeric(snap, name)
         if f is None or s is None:
-            print(f"  skip  {name}: unblessed or missing (fresh={f}, snapshot={s})")
+            print(f"  SKIPPED (unblessed) {name}: fresh={f}, snapshot={s}")
+            skipped.append(name)
             continue
         if s == 0.0:
-            print(f"  skip  {name}: snapshot is 0, no relative delta")
+            print(f"  SKIPPED (zero snapshot) {name}: no relative delta exists")
+            skipped.append(name)
             continue
         # Positive regression = got worse in the metric's bad direction.
         regress = (f - s) / s if direction == "lower" else (s - f) / s
@@ -96,7 +108,16 @@ def main() -> int:
     if failures:
         print(f"bench_delta: {len(failures)} metric(s) regressed: {', '.join(failures)}")
         return 1
-    print("bench_delta: within budget")
+    if args.require and skipped:
+        print(
+            f"bench_delta: --require set but {len(skipped)} metric(s) "
+            f"skipped: {', '.join(skipped)}"
+        )
+        return 1
+    if skipped:
+        print(f"bench_delta: within budget ({len(skipped)} metric(s) skipped)")
+    else:
+        print("bench_delta: within budget")
     return 0
 
 
