@@ -1,0 +1,163 @@
+//! Precision-cascade benchmarks: the calibrated b1 prefilter with
+//! margin-gated escalation to exact decode, against the exact-only
+//! engine it replaces (the acceptance shape: batch=64, D=2000, page).
+//!
+//! Three operating points bracket the cascade:
+//!   threshold = 0        -> never escalates (the b1 ceiling),
+//!   threshold = calibrated -> the `loghd calibrate` operating point,
+//!   threshold = +inf     -> always escalates (gate overhead floor;
+//!                           answers are bit-identical to exact).
+//!
+//! Output: results/cascade.csv plus machine-readable
+//! results/BENCH_cascade.json (medians, the cascade's speedup over the
+//! exact engine — acceptance wants >= 1.5x at the calibrated point —
+//! plus the calibrated threshold, held-out agreement/escalation, and
+//! allocator traffic through the steady-state `infer_into` path) so the
+//! perf trajectory is trackable across PRs (EXPERIMENTS.md §Perf).
+
+use std::sync::Arc;
+
+use loghd::bench::{bench, CsvWriter};
+use loghd::coordinator::{CascadeCounters, CascadeEngine, Engine, InferScratch, NativeEngine};
+use loghd::data;
+use loghd::loghd::cascade;
+use loghd::loghd::model::{TrainOptions, TrainedStack};
+use loghd::quant::Precision;
+use loghd::testkit::alloc_counter::CountingAlloc;
+use loghd::util::json;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+fn main() -> anyhow::Result<()> {
+    let mut csv = CsvWriter::create("results/cascade.csv", "path,metric,value")?;
+
+    let ds = data::generate_scaled(data::spec("page").unwrap(), 1500, 256);
+    let opts = TrainOptions { epochs: 3, conv_epochs: 1, extra_bundles: 4, ..Default::default() };
+    let stack = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 2000, 0xE5C0DE, &opts)?;
+    let xb = ds.x_test.rows_slice(0, 64);
+
+    // Fit the operating point exactly as `loghd calibrate` would, then
+    // score it on traffic the fit never saw.
+    let cal = cascade::calibrate(
+        &stack.encoder,
+        &stack.loghd,
+        &ds.x_train,
+        cascade::DEFAULT_TARGET,
+        0xE5C0DE,
+    )?;
+    let (heldout_agreement, heldout_escalation) =
+        cascade::evaluate(&stack.encoder, &stack.loghd, &ds.x_test, cal.threshold);
+    println!(
+        "calibrated threshold {:.6}: fit agreement {:.4} (CI [{:.4}, {:.4}]), held-out agreement {:.4}, escalation {:.3}",
+        cal.threshold,
+        cal.agreement,
+        cal.agreement_ci.0,
+        cal.agreement_ci.1,
+        heldout_agreement,
+        heldout_escalation
+    );
+
+    // --- Exact-only baseline: the engine the cascade competes with ---
+    let mut exact = NativeEngine::with_precision(
+        stack.encoder.clone(),
+        stack.loghd.clone(),
+        "page",
+        Precision::F32,
+    );
+    let mut scratch = InferScratch::new();
+    let _ = exact.infer_into(&xb, &mut scratch)?;
+    let exact_stats = bench(5, 40, || {
+        let _ = exact.infer_into(&xb, &mut scratch).unwrap();
+    });
+    println!("{}", exact_stats.format_line("exact f32 infer_into batch=64 D=2000"));
+    csv.row(&[
+        "exact_f32".into(),
+        "batch64_median_s".into(),
+        format!("{:.9}", exact_stats.median),
+    ])?;
+
+    // --- Cascade at the three operating points ---
+    let mut calibrated_median = f64::NAN;
+    let mut calibrated_allocs_per_batch = f64::NAN;
+    let mut calibrated_escalation_benched = f64::NAN;
+    let mut never_median = f64::NAN;
+    let mut always_median = f64::NAN;
+    for (tag, threshold) in [
+        ("never_escalate", 0.0f32),
+        ("calibrated", cal.threshold),
+        ("always_escalate", f32::INFINITY),
+    ] {
+        let counters = Arc::new(CascadeCounters::new());
+        let mut engine = CascadeEngine::with_precision(
+            stack.encoder.clone(),
+            stack.loghd.clone(),
+            "page",
+            Precision::F32,
+            threshold,
+            Arc::clone(&counters),
+        );
+        let mut scratch = InferScratch::new();
+        // Settle scratch high-water marks so the allocator delta
+        // measures the steady state, as in benches/serving.rs.
+        let _ = engine.infer_into(&xb, &mut scratch)?;
+        let a0 = ALLOC.allocs();
+        const ALLOC_PROBE_ITERS: usize = 32;
+        for _ in 0..ALLOC_PROBE_ITERS {
+            let _ = engine.infer_into(&xb, &mut scratch).unwrap();
+        }
+        let allocs_per_batch = (ALLOC.allocs() - a0) as f64 / ALLOC_PROBE_ITERS as f64;
+        let stats = bench(5, 40, || {
+            let _ = engine.infer_into(&xb, &mut scratch).unwrap();
+        });
+        let (tier1, escalated, _) = counters.snapshot();
+        let esc_rate = escalated as f64 / (tier1 + escalated).max(1) as f64;
+        println!(
+            "{}",
+            stats.format_line(&format!("cascade {tag} (t={threshold:.4}) batch=64 D=2000"))
+        );
+        println!("  escalation on benched traffic: {esc_rate:.3}  allocs/batch: {allocs_per_batch:.1}");
+        match tag {
+            "calibrated" => {
+                calibrated_median = stats.median;
+                calibrated_allocs_per_batch = allocs_per_batch;
+                calibrated_escalation_benched = esc_rate;
+            }
+            "never_escalate" => never_median = stats.median,
+            _ => always_median = stats.median,
+        }
+        csv.row(&[
+            format!("cascade_{tag}"),
+            "batch64_median_s".into(),
+            format!("{:.9}", stats.median),
+        ])?;
+    }
+
+    let speedup = exact_stats.median / calibrated_median;
+    println!(
+        "cascade speedup over exact f32 at the calibrated point: {speedup:.2}x (target >= 1.5x); \
+         b1 ceiling {:.2}x, always-escalate floor {:.2}x",
+        exact_stats.median / never_median,
+        exact_stats.median / always_median
+    );
+
+    let report = json::obj(vec![
+        ("dispatch", json::s(loghd::tensor::simd::path_label())),
+        ("batch", json::num(64.0)),
+        ("d", json::num(2000.0)),
+        ("calibrated_threshold", json::num(cal.threshold as f64)),
+        ("calibration_agreement", json::num(cal.agreement)),
+        ("heldout_agreement", json::num(heldout_agreement)),
+        ("heldout_escalation_rate", json::num(heldout_escalation)),
+        ("benched_escalation_rate", json::num(calibrated_escalation_benched)),
+        ("exact_f32_median_s", json::num(exact_stats.median)),
+        ("cascade_calibrated_median_s", json::num(calibrated_median)),
+        ("cascade_never_escalate_median_s", json::num(never_median)),
+        ("cascade_always_escalate_median_s", json::num(always_median)),
+        ("cascade_speedup_vs_exact", json::num(speedup)),
+        ("cascade_allocs_per_batch", json::num(calibrated_allocs_per_batch)),
+    ]);
+    std::fs::write("results/BENCH_cascade.json", json::to_string_pretty(&report))?;
+    println!("wrote results/BENCH_cascade.json");
+    Ok(())
+}

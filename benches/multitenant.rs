@@ -137,24 +137,28 @@ fn main() -> anyhow::Result<()> {
             path: root.join("log"),
             precision: Precision::F32,
             replicas: 1,
+            cascade: false,
         },
         TenantSpec {
             name: "log_b8".into(),
             path: root.join("log"),
             precision: Precision::B8,
             replicas: 1,
+            cascade: false,
         },
         TenantSpec {
             name: "log_b1".into(),
             path: root.join("log"),
             precision: Precision::B1,
             replicas: 1,
+            cascade: false,
         },
         TenantSpec {
             name: "conv_f32".into(),
             path: root.join("conv"),
             precision: Precision::F32,
             replicas: 1,
+            cascade: false,
         },
     ];
 

@@ -6,8 +6,9 @@
 //!              [--baseline_out models/page_conv] [--decohd_out models/page_deco [--rank 3]]
 //! loghd eval   --model models/page [--p 0.2 --bits 8]   # any registered artifact kind
 //! loghd inspect <dir>                     # ModelCard + zoo kind + trait stored_bits
+//! loghd calibrate --model models/page [--target 0.995]  # fit the cascade threshold
 //! loghd serve  --model page=models/page:8,conv=models/page_conv
-//!              [--replicas 2 --default page --addr 127.0.0.1:7878]
+//!              [--replicas 2 --default page --addr 127.0.0.1:7878] [--cascade true]
 //!              | --artifacts artifacts/page_smoke [--entry infer_loghd]
 //! loghd robustness [--profile smoke|full] [--decohd true] [--out path.json]
 //!                  [--fault-model bitflip,drift,stuckat,line|all [--span 2]]
@@ -103,6 +104,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "inspect" => cmd_inspect(&args),
+        "calibrate" => cmd_calibrate(&args),
         "serve" => cmd_serve(&args),
         "robustness" => cmd_robustness(&args),
         "drift" => cmd_drift(&args),
@@ -121,8 +123,11 @@ USAGE:
                [--decohd_out <dir> [--rank r]]   # also save a DecoHD decomposition
   loghd eval   --model <dir> [--p <flip prob>] [--bits 1|2|4|8|32] [--seed S]
   loghd inspect <dir>                    # or: loghd inspect --model <dir>
+  loghd calibrate --model <dir> [--dataset <name>] [--target 0.995] [--seed S]
+               [--out <path.json>]      # fit + persist the cascade threshold
   loghd serve  (--model <name=dir[:bits],...> | --artifacts <bundle dir> [--entry infer_loghd])
                [--replicas R] [--default <name>] [--bits 1|2|4|8|32]
+               [--cascade true]        # b1 prefilter + margin-gated escalation
                [--addr 127.0.0.1:7878] [--max_batch 64] [--max_delay_ms 2]
                [--reactors 2]          # event-loop reactor threads (unix)
   loghd robustness [--profile smoke|full] [--dataset <name>] [--d <dim>]
@@ -146,12 +151,24 @@ of stored bit-planes the fault injector targets — each with its
 (rows x cols x bits) geometry and value domain, cross-checked against
 the trait-reported total.
 
+calibrate fits the precision cascade's operating threshold offline: it
+decodes a calibration set through both the packed b1 twin and the exact
+f32 path, picks the smallest normalized-margin threshold whose b1/exact
+agreement meets --target (with a bootstrap confidence interval whose
+lower bound must also clear it), reports held-out agreement, and
+persists the threshold into the artifact's model.json — which is what
+`serve --cascade` admission requires.
+
 serve hosts every named model behind one TCP endpoint speaking both
 JSON-lines and length-prefixed binary frames (sniffed per connection by
 the first byte; see docs/PROTOCOL.md): requests route by their \"model\"
 field (default: the --default tenant), {\"cmd\":\"models\"} lists tenants,
 {\"cmd\":\"reload\"} hot-swaps one tenant's artifact without dropping
-in-flight requests. On unix the front door is --reactors nonblocking
+in-flight requests. --cascade true serves every --model tenant through
+the precision cascade (each artifact must carry a calibrated threshold
+— run `loghd calibrate` first — and the tenant's bits become the exact
+tier, so b1 tenants are refused); per-tenant stats grow cascade_*
+tier/escalation fields. On unix the front door is --reactors nonblocking
 epoll/poll event-loop threads; connections cost buffers, not threads.
 
 robustness solves equal-memory (method, precision, n/sparsity) cells at
@@ -362,6 +379,71 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let model_dir = PathBuf::from(flag(args, "model").context("--model <dir> required")?);
+    let target: f64 = flag(args, "target")
+        .map(str::parse)
+        .transpose()
+        .context("--target")?
+        .unwrap_or(crate::loghd::cascade::DEFAULT_TARGET);
+    let seed: u64 = flag(args, "seed").unwrap_or("1").parse().context("--seed")?;
+    let loaded = persist::load_any(&model_dir)?;
+    let (encoder, model) = match loaded {
+        persist::LoadedModel::LogHd(e, m) => (e, m),
+        other => bail!(
+            "calibrate needs a loghd artifact (the cascade's b1 twin), got kind '{}'",
+            other.kind()
+        ),
+    };
+    // Dataset inferred from feature width, exactly like `eval`.
+    let spec = match flag(args, "dataset") {
+        Some(name) => data::spec(name).with_context(|| format!("unknown dataset {name}"))?,
+        None => data::SPECS
+            .iter()
+            .find(|s| s.features == encoder.features())
+            .context("no dataset matches model feature width; pass --dataset")?,
+    };
+    let ds = data::generate(spec);
+    let cal = crate::loghd::cascade::calibrate(&encoder, &model, &ds.x_train, target, seed)?;
+    let (holdout_agreement, holdout_escalation) =
+        crate::loghd::cascade::evaluate(&encoder, &model, &ds.x_test, cal.threshold);
+    crate::loghd::cascade::write_threshold(&model_dir, &cal)?;
+    println!(
+        "calibrated cascade on {} ({} rows): threshold {:.6e} at target {:.4}",
+        spec.name, cal.rows, cal.threshold, cal.target
+    );
+    println!(
+        "  fit:      agreement {:.4} (bootstrap CI [{:.4}, {:.4}]), escalation {:.4}",
+        cal.agreement, cal.agreement_ci.0, cal.agreement_ci.1, cal.escalation_rate
+    );
+    println!(
+        "  held-out: agreement {:.4}, escalation {:.4} ({} rows)",
+        holdout_agreement,
+        holdout_escalation,
+        ds.x_test.rows()
+    );
+    println!("wrote cascade_threshold into {}", model_dir.join("model.json").display());
+    if let Some(path) = flag(args, "out") {
+        use crate::util::json;
+        write_json_to(
+            path,
+            &json::obj(vec![
+                ("dataset", json::s(spec.name)),
+                ("threshold", json::num(cal.threshold as f64)),
+                ("target", json::num(cal.target)),
+                ("fit_agreement", json::num(cal.agreement)),
+                ("fit_agreement_ci_lower", json::num(cal.agreement_ci.0)),
+                ("fit_agreement_ci_upper", json::num(cal.agreement_ci.1)),
+                ("fit_escalation_rate", json::num(cal.escalation_rate)),
+                ("fit_rows", json::num(cal.rows as f64)),
+                ("holdout_agreement", json::num(holdout_agreement)),
+                ("holdout_escalation_rate", json::num(holdout_escalation)),
+            ]),
+        )?;
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = flag(args, "addr").unwrap_or("127.0.0.1:7878").to_string();
     let max_batch: usize = flag(args, "max_batch").unwrap_or("64").parse()?;
@@ -388,9 +470,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ModelRegistry::single(&manifest.name, "aot-bundle", manifest.features, &cfg, factories)
     } else if let Some(spec_str) = flag(args, "model") {
         let default_bits: u32 = flag(args, "bits").unwrap_or("32").parse().context("--bits")?;
+        let cascade: bool = flag(args, "cascade")
+            .map(str::parse)
+            .transpose()
+            .context("--cascade must be true|false")?
+            .unwrap_or(false);
         let specs = spec_str
             .split(',')
-            .map(|frag| TenantSpec::parse(frag.trim(), default_bits, replicas))
+            .map(|frag| {
+                TenantSpec::parse(frag.trim(), default_bits, replicas).map(|mut s| {
+                    s.cascade = cascade;
+                    s
+                })
+            })
             .collect::<Result<Vec<_>>>()?;
         ModelRegistry::open(&specs, flag(args, "default"), &cfg)?
     } else {
@@ -402,12 +494,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("serving on {} — tenants:", server.addr);
     for info in registry.describe() {
         println!(
-            "  {:<16} kind={:<12} precision={:<4} replicas={} features={}{}",
+            "  {:<16} kind={:<12} precision={:<4} replicas={} features={}{}{}",
             info.name,
             info.kind,
             info.precision,
             info.replicas,
             info.features,
+            if info.cascade.is_some() { "  cascade=b1-prefilter" } else { "" },
             if info.is_default { "  (default)" } else { "" }
         );
     }
@@ -679,6 +772,23 @@ mod tests {
         .unwrap();
         // eval works for every registered kind through the trait layer
         run(vec!["eval".into(), "--model".into(), ddir.to_str().unwrap().into()]).unwrap();
+        // calibrate fits + persists the cascade threshold into the card...
+        assert!(ModelCard::load(&dir).unwrap().cascade_threshold.is_none());
+        run(vec![
+            "calibrate".into(),
+            "--model".into(), dir.to_str().unwrap().into(),
+            "--target".into(), "0.9".into(),
+            "--seed".into(), "2".into(),
+        ])
+        .unwrap();
+        assert!(ModelCard::load(&dir).unwrap().cascade_threshold.is_some());
+        // ...and refuses artifact kinds with no b1 twin to prefilter with.
+        let err = run(vec![
+            "calibrate".into(),
+            "--model".into(), bdir.to_str().unwrap().into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("loghd artifact"), "{err}");
         // inspect resolves each artifact through the zoo registry
         for d in [&dir, &bdir, &ddir] {
             run(vec!["inspect".into(), d.to_str().unwrap().into()]).unwrap();

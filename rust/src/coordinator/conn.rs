@@ -33,7 +33,7 @@ use crate::util::json::{self, Value};
 
 use super::batcher::Response;
 use super::frame;
-use super::registry::{ModelRegistry, TenantInfo};
+use super::registry::{CascadeSnapshot, ModelRegistry, TenantInfo};
 use super::stats::StatsSnapshot;
 
 /// Wire-level error: (human message, stable machine code).
@@ -574,6 +574,23 @@ fn trainer_fields(t: &crate::loghd::online::TrainerStats) -> Vec<(&'static str, 
     ]
 }
 
+/// Extra `stats`/`models` fields for `--cascade` tenants. Conditional on
+/// the cascade being configured so plain tenants keep the exact 9-field
+/// stats surface the conformance goldens pin. Rates are derived here so
+/// both protocols report identical documents.
+fn cascade_fields(c: &CascadeSnapshot) -> Vec<(&'static str, Value)> {
+    let total = (c.tier1 + c.escalated) as f64;
+    let rate = |n: u64| if total > 0.0 { n as f64 / total } else { 0.0 };
+    vec![
+        ("cascade_threshold", json::num(c.threshold as f64)),
+        ("cascade_tier1", json::num(c.tier1 as f64)),
+        ("cascade_escalated", json::num(c.escalated as f64)),
+        ("cascade_agreed", json::num(c.agreed as f64)),
+        ("cascade_tier1_rate", json::num(rate(c.tier1))),
+        ("cascade_escalation_rate", json::num(rate(c.escalated))),
+    ]
+}
+
 fn tenant_json(info: &TenantInfo) -> Value {
     let mut fields = vec![
         ("model", json::s(info.name.clone())),
@@ -591,6 +608,9 @@ fn tenant_json(info: &TenantInfo) -> Value {
     if let Some(t) = &info.trainer {
         fields.extend(trainer_fields(t));
     }
+    if let Some(c) = &info.cascade {
+        fields.extend(cascade_fields(c));
+    }
     json::obj(fields)
 }
 
@@ -607,6 +627,9 @@ pub fn admin_reply(doc: &Value, registry: &ModelRegistry) -> Result<Value, WireE
             fields.extend(stats_fields(&s));
             if let Ok(Some(t)) = registry.trainer_stats(model) {
                 fields.extend(trainer_fields(&t));
+            }
+            if let Ok(Some(c)) = registry.cascade_stats(model) {
+                fields.extend(cascade_fields(&c));
             }
             Ok(json::obj(fields))
         }
@@ -913,6 +936,7 @@ mod tests {
         assert_eq!(err.get("code").and_then(Value::as_str), Some("no_trainer"));
         let stats = json::parse(lines[1]).unwrap();
         assert!(stats.get("trainer_ingested").is_none());
+        assert!(stats.get("cascade_threshold").is_none(), "bare tenants keep the 9-field surface");
         let n = conn.writable().len();
         conn.advance_write(n);
 
@@ -961,6 +985,69 @@ mod tests {
         assert_eq!(stats.get("trainer_ingested").and_then(Value::as_f64), Some(1.0));
         assert_eq!(stats.get("trainer_rejected").and_then(Value::as_f64), Some(1.0));
         assert_eq!(stats.get("trainer_generation").and_then(Value::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn stats_surface_grows_cascade_fields_only_for_cascade_tenants() {
+        // Pin the exact extra field set `--cascade` tenants expose on the
+        // `stats` and `models` verbs; plain tenants keep the golden
+        // 9-field surface (asserted next to the trainer fields above).
+        let root = std::env::temp_dir().join("loghd_conn_cascade_stats");
+        let _ = std::fs::remove_dir_all(&root);
+        let ds = crate::data::generate_scaled(crate::data::spec("page").unwrap(), 200, 30);
+        let opts = crate::loghd::TrainOptions {
+            epochs: 1,
+            conv_epochs: 0,
+            extra_bundles: 1,
+            ..Default::default()
+        };
+        let st =
+            crate::loghd::TrainedStack::train(&ds.x_train, &ds.y_train, 5, 128, 1, &opts).unwrap();
+        crate::loghd::persist::save(&root.join("m"), &st.encoder, &st.loghd).unwrap();
+        let cal =
+            crate::loghd::cascade::calibrate(&st.encoder, &st.loghd, &ds.x_train, 0.9, 3).unwrap();
+        crate::loghd::cascade::write_threshold(&root.join("m"), &cal).unwrap();
+        let spec = crate::coordinator::TenantSpec {
+            name: "m".into(),
+            path: root.join("m"),
+            precision: crate::quant::Precision::F32,
+            replicas: 1,
+            cascade: true,
+        };
+        let registry = ModelRegistry::open(&[spec], None, &BatcherConfig::default()).unwrap();
+        for i in 0..4 {
+            registry.submit_blocking(None, ds.x_test.row(i).to_vec()).unwrap();
+        }
+        let mut conn = Conn::new(frame::DEFAULT_MAX_FRAME);
+        let mut out = Vec::new();
+        conn.ingest(b"{\"cmd\": \"stats\"}\n{\"cmd\": \"models\"}\n");
+        conn.process(&registry, usize::MAX, &mut out);
+        let text = String::from_utf8(conn.writable().to_vec()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let stats = json::parse(lines[0]).unwrap();
+        for key in [
+            "cascade_threshold",
+            "cascade_tier1",
+            "cascade_escalated",
+            "cascade_agreed",
+            "cascade_tier1_rate",
+            "cascade_escalation_rate",
+        ] {
+            assert!(stats.get(key).is_some(), "stats reply missing {key}");
+        }
+        assert_eq!(
+            stats.get("cascade_threshold").and_then(Value::as_f64),
+            Some(cal.threshold as f64)
+        );
+        let tier1 = stats.get("cascade_tier1").and_then(Value::as_f64).unwrap();
+        let esc = stats.get("cascade_escalated").and_then(Value::as_f64).unwrap();
+        assert_eq!(tier1 + esc, 4.0, "every routed row lands in exactly one tier");
+        let rate = stats.get("cascade_escalation_rate").and_then(Value::as_f64).unwrap();
+        assert!((rate - esc / 4.0).abs() < 1e-12);
+        let models = json::parse(lines[1]).unwrap();
+        let arr = models.get("models").and_then(Value::as_array).unwrap();
+        assert!(arr[0].get("cascade_tier1").is_some(), "models verb carries the same fields");
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

@@ -20,12 +20,17 @@
 //! pure length-prefixed binary codec. JSON-lines and binary clients get
 //! semantically identical replies — `docs/PROTOCOL.md` specifies both.
 //!
-//! Four engines implement [`Engine`]:
+//! Five engines implement [`Engine`]:
 //! - [`worker::PjrtEngine`] — the AOT path: compiled HLO via the PJRT C
 //!   API (Python never runs here).
 //! - [`worker::NativeEngine`] — the pure-Rust LogHD path used by the
 //!   figure harnesses and as a serving fallback; also the parity
 //!   reference. Serves f32, int8, and 1-bit packed precisions.
+//! - [`worker::CascadeEngine`] — the adaptive precision cascade: every
+//!   batch runs the packed b1 twin first, rows whose normalized decode
+//!   margin clears a calibrated threshold are answered immediately, and
+//!   only the ambiguous remainder is gathered into a compacted
+//!   sub-batch for exact decode (see `docs/ARCHITECTURE.md` §Hot path).
 //! - [`worker::ConventionalEngine`] — the O(C·D) baseline, for tenant
 //!   mixes that compare LogHD against it under one memory budget.
 //! - [`worker::ZooEngine`] — the generic trait-backed engine: any
@@ -80,10 +85,13 @@ pub use batcher::{
     BatcherConfig, CompletionSink, Coordinator, ReloadError, Request, Response, ResponseCallback,
     SubmitError, Ticket,
 };
-pub use registry::{ModelRegistry, RouteError, TenantInfo, TenantSpec};
+pub use registry::{CascadeSnapshot, ModelRegistry, RouteError, TenantInfo, TenantSpec};
 pub use server::{Server, ServerConfig, ServerStats};
 pub use stats::StatsSnapshot;
-pub use worker::{ConventionalEngine, EngineFactory, NativeEngine, PjrtEngine, ZooEngine};
+pub use worker::{
+    CascadeCounters, CascadeEngine, ConventionalEngine, EngineFactory, NativeEngine, PjrtEngine,
+    ZooEngine,
+};
 
 use anyhow::Result;
 
@@ -127,6 +135,21 @@ pub struct InferScratch {
     pub dists: Matrix,
     /// Per-query `|A|²` terms of the fused squared-distance decode.
     pub asq: Vec<f32>,
+    /// Per-row normalized decode margins (cascade tier-1 output).
+    pub margins: Vec<f32>,
+    /// Original batch indices of the rows the cascade escalates.
+    pub esc_rows: Vec<u32>,
+    /// Compacted escalated sub-batch, gathered from `enc` (no re-encode).
+    pub esc_enc: Matrix,
+    /// Exact-tier activations over the escalated sub-batch.
+    pub esc_acts: Matrix,
+    /// Exact-tier squared distances over the escalated sub-batch.
+    pub esc_dists: Matrix,
+    /// Exact-tier `|A|²` terms over the escalated sub-batch.
+    pub esc_asq: Vec<f32>,
+    /// Exact-tier labels over the escalated sub-batch, scattered back
+    /// into `labels` by row index.
+    pub esc_labels: Vec<i32>,
 }
 
 impl InferScratch {

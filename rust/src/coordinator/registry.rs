@@ -28,7 +28,7 @@ use super::batcher::{
     BatcherConfig, CompletionSink, Coordinator, Response, ResponseCallback, SubmitError, Ticket,
 };
 use super::stats::StatsSnapshot;
-use super::worker::{EngineFactory, NativeEngine};
+use super::worker::{CascadeCounters, CascadeEngine, EngineFactory, NativeEngine};
 
 /// How one tenant is provisioned: artifact path, serving precision, and
 /// replica count.
@@ -38,6 +38,11 @@ pub struct TenantSpec {
     pub path: PathBuf,
     pub precision: Precision,
     pub replicas: usize,
+    /// Serve through the precision cascade: b1 prefilter + margin-gated
+    /// escalation to the exact tier at `precision`. Admission requires a
+    /// calibrated `cascade_threshold` in the artifact's model card (run
+    /// `loghd calibrate`) and an exact tier wider than b1.
+    pub cascade: bool,
 }
 
 impl TenantSpec {
@@ -76,7 +81,7 @@ impl TenantSpec {
         if name.is_empty() || path.is_empty() {
             bail!("bad model spec '{fragment}' (want name=path[:bits])");
         }
-        Ok(Self { name, path: PathBuf::from(path), precision, replicas })
+        Ok(Self { name, path: PathBuf::from(path), precision, replicas, cascade: false })
     }
 }
 
@@ -143,6 +148,39 @@ pub struct TenantInfo {
     pub stats: StatsSnapshot,
     /// Online-trainer counters, for tenants with a trainer attached.
     pub trainer: Option<TrainerStats>,
+    /// Cascade operating point + tier counters, for `--cascade` tenants.
+    pub cascade: Option<CascadeSnapshot>,
+}
+
+/// Point-in-time cascade telemetry for one tenant (the `stats` /
+/// `models` verbs): the calibrated operating threshold plus the shared
+/// [`CascadeCounters`] every replica in the pool reports into.
+#[derive(Debug, Clone, Copy)]
+pub struct CascadeSnapshot {
+    /// Normalized-margin threshold the pool is currently gating on.
+    pub threshold: f32,
+    /// Rows answered by the b1 tier since startup.
+    pub tier1: u64,
+    /// Rows escalated to the exact tier since startup.
+    pub escalated: u64,
+    /// Escalated rows whose tentative b1 label matched the exact label.
+    pub agreed: u64,
+}
+
+/// Live cascade state for one tenant. The counters Arc is created once
+/// at `open` and survives hot reloads and online publishes, so the
+/// tier-1/escalation counters stay monotone across generations; only
+/// the threshold is refreshed from the incoming artifact's model card.
+struct CascadeState {
+    threshold: f32,
+    counters: Arc<CascadeCounters>,
+}
+
+impl CascadeState {
+    fn snapshot(&self) -> CascadeSnapshot {
+        let (tier1, escalated, agreed) = self.counters.snapshot();
+        CascadeSnapshot { threshold: self.threshold, tier1, escalated, agreed }
+    }
 }
 
 /// Mutable tenant metadata, swapped under lock on hot reload.
@@ -162,6 +200,9 @@ struct Tenant {
     /// verb). The mutex serializes ingest/refit/publish; inference
     /// never takes it.
     trainer: Mutex<Option<OnlineTrainer>>,
+    /// Cascade operating point + shared counters, for `--cascade`
+    /// tenants; `None` tenants serve their precision directly.
+    cascade: Mutex<Option<CascadeState>>,
 }
 
 impl Tenant {
@@ -171,6 +212,7 @@ impl Tenant {
             meta: Mutex::new(meta),
             name: Arc::from(name),
             trainer: Mutex::new(None),
+            cascade: Mutex::new(None),
         }
     }
 }
@@ -210,27 +252,42 @@ impl ModelRegistry {
                 bail!("duplicate tenant name '{}'", spec.name);
             }
             let replicas = spec.replicas.max(1);
-            let (kind, features, factories) =
-                build_factories(&spec.path, spec.precision, replicas, &spec.name)?;
+            let cascade = if spec.cascade {
+                let threshold = cascade_admission(&spec.path, spec.precision, &spec.name)?;
+                Some(CascadeState { threshold, counters: Arc::new(CascadeCounters::new()) })
+            } else {
+                None
+            };
+            let (kind, features, factories) = match &cascade {
+                Some(cs) => zoo::cascade_engine_factories(
+                    &spec.path,
+                    spec.precision,
+                    replicas,
+                    &spec.name,
+                    cs.threshold,
+                    Arc::clone(&cs.counters),
+                )?,
+                None => build_factories(&spec.path, spec.precision, replicas, &spec.name)?,
+            };
             crate::log_info!(
-                "tenant '{}': kind={kind} path={} precision={} replicas={replicas}",
+                "tenant '{}': kind={kind} path={} precision={} replicas={replicas} cascade={}",
                 spec.name,
                 spec.path.display(),
-                spec.precision.label()
+                spec.precision.label(),
+                spec.cascade
             );
             let coordinator = Arc::new(Coordinator::start_pool(features, cfg.clone(), factories));
-            tenants.insert(
-                spec.name.clone(),
-                Tenant::new(
-                    coordinator,
-                    TenantMeta {
-                        kind,
-                        path: Some(spec.path.clone()),
-                        precision: spec.precision,
-                    },
-                    &spec.name,
-                ),
+            let tenant = Tenant::new(
+                coordinator,
+                TenantMeta {
+                    kind,
+                    path: Some(spec.path.clone()),
+                    precision: spec.precision,
+                },
+                &spec.name,
             );
+            *tenant.cascade.lock().unwrap() = cascade;
+            tenants.insert(spec.name.clone(), tenant);
         }
         let default = match default {
             Some(d) => {
@@ -409,6 +466,7 @@ impl ModelRegistry {
             is_default: name == self.default,
             stats: t.coordinator.stats(),
             trainer: t.trainer.lock().unwrap().as_ref().map(|tr| tr.stats()),
+            cascade: t.cascade.lock().unwrap().as_ref().map(CascadeState::snapshot),
         }
     }
 
@@ -451,8 +509,38 @@ impl ModelRegistry {
             )));
         }
         let replicas = tenant.coordinator.replicas();
-        let (kind, features, factories) = build_factories(&path, precision, replicas, name)
-            .map_err(|e| fail(format!("{e:#}")))?;
+        // Cascade tenants stay cascade tenants across reloads: the
+        // incoming artifact must itself be calibrated (its threshold
+        // replaces the old one), and the counters Arc carries over so
+        // the tier telemetry stays monotone across generations.
+        let cascade = tenant
+            .cascade
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|cs| Arc::clone(&cs.counters));
+        let (kind, features, factories, new_threshold) = match &cascade {
+            Some(counters) => {
+                let threshold = cascade_admission(&path, precision, name)
+                    .map_err(|e| fail(format!("{e:#}")))?;
+                let (kind, features, factories) = zoo::cascade_engine_factories(
+                    &path,
+                    precision,
+                    replicas,
+                    name,
+                    threshold,
+                    Arc::clone(counters),
+                )
+                .map_err(|e| fail(format!("{e:#}")))?;
+                (kind, features, factories, Some(threshold))
+            }
+            None => {
+                let (kind, features, factories) =
+                    build_factories(&path, precision, replicas, name)
+                        .map_err(|e| fail(format!("{e:#}")))?;
+                (kind, features, factories, None)
+            }
+        };
         if features != want {
             return Err(fail(format!("artifact feature width {features} != serving width {want}")));
         }
@@ -465,6 +553,11 @@ impl ModelRegistry {
             meta.kind = kind;
             meta.path = Some(path);
             meta.precision = precision;
+            if let Some(threshold) = new_threshold {
+                if let Some(cs) = tenant.cascade.lock().unwrap().as_mut() {
+                    cs.threshold = threshold;
+                }
+            }
         }
         crate::log_info!("tenant '{name}' reloaded ({} replicas notified)", replicas);
         Ok(self.info(name, tenant))
@@ -516,14 +609,34 @@ impl ModelRegistry {
             let (encoder, model_snap) = trainer.snapshot();
             let precision = tenant.meta.lock().unwrap().precision;
             let replicas = tenant.coordinator.replicas();
+            // Cascade tenants publish cascade engines: the operating
+            // threshold carries over from the last calibration (the
+            // margin normalization is per-model, so the gate stays
+            // meaningful across refits; the live `agreed` counter tracks
+            // the realized b1/exact agreement until the next
+            // `loghd calibrate` + reload tightens it again).
+            let cascade = tenant
+                .cascade
+                .lock()
+                .unwrap()
+                .as_ref()
+                .map(|cs| (cs.threshold, Arc::clone(&cs.counters)));
             let factories: Vec<EngineFactory> = (0..replicas)
-                .map(|_| {
-                    NativeEngine::factory_with_precision(
+                .map(|_| match &cascade {
+                    Some((threshold, counters)) => CascadeEngine::factory_with_precision(
                         encoder.clone(),
                         model_snap.clone(),
                         name.to_string(),
                         precision,
-                    )
+                        *threshold,
+                        Arc::clone(counters),
+                    ),
+                    None => NativeEngine::factory_with_precision(
+                        encoder.clone(),
+                        model_snap.clone(),
+                        name.to_string(),
+                        precision,
+                    ),
                 })
                 .collect();
             tenant
@@ -556,6 +669,45 @@ impl ModelRegistry {
     pub fn trainer_stats(&self, model: Option<&str>) -> Result<Option<TrainerStats>, RouteError> {
         let (_, tenant) = self.tenant(model)?;
         Ok(tenant.trainer.lock().unwrap().as_ref().map(|t| t.stats()))
+    }
+
+    /// Cascade operating point + tier counters for the `stats` verb;
+    /// `None` for tenants that serve their precision directly.
+    pub fn cascade_stats(
+        &self,
+        model: Option<&str>,
+    ) -> Result<Option<CascadeSnapshot>, RouteError> {
+        let (_, tenant) = self.tenant(model)?;
+        Ok(tenant.cascade.lock().unwrap().as_ref().map(CascadeState::snapshot))
+    }
+}
+
+/// Admission gate for `--cascade` tenants, applied at [`ModelRegistry::open`]
+/// and again on every [`ModelRegistry::reload`]: the artifact must carry a
+/// calibrated `cascade_threshold` in its model card, and the exact tier
+/// must be wider than the b1 prefilter (a b1 exact tier would make
+/// escalation a no-op).
+fn cascade_admission(path: &Path, precision: Precision, name: &str) -> Result<f32> {
+    if precision == Precision::B1 {
+        bail!(
+            "tenant '{name}': --cascade needs an exact tier wider than the b1 \
+             prefilter; serve it at bits 2|4|8|32"
+        );
+    }
+    let card = ModelCard::load(path)
+        .with_context(|| format!("tenant '{name}': cascade admission"))?;
+    match card.cascade_threshold {
+        Some(t) if t.is_finite() && t >= 0.0 => Ok(t as f32),
+        Some(t) => bail!(
+            "tenant '{name}': artifact {} carries an invalid cascade_threshold {t}",
+            path.display()
+        ),
+        None => bail!(
+            "tenant '{name}': artifact {} has no calibrated cascade threshold; \
+             run `loghd calibrate --model {}` first",
+            path.display(),
+            path.display()
+        ),
     }
 }
 
@@ -754,18 +906,21 @@ mod tests {
                 path: root.join("log"),
                 precision: Precision::B1,
                 replicas: 2,
+                cascade: false,
             },
             TenantSpec {
                 name: "conv".into(),
                 path: root.join("conv"),
                 precision: Precision::F32,
                 replicas: 1,
+                cascade: false,
             },
             TenantSpec {
                 name: "deco".into(),
                 path: root.join("deco"),
                 precision: Precision::B8,
                 replicas: 1,
+                cascade: false,
             },
         ];
         let registry =
@@ -800,6 +955,80 @@ mod tests {
         // Unknown tenant and bad default are rejected.
         assert!(registry.reload(Some("nope"), None, None).is_err());
         assert!(ModelRegistry::open(&specs, Some("nope"), &BatcherConfig::default()).is_err());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn cascade_tenants_gate_admission_and_report_tier_stats() {
+        let root = std::env::temp_dir().join("loghd_registry_cascade_test");
+        let _ = std::fs::remove_dir_all(&root);
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 400, 60);
+        let opts =
+            TrainOptions { epochs: 2, conv_epochs: 1, extra_bundles: 2, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 256, 1, &opts).unwrap();
+        crate::loghd::persist::save(&root.join("log"), &st.encoder, &st.loghd).unwrap();
+        let mut spec = TenantSpec {
+            name: "log".into(),
+            path: root.join("log"),
+            precision: Precision::B8,
+            replicas: 1,
+            cascade: true,
+        };
+        let cfg = BatcherConfig::default();
+        // An uncalibrated artifact is refused, and the error names the fix.
+        let err = ModelRegistry::open(std::slice::from_ref(&spec), None, &cfg).unwrap_err();
+        assert!(err.to_string().contains("loghd calibrate"), "{err:#}");
+        // Calibrate + persist the threshold; admission then passes...
+        let cal =
+            crate::loghd::cascade::calibrate(&st.encoder, &st.loghd, &ds.x_train, 0.99, 7)
+                .unwrap();
+        crate::loghd::cascade::write_threshold(&root.join("log"), &cal).unwrap();
+        // ...except at a b1 exact tier, which would make escalation a no-op.
+        spec.precision = Precision::B1;
+        let err = ModelRegistry::open(std::slice::from_ref(&spec), None, &cfg).unwrap_err();
+        assert!(err.to_string().contains("wider than the b1"), "{err:#}");
+        spec.precision = Precision::B8;
+        let registry = ModelRegistry::open(std::slice::from_ref(&spec), None, &cfg).unwrap();
+        for i in 0..8 {
+            let (_, resp) = registry.submit_blocking(None, ds.x_test.row(i).to_vec()).unwrap();
+            assert!((0..5).contains(&resp.label));
+        }
+        let snap = registry.cascade_stats(None).unwrap().unwrap();
+        assert_eq!(snap.threshold, cal.threshold);
+        assert_eq!(snap.tier1 + snap.escalated, 8, "every row lands in exactly one tier");
+        assert!(snap.agreed <= snap.escalated);
+        let info = &registry.describe()[0];
+        assert!(info.cascade.is_some(), "describe() carries the cascade snapshot");
+        // Hot reload keeps the cascade: the threshold is re-admitted from
+        // the (still calibrated) card and the counters carry over.
+        let info = registry.reload(None, None, Some(32)).unwrap();
+        assert_eq!(info.precision, "f32");
+        assert_eq!(info.cascade.unwrap().threshold, cal.threshold);
+        let snap = registry.cascade_stats(None).unwrap().unwrap();
+        assert_eq!(snap.tier1 + snap.escalated, 8, "tier counters survive reload");
+        // The conventional family has no b1 twin to cascade from: even a
+        // card with a threshold is refused at factory construction.
+        crate::loghd::persist::save_conventional(
+            &root.join("conv"),
+            &st.encoder,
+            &ConventionalModel::new(st.prototypes.clone()),
+        )
+        .unwrap();
+        crate::loghd::cascade::write_threshold(&root.join("conv"), &cal).unwrap();
+        let conv = TenantSpec {
+            name: "conv".into(),
+            path: root.join("conv"),
+            precision: Precision::F32,
+            replicas: 1,
+            cascade: true,
+        };
+        let err = ModelRegistry::open(&[conv], None, &cfg).unwrap_err();
+        assert!(err.to_string().contains("loghd family"), "{err:#}");
+        // Plain tenants keep reporting no cascade stats at all.
+        let plain = TenantSpec { cascade: false, ..spec };
+        let registry = ModelRegistry::open(&[plain], None, &cfg).unwrap();
+        assert!(registry.cascade_stats(None).unwrap().is_none());
+        assert!(registry.describe()[0].cascade.is_none());
         let _ = std::fs::remove_dir_all(&root);
     }
 }

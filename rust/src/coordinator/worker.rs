@@ -6,6 +6,8 @@
 //! idle replicas, least-loaded under skew.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -292,6 +294,249 @@ impl Engine for ConventionalEngine {
     }
 }
 
+/// Shared cascade telemetry, aggregated across all replicas of a tenant
+/// (each replica's engine holds a clone of the same `Arc`). Relaxed
+/// ordering everywhere: these are monotone counters read by the stats
+/// path, not synchronization.
+#[derive(Debug, Default)]
+pub struct CascadeCounters {
+    /// Rows answered by the b1 tier (margin cleared the threshold).
+    pub tier1: AtomicU64,
+    /// Rows escalated to the exact tier.
+    pub escalated: AtomicU64,
+    /// Escalated rows whose tentative b1 label matched the exact label —
+    /// observed b1/exact agreement on exactly the traffic the cascade
+    /// was *least* confident about (tier-1 rows are answered by b1 and
+    /// covered by the offline calibration bound instead).
+    pub agreed: AtomicU64,
+}
+
+impl CascadeCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One consistent-enough read of (tier1, escalated, agreed).
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.tier1.load(Ordering::Relaxed),
+            self.escalated.load(Ordering::Relaxed),
+            self.agreed.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// The adaptive precision cascade: a packed b1 prefilter in front of an
+/// exact decode tier.
+///
+/// Every batch is encoded once, then decoded by the b1 XNOR/popcount
+/// twin in one fused pass. Rows whose normalized decode margin
+/// (runner-up minus best squared distance, per-model normalized — see
+/// `QuantizedLogHdModel::margin_scale`) is `>= threshold` are answered
+/// from the b1 tier immediately; the ambiguous remainder is gathered
+/// into a compacted sub-batch (row copies out of the already-encoded
+/// batch — no re-encode) and decoded by the exact tier (dense f32/b2/b4
+/// or packed b8, mirroring [`NativeEngine`]'s state split). Exact labels
+/// are scattered back over the tentative b1 labels.
+///
+/// Degenerate thresholds pin the semantics: `0.0` never escalates
+/// (margins are non-negative, so every row clears the gate) and
+/// `f32::INFINITY` always escalates — making the cascade bit-identical
+/// to the exact engine (the engine tests assert both ends). Operating
+/// thresholds come from the offline calibrator
+/// (`loghd::cascade::calibrate`, persisted in the artifact's
+/// `ModelCard` and enforced at registry admission).
+///
+/// `infer_into` allocates nothing at steady state: every intermediate —
+/// including the escalation gather — lives in [`InferScratch`]'s
+/// cascade fields and the engine-owned query scratches.
+pub struct CascadeEngine {
+    pub encoder: Encoder,
+    /// Exact-tier precision (the cascade's own prefilter is always b1).
+    pub exact_precision: Precision,
+    b1: QuantizedLogHdModel,
+    b1_scratch: QueryScratch,
+    exact: ModelState,
+    threshold: f32,
+    label: String,
+    counters: Arc<CascadeCounters>,
+}
+
+impl CascadeEngine {
+    /// Build the cascade from a trained dense model: quantize the b1
+    /// prefilter twin and materialize the exact tier at
+    /// `exact_precision` (any width except b1 — a b1 exact tier would
+    /// make escalation a no-op).
+    pub fn with_precision(
+        encoder: Encoder,
+        model: LogHdModel,
+        label: impl Into<String>,
+        exact_precision: Precision,
+        threshold: f32,
+        counters: Arc<CascadeCounters>,
+    ) -> Self {
+        assert!(
+            exact_precision != Precision::B1,
+            "cascade exact tier must be wider than the b1 prefilter"
+        );
+        assert!(threshold >= 0.0, "cascade threshold must be non-negative");
+        let b1 = QuantizedLogHdModel::from_model(&model, Precision::B1);
+        Self::from_parts(encoder, b1, model, label, exact_precision, threshold, counters)
+    }
+
+    /// Assemble the cascade from an explicit b1 prefilter (tests inject
+    /// faults into the packed twin before serving it) plus the dense
+    /// model the exact tier is derived from.
+    pub fn from_parts(
+        encoder: Encoder,
+        b1: QuantizedLogHdModel,
+        model: LogHdModel,
+        label: impl Into<String>,
+        exact_precision: Precision,
+        threshold: f32,
+        counters: Arc<CascadeCounters>,
+    ) -> Self {
+        assert_eq!(b1.precision, Precision::B1, "prefilter must be the b1 twin");
+        let exact = match exact_precision {
+            Precision::B1 => unreachable!("checked by constructors"),
+            Precision::F32 => ModelState::Dense(DenseDecode::new(model)),
+            Precision::B8 => ModelState::Packed {
+                model: QuantizedLogHdModel::from_model(&model, Precision::B8),
+                scratch: QueryScratch::new(),
+            },
+            p @ (Precision::B2 | Precision::B4) => {
+                let bundles = quant::quantize_roundtrip(&model.bundles, p);
+                let profiles = quant::quantize_roundtrip(&model.profiles, p);
+                ModelState::Dense(DenseDecode::new(LogHdModel { bundles, profiles, ..model }))
+            }
+        };
+        Self {
+            encoder,
+            exact_precision,
+            b1,
+            b1_scratch: QueryScratch::new(),
+            exact,
+            threshold,
+            label: label.into(),
+            counters,
+        }
+    }
+
+    /// Factory for [`super::Coordinator::start`] / `start_pool`. Every
+    /// replica built from factories sharing one `counters` Arc reports
+    /// into the same per-tenant cascade telemetry.
+    pub fn factory_with_precision(
+        encoder: Encoder,
+        model: LogHdModel,
+        label: String,
+        exact_precision: Precision,
+        threshold: f32,
+        counters: Arc<CascadeCounters>,
+    ) -> EngineFactory {
+        Box::new(move || {
+            Ok(Box::new(CascadeEngine::with_precision(
+                encoder,
+                model,
+                label,
+                exact_precision,
+                threshold,
+                counters,
+            )) as Box<dyn Engine>)
+        })
+    }
+
+    /// The calibrated operating threshold this engine gates on.
+    pub fn threshold(&self) -> f32 {
+        self.threshold
+    }
+
+    /// The shared telemetry this engine reports into.
+    pub fn counters(&self) -> &Arc<CascadeCounters> {
+        &self.counters
+    }
+}
+
+impl Engine for CascadeEngine {
+    fn name(&self) -> String {
+        format!("cascade:{}:b1->{}", self.label, self.exact_precision.label())
+    }
+
+    fn features(&self) -> usize {
+        self.encoder.features()
+    }
+
+    fn infer(&mut self, x: &Matrix) -> Result<Vec<i32>> {
+        let mut scratch = InferScratch::new();
+        self.infer_into(x, &mut scratch)?;
+        Ok(std::mem::take(&mut scratch.labels))
+    }
+
+    fn infer_into<'s>(&mut self, x: &Matrix, s: &'s mut InferScratch) -> Result<&'s [i32]> {
+        self.encoder.encode_into(x, &mut s.enc);
+        // Tier 1: fused b1 decode + margins over the whole batch.
+        self.b1.predict_margins_into(
+            &s.enc,
+            &mut self.b1_scratch,
+            &mut s.acts,
+            &mut s.dists,
+            &mut s.asq,
+            &mut s.labels,
+            &mut s.margins,
+        );
+        // Partition: a row escalates when its margin fails the gate
+        // (margins are non-negative, so threshold 0 keeps every row in
+        // tier 1 and +inf escalates everything with a runner-up).
+        s.esc_rows.clear();
+        for (i, &m) in s.margins.iter().enumerate() {
+            if m < self.threshold {
+                s.esc_rows.push(i as u32);
+            }
+        }
+        let esc = s.esc_rows.len();
+        if esc > 0 {
+            // Gather the escalated rows (already encoded) into the
+            // compacted sub-batch. `Matrix::resize` reuses its backing
+            // allocation, and every exposed row is fully overwritten.
+            s.esc_enc.resize(esc, s.enc.cols());
+            for (k, &i) in s.esc_rows.iter().enumerate() {
+                s.esc_enc.row_mut(k).copy_from_slice(s.enc.row(i as usize));
+            }
+            match &mut self.exact {
+                ModelState::Dense(dense) => dense.model.predict_prepared_into(
+                    &s.esc_enc,
+                    &dense.prep,
+                    &mut s.esc_acts,
+                    &mut s.esc_dists,
+                    &mut s.esc_asq,
+                    &mut s.esc_labels,
+                ),
+                ModelState::Packed { model, scratch } => model.predict_into(
+                    &s.esc_enc,
+                    scratch,
+                    &mut s.esc_acts,
+                    &mut s.esc_dists,
+                    &mut s.esc_asq,
+                    &mut s.esc_labels,
+                ),
+            }
+            // Scatter exact labels back, counting b1/exact agreement on
+            // the escalated traffic as we go.
+            let mut agreed = 0u64;
+            for (k, &i) in s.esc_rows.iter().enumerate() {
+                let exact = s.esc_labels[k];
+                if exact == s.labels[i as usize] {
+                    agreed += 1;
+                }
+                s.labels[i as usize] = exact;
+            }
+            self.counters.escalated.fetch_add(esc as u64, Ordering::Relaxed);
+            self.counters.agreed.fetch_add(agreed, Ordering::Relaxed);
+        }
+        self.counters.tier1.fetch_add((x.rows() - esc) as u64, Ordering::Relaxed);
+        Ok(&s.labels)
+    }
+}
+
 /// The generic model-zoo engine: encoder + any [`HdClassifier`]
 /// instance (see `model::instances`). Families without a specialized
 /// serving engine (currently DecoHD) serve through this — the trait's
@@ -471,6 +716,85 @@ mod tests {
             let want = engine.infer(xb).unwrap();
             assert_eq!(engine.infer_into(xb, &mut scratch).unwrap(), want.as_slice(), "zoo");
         }
+        // Cascade at both degenerate thresholds, still on the SAME
+        // shared scratch (the escalation buffers must tolerate reuse
+        // alongside every other engine kind).
+        for (threshold, exact) in
+            [(0.0f32, Precision::F32), (f32::INFINITY, Precision::F32), (f32::INFINITY, Precision::B8)]
+        {
+            let mut engine = CascadeEngine::with_precision(
+                st.encoder.clone(),
+                st.loghd.clone(),
+                "page",
+                exact,
+                threshold,
+                Arc::new(CascadeCounters::new()),
+            );
+            for xb in &batches {
+                let want = engine.infer(xb).unwrap();
+                let got = engine.infer_into(xb, &mut scratch).unwrap();
+                assert_eq!(got, want.as_slice(), "cascade t={threshold} exact={exact:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn cascade_degenerate_thresholds_pin_both_tiers() {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 400, 50);
+        let opts =
+            TrainOptions { epochs: 2, conv_epochs: 1, extra_bundles: 1, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 512, 9, &opts).unwrap();
+        let xb = ds.x_test.rows_slice(0, 32);
+        let mut scratch = InferScratch::new();
+
+        // Threshold 0: never escalate — output is exactly the b1 twin's.
+        let counters = Arc::new(CascadeCounters::new());
+        let mut never = CascadeEngine::with_precision(
+            st.encoder.clone(),
+            st.loghd.clone(),
+            "page",
+            Precision::F32,
+            0.0,
+            counters.clone(),
+        );
+        let got = never.infer_into(&xb, &mut scratch).unwrap().to_vec();
+        let mut b1 = NativeEngine::with_precision(
+            st.encoder.clone(),
+            st.loghd.clone(),
+            "page",
+            Precision::B1,
+        );
+        assert_eq!(got, b1.infer(&xb).unwrap(), "threshold 0 must be the pure b1 path");
+        assert_eq!(counters.snapshot(), (32, 0, 0), "threshold 0 escalated rows");
+
+        // Threshold +inf: always escalate — bit-identical to the exact
+        // engine at each exact-tier precision.
+        for exact in [Precision::F32, Precision::B8, Precision::B4, Precision::B2] {
+            let counters = Arc::new(CascadeCounters::new());
+            let mut always = CascadeEngine::with_precision(
+                st.encoder.clone(),
+                st.loghd.clone(),
+                "page",
+                exact,
+                f32::INFINITY,
+                counters.clone(),
+            );
+            let got = always.infer_into(&xb, &mut scratch).unwrap().to_vec();
+            let mut exact_engine = NativeEngine::with_precision(
+                st.encoder.clone(),
+                st.loghd.clone(),
+                "page",
+                exact,
+            );
+            assert_eq!(
+                got,
+                exact_engine.infer(&xb).unwrap(),
+                "threshold inf must be bit-identical to the exact {exact:?} engine"
+            );
+            let (tier1, escalated, _) = counters.snapshot();
+            assert_eq!((tier1, escalated), (0, 32), "{exact:?}: rows not all escalated");
+        }
+        assert!(never.name().starts_with("cascade:page:b1->"), "{}", never.name());
     }
 
     #[test]

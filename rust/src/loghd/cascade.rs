@@ -1,0 +1,285 @@
+//! Offline calibration for the precision-cascade serving tier
+//! (`coordinator::worker::CascadeEngine`).
+//!
+//! The cascade answers a row from the packed b1 prefilter whenever its
+//! normalized decode margin clears a threshold, and escalates the rest
+//! to the exact tier. Because escalated rows are answered by the exact
+//! path, cascade-vs-exact disagreement can only come from *answered*
+//! (tier-1) rows — so for a labeled-free calibration set the agreement
+//! at threshold `t` is
+//!
+//! ```text
+//! agreement(t) = 1 − |{i : margin_i ≥ t  ∧  b1_i ≠ exact_i}| / N
+//! ```
+//!
+//! which is monotone non-decreasing in `t`. [`calibrate`] fits the
+//! smallest threshold whose *bootstrap lower confidence bound* on
+//! agreement meets the target fidelity (point estimates alone overfit
+//! the calibration split; the CI guard is what makes the bound carry to
+//! held-out traffic), reports the escalation rate that buys, and
+//! [`write_threshold`] persists the result into the artifact's
+//! `model.json` — where `runtime::artifact::ModelCard` reads it and the
+//! serving registry enforces its presence at `--cascade` admission.
+//!
+//! The exact reference here is the dense f32 decode — the strictest
+//! tier the cascade can escalate to; a b8 exact tier only tightens the
+//! gap. Re-training an artifact rewrites `model.json` without the
+//! `cascade_*` fields, which is intentional: a new model invalidates
+//! the old calibration and must be re-calibrated before cascade serving.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::encoder::Encoder;
+use crate::eval::percentile;
+use crate::loghd::model::{DecodePrep, LogHdModel};
+use crate::loghd::qmodel::{QuantizedLogHdModel, QueryScratch};
+use crate::quant::Precision;
+use crate::tensor::Matrix;
+use crate::util::json::{self, Value};
+use crate::util::rng::SplitMix64;
+
+/// Default fidelity target: the cascade must agree with the exact path
+/// on at least this fraction of traffic (ISSUE/EXPERIMENTS acceptance).
+pub const DEFAULT_TARGET: f64 = 0.995;
+
+/// Bootstrap resamples behind the confidence interval.
+const BOOTSTRAP_RESAMPLES: usize = 200;
+
+/// A fitted cascade operating point plus its calibration evidence.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Normalized-margin threshold the gate compares against.
+    pub threshold: f32,
+    /// Point-estimate agreement with the exact path on the calibration set.
+    pub agreement: f64,
+    /// Bootstrap 95% CI on the agreement (2.5th / 97.5th percentiles).
+    pub agreement_ci: (f64, f64),
+    /// Fraction of calibration rows the threshold escalates.
+    pub escalation_rate: f64,
+    /// Calibration rows.
+    pub rows: usize,
+    /// The fidelity target the fit was run against.
+    pub target: f64,
+}
+
+/// Per-row calibration evidence: normalized b1 margin + whether the b1
+/// label matched the exact (dense f32) label.
+fn margin_table(encoder: &Encoder, model: &LogHdModel, x: &Matrix) -> Vec<(f32, bool)> {
+    let enc = encoder.encode(x);
+    let prep = DecodePrep::new(model);
+    let exact = model.predict_prepared(&enc, &prep);
+
+    let b1 = QuantizedLogHdModel::from_model(model, Precision::B1);
+    let mut scratch = QueryScratch::new();
+    let (mut acts, mut dists) = (Matrix::zeros(0, 0), Matrix::zeros(0, 0));
+    let (mut asq, mut labels, mut margins) = (Vec::new(), Vec::new(), Vec::new());
+    b1.predict_margins_into(
+        &enc,
+        &mut scratch,
+        &mut acts,
+        &mut dists,
+        &mut asq,
+        &mut labels,
+        &mut margins,
+    );
+    margins.iter().zip(labels.iter().zip(&exact)).map(|(&m, (b, e))| (m, b == e)).collect()
+}
+
+/// Smallest representable float strictly above a non-negative finite
+/// margin — the step that turns "escalate rows with margin ≤ m" into a
+/// `margin < t` gate threshold.
+fn next_up(m: f32) -> f32 {
+    debug_assert!(m >= 0.0 && m.is_finite());
+    f32::from_bits(m.to_bits() + 1)
+}
+
+/// Agreement / escalation statistics of `rows` under threshold `t`.
+fn stats_at(rows: &[(f32, bool)], t: f32) -> (f64, f64) {
+    let n = rows.len() as f64;
+    let answered_wrong = rows.iter().filter(|(m, agree)| *m >= t && !agree).count() as f64;
+    let escalated = rows.iter().filter(|(m, _)| *m < t).count() as f64;
+    (1.0 - answered_wrong / n, escalated / n)
+}
+
+/// Bootstrap 95% CI on agreement at threshold `t` (deterministic for a
+/// given `rng` stream).
+fn bootstrap_ci(rows: &[(f32, bool)], t: f32, rng: &mut SplitMix64) -> (f64, f64) {
+    let n = rows.len();
+    let bad: Vec<bool> = rows.iter().map(|(m, agree)| *m >= t && !agree).collect();
+    let mut samples = Vec::with_capacity(BOOTSTRAP_RESAMPLES);
+    for _ in 0..BOOTSTRAP_RESAMPLES {
+        let mut wrong = 0usize;
+        for _ in 0..n {
+            if bad[rng.below(n as u64) as usize] {
+                wrong += 1;
+            }
+        }
+        samples.push(1.0 - wrong as f64 / n as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (percentile(&samples, 0.025), percentile(&samples, 0.975))
+}
+
+/// Fit the smallest threshold whose bootstrap lower confidence bound on
+/// exact-path agreement meets `target`, on the given calibration set.
+///
+/// Escalation is bought disagreement-first: candidate thresholds step
+/// through the sorted margins of the rows where b1 and the exact path
+/// disagree (escalating a *agreeing* low-margin row costs compute but
+/// never buys agreement). If even full escalation of every disagreeing
+/// row's margin neighborhood cannot clear the CI guard, the fit lands
+/// on a threshold just above the largest disagreeing margin — agreement
+/// 1.0 on the calibration set by construction.
+pub fn calibrate(
+    encoder: &Encoder,
+    model: &LogHdModel,
+    x: &Matrix,
+    target: f64,
+    seed: u64,
+) -> Result<Calibration> {
+    anyhow::ensure!(x.rows() > 0, "calibration set is empty");
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&target) && target > 0.0,
+        "fidelity target must be in (0, 1], got {target}"
+    );
+    let rows = margin_table(encoder, model, x);
+    let n = rows.len();
+
+    // Candidate thresholds: 0 (never escalate), then one step above each
+    // disagreeing row's margin, in ascending margin order.
+    let mut disagree: Vec<f32> =
+        rows.iter().filter(|(_, agree)| !agree).map(|(m, _)| *m).collect();
+    disagree.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut candidates = vec![0.0f32];
+    candidates.extend(disagree.iter().filter(|m| m.is_finite()).map(|&m| next_up(m)));
+    candidates.dedup();
+
+    let mut rng = SplitMix64::new(seed);
+    let mut chosen = None;
+    for &t in &candidates {
+        let (agreement, _) = stats_at(&rows, t);
+        if agreement < target {
+            continue; // monotone, but cheap to just skip
+        }
+        let ci = bootstrap_ci(&rows, t, &mut rng);
+        if ci.0 >= target {
+            chosen = Some((t, ci));
+            break;
+        }
+    }
+    // Fall back to the largest candidate: every disagreeing row
+    // escalates, agreement is exactly 1.0 on this set.
+    let (threshold, agreement_ci) = match chosen {
+        Some(c) => c,
+        None => {
+            let t = *candidates.last().expect("candidates always holds 0.0");
+            (t, bootstrap_ci(&rows, t, &mut rng))
+        }
+    };
+    let (agreement, escalation_rate) = stats_at(&rows, threshold);
+    Ok(Calibration { threshold, agreement, agreement_ci, escalation_rate, rows: n, target })
+}
+
+/// Held-out evaluation of an already-fitted threshold: (agreement with
+/// the exact path, escalation rate) of the cascade's *output* on `x` —
+/// the quantity the integration suite asserts against the target.
+pub fn evaluate(encoder: &Encoder, model: &LogHdModel, x: &Matrix, threshold: f32) -> (f64, f64) {
+    let rows = margin_table(encoder, model, x);
+    stats_at(&rows, threshold)
+}
+
+/// Persist a fitted calibration into `dir`'s `model.json` (native LogHD
+/// artifacts only — AOT bundles have no `model.json` and are rejected
+/// upstream). Any previous `cascade_*` fields are replaced; every other
+/// manifest field is preserved byte-for-byte in order. The
+/// `cascade_threshold` field is what `ModelCard::load` reads and
+/// registry admission enforces.
+pub fn write_threshold(dir: &Path, cal: &Calibration) -> Result<()> {
+    let path = dir.join("model.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} (native artifact required)", path.display()))?;
+    let v = json::parse(&text).map_err(|e| anyhow::anyhow!("model.json: {e}"))?;
+    let Value::Object(fields) = v else {
+        anyhow::bail!("model.json must hold a JSON object");
+    };
+    let mut out: Vec<(String, Value)> =
+        fields.into_iter().filter(|(k, _)| !k.starts_with("cascade_")).collect();
+    out.push(("cascade_threshold".into(), json::num(cal.threshold as f64)));
+    out.push(("cascade_target".into(), json::num(cal.target)));
+    out.push(("cascade_agreement".into(), json::num(cal.agreement)));
+    out.push(("cascade_agreement_ci_lower".into(), json::num(cal.agreement_ci.0)));
+    out.push(("cascade_agreement_ci_upper".into(), json::num(cal.agreement_ci.1)));
+    out.push(("cascade_escalation_rate".into(), json::num(cal.escalation_rate)));
+    out.push(("cascade_calibration_rows".into(), json::num(cal.rows as f64)));
+    std::fs::write(&path, json::to_string_pretty(&Value::Object(out)))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::loghd::model::{TrainOptions, TrainedStack};
+
+    fn stack() -> (data::Dataset, TrainedStack) {
+        let ds = data::generate_scaled(data::spec("page").unwrap(), 600, 300);
+        let opts =
+            TrainOptions { epochs: 3, conv_epochs: 1, extra_bundles: 2, ..Default::default() };
+        let st = TrainedStack::train(&ds.x_train, &ds.y_train, 5, 512, 0xE5C0DE, &opts).unwrap();
+        (ds, st)
+    }
+
+    #[test]
+    fn calibration_meets_target_on_its_own_set() {
+        let (ds, st) = stack();
+        let cal = calibrate(&st.encoder, &st.loghd, &ds.x_train, 0.99, 7).unwrap();
+        assert!(cal.threshold >= 0.0);
+        assert!(cal.agreement >= 0.99, "point agreement {} below target", cal.agreement);
+        assert!(cal.agreement_ci.0 <= cal.agreement && cal.agreement <= cal.agreement_ci.1 + 1e-12);
+        assert!((0.0..=1.0).contains(&cal.escalation_rate));
+        assert_eq!(cal.rows, ds.x_train.rows());
+        // Evaluating the fitted threshold on the same set reproduces the
+        // reported point estimates exactly.
+        let (agreement, esc) = evaluate(&st.encoder, &st.loghd, &ds.x_train, cal.threshold);
+        assert_eq!(agreement, cal.agreement);
+        assert_eq!(esc, cal.escalation_rate);
+    }
+
+    #[test]
+    fn stricter_targets_never_lower_the_threshold() {
+        let (ds, st) = stack();
+        let loose = calibrate(&st.encoder, &st.loghd, &ds.x_train, 0.90, 7).unwrap();
+        let strict = calibrate(&st.encoder, &st.loghd, &ds.x_train, 0.999, 7).unwrap();
+        assert!(strict.threshold >= loose.threshold);
+        assert!(strict.escalation_rate >= loose.escalation_rate);
+    }
+
+    #[test]
+    fn threshold_persists_into_model_json_and_survives_recalibration() {
+        let (ds, st) = stack();
+        let dir = std::env::temp_dir().join("loghd_cascade_persist_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        crate::loghd::persist::save(&dir, &st.encoder, &st.loghd).unwrap();
+        let cal = calibrate(&st.encoder, &st.loghd, &ds.x_train, 0.99, 7).unwrap();
+        write_threshold(&dir, &cal).unwrap();
+        let card = crate::runtime::artifact::ModelCard::load(&dir).unwrap();
+        assert_eq!(card.cascade_threshold, Some(cal.threshold as f64));
+        // The artifact still loads, and a second write replaces (not
+        // duplicates) the cascade fields.
+        let (_, model2) = crate::loghd::persist::load(&dir).unwrap();
+        assert_eq!(model2.bundles.data(), st.loghd.bundles.data());
+        write_threshold(&dir, &cal).unwrap();
+        let text = std::fs::read_to_string(dir.join("model.json")).unwrap();
+        assert_eq!(text.matches("cascade_threshold").count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn next_up_is_strictly_above() {
+        for m in [0.0f32, 1e-30, 0.5, 3.25] {
+            assert!(next_up(m) > m);
+        }
+    }
+}

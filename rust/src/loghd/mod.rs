@@ -7,6 +7,8 @@
 //! - [`online`]: streaming continual learning (reservoir + live refits)
 //! - [`model`]: the assembled classifier (train / predict / memory math)
 //! - [`qmodel`]: the bit-packed serving twin (XNOR/popcount + int8 path)
+//! - [`cascade`]: offline threshold calibration for the b1-prefilter
+//!   serving cascade (fit / evaluate / persist)
 //! - [`persist`]: artifact save/load (the format the serving registry hosts)
 //!
 //! # Example
@@ -28,6 +30,7 @@
 //! ```
 
 pub mod bundling;
+pub mod cascade;
 pub mod codebook;
 pub mod model;
 pub mod online;
@@ -37,6 +40,7 @@ pub mod refine;
 
 pub mod persist;
 
+pub use cascade::Calibration;
 pub use codebook::{min_bundles, Codebook};
 pub use model::{LogHdModel, TrainOptions, TrainedStack};
 pub use online::{FeedbackError, OnlineConfig, OnlineTrainer, Reservoir, TrainerStats};

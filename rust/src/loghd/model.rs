@@ -161,6 +161,32 @@ impl LogHdModel {
         labels.extend((0..dists.rows()).map(|i| tensor::argmin(dists.row(i)) as i32));
     }
 
+    /// [`Self::predict_prepared_into`] that additionally reports each
+    /// row's normalized decode margin (runner-up minus best squared
+    /// distance, divided by [`DecodePrep::margin_scale`];
+    /// lowest-index-wins tie discipline, ties report 0) — the dense twin
+    /// of `QuantizedLogHdModel::predict_margins_into`, used by the
+    /// cascade calibrator to reason about the exact path's own
+    /// confidence structure.
+    #[allow(clippy::too_many_arguments)]
+    pub fn predict_prepared_margins_into(
+        &self,
+        enc: &Matrix,
+        prep: &DecodePrep,
+        acts: &mut Matrix,
+        dists: &mut Matrix,
+        asq: &mut Vec<f32>,
+        labels: &mut Vec<i32>,
+        margins: &mut Vec<f32>,
+    ) {
+        self.predict_prepared_into(enc, prep, acts, dists, asq, labels);
+        crate::model::instances::distance_margins_into(dists, margins);
+        let inv = 1.0 / prep.margin_scale();
+        for m in margins.iter_mut() {
+            *m *= inv;
+        }
+    }
+
     /// Stored model values: n·D bundles + the (C, n) profiles in their
     /// robust stored form (per-column deviations **plus** the n-vector
     /// cross-class mean — paper §III-G plus the centering the fault
@@ -204,6 +230,14 @@ impl DecodePrep {
             profiles_nt: tensor::NtPrepared::for_operand(&model.profiles),
             profile_sqnorms: tensor::row_sqnorms(&model.profiles),
         }
+    }
+
+    /// Per-model margin normalizer: mean profile squared norm, floored
+    /// away from zero (the dense twin of
+    /// `QuantizedLogHdModel::margin_scale`).
+    pub fn margin_scale(&self) -> f32 {
+        let n = self.profile_sqnorms.len().max(1) as f32;
+        (self.profile_sqnorms.iter().sum::<f32>() / n).max(1e-12)
     }
 }
 
@@ -295,6 +329,28 @@ mod tests {
         let (_, stack) = small_stack();
         let conv = 5 * 256;
         assert!(stack.loghd.memory_floats() < conv);
+    }
+
+    #[test]
+    fn prepared_margin_variant_matches_prepared_labels() {
+        let (ds, stack) = small_stack();
+        let enc = stack.encoder.encode(&ds.x_test.rows_slice(0, 24));
+        let prep = DecodePrep::new(&stack.loghd);
+        let (mut acts, mut dists) = (Matrix::zeros(0, 0), Matrix::zeros(0, 0));
+        let (mut asq, mut labels, mut margins) = (Vec::new(), Vec::new(), Vec::new());
+        stack.loghd.predict_prepared_margins_into(
+            &enc,
+            &prep,
+            &mut acts,
+            &mut dists,
+            &mut asq,
+            &mut labels,
+            &mut margins,
+        );
+        assert_eq!(labels, stack.loghd.predict(&enc));
+        assert_eq!(margins.len(), enc.rows());
+        assert!(margins.iter().all(|m| *m >= 0.0));
+        assert!(prep.margin_scale() > 0.0);
     }
 
     #[test]

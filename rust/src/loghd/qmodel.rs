@@ -270,6 +270,42 @@ impl QuantizedLogHdModel {
         labels.extend((0..dists.rows()).map(|i| tensor::argmin(dists.row(i)) as i32));
     }
 
+    /// Per-model normalizer for decode margins: the mean stored-profile
+    /// squared norm, floored away from zero. Dividing the raw
+    /// `runner-up − best` squared-distance gap by this constant puts
+    /// margins from differently-scaled models (and the same model at
+    /// different widths) on a comparable footing, so one calibrated
+    /// threshold survives quantization-induced scale shifts.
+    pub fn margin_scale(&self) -> f32 {
+        let n = self.profile_sqnorms.len().max(1) as f32;
+        (self.profile_sqnorms.iter().sum::<f32>() / n).max(1e-12)
+    }
+
+    /// [`Self::predict_into`] that additionally reports each row's
+    /// normalized decode margin (runner-up minus best squared distance,
+    /// divided by [`Self::margin_scale`]; lowest-index-wins tie
+    /// discipline, so tied rows report margin 0). This is the cascade
+    /// tier-1 primitive: the margin costs O(C) on top of the decode the
+    /// call already did, and everything lands in caller-owned buffers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn predict_margins_into(
+        &self,
+        enc: &Matrix,
+        scratch: &mut QueryScratch,
+        acts: &mut Matrix,
+        dists: &mut Matrix,
+        asq: &mut Vec<f32>,
+        labels: &mut Vec<i32>,
+        margins: &mut Vec<f32>,
+    ) {
+        self.predict_into(enc, scratch, acts, dists, asq, labels);
+        crate::model::instances::distance_margins_into(dists, margins);
+        let inv = 1.0 / self.margin_scale();
+        for m in margins.iter_mut() {
+            *m *= inv;
+        }
+    }
+
     /// Fused activation-space decode: (B, C) squared distances to the
     /// stored profiles, `|A|² − 2·A·Pᵀ + |P|²` with precomputed `|P|²`
     /// and the profile operand's GEMM form prepared at build.
@@ -464,6 +500,42 @@ mod tests {
             let small = stack.encoder.encode(&ds.x_test.rows_slice(16, 21));
             assert_eq!(qm.predict(&small), qm.predict_scratch(&small, &mut scratch));
             assert_eq!(plain, qm.predict_scratch(&enc, &mut scratch), "{precision:?} reuse");
+        }
+    }
+
+    #[test]
+    fn margin_variant_matches_predict_and_reports_normalized_gaps() {
+        let (ds, stack) = small_stack();
+        let enc = stack.encoder.encode(&ds.x_test.rows_slice(0, 32));
+        for precision in [Precision::B8, Precision::B1] {
+            let qm = QuantizedLogHdModel::from_model(&stack.loghd, precision);
+            let mut scratch = QueryScratch::new();
+            let (mut acts, mut dists) = (Matrix::zeros(0, 0), Matrix::zeros(0, 0));
+            let (mut asq, mut labels, mut margins) = (Vec::new(), Vec::new(), Vec::new());
+            qm.predict_margins_into(
+                &enc,
+                &mut scratch,
+                &mut acts,
+                &mut dists,
+                &mut asq,
+                &mut labels,
+                &mut margins,
+            );
+            assert_eq!(labels, qm.predict(&enc), "{precision:?}: labels diverge");
+            assert_eq!(margins.len(), enc.rows());
+            assert!(margins.iter().all(|m| *m >= 0.0), "{precision:?}: negative margin");
+            assert!(qm.margin_scale() > 0.0);
+            // Hand-check one row against the normalized runner-up gap.
+            let row = dists.row(0);
+            let best = tensor::argmin(row);
+            let runner = row
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| *j != best)
+                .map(|(_, v)| *v)
+                .fold(f32::INFINITY, f32::min);
+            let want = (runner - row[best]) / qm.margin_scale();
+            assert!((margins[0] - want).abs() <= 1e-6 * want.abs().max(1.0));
         }
     }
 

@@ -44,6 +44,29 @@ fn kept_indices(mask: &[bool]) -> Vec<usize> {
     mask.iter().enumerate().filter(|(_, keep)| **keep).map(|(i, _)| i).collect()
 }
 
+/// Per-row decode margin over a (B, C) squared-distance matrix: the gap
+/// between the runner-up and the best (lowest) distance, under the same
+/// lowest-index-wins tie discipline as [`tensor::argmin`] — a tied
+/// runner-up yields margin 0, so a cascade gated on `margin >= t` with
+/// `t > 0` always escalates ties. Single-class rows have no runner-up
+/// and report `f32::INFINITY`. `margins` is cleared and refilled with
+/// one value per row; its capacity is reused across calls (no
+/// steady-state allocation once it has reached its high-water mark).
+pub fn distance_margins_into(dists: &Matrix, margins: &mut Vec<f32>) {
+    margins.clear();
+    for i in 0..dists.rows() {
+        let row = dists.row(i);
+        let best = tensor::argmin(row);
+        let mut runner = f32::INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            if j != best && v < runner {
+                runner = v;
+            }
+        }
+        margins.push(runner - row[best]);
+    }
+}
+
 /// One stored tensor at the instance's precision: raw f32 words, or the
 /// packed quantizer output. Either way the plane IS the fault surface —
 /// flips land on exactly these bits.
@@ -164,6 +187,10 @@ impl ProfilePlanes {
     }
 }
 
+/// Per-row argmax with the pinned **lowest-index-wins** tie discipline
+/// (inherited from [`tensor::argmax`]). The cascade's agreement
+/// accounting depends on the b1 and exact decode paths resolving ties
+/// identically, so this contract is property-tested below.
 fn argmax_rows(scores: &Matrix) -> Vec<i32> {
     (0..scores.rows()).map(|i| tensor::argmax(scores.row(i)) as i32).collect()
 }
@@ -686,6 +713,72 @@ mod tests {
                 assert_ne!(clean.data(), noisy.data(), "{precision:?}/{fm:?}: plane unchanged");
             }
         }
+    }
+
+    /// Property pin: `argmax_rows` resolves ties to the lowest index on
+    /// crafted tie patterns and on random matrices (checked against a
+    /// naive strictly-greater scan, which is first-on-ties by
+    /// construction).
+    #[test]
+    fn argmax_rows_breaks_ties_lowest_index_wins() {
+        // Crafted ties: leading tie, full-row tie, tie at the end.
+        let m = Matrix::from_vec(
+            4,
+            4,
+            vec![
+                2.0, 2.0, 1.0, 0.0, // cols 0,1 tie -> 0
+                5.0, 5.0, 5.0, 5.0, // all tie -> 0
+                0.0, 1.0, 3.0, 3.0, // cols 2,3 tie -> 2
+                -1.0, -1.0, -2.0, -1.0, // cols 0,1,3 tie -> 0
+            ],
+        );
+        assert_eq!(argmax_rows(&m), vec![0, 0, 2, 0]);
+
+        // Random property: quantize values to a coarse grid so ties are
+        // frequent, then compare against the naive first-max scan.
+        let mut rng = SplitMix64::new(0xA56A);
+        for case in 0..64 {
+            let rows = 1 + (case % 7);
+            let cols = 1 + (case % 11);
+            let vals: Vec<f32> =
+                rng.normals_f32(rows * cols).iter().map(|v| (v * 2.0).round() / 2.0).collect();
+            let m = Matrix::from_vec(rows, cols, vals);
+            let naive: Vec<i32> = (0..rows)
+                .map(|i| {
+                    let row = m.row(i);
+                    let mut best = 0usize;
+                    for (j, &v) in row.iter().enumerate() {
+                        if v > row[best] {
+                            best = j;
+                        }
+                    }
+                    best as i32
+                })
+                .collect();
+            assert_eq!(argmax_rows(&m), naive, "case {case}: tie broken away from lowest index");
+        }
+    }
+
+    #[test]
+    fn distance_margins_follow_the_argmin_tie_discipline() {
+        let d = Matrix::from_vec(
+            3,
+            3,
+            vec![
+                1.0, 4.0, 2.0, // margin 1.0
+                3.0, 3.0, 5.0, // tie -> margin 0
+                0.5, 0.5, 0.5, // full tie -> margin 0
+            ],
+        );
+        let mut margins = Vec::new();
+        distance_margins_into(&d, &mut margins);
+        assert_eq!(margins, vec![1.0, 0.0, 0.0]);
+
+        // Single class: no runner-up, infinite margin.
+        let d1 = Matrix::from_vec(2, 1, vec![3.0, 7.0]);
+        distance_margins_into(&d1, &mut margins);
+        assert_eq!(margins.len(), 2);
+        assert!(margins.iter().all(|m| m.is_infinite()));
     }
 
     #[test]

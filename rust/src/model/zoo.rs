@@ -15,10 +15,13 @@
 //! table row below, zero changes in the serving or persistence layers.
 
 use std::path::Path;
+use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::coordinator::worker::{ConventionalEngine, EngineFactory, NativeEngine, ZooEngine};
+use crate::coordinator::worker::{
+    CascadeCounters, CascadeEngine, ConventionalEngine, EngineFactory, NativeEngine, ZooEngine,
+};
 use crate::loghd::persist::{self, LoadedModel};
 use crate::model::instances;
 use crate::quant::Precision;
@@ -174,6 +177,48 @@ pub fn engine_factories(
             .collect(),
     };
     Ok((kind, features, factories))
+}
+
+/// Load a LogHD artifact and build one [`CascadeEngine`] factory per
+/// replica — the `--cascade` serving path. Every replica shares the one
+/// `counters` Arc, so per-tenant tier-1/escalation telemetry aggregates
+/// across the pool. Only the LogHD family carries the b1 twin + margin
+/// decode the cascade is built from; other kinds are refused here (the
+/// registry admission check will already have rejected most of them via
+/// the missing `cascade_threshold`).
+pub fn cascade_engine_factories(
+    path: &Path,
+    exact_precision: Precision,
+    replicas: usize,
+    label: &str,
+    threshold: f32,
+    counters: Arc<CascadeCounters>,
+) -> Result<(String, usize, Vec<EngineFactory>)> {
+    let loaded =
+        load(path).with_context(|| format!("loading artifact {}", path.display()))?;
+    let kind = loaded.kind().to_string();
+    let features = loaded.features();
+    match loaded {
+        LoadedModel::LogHd(encoder, model) => {
+            let factories: Vec<EngineFactory> = (0..replicas)
+                .map(|_| {
+                    CascadeEngine::factory_with_precision(
+                        encoder.clone(),
+                        model.clone(),
+                        label.to_string(),
+                        exact_precision,
+                        threshold,
+                        Arc::clone(&counters),
+                    )
+                })
+                .collect();
+            Ok((kind, features, factories))
+        }
+        other => bail!(
+            "tenant '{label}': --cascade serves only the loghd family, got kind '{}'",
+            other.kind()
+        ),
+    }
 }
 
 #[cfg(test)]

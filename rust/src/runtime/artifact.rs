@@ -226,6 +226,9 @@ impl Manifest {
             classes: self.classes,
             d: self.d,
             features: self.features,
+            // AOT bundles carry no model.json and cannot hold a cascade
+            // calibration; `--cascade` admission rejects them.
+            cascade_threshold: None,
         }
     }
 
@@ -252,6 +255,11 @@ pub struct ModelCard {
     pub classes: usize,
     pub d: usize,
     pub features: usize,
+    /// Calibrated cascade operating threshold, when the artifact has
+    /// been through `loghd calibrate` (see `loghd::cascade`). `None`
+    /// means never calibrated — the registry refuses to serve the
+    /// artifact behind `--cascade` until it is.
+    pub cascade_threshold: Option<f64>,
 }
 
 impl ModelCard {
@@ -278,6 +286,7 @@ impl ModelCard {
                 classes: get("classes")?,
                 d: get("d")?,
                 features: get("features")?,
+                cascade_threshold: v.get("cascade_threshold").and_then(json::Value::as_f64),
             });
         }
         if dir.join("manifest.json").exists() {
@@ -356,6 +365,13 @@ mod tests {
         assert_eq!(card.kind, "native-conventional");
         assert_eq!(card.features, 261);
         assert_eq!(card.d, 2000);
+        assert_eq!(card.cascade_threshold, None, "uncalibrated artifact must read None");
+        let with_threshold = r#"{
+ "format": 1, "kind": "native-loghd",
+ "classes": 12, "d": 2000, "features": 261, "cascade_threshold": 0.125
+}"#;
+        std::fs::write(dir.join("model.json"), with_threshold).unwrap();
+        assert_eq!(ModelCard::load(&dir).unwrap().cascade_threshold, Some(0.125));
         let _ = std::fs::remove_dir_all(&dir);
         assert!(ModelCard::load(&dir).is_err());
     }

@@ -1,0 +1,176 @@
+//! End-to-end acceptance for the precision-cascade serving tier.
+//!
+//! Two claims are pinned here:
+//!
+//! 1. **Held-out fidelity** — a threshold calibrated at the default
+//!    target (99.5% agreement with the exact path) keeps that agreement
+//!    on traffic it never saw, both at the margin level
+//!    (`cascade::evaluate`) and at the served-engine level
+//!    (`CascadeEngine` labels vs `NativeEngine` f32 labels).
+//!
+//! 2. **Fault containment** — corrupting the packed b1 prefilter raises
+//!    the escalation rate (damaged rows lose their margins and fall
+//!    through to the exact tier) but does not push cascade-vs-exact
+//!    disagreement past the calibrated bound: the gate is what makes
+//!    the cascade *robust*, not just fast. A deterministic subset
+//!    property anchors both severities: the cascade's disagreeing rows
+//!    are always a subset of the raw b1 twin's disagreeing rows,
+//!    because every escalated row is answered by the exact path.
+
+use std::sync::Arc;
+
+use loghd::coordinator::{CascadeCounters, CascadeEngine, Engine, NativeEngine};
+use loghd::data;
+use loghd::loghd::cascade;
+use loghd::loghd::model::{TrainOptions, TrainedStack};
+use loghd::loghd::QuantizedLogHdModel;
+use loghd::quant::Precision;
+use loghd::util::rng::SplitMix64;
+
+const CLASSES: usize = 5;
+const D: usize = 2048;
+
+fn stack() -> (data::Dataset, TrainedStack) {
+    let ds = data::generate_scaled(data::spec("page").unwrap(), 1500, 600);
+    let opts =
+        TrainOptions { epochs: 3, conv_epochs: 1, extra_bundles: 4, ..Default::default() };
+    let st = TrainedStack::train(&ds.x_train, &ds.y_train, CLASSES, D, 0xE5C0DE, &opts).unwrap();
+    (ds, st)
+}
+
+fn agreement(a: &[i32], b: &[i32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len() as f64
+}
+
+#[test]
+fn calibrated_cascade_meets_the_heldout_fidelity_target() {
+    let (ds, st) = stack();
+    let cal =
+        cascade::calibrate(&st.encoder, &st.loghd, &ds.x_train, cascade::DEFAULT_TARGET, 11)
+            .unwrap();
+    assert!(cal.agreement >= cascade::DEFAULT_TARGET);
+    assert!(cal.agreement_ci.0 <= cal.agreement);
+
+    // Margin-level held-out fidelity at the fitted operating point.
+    let (holdout_agreement, holdout_escalation) =
+        cascade::evaluate(&st.encoder, &st.loghd, &ds.x_test, cal.threshold);
+    assert!(
+        holdout_agreement >= cascade::DEFAULT_TARGET,
+        "held-out agreement {holdout_agreement} below the calibrated target"
+    );
+    assert!(
+        holdout_escalation < 1.0,
+        "a useful operating point must answer some traffic from tier 1"
+    );
+
+    // Engine-level: the labels the served cascade emits agree with the
+    // exact engine on >= 99.5% of held-out rows.
+    let mut exact =
+        NativeEngine::with_precision(st.encoder.clone(), st.loghd.clone(), "it", Precision::F32);
+    let counters = Arc::new(CascadeCounters::new());
+    let mut casc = CascadeEngine::with_precision(
+        st.encoder.clone(),
+        st.loghd.clone(),
+        "it",
+        Precision::F32,
+        cal.threshold,
+        Arc::clone(&counters),
+    );
+    let exact_labels = exact.infer(&ds.x_test).unwrap();
+    let casc_labels = casc.infer(&ds.x_test).unwrap();
+    let engine_agreement = agreement(&casc_labels, &exact_labels);
+    assert!(
+        engine_agreement >= cascade::DEFAULT_TARGET,
+        "served cascade agreement {engine_agreement} below the calibrated target"
+    );
+    let (tier1, escalated, agreed) = counters.snapshot();
+    assert_eq!(tier1 + escalated, ds.x_test.rows() as u64);
+    assert!(agreed <= escalated);
+}
+
+#[test]
+fn b1_faults_raise_escalation_without_breaking_the_calibrated_bound() {
+    let (ds, st) = stack();
+    let cal =
+        cascade::calibrate(&st.encoder, &st.loghd, &ds.x_train, cascade::DEFAULT_TARGET, 13)
+            .unwrap();
+    let mut exact = NativeEngine::with_precision(
+        st.encoder.clone(),
+        st.loghd.clone(),
+        "exact-ref",
+        Precision::F32,
+    );
+    let exact_labels = exact.infer(&ds.x_test).unwrap();
+
+    // Clean baseline at the calibrated operating point.
+    let clean_counters = Arc::new(CascadeCounters::new());
+    let mut clean = CascadeEngine::with_precision(
+        st.encoder.clone(),
+        st.loghd.clone(),
+        "clean",
+        Precision::F32,
+        cal.threshold,
+        Arc::clone(&clean_counters),
+    );
+    let clean_labels = clean.infer(&ds.x_test).unwrap();
+    let clean_agreement = agreement(&clean_labels, &exact_labels);
+    let (_, clean_escalated, _) = clean_counters.snapshot();
+
+    // Campaign over two fault severities on the b1 prefilter's stored
+    // planes: light (the containment claim) and heavy (the escalation
+    // claim). The exact tier is never corrupted — the cascade's promise
+    // is that the *gate* keeps prefilter damage out of the answers.
+    let run_faulted = |p: f64, seed: u64| {
+        let mut twin = QuantizedLogHdModel::from_model(&st.loghd, Precision::B1);
+        let mut rng = SplitMix64::new(seed);
+        let flips = twin.inject_value_faults(p, &mut rng);
+        assert!(flips > 0, "fault campaign at p={p} must flip something");
+        let enc = st.encoder.encode(&ds.x_test);
+        let raw_b1_labels = twin.predict(&enc);
+        let counters = Arc::new(CascadeCounters::new());
+        let mut engine = CascadeEngine::from_parts(
+            st.encoder.clone(),
+            twin,
+            st.loghd.clone(),
+            "faulted",
+            Precision::F32,
+            cal.threshold,
+            Arc::clone(&counters),
+        );
+        let labels = engine.infer(&ds.x_test).unwrap();
+        let (_, escalated, _) = counters.snapshot();
+        (labels, raw_b1_labels, escalated)
+    };
+
+    // Light corruption: the answered traffic stays within the calibrated
+    // bound's reach — corruption may cost at most one more "bound" of
+    // disagreement on top of the clean operating point.
+    let (light_labels, light_raw, _) = run_faulted(0.002, 0xFA17);
+    let light_agreement = agreement(&light_labels, &exact_labels);
+    let bound = 1.0 - cascade::DEFAULT_TARGET;
+    assert!(
+        1.0 - light_agreement <= (1.0 - clean_agreement) + bound,
+        "light b1 faults pushed disagreement to {} (clean {}, bound {bound})",
+        1.0 - light_agreement,
+        1.0 - clean_agreement
+    );
+    // Deterministic subset property: every cascade miss is a tier-1 row
+    // the raw (faulted) b1 twin also missed — escalated rows are exact.
+    for ((c, r), e) in light_labels.iter().zip(&light_raw).zip(&exact_labels) {
+        if c != e {
+            assert_eq!(c, r, "a cascade miss must come from the b1 tier");
+        }
+    }
+    assert!(agreement(&light_labels, &exact_labels) >= agreement(&light_raw, &exact_labels));
+
+    // Heavy corruption: margins collapse, so the gate routes strictly
+    // more traffic to the exact tier than the clean cascade did — the
+    // escalation rate is the fault detector.
+    let (heavy_labels, heavy_raw, heavy_escalated) = run_faulted(0.05, 0xFA18);
+    assert!(
+        heavy_escalated > clean_escalated,
+        "heavy b1 faults must raise escalation ({heavy_escalated} <= {clean_escalated})"
+    );
+    assert!(agreement(&heavy_labels, &exact_labels) >= agreement(&heavy_raw, &exact_labels));
+}

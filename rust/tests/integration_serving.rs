@@ -73,12 +73,14 @@ fn multi_tenant_routing_hot_reload_and_stats_divergence() {
             path: page_dir.clone(),
             precision: Precision::F32,
             replicas: 2,
+            cascade: false,
         },
         TenantSpec {
             name: "pamap".into(),
             path: pamap_dir.clone(),
             precision: Precision::B1,
             replicas: 1,
+            cascade: false,
         },
     ];
     let registry = Arc::new(

@@ -5,9 +5,11 @@ Usage:
     bench_delta.py FRESH.json SNAPSHOT.json METRIC:DIRECTION [...]
                    [--max-regress 0.15] [--require]
 
-Each METRIC:DIRECTION names a top-level numeric field in both JSON
-documents and which way is better: ``lower`` (latencies, allocs) or
-``higher`` (throughput). A metric regressing by more than
+Each METRIC:DIRECTION names a numeric field in both JSON documents and
+which way is better: ``lower`` (latencies, allocs) or ``higher``
+(throughput). Dotted paths descend into nested objects, so
+``e2e_batch64_median_s.f32:lower`` gates a field inside
+BENCH_encode.json's per-precision block. A metric regressing by more than
 ``--max-regress`` (relative, default 15%) fails the run with exit 1.
 
 Snapshots are blessed by copying a CI artifact over the repo-root file;
@@ -46,7 +48,12 @@ def load(path: str) -> dict:
 
 
 def numeric(doc: dict, key: str):
-    v = doc.get(key)
+    """Resolve ``key`` in ``doc``; dotted paths descend into nested objects."""
+    v = doc
+    for part in key.split("."):
+        if not isinstance(v, dict):
+            return None
+        v = v.get(part)
     if isinstance(v, numbers.Real) and not isinstance(v, bool):
         return float(v)
     return None
@@ -60,7 +67,7 @@ def main() -> int:
         "metrics",
         nargs="+",
         metavar="METRIC:DIRECTION",
-        help="top-level field and its better direction (lower|higher)",
+        help="field (dotted path for nested) and its better direction (lower|higher)",
     )
     ap.add_argument(
         "--max-regress",
